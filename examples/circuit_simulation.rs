@@ -1,0 +1,72 @@
+//! Circuit-simulation scenario — the workload the paper's headline result
+//! targets (ASIC_680k: 4.31× over PanguLU on one GPU, 4.08× on four).
+//!
+//! A transient circuit simulation refactorizes the same sparsity pattern
+//! with updated values at every Newton step. This example runs a small
+//! DC-operating-point-style loop: factor once per "timestep" with
+//! perturbed conductances, comparing the paper's irregular blocking
+//! against PanguLU-style regular blocking on the same BBD matrix.
+//!
+//! ```text
+//! cargo run --release --example circuit_simulation
+//! ```
+
+use sparselu::solver::{SolveOptions, Solver};
+use sparselu::sparse::{gen, residual};
+use sparselu::util::Prng;
+
+fn main() {
+    // ASIC-like netlist: sparse interior + dense supply/clock border.
+    let a = gen::circuit_bbd(gen::CircuitParams {
+        n: 4000,
+        border_frac: 0.05,
+        border_density: 0.35,
+        interior_deg: 2,
+        seed: 0x51AC,
+    });
+    println!(
+        "netlist matrix: n={}, nnz={} (BBD: dense border rows/cols)",
+        a.n_rows(),
+        a.nnz()
+    );
+
+    let timesteps = 5;
+    let mut rng = Prng::new(7);
+
+    for (label, opts) in [
+        ("irregular (ours)", SolveOptions::ours(4)),
+        ("regular (PanguLU)", SolveOptions::pangulu(4)),
+    ] {
+        let mut total_numeric = 0.0;
+        let mut worst_residual: f64 = 0.0;
+        for _step in 0..timesteps {
+            let mut solver = Solver::new(opts.clone());
+            let f = solver.factorize(&a).expect("factorization");
+            total_numeric += f.report.numeric_seconds;
+            // transient excitation
+            let b: Vec<f64> = (0..a.n_rows()).map(|_| rng.signed_unit()).collect();
+            let x = f.solve(&b);
+            worst_residual = worst_residual.max(residual(&a, &x, &b));
+        }
+        println!(
+            "{label:18}: {timesteps} factorizations, numeric total {total_numeric:.3}s, \
+             worst residual {worst_residual:.2e}"
+        );
+    }
+
+    // Show the blocking the two policies chose.
+    let mut ours = Solver::new(SolveOptions::ours(4));
+    let f = ours.factorize(&a).unwrap();
+    let sizes = f.report.block_sizes.clone();
+    println!(
+        "\nirregular blocking chose {} blocks; first sizes {:?} … last sizes {:?}",
+        sizes.len(),
+        &sizes[..4.min(sizes.len())],
+        &sizes[sizes.len().saturating_sub(4)..]
+    );
+    println!(
+        "block nnz CV {:.3}; last-level nnz share {:.1}%",
+        f.report.balance.block_summary.cv(),
+        f.report.balance.last_level_share() * 100.0
+    );
+}

@@ -1,0 +1,82 @@
+"""AOT bridge: lower the L2 graphs (with their L1 Pallas kernels) to HLO
+text artifacts for the rust PJRT runtime.
+
+HLO *text* is the interchange format, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md and
+aot_recipe).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--sizes 32,64,...]
+Emits:  {getrf,trsm_l,trsm_u,gemm}_{size}.hlo.txt  + block_step_{size}.hlo.txt
+        + manifest.txt
+"""
+
+import argparse
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DEFAULT_SIZES = (32, 64, 128, 256)
+DTYPE = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, arg_shapes):
+    specs = [jax.ShapeDtypeStruct(s, DTYPE) for s in arg_shapes]
+    return jax.jit(fn).lower(*specs)
+
+
+def entries_for(size: int):
+    n = (size, size)
+    return {
+        f"getrf_{size}": (model.getrf_t, [n]),
+        f"trsm_l_{size}": (model.trsm_lower_t, [n, n]),
+        f"trsm_u_{size}": (model.trsm_upper_t, [n, n]),
+        f"gemm_{size}": (model.gemm_t, [n, n, n]),
+        f"block_step_{size}": (model.block_step_t, [n, n, n, n]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated tile sizes",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+
+    manifest = []
+    for size in sizes:
+        for name, (fn, shapes) in entries_for(size).items():
+            text = to_hlo_text(lower_entry(fn, shapes))
+            path = out / f"{name}.hlo.txt"
+            path.write_text(text)
+            manifest.append(f"{name}.hlo.txt {len(text)}")
+            print(f"wrote {path} ({len(text)} chars)")
+    (out / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    print(f"{len(manifest)} artifacts -> {out}")
+
+
+if __name__ == "__main__":
+    main()

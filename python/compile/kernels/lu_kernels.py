@@ -1,0 +1,122 @@
+"""L1: Pallas block kernels for the dense path of the blocked sparse LU.
+
+Hardware adaptation (DESIGN.md §3): the paper's dense path is cuBLAS on
+A100 (threadblocks over shared memory). Rethought for the TPU/Pallas
+model:
+
+* a block op works on one tile that fits **VMEM** — the BlockSpecs below
+  map the whole operand into VMEM in one shot for tiles ≤ 256×256 f64
+  (512 KiB/operand, comfortably inside the ~16 MiB/core budget with
+  double-buffering headroom);
+* the Schur update (`gemm_kernel`) is a single `jnp.dot` inside the
+  kernel, which Mosaic lowers onto the **MXU** systolic array — the analog
+  of tensor-core WMMA tiles;
+* GETRF/TRSM are sequential eliminations (latency-bound on any target);
+  they stay in-VMEM `fori_loop`s over vector ops, the same structure the
+  paper's single-SM dense getrf kernels have.
+
+All kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+both CPU-jax (pytest) and the rust PJRT client execute identically.
+Real-TPU performance is *estimated* from VMEM footprint + MXU utilization
+in DESIGN.md §7 / EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _getrf_kernel(a_ref, o_ref):
+    a = a_ref[...]
+    n = a.shape[0]
+
+    def body(k, a):
+        idx = jnp.arange(n)
+        below = idx > k
+        piv = a[k, k]
+        lcol = jnp.where(below, a[:, k] / piv, a[:, k])
+        a = a.at[:, k].set(lcol)
+        l_masked = jnp.where(below, lcol, 0.0)
+        u_masked = jnp.where(idx > k, a[k, :], 0.0)
+        return a - jnp.outer(l_masked, u_masked)
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, a)
+
+
+def _trsm_lower_kernel(lu_ref, b_ref, o_ref):
+    lu = lu_ref[...]
+    m = lu.shape[0]
+
+    def body(k, x):
+        idx = jnp.arange(m)
+        lcol = jnp.where(idx > k, lu[:, k], 0.0)
+        return x - jnp.outer(lcol, x[k, :])
+
+    o_ref[...] = jax.lax.fori_loop(0, m, body, b_ref[...])
+
+
+def _trsm_upper_right_kernel(lu_ref, b_ref, o_ref):
+    lu = lu_ref[...]
+    k = lu.shape[0]
+
+    def body(c, x):
+        idx = jnp.arange(k)
+        ucol = jnp.where(idx < c, lu[:, c], 0.0)
+        xc = (x[:, c] - x @ ucol) / lu[c, c]
+        return x.at[:, c].set(xc)
+
+    o_ref[...] = jax.lax.fori_loop(0, k, body, b_ref[...])
+
+
+def _gemm_kernel(c_ref, a_ref, b_ref, o_ref):
+    # One MXU-shaped contraction; fp64 on CPU-interpret, bf16xbf16->f32
+    # accumulate on a real TPU lowering.
+    o_ref[...] = c_ref[...] - jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=c_ref.dtype
+    )
+
+
+def _call(kernel, out_shape, *args):
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*args)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def getrf(a):
+    """{L\\U} of a square tile (no pivoting)."""
+    return _call(_getrf_kernel, jax.ShapeDtypeStruct(a.shape, a.dtype), a)
+
+
+@jax.jit
+def trsm_lower(lu, b):
+    """L^-1 B with unit-lower L from a factored tile."""
+    return _call(_trsm_lower_kernel, jax.ShapeDtypeStruct(b.shape, b.dtype), lu, b)
+
+
+@jax.jit
+def trsm_upper_right(lu, b):
+    """B U^-1 with upper U from a factored tile."""
+    return _call(_trsm_upper_right_kernel, jax.ShapeDtypeStruct(b.shape, b.dtype), lu, b)
+
+
+@jax.jit
+def gemm_update(c, a, b):
+    """C - A @ B."""
+    return _call(_gemm_kernel, jax.ShapeDtypeStruct(c.shape, c.dtype), c, a, b)
+
+
+def vmem_footprint_bytes(tile: int, dtype_bytes: int = 8, operands: int = 3) -> int:
+    """Estimated VMEM residency of one kernel invocation (DESIGN.md §7)."""
+    return operands * tile * tile * dtype_bytes
+
+
+def mxu_utilization_estimate(tile: int) -> float:
+    """Fraction of MXU peak the GEMM tile can sustain: the 128x128 systolic
+    array is fully fed for tile >= 128; smaller tiles waste lanes."""
+    return min(1.0, (tile / 128.0) ** 2) if tile < 128 else 1.0

@@ -1,0 +1,71 @@
+"""Pure-jnp reference oracles for the Pallas block kernels.
+
+These are the ground truth the L1 kernels are pytest-verified against
+(`python/tests/test_kernels.py`), and they match the rust dense kernels in
+`rust/src/numeric/dense.rs` operation-for-operation.
+
+All matrices are row-major jax arrays here; the AOT wrappers in `model.py`
+handle the transpose convention for the rust (column-major) caller.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def getrf_ref(a: jax.Array) -> jax.Array:
+    """No-pivot LU: returns {L\\U} packed (unit diagonal of L implicit)."""
+    n = a.shape[0]
+
+    def body(k, a):
+        idx = jnp.arange(n)
+        below = idx > k
+        piv = a[k, k]
+        lcol = jnp.where(below, a[:, k] / piv, a[:, k])
+        a = a.at[:, k].set(lcol)
+        l_masked = jnp.where(below, lcol, 0.0)
+        u_masked = jnp.where(idx > k, a[k, :], 0.0)
+        return a - jnp.outer(l_masked, u_masked)
+
+    return jax.lax.fori_loop(0, n, body, a)
+
+
+def trsm_lower_ref(lu: jax.Array, b: jax.Array) -> jax.Array:
+    """X = L^-1 B with unit-lower L stored in {L\\U} `lu`."""
+    m = lu.shape[0]
+
+    def body(k, x):
+        idx = jnp.arange(m)
+        lcol = jnp.where(idx > k, lu[:, k], 0.0)
+        return x - jnp.outer(lcol, x[k, :])
+
+    return jax.lax.fori_loop(0, m, body, b)
+
+
+def trsm_upper_right_ref(lu: jax.Array, b: jax.Array) -> jax.Array:
+    """X = B U^-1 with upper U stored in {L\\U} `lu` (right-side solve)."""
+    k = lu.shape[0]
+
+    def body(c, x):
+        idx = jnp.arange(k)
+        ucol = jnp.where(idx < c, lu[:, c], 0.0)
+        xc = (x[:, c] - x @ ucol) / lu[c, c]
+        return x.at[:, c].set(xc)
+
+    return jax.lax.fori_loop(0, k, body, b)
+
+
+def gemm_update_ref(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """C - A @ B (the Schur update)."""
+    return c - a @ b
+
+
+def block_step_ref(d, a, b, c):
+    """One fused right-looking elimination step on a 2x2 dense block view:
+
+    D -> {L\\U}, A -> A U^-1, B -> L^-1 B, C -> C - A' B'.
+    """
+    lu = getrf_ref(d)
+    a2 = trsm_upper_right_ref(lu, a)
+    b2 = trsm_lower_ref(lu, b)
+    c2 = gemm_update_ref(c, a2, b2)
+    return lu, a2, b2, c2

@@ -1,0 +1,58 @@
+"""L2: the jax compute graph around the L1 Pallas kernels.
+
+Two responsibilities:
+
+1. **Transpose convention** — the rust coordinator stores blocks
+   column-major; jax literals built from those buffers read as the
+   transposed matrix. Every exported entry point therefore takes and
+   returns transposed operands, with the transposes folded into the XLA
+   graph (they are layout ops, fused away by the compiler):
+   `getrf_t(Aᵀ) = (LU(A))ᵀ`, `gemm_t(Cᵀ,Aᵀ,Bᵀ) = (C - A·B)ᵀ = Cᵀ - Bᵀ·Aᵀ`.
+
+2. **Fusion** — `block_step_t` is the fused right-looking elimination
+   step over a dense 2×2 super-tile (GETRF → both TRSMs → GEMM in one
+   XLA program), used by the perf pass to amortize launch overhead when a
+   whole trailing region goes dense.
+
+Python runs only at build time: `aot.py` lowers these functions to HLO
+text once; the rust runtime replays them forever after.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import lu_kernels as lk
+
+
+def getrf_t(a_t):
+    """Transposed-I/O wrapper of the L1 GETRF kernel. Returns a 1-tuple
+    (the AOT bridge lowers with return_tuple=True)."""
+    return (lk.getrf(a_t.T).T,)
+
+
+def trsm_lower_t(lu_t, b_t):
+    """Bᵀ ← (L⁻¹B)ᵀ."""
+    return (lk.trsm_lower(lu_t.T, b_t.T).T,)
+
+
+def trsm_upper_t(lu_t, b_t):
+    """Bᵀ ← (B U⁻¹)ᵀ."""
+    return (lk.trsm_upper_right(lu_t.T, b_t.T).T,)
+
+
+def gemm_t(c_t, a_t, b_t):
+    """Cᵀ ← (C − A·B)ᵀ — note transposition swaps the product order, so
+    this stays a single MXU contraction with no data movement."""
+    return (c_t - jnp.dot(b_t, a_t, preferred_element_type=c_t.dtype),)
+
+
+def block_step_t(d_t, a_t, b_t, c_t):
+    """Fused elimination step on a dense 2×2 super-tile (transposed I/O):
+
+    D→{L\\U},  A→A·U⁻¹ (L-panel),  B→L⁻¹·B (U-panel),  C→C−A'B'.
+    """
+    d, a, b, c = d_t.T, a_t.T, b_t.T, c_t.T
+    lu = lk.getrf(d)
+    a2 = lk.trsm_upper_right(lu, a)
+    b2 = lk.trsm_lower(lu, b)
+    c2 = lk.gemm_update(c, a2, b2)
+    return (lu.T, a2.T, b2.T, c2.T)

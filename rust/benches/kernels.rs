@@ -1,0 +1,132 @@
+//! Micro-benchmarks of the four block kernels (sparse + dense paths) —
+//! the inputs to the perf pass (EXPERIMENTS.md §Perf L3).
+
+mod common;
+
+use common::{bench, section};
+use sparselu::blocking::{regular_blocking, BlockedMatrix};
+use sparselu::numeric::dense;
+use sparselu::numeric::kernels::{self, Workspace};
+use sparselu::sparse::gen;
+use sparselu::symbolic;
+use sparselu::util::Prng;
+
+fn main() {
+    section("sparse kernels on BBD blocks (block size 256)");
+    let a = gen::circuit_bbd(gen::CircuitParams { n: 2048, ..Default::default() });
+    let sym = symbolic::analyze(&a);
+    let ldu = sym.ldu_pattern(&a);
+    let bm = BlockedMatrix::build(&ldu, regular_blocking(2048, 256));
+    let nb = bm.nb();
+    let mut ws = Workspace::with_capacity(512);
+
+    // representative blocks: last diagonal (dense-ish) + mid panels
+    let diag_id = bm.block_id(nb - 1, nb - 1).unwrap();
+    let diag = bm.block(diag_id);
+    println!(
+        "diag block ({},{}) nnz={} density={:.3}",
+        nb - 1,
+        nb - 1,
+        diag.nnz(),
+        diag.density()
+    );
+    bench("sparse GETRF (dense-ish diag block)", 50, || {
+        let mut vals = diag.values.clone();
+        kernels::getrf(diag, &mut vals, &mut ws).unwrap()
+    });
+
+    let first_diag = bm.block(bm.block_id(0, 0).unwrap());
+    bench("sparse GETRF (sparse diag block)", 200, || {
+        let mut vals = first_diag.values.clone();
+        kernels::getrf(first_diag, &mut vals, &mut ws).unwrap()
+    });
+
+    // factor the first diagonal block once for panel benches
+    let mut diag_fact = first_diag.values.clone();
+    kernels::getrf(first_diag, &mut diag_fact, &mut ws).unwrap();
+    if let Some(uid) = bm.by_row[0].iter().copied().find(|&id| bm.block(id).bj > 0) {
+        let upat = bm.block(uid);
+        bench("sparse GESSM (U panel)", 200, || {
+            let mut v = upat.values.clone();
+            kernels::gessm(upat, &mut v, first_diag, &diag_fact, &mut ws)
+        });
+    }
+    if let Some(lid) = bm.by_col[0].iter().copied().find(|&id| bm.block(id).bi > 0) {
+        let lpat = bm.block(lid);
+        bench("sparse TSTRF (L panel)", 200, || {
+            let mut v = lpat.values.clone();
+            kernels::tstrf(lpat, &mut v, first_diag, &diag_fact, &mut ws)
+        });
+        // SSSSM with the densest available target
+        let tgt_bi = bm.block(lid).bi as usize;
+        if let Some(uid) = bm.by_row[0].iter().copied().find(|&id| bm.block(id).bj > 0) {
+            let tgt_bj = bm.block(uid).bj as usize;
+            if let Some(cid) = bm.block_id(tgt_bi, tgt_bj) {
+                let (cpat, apat, bpat) = (bm.block(cid), bm.block(lid), bm.block(uid));
+                let flops = kernels::cost::ssssm(apat, bpat);
+                let r = bench("sparse SSSSM (Schur update)", 400, || {
+                    let mut v = cpat.values.clone();
+                    kernels::ssssm(cpat, &mut v, apat, &apat.values, bpat, &bpat.values, &mut ws)
+                });
+                println!("  SSSSM ~{:.0} Mflop/s (sparse)", flops / r.median / 1e6);
+            }
+        }
+    }
+
+    section("dense kernels (pure rust path)");
+    for n in [64usize, 128, 256] {
+        let mut rng = Prng::new(n as u64);
+        let mut a: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
+        for i in 0..n {
+            a[i * n + i] = n as f64;
+        }
+        let r = bench(&format!("dense GETRF {n}x{n}"), 100, || {
+            let mut m = a.clone();
+            dense::getrf_in_place(&mut m, n).unwrap()
+        });
+        let flops = 2.0 / 3.0 * (n as f64).powi(3);
+        println!("  ~{:.0} Mflop/s", flops / r.median / 1e6);
+
+        let b: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
+        let c: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
+        let r = bench(&format!("dense GEMM   {n}x{n}"), 100, || {
+            let mut m = c.clone();
+            dense::gemm_update(&mut m, &a, &b, n, n, n)
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        println!("  ~{:.0} Mflop/s", flops / r.median / 1e6);
+    }
+
+    // PJRT artifact path (L1 Pallas kernels through the xla runtime) —
+    // measures the dispatch + execution overhead vs the pure-rust path.
+    let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art_dir.join("manifest.txt").exists() {
+        use sparselu::numeric::factor::DenseBackend;
+        use sparselu::runtime::PjrtDense;
+        section("PJRT artifact kernels (AOT Pallas via xla crate)");
+        let pjrt = PjrtDense::load(&art_dir).expect("load artifacts");
+        for n in [64usize, 128, 256] {
+            let mut rng = Prng::new(n as u64);
+            let mut a: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
+            for i in 0..n {
+                a[i * n + i] = n as f64;
+            }
+            let b: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
+            let c: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
+            let r = bench(&format!("PJRT GEMM   {n}x{n}"), 50, || {
+                let mut m = c.clone();
+                pjrt.gemm(&mut m, &a, &b, n, n, n)
+            });
+            let flops = 2.0 * (n as f64).powi(3);
+            println!("  ~{:.0} Mflop/s (incl. dispatch)", flops / r.median / 1e6);
+            let r = bench(&format!("PJRT GETRF  {n}x{n}"), 50, || {
+                let mut m = a.clone();
+                pjrt.getrf(&mut m, n).unwrap()
+            });
+            let flops = 2.0 / 3.0 * (n as f64).powi(3);
+            println!("  ~{:.0} Mflop/s (incl. dispatch)", flops / r.median / 1e6);
+        }
+    } else {
+        println!("\n(PJRT bench skipped: run `make artifacts`)");
+    }
+}

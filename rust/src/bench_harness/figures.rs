@@ -1,0 +1,276 @@
+//! Figure reproductions: Fig 1 (phase breakdown), Fig 2 (fill-in), Fig 4
+//! (regular-block-size sensitivity), Fig 5 (balance under regular
+//! blocking), Figs 7/8/11 (feature curves), Fig 9 (worked blocking
+//! example).
+
+use super::{matrices, write_csv, SuiteScale, TablePrinter};
+use crate::blocking::{
+    irregular_blocking, regular_blocking, BalanceReport, BlockedMatrix, DiagFeature,
+    IrregularParams,
+};
+use crate::solver::{SolveOptions, Solver};
+use crate::sparse::gen;
+use crate::symbolic;
+use std::path::Path;
+
+/// Fig 1: time share of reordering / symbolic / numeric per matrix
+/// (the paper reports numeric at 50–95%).
+pub fn fig1_phase_breakdown(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
+    println!("Fig 1 — phase time breakdown (numeric share should dominate)");
+    let tp = TablePrinter::new(
+        &["Matrix", "reorder(s)", "symbolic(s)", "numeric(s)", "numeric %"],
+        &[18, 11, 12, 11, 10],
+    );
+    let mut csv = String::from("matrix,reorder_s,symbolic_s,preprocess_s,numeric_s,numeric_share\n");
+    for m in matrices::paper_suite(scale) {
+        let mut solver = Solver::new(SolveOptions::pangulu(1));
+        let f = solver
+            .factorize(&m.matrix)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", m.name))?;
+        let r = &f.report;
+        tp.row(&[
+            m.name,
+            &format!("{:.3}", r.reorder_seconds),
+            &format!("{:.3}", r.symbolic_seconds),
+            &format!("{:.3}", r.numeric_seconds),
+            &format!("{:.0}%", r.numeric_share() * 100.0),
+        ]);
+        csv.push_str(&format!(
+            "{},{:.6},{:.6},{:.6},{:.6},{:.4}\n",
+            m.name,
+            r.reorder_seconds,
+            r.symbolic_seconds,
+            r.preprocess_seconds,
+            r.numeric_seconds,
+            r.numeric_share()
+        ));
+    }
+    write_csv(out_dir, "fig1.csv", &csv)
+}
+
+/// Fig 2: ordering decides fill — arrow-up fills completely, arrow-down
+/// (same graph, optimal order) not at all; min-degree repairs arrow-up.
+pub fn fig2_fill_in(out_dir: &Path) -> anyhow::Result<()> {
+    println!("Fig 2 — structure determines fill-in (arrow matrix, n=2000)");
+    let n = 2000;
+    let up = gen::arrow_up(n);
+    let down = gen::arrow_down(n);
+    let sym_up = symbolic::analyze(&up);
+    let sym_down = symbolic::analyze(&down);
+    let md = crate::ordering::order(&up, crate::ordering::OrderingMethod::MinDegree);
+    let sym_fixed = symbolic::analyze(&up.permute_sym(md.as_slice()));
+    let tp = TablePrinter::new(&["Ordering", "nnz(A)", "nnz(L+U)", "fill ratio"], &[24, 10, 14, 11]);
+    let rows = [
+        ("arrow-up (natural)", up.nnz(), sym_up.nnz_ldu()),
+        ("arrow-down (natural)", down.nnz(), sym_down.nnz_ldu()),
+        ("arrow-up + min-degree", up.nnz(), sym_fixed.nnz_ldu()),
+    ];
+    let mut csv = String::from("config,nnz_a,nnz_ldu,fill_ratio\n");
+    for (name, nnz_a, nnz_ldu) in rows {
+        tp.row(&[
+            name,
+            &nnz_a.to_string(),
+            &nnz_ldu.to_string(),
+            &format!("{:.1}x", nnz_ldu as f64 / nnz_a as f64),
+        ]);
+        csv.push_str(&format!(
+            "{name},{nnz_a},{nnz_ldu},{:.3}\n",
+            nnz_ldu as f64 / nnz_a as f64
+        ));
+    }
+    assert_eq!(sym_up.nnz_ldu(), n * n, "arrow-up must fill fully");
+    assert_eq!(sym_down.nnz_ldu(), 3 * n - 2, "arrow-down must not fill");
+    write_csv(out_dir, "fig2.csv", &csv)
+}
+
+/// Fig 4: numeric time across regular block sizes vs what the selection
+/// tree picks vs irregular blocking (offshore analogue).
+pub fn fig4_block_size_sweep(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
+    let m = matrices::offshore(scale);
+    println!(
+        "Fig 4 — numeric time vs regular block size ({} analogue, n={})",
+        m.name,
+        m.matrix.n_rows()
+    );
+    let n = m.matrix.n_rows();
+    let options = crate::blocking::selection::scaled_options(n);
+    let tp = TablePrinter::new(&["Config", "block size", "measured(s)", "modeled(s)"], &[16, 12, 12, 12]);
+    let mut csv = String::from("config,block_size,measured_s,modeled_s\n");
+    let run = |label: &str, opts: SolveOptions| -> anyhow::Result<(f64, f64)> {
+        let mut solver = Solver::new(opts);
+        let f = solver
+            .factorize(&m.matrix)
+            .map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+        Ok((f.report.numeric_seconds, f.report.modeled_makespan))
+    };
+    for &bs in &options {
+        let (meas, modeled) = run(&format!("regular {bs}"), SolveOptions::pangulu_with_size(1, bs))?;
+        tp.row(&["regular", &bs.to_string(), &format!("{meas:.3}"), &format!("{modeled:.4}")]);
+        csv.push_str(&format!("regular,{bs},{meas:.6},{modeled:.6}\n"));
+    }
+    // what the selection tree would pick
+    let (meas_sel, mod_sel) = run("selected", SolveOptions::pangulu(1))?;
+    tp.row(&["sel.tree", "-", &format!("{meas_sel:.3}"), &format!("{mod_sel:.4}")]);
+    csv.push_str(&format!("selected,,{meas_sel:.6},{mod_sel:.6}\n"));
+    let (meas_irr, mod_irr) = run("irregular", SolveOptions::ours(1))?;
+    tp.row(&["irregular", "-", &format!("{meas_irr:.3}"), &format!("{mod_irr:.4}")]);
+    csv.push_str(&format!("irregular,,{meas_irr:.6},{mod_irr:.6}\n"));
+    write_csv(out_dir, "fig4.csv", &csv)
+}
+
+/// Fig 5: nnz imbalance across blocks and dependency levels under regular
+/// vs irregular blocking on the BBD (ASIC-like) matrix.
+pub fn fig5_balance(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
+    println!("Fig 5 — per-block / per-level nnz balance (ASIC_680k analogue)");
+    let suite = matrices::paper_suite(scale);
+    let m = suite.iter().find(|m| m.name == "ASIC_680k").unwrap();
+    let perm = crate::ordering::order(&m.matrix, crate::ordering::OrderingMethod::MinDegree);
+    let pa = m.matrix.permute_sym(perm.as_slice());
+    let sym = symbolic::analyze(&pa);
+    let ldu = sym.ldu_pattern(&pa);
+    let n = ldu.n_cols();
+    let curve = DiagFeature::from_csc(&ldu).curve();
+    let irr = irregular_blocking(&curve, &IrregularParams::default());
+    let reg = regular_blocking(n, n / irr.num_blocks().max(1));
+
+    let mut csv = String::from("blocking,block_cv,within_level_cv,last_level_share,num_blocks\n");
+    let tp = TablePrinter::new(
+        &["Blocking", "blocks", "block nnz CV", "within-level CV", "last-level share"],
+        &[12, 8, 13, 16, 17],
+    );
+    for (label, blocking) in [("regular", reg), ("irregular", irr)] {
+        let bm = BlockedMatrix::build(&ldu, blocking);
+        let rep = BalanceReport::of(&bm);
+        tp.row(&[
+            label,
+            &bm.nb().to_string(),
+            &format!("{:.3}", rep.block_summary.cv()),
+            &format!("{:.3}", rep.within_level_cv),
+            &format!("{:.1}%", rep.last_level_share() * 100.0),
+        ]);
+        csv.push_str(&format!(
+            "{label},{:.4},{:.4},{:.4},{}\n",
+            rep.block_summary.cv(),
+            rep.within_level_cv,
+            rep.last_level_share(),
+            bm.nb()
+        ));
+    }
+    write_csv(out_dir, "fig5.csv", &csv)
+}
+
+/// Figs 7(c,d): feature curves of the linear and uniform archetypes.
+pub fn fig7_archetype_curves(out_dir: &Path) -> anyhow::Result<()> {
+    println!("Fig 7 — diagonal-pointer percentage curves: linear vs uniform");
+    let lin = gen::tridiagonal(4000);
+    let uni = gen::uniform_random(2000, 0.01, 0x71).plus_transpose_pattern();
+    let c_lin = DiagFeature::from_csc(&lin).curve();
+    let c_uni = DiagFeature::from_csc(&uni).curve();
+    println!(
+        "  linear matrix quadratic-score {:+.4} (≈0 ⇒ linear curve)",
+        c_lin.quadratic_score()
+    );
+    println!(
+        "  uniform matrix quadratic-score {:+.4} (<0 ⇒ quadratic curve)",
+        c_uni.quadratic_score()
+    );
+    write_csv(out_dir, "fig7_linear.csv", &c_lin.to_csv(1000))?;
+    write_csv(out_dir, "fig7_uniform.csv", &c_uni.to_csv(1000))
+}
+
+/// Figs 8(c,d): curves with local dense regions and dense rows/cols.
+pub fn fig8_local_curves(out_dir: &Path) -> anyhow::Result<()> {
+    println!("Fig 8 — feature curves exposing local structure");
+    let blocks = gen::local_dense_blocks(3000, &[(600, 250), (1900, 300)], 2, 0x81);
+    let rows = gen::dense_rows_cols(3000, &[700, 1500, 2400], 2, 0x82);
+    let c_blocks = DiagFeature::from_csc(&blocks.plus_transpose_pattern()).curve();
+    let c_rows = DiagFeature::from_csc(&rows.plus_transpose_pattern()).curve();
+    println!("  local-dense max jump {:.4}", c_blocks.max_jump());
+    println!("  dense-rows  max jump {:.4} (jumps mark dense rows/cols)", c_rows.max_jump());
+    write_csv(out_dir, "fig8_local_dense.csv", &c_blocks.to_csv(1000))?;
+    write_csv(out_dir, "fig8_dense_rows.csv", &c_rows.to_csv(1000))
+}
+
+/// Fig 9: worked example — the blocking positions Algorithm 3 emits on a
+/// small matrix with one dense region.
+pub fn fig9_blocking_example(out_dir: &Path) -> anyhow::Result<()> {
+    println!("Fig 9 — irregular blocking worked example");
+    let a = gen::local_dense_blocks(1200, &[(800, 250)], 2, 0x91);
+    let sym = symbolic::analyze(&a);
+    let ldu = sym.ldu_pattern(&a);
+    let curve = DiagFeature::from_csc(&ldu).curve();
+    let params = IrregularParams { sample_points: 24, min_block: 16, ..Default::default() };
+    let blocking = irregular_blocking(&curve, &params);
+    println!("  positions: {:?}", blocking.positions());
+    println!("  sizes    : {:?}", blocking.sizes());
+    let mut csv = String::from("position\n");
+    for p in blocking.positions() {
+        csv.push_str(&format!("{p}\n"));
+    }
+    write_csv(out_dir, "fig9_positions.csv", &csv)
+}
+
+/// Fig 11: post-symbolic nonzero distributions of the ASIC_680k and
+/// ecology1 analogues.
+pub fn fig11_distributions(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
+    println!("Fig 11 — nnz distribution: ASIC_680k vs ecology1 analogues");
+    let suite = matrices::paper_suite(scale);
+    for name in ["ASIC_680k", "ecology1"] {
+        let m = suite.iter().find(|m| m.name == name).unwrap();
+        // ecology1 is shown in its natural banded form (the paper's Fig 11
+        // right is linear — a bandwidth-preserving ordering keeps it so;
+        // min-degree would push fill to the bottom-right even here).
+        let method = if name == "ecology1" {
+            crate::ordering::OrderingMethod::Rcm
+        } else {
+            crate::ordering::OrderingMethod::MinDegree
+        };
+        let perm = crate::ordering::order(&m.matrix, method);
+        let pa = m.matrix.permute_sym(perm.as_slice());
+        let sym = symbolic::analyze(&pa);
+        let ldu = sym.ldu_pattern(&pa);
+        let curve = DiagFeature::from_csc(&ldu).curve();
+        // paper: ASIC bottom-right-heavy (98% in last region), ecology linear
+        let last_20pct = 1.0 - curve.pct[(ldu.n_cols() as f64 * 0.8) as usize];
+        println!(
+            "  {name:18} quadratic-score {:+.4}  nnz share in last 20% of diag: {:.0}%",
+            curve.quadratic_score(),
+            last_20pct * 100.0
+        );
+        write_csv(out_dir, &format!("fig11_{name}.csv"), &curve.to_csv(1000))?;
+    }
+    Ok(())
+}
+
+/// Used by the CLI `analyze` command too.
+pub fn describe_curve(a: &crate::sparse::Csc) -> (f64, f64) {
+    let curve = DiagFeature::from_csc(&a.plus_transpose_pattern()).curve();
+    (curve.quadratic_score(), curve.max_jump())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_invariants_hold() {
+        let tmp = std::env::temp_dir().join("sparselu_fig2");
+        fig2_fill_in(&tmp).unwrap();
+        assert!(tmp.join("fig2.csv").exists());
+    }
+
+    #[test]
+    fn fig7_writes_curves() {
+        let tmp = std::env::temp_dir().join("sparselu_fig7");
+        fig7_archetype_curves(&tmp).unwrap();
+        let csv = std::fs::read_to_string(tmp.join("fig7_linear.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 1002);
+    }
+
+    #[test]
+    fn fig9_emits_valid_positions() {
+        let tmp = std::env::temp_dir().join("sparselu_fig9");
+        fig9_blocking_example(&tmp).unwrap();
+    }
+
+}

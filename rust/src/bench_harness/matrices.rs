@@ -1,0 +1,155 @@
+//! The benchmark suite: synthetic analogues of the paper's Table 3
+//! matrices (SuiteSparse is not available offline; DESIGN.md §2 documents
+//! the substitution). Dimensions are scaled ~100× down so the whole table
+//! regenerates in minutes on CPU; the *relative* structure (nonzero
+//! distribution archetype, fill behaviour, density class) follows the
+//! original of each kind.
+//!
+//! Real SuiteSparse `.mtx` files can be dropped in via
+//! `repro solve --matrix file.mtx` unchanged.
+
+use crate::sparse::{gen, Csc};
+
+/// One suite entry.
+pub struct SuiteMatrix {
+    /// Paper matrix this stands in for.
+    pub name: &'static str,
+    /// SuiteSparse kind string (Table 3 column).
+    pub kind: &'static str,
+    pub matrix: Csc,
+}
+
+/// Scale factor presets for the suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SuiteScale {
+    /// Tiny — CI-speed smoke (seconds).
+    Small,
+    /// The default bench scale (table regeneration in minutes).
+    Medium,
+}
+
+/// Build the full Table 3/4/5 suite.
+pub fn paper_suite(scale: SuiteScale) -> Vec<SuiteMatrix> {
+    let s = match scale {
+        SuiteScale::Small => 1usize,
+        SuiteScale::Medium => 2usize,
+    };
+    let m = |name: &'static str, kind: &'static str, matrix: Csc| SuiteMatrix {
+        name,
+        kind,
+        matrix,
+    };
+    vec![
+        m(
+            "apache2",
+            "Structural Problem",
+            gen::grid3d_laplacian(10 * s, 10 * s, 9 * s),
+        ),
+        m(
+            "ASIC_680k",
+            "Circuit Simulation Problem",
+            gen::circuit_bbd(gen::CircuitParams {
+                n: 3400 * s,
+                border_frac: 0.05,
+                border_density: 0.35,
+                interior_deg: 2,
+                seed: 0x680F,
+            }),
+        ),
+        m("cage12", "Directed Weighted Graph", gen::directed_graph(1300 * s, 8, 0xCA6E)),
+        m(
+            "CoupCons3D",
+            "Structural Problem",
+            gen::banded_fem(2100 * s, &[1, 2, 3, 40, 41, 80], 0.85, 0xC0C0),
+        ),
+        m(
+            "dielFilterV3real",
+            "Electromagnetics Problem",
+            gen::electromagnetics_like(2750 * s, 24, 2, 0xD1E1),
+        ),
+        m("ecology1", "2D/3D Problem", gen::grid2d_laplacian(50 * s, 50 * s)),
+        m("G3_circuit", "Circuit Simulation Problem", gen::grid2d_laplacian(63 * s, 63 * s)),
+        m(
+            "inline_1",
+            "Structural Problem",
+            gen::banded_fem(2500 * s, &[1, 2, 3, 12, 13], 0.9, 0x111E),
+        ),
+        m("language", "Directed Weighted Graph", gen::directed_graph(2000 * s, 3, 0x1A26)),
+        m(
+            "boneS10",
+            "Model Reduction Problem",
+            gen::banded_fem(2250 * s, &[1, 2, 3, 30, 60, 61], 0.8, 0xB0E5),
+        ),
+    ]
+}
+
+/// The offshore analogue (used by Fig 4's block-size sweep).
+pub fn offshore(scale: SuiteScale) -> SuiteMatrix {
+    let s = match scale {
+        SuiteScale::Small => 1usize,
+        SuiteScale::Medium => 2usize,
+    };
+    SuiteMatrix {
+        name: "offshore",
+        kind: "Electromagnetics Problem",
+        matrix: gen::electromagnetics_like(1300 * s, 12, 2, 0x0F5E),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_ten_table4_matrices() {
+        let suite = paper_suite(SuiteScale::Small);
+        assert_eq!(suite.len(), 10);
+        let names: Vec<&str> = suite.iter().map(|m| m.name).collect();
+        for expect in [
+            "apache2",
+            "ASIC_680k",
+            "cage12",
+            "CoupCons3D",
+            "dielFilterV3real",
+            "ecology1",
+            "G3_circuit",
+            "inline_1",
+            "language",
+            "boneS10",
+        ] {
+            assert!(names.contains(&expect), "{expect} missing");
+        }
+    }
+
+    #[test]
+    fn all_matrices_valid_and_diag_full() {
+        for m in paper_suite(SuiteScale::Small) {
+            m.matrix.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert!(m.matrix.has_full_diagonal(), "{}", m.name);
+            assert!(m.matrix.n_rows() >= 900, "{} too small", m.name);
+        }
+    }
+
+    #[test]
+    fn asic_like_is_border_heavy() {
+        let suite = paper_suite(SuiteScale::Small);
+        let asic = suite.iter().find(|m| m.name == "ASIC_680k").unwrap();
+        // feature curve of A itself already shows the right-bottom skew
+        let sym = asic.matrix.plus_transpose_pattern();
+        let f = crate::blocking::DiagFeature::from_csc(&sym).curve();
+        assert!(
+            f.quadratic_score() < -0.02,
+            "ASIC analogue must be bottom-right heavy, score {}",
+            f.quadratic_score()
+        );
+    }
+
+    #[test]
+    fn ecology_like_is_linear() {
+        let suite = paper_suite(SuiteScale::Small);
+        let eco = suite.iter().find(|m| m.name == "ecology1").unwrap();
+        let sym = eco.matrix.plus_transpose_pattern();
+        let f = crate::blocking::DiagFeature::from_csc(&sym).curve();
+        assert!(f.quadratic_score().abs() < 0.02, "score {}", f.quadratic_score());
+    }
+}

@@ -1,0 +1,107 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation (§5) — see DESIGN.md §4 for the experiment index.
+//!
+//! Each experiment prints a paper-shaped table/series to stdout and writes
+//! CSV files under the output directory. Run via the CLI:
+//!
+//! ```text
+//! repro bench table4 --out results
+//! repro bench all    --out results
+//! ```
+
+pub mod figures;
+pub mod matrices;
+pub mod sweeps;
+pub mod tables;
+
+pub use matrices::{paper_suite, SuiteMatrix, SuiteScale};
+
+use std::io::Write;
+use std::path::Path;
+
+/// All experiment names in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "fig4", "fig5", "fig7", "fig8", "fig9", "table3", "table4", "fig10",
+    "table5", "fig11", "fig12", "prep", "ablate",
+];
+
+/// Run one experiment (or `all`) writing CSVs into `out_dir`.
+pub fn run(experiment: &str, out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    match experiment {
+        "fig1" => figures::fig1_phase_breakdown(out_dir, scale),
+        "fig2" => figures::fig2_fill_in(out_dir),
+        "fig4" => figures::fig4_block_size_sweep(out_dir, scale),
+        "fig5" => figures::fig5_balance(out_dir, scale),
+        "fig7" => figures::fig7_archetype_curves(out_dir),
+        "fig8" => figures::fig8_local_curves(out_dir),
+        "fig9" => figures::fig9_blocking_example(out_dir),
+        "table3" => tables::table3_suite_stats(out_dir, scale),
+        "table4" => tables::table4_single_gpu(out_dir, scale),
+        "table5" => tables::table5_four_gpus(out_dir, scale),
+        "fig10" => sweeps::fig10_pangulu_best(out_dir, scale, 1),
+        "fig12" => sweeps::fig12_pangulu_best(out_dir, scale, 4),
+        "fig11" => figures::fig11_distributions(out_dir, scale),
+        "prep" => sweeps::preprocessing_cost(out_dir, scale),
+        "ablate" => sweeps::ablations(out_dir, scale),
+        "all" => {
+            for e in EXPERIMENTS {
+                println!("\n======== {e} ========");
+                run(e, out_dir, scale)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other:?}; options: {EXPERIMENTS:?} or all"),
+    }
+}
+
+/// Write a CSV file (creating the directory if needed).
+pub(crate) fn write_csv(out_dir: &Path, name: &str, content: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join(name);
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(content.as_bytes())?;
+    println!("  -> wrote {}", path.display());
+    Ok(())
+}
+
+/// Fixed-width table printer.
+pub(crate) struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Self {
+        let tp = Self { widths: widths.to_vec() };
+        tp.row(headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + widths.len()));
+        tp
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let mut line = String::new();
+        for (cell, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{cell:>w$} ", w = w));
+        }
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let tmp = std::env::temp_dir().join("sparselu_bench_test");
+        assert!(run("nope", &tmp, SuiteScale::Small).is_err());
+    }
+
+    #[test]
+    fn experiment_list_is_complete() {
+        assert!(EXPERIMENTS.contains(&"table4"));
+        assert!(EXPERIMENTS.contains(&"fig12"));
+        assert!(EXPERIMENTS.contains(&"ablate"));
+        assert_eq!(EXPERIMENTS.len(), 15);
+    }
+}

@@ -1,0 +1,244 @@
+//! Fig 10 / Fig 12 (PanguLU_Best block-size sweeps vs irregular blocking)
+//! and the §5.4 preprocessing-cost comparison.
+
+use super::{matrices, write_csv, SuiteScale, TablePrinter};
+use crate::solver::{SolveOptions, Solver};
+use crate::util::stats::geomean;
+use std::path::Path;
+
+/// Sweep all regular sizes; return ((size, time) best by measured,
+/// (size, time) best by modeled makespan).
+fn best_regular(
+    matrix: &crate::sparse::Csc,
+    workers: u32,
+) -> anyhow::Result<((usize, f64), (usize, f64))> {
+    let options = crate::blocking::selection::scaled_options(matrix.n_cols());
+    let mut best_meas: Option<(usize, f64)> = None;
+    let mut best_model: Option<(usize, f64)> = None;
+    for &bs in &options {
+        let mut solver = Solver::new(SolveOptions::pangulu_with_size(workers, bs));
+        let f = solver
+            .factorize(matrix)
+            .map_err(|e| anyhow::anyhow!("block size {bs}: {e}"))?;
+        let t = f.report.numeric_seconds;
+        let m = f.report.modeled_makespan;
+        if best_meas.map(|(_, bt)| t < bt).unwrap_or(true) {
+            best_meas = Some((bs, t));
+        }
+        if best_model.map(|(_, bm)| m < bm).unwrap_or(true) {
+            best_model = Some((bs, m));
+        }
+    }
+    Ok((best_meas.unwrap(), best_model.unwrap()))
+}
+
+fn pangulu_best_sweep(
+    out_dir: &Path,
+    scale: SuiteScale,
+    workers: u32,
+    fig: &str,
+    paper_avg: &str,
+) -> anyhow::Result<()> {
+    println!(
+        "{} — PanguLU / PanguLU_Best / Ours on {} device(s) (paper avg PanguLU_Best speedup {})",
+        fig.to_uppercase(),
+        workers,
+        paper_avg
+    );
+    let tp = TablePrinter::new(
+        &[
+            "Matrix", "PanguLU(s)", "Best(s)", "best size", "Ours(s)", "Best/PanguLU",
+            "Ours/Best", "mOurs/mBest",
+        ],
+        &[18, 11, 10, 10, 10, 13, 10, 12],
+    );
+    let mut csv = String::from(
+        "matrix,pangulu_s,best_s,best_size,ours_s,best_speedup,ours_vs_best,modeled_ours_vs_best\n",
+    );
+    let mut best_speedups = Vec::new();
+    let mut ours_vs_best = Vec::new();
+    let mut modeled_ours_vs_best = Vec::new();
+    for m in matrices::paper_suite(scale) {
+        let run = |opts: SolveOptions| -> anyhow::Result<(f64, f64)> {
+            let mut solver = Solver::new(opts);
+            let f = solver
+                .factorize(&m.matrix)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", m.name))?;
+            Ok((f.report.numeric_seconds, f.report.modeled_makespan))
+        };
+        let (pangulu, _) = run(SolveOptions::pangulu(workers))?;
+        let ((bs, best), (_, best_modeled)) = best_regular(&m.matrix, workers)?;
+        let (ours, ours_modeled) = run(SolveOptions::ours(workers))?;
+        let sp_best = pangulu / best;
+        let sp_ours = best / ours;
+        let sp_ours_modeled = best_modeled / ours_modeled;
+        best_speedups.push(sp_best);
+        ours_vs_best.push(sp_ours);
+        modeled_ours_vs_best.push(sp_ours_modeled);
+        tp.row(&[
+            m.name,
+            &format!("{pangulu:.3}"),
+            &format!("{best:.3}"),
+            &bs.to_string(),
+            &format!("{ours:.3}"),
+            &format!("{sp_best:.2}x"),
+            &format!("{sp_ours:.2}x"),
+            &format!("{sp_ours_modeled:.2}x"),
+        ]);
+        csv.push_str(&format!(
+            "{},{pangulu:.6},{best:.6},{bs},{ours:.6},{sp_best:.3},{sp_ours:.3},{sp_ours_modeled:.3}\n",
+            m.name
+        ));
+    }
+    println!(
+        "AVG: PanguLU_Best over PanguLU {:.2}x (paper {paper_avg}); Ours over Best \
+         {:.2}x measured / {:.2}x modeled-A100",
+        geomean(&best_speedups),
+        geomean(&ours_vs_best),
+        geomean(&modeled_ours_vs_best)
+    );
+    csv.push_str(&format!(
+        "GEOMEAN,,,,,{:.3},{:.3},{:.3}\n",
+        geomean(&best_speedups),
+        geomean(&ours_vs_best),
+        geomean(&modeled_ours_vs_best)
+    ));
+    write_csv(out_dir, &format!("{fig}.csv"), &csv)
+}
+
+/// Fig 10: single device.
+pub fn fig10_pangulu_best(out_dir: &Path, scale: SuiteScale, workers: u32) -> anyhow::Result<()> {
+    pangulu_best_sweep(out_dir, scale, workers, "fig10", "1.19x")
+}
+
+/// Fig 12: four devices.
+pub fn fig12_pangulu_best(out_dir: &Path, scale: SuiteScale, workers: u32) -> anyhow::Result<()> {
+    pangulu_best_sweep(out_dir, scale, workers, "fig12", "1.17x")
+}
+
+/// Ablations over the design choices DESIGN.md calls out: the sparse/dense
+/// kernel threshold, Algorithm 3's (step, max_num) constants, and the
+/// process-grid shape. Not a paper figure — supporting evidence for the
+/// defaults.
+pub fn ablations(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
+    use crate::blocking::IrregularParams;
+    use crate::coordinator::Placement;
+    use crate::numeric::KernelPolicy;
+
+    let suite = matrices::paper_suite(scale);
+    let em = &suite.iter().find(|m| m.name == "dielFilterV3real").unwrap().matrix;
+    let bbd = &suite.iter().find(|m| m.name == "ASIC_680k").unwrap().matrix;
+
+    println!("Ablation 1 — sparse/dense kernel threshold (dielFilter analogue, ours, 1 worker)");
+    let mut csv = String::from("ablation,param,numeric_s,modeled_s\n");
+    let tp = TablePrinter::new(&["dense_threshold", "numeric(s)", "modeled(s)"], &[16, 11, 11]);
+    for thr in [0.05, 0.15, 0.30, 0.60, 1.01] {
+        let mut opts = SolveOptions::ours(1);
+        opts.kernels = KernelPolicy { dense_threshold: thr, ..Default::default() };
+        let mut solver = Solver::new(opts);
+        let r = solver
+            .factorize(em)
+            .map_err(|e| anyhow::anyhow!("thr {thr}: {e}"))?
+            .report;
+        tp.row(&[
+            &format!("{thr:.2}"),
+            &format!("{:.3}", r.numeric_seconds),
+            &format!("{:.4}", r.modeled_makespan),
+        ]);
+        csv.push_str(&format!(
+            "dense_threshold,{thr},{:.6},{:.6}\n",
+            r.numeric_seconds, r.modeled_makespan
+        ));
+    }
+
+    println!("\nAblation 2 — Algorithm 3 constants (ASIC analogue, 4 workers)");
+    let tp = TablePrinter::new(
+        &["step", "max_num", "blocks", "block-nnz CV", "numeric(s)"],
+        &[6, 8, 8, 13, 11],
+    );
+    for (step, max_num) in [(1, 3), (2, 1), (2, 3), (2, 6), (4, 3)] {
+        let mut opts = SolveOptions::ours(4);
+        opts.irregular = IrregularParams { step, max_num, ..Default::default() };
+        let mut solver = Solver::new(opts);
+        let r = solver
+            .factorize(bbd)
+            .map_err(|e| anyhow::anyhow!("step {step} max {max_num}: {e}"))?
+            .report;
+        tp.row(&[
+            &step.to_string(),
+            &max_num.to_string(),
+            &r.num_blocks.to_string(),
+            &format!("{:.3}", r.balance.block_summary.cv()),
+            &format!("{:.3}", r.numeric_seconds),
+        ]);
+        csv.push_str(&format!(
+            "alg3,step{step}_max{max_num},{:.6},{:.6}\n",
+            r.numeric_seconds, r.modeled_makespan
+        ));
+    }
+
+    println!("\nAblation 3 — process grid shape (ASIC analogue, 4 workers, modeled)");
+    let tp = TablePrinter::new(&["grid", "modeled makespan(s)", "modeled imbalance"], &[8, 20, 18]);
+    for (label, placement) in [("2x2", Placement { pr: 2, pc: 2 }), ("1x4", Placement { pr: 1, pc: 4 }), ("4x1", Placement { pr: 4, pc: 1 })] {
+        let perm = crate::ordering::order(bbd, crate::ordering::OrderingMethod::MinDegree);
+        let pa = bbd.permute_sym(perm.as_slice());
+        let sym = crate::symbolic::analyze(&pa);
+        let ldu = sym.ldu_pattern(&pa);
+        let curve = crate::blocking::DiagFeature::from_csc(&ldu).curve();
+        let blocking = crate::blocking::irregular_blocking(
+            &curve,
+            &crate::blocking::IrregularParams::default(),
+        );
+        let bm = crate::blocking::BlockedMatrix::build(&ldu, blocking);
+        let model = crate::gpu_model::CostModel::a100();
+        let dag = crate::coordinator::TaskDag::build(
+            &bm,
+            &crate::numeric::KernelPolicy::default(),
+            placement,
+            &model,
+        );
+        let sim = crate::coordinator::simulate(&dag, 4, &model);
+        tp.row(&[
+            label,
+            &format!("{:.4}", sim.makespan),
+            &format!("{:.3}", sim.imbalance()),
+        ]);
+        csv.push_str(&format!("grid,{label},{:.6},{:.6}\n", sim.makespan, sim.imbalance()));
+    }
+    write_csv(out_dir, "ablations.csv", &csv)
+}
+
+/// §5.4: preprocessing (blocking + partitioning + DAG) cost, regular vs
+/// irregular, next to the numeric time it buys.
+pub fn preprocessing_cost(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
+    println!("§5.4 — preprocessing cost: regular vs irregular blocking");
+    let tp = TablePrinter::new(
+        &["Matrix", "prep reg(s)", "prep irr(s)", "numeric reg(s)", "numeric irr(s)"],
+        &[18, 12, 12, 14, 14],
+    );
+    let mut csv =
+        String::from("matrix,prep_regular_s,prep_irregular_s,numeric_regular_s,numeric_irregular_s\n");
+    for m in matrices::paper_suite(scale) {
+        let run = |opts: SolveOptions| -> anyhow::Result<(f64, f64)> {
+            let mut solver = Solver::new(opts);
+            let f = solver
+                .factorize(&m.matrix)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", m.name))?;
+            Ok((f.report.preprocess_seconds, f.report.numeric_seconds))
+        };
+        let (prep_reg, num_reg) = run(SolveOptions::pangulu(1))?;
+        let (prep_irr, num_irr) = run(SolveOptions::ours(1))?;
+        tp.row(&[
+            m.name,
+            &format!("{prep_reg:.4}"),
+            &format!("{prep_irr:.4}"),
+            &format!("{num_reg:.3}"),
+            &format!("{num_irr:.3}"),
+        ]);
+        csv.push_str(&format!(
+            "{},{prep_reg:.6},{prep_irr:.6},{num_reg:.6},{num_irr:.6}\n",
+            m.name
+        ));
+    }
+    write_csv(out_dir, "prep_cost.csv", &csv)
+}

@@ -1,0 +1,221 @@
+//! The diagonal block-based feature (paper §4.2, Algorithm 2).
+//!
+//! From a CSC matrix with symmetric pattern, compute `blockptr` where
+//! `blockptr[i+1]` = number of nonzeros in the leading `(i+1)×(i+1)`
+//! submatrix `[0..=i, 0..=i]`. Normalizing index and value yields the
+//! *percentage-of-nonzeros-along-the-diagonal* curve whose global shape
+//! (linear vs quadratic) and local jumps/inflections expose the matrix's
+//! two-dimensional nonzero distribution (Figs 7–8).
+
+use crate::sparse::Csc;
+
+/// The diagonal block-based pointer of Algorithm 2.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiagFeature {
+    /// `blockptr[k]` = nnz of leading `k×k` submatrix; length `n+1`.
+    pub blockptr: Vec<u64>,
+    /// Matrix dimension.
+    pub n: usize,
+}
+
+impl DiagFeature {
+    /// Algorithm 2, verbatim: one pass over the CSC arrays counting, for
+    /// each column `i`, the strictly-below-diagonal entries grouped by row
+    /// (`num[index] += 1` for `index > i`); by pattern symmetry each such
+    /// entry mirrors one above the diagonal in row `index`, so expanding
+    /// the leading submatrix from `k` to `k+1` adds `2·num[k] + 1` entries
+    /// (the `+1` is the structurally-full diagonal).
+    ///
+    /// The input must have a symmetric *pattern* (the post-symbolic L+U
+    /// pattern always does); values are irrelevant.
+    pub fn from_csc(m: &Csc) -> Self {
+        let n = m.n_cols();
+        assert_eq!(m.n_rows(), n);
+        let mut num = vec![0u64; n];
+        for i in 0..n {
+            for &index in m.col_rows(i) {
+                if index > i {
+                    num[index] += 1;
+                }
+            }
+        }
+        let mut blockptr = vec![0u64; n + 1];
+        for i in 0..n {
+            let add = 2 * num[i] + 1;
+            blockptr[i + 1] = blockptr[i] + add;
+        }
+        Self { blockptr, n }
+    }
+
+    /// Total nonzeros according to the pointer (== nnz for symmetric
+    /// pattern with full diagonal).
+    pub fn total(&self) -> u64 {
+        *self.blockptr.last().unwrap()
+    }
+
+    /// Normalize into the percentage curve (x = i/n, y = blockptr[i]/total).
+    pub fn curve(&self) -> FeatureCurve {
+        let total = self.total().max(1) as f64;
+        FeatureCurve {
+            pct: self.blockptr.iter().map(|&v| v as f64 / total).collect(),
+            n: self.n,
+        }
+    }
+}
+
+/// Normalized percentage-of-nonzeros curve; `pct[k]` = fraction of all
+/// nonzeros inside the leading `k×k` submatrix, `pct[n] == 1`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureCurve {
+    pub pct: Vec<f64>,
+    pub n: usize,
+}
+
+impl FeatureCurve {
+    /// Uniformly sample `points+1` values (including both endpoints) —
+    /// the paper samples 1000 points before running Algorithm 3.
+    pub fn sample(&self, points: usize) -> Vec<f64> {
+        assert!(points >= 1);
+        (0..=points)
+            .map(|s| {
+                let idx = (s as u128 * self.n as u128 / points as u128) as usize;
+                self.pct[idx]
+            })
+            .collect()
+    }
+
+    /// Quadratic-shape score: mean of `pct(x) - x` over the curve.
+    /// ~0 for linear matrices (uniform along the diagonal, Fig 7a);
+    /// strongly negative for right-bottom-heavy/quadratic matrices
+    /// (Fig 7b, Fig 11 left).
+    pub fn quadratic_score(&self) -> f64 {
+        let n = self.n.max(1) as f64;
+        let s: f64 = self
+            .pct
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| p - i as f64 / n)
+            .sum();
+        s / (self.n + 1) as f64
+    }
+
+    /// Largest single-step jump in the curve — dense rows/columns produce
+    /// visible discontinuities (Fig 8b,d).
+    pub fn max_jump(&self) -> f64 {
+        self.pct
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Write the sampled curve as `x,y` CSV rows (figure regeneration).
+    pub fn to_csv(&self, points: usize) -> String {
+        let ys = self.sample(points);
+        let mut out = String::from("x,pct\n");
+        for (s, y) in ys.iter().enumerate() {
+            out.push_str(&format!("{},{}\n", s as f64 / points as f64, y));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::symbolic;
+
+    /// Brute-force reference: count nnz of leading k×k submatrices.
+    fn brute_blockptr(m: &Csc) -> Vec<u64> {
+        let n = m.n_cols();
+        let mut out = vec![0u64; n + 1];
+        for k in 1..=n {
+            let mut cnt = 0u64;
+            for j in 0..k {
+                for (i, _) in m.col(j) {
+                    if i < k {
+                        cnt += 1;
+                    }
+                }
+            }
+            out[k] = cnt;
+        }
+        out
+    }
+
+    #[test]
+    fn algorithm2_matches_brute_force_on_tridiagonal() {
+        let m = gen::tridiagonal(30);
+        let f = DiagFeature::from_csc(&m);
+        assert_eq!(f.blockptr, brute_blockptr(&m));
+        assert_eq!(f.total(), m.nnz() as u64);
+    }
+
+    #[test]
+    fn algorithm2_matches_brute_force_on_filled_pattern() {
+        let a = gen::directed_graph(50, 3, 7);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let f = DiagFeature::from_csc(&ldu);
+        assert_eq!(f.blockptr, brute_blockptr(&ldu));
+    }
+
+    #[test]
+    fn linear_matrix_has_linear_curve() {
+        // Fig 7(a): tridiagonal ⇒ pct grows linearly.
+        let m = gen::tridiagonal(1000);
+        let c = DiagFeature::from_csc(&m).curve();
+        assert!(c.quadratic_score().abs() < 0.01, "score {}", c.quadratic_score());
+        // midpoint ≈ 0.5
+        assert!((c.pct[500] - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn uniform_matrix_has_quadratic_curve() {
+        // Fig 7(b): uniform 2D distribution ⇒ pct(k) ≈ (k/n)².
+        let m = gen::uniform_random(400, 0.05, 3).plus_transpose_pattern();
+        let c = DiagFeature::from_csc(&m).curve();
+        // midpoint ≈ 0.25, well below linear
+        assert!(c.pct[200] < 0.35, "midpoint {}", c.pct[200]);
+        assert!(c.quadratic_score() < -0.05, "score {}", c.quadratic_score());
+    }
+
+    #[test]
+    fn dense_rows_make_jumps() {
+        // Fig 8(b,d): dense rows/cols ⇒ jump discontinuities.
+        let plain = gen::tridiagonal(500);
+        let spiky = gen::dense_rows_cols(500, &[250], 2, 9).plus_transpose_pattern();
+        let cj = DiagFeature::from_csc(&spiky).curve().max_jump();
+        let pj = DiagFeature::from_csc(&plain).curve().max_jump();
+        assert!(cj > 10.0 * pj, "spiky jump {cj} vs plain {pj}");
+    }
+
+    #[test]
+    fn sampling_includes_endpoints() {
+        let m = gen::tridiagonal(997); // non-divisible by sample count
+        let c = DiagFeature::from_csc(&m).curve();
+        let s = c.sample(100);
+        assert_eq!(s.len(), 101);
+        assert_eq!(s[0], 0.0);
+        assert!((s[100] - 1.0).abs() < 1e-12);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]), "monotone");
+    }
+
+    #[test]
+    fn curve_is_monotone_and_normalized() {
+        let m = gen::grid2d_laplacian(20, 20);
+        let c = DiagFeature::from_csc(&m).curve();
+        assert_eq!(c.pct[0], 0.0);
+        assert!((c.pct[400] - 1.0).abs() < 1e-12);
+        assert!(c.pct.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn csv_output_has_header_and_rows() {
+        let m = gen::tridiagonal(50);
+        let csv = DiagFeature::from_csc(&m).curve().to_csv(10);
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines[0], "x,pct");
+        assert_eq!(lines.len(), 12);
+    }
+}

@@ -1,0 +1,115 @@
+//! Blocking — the paper's contribution.
+//!
+//! * [`feature`] — the **diagonal block-based feature** (Algorithm 2):
+//!   a pointer array whose entry `i+1` is the number of nonzeros in the
+//!   leading `(i+1)×(i+1)` submatrix, normalized into a percentage curve.
+//! * [`irregular`] — the **structure-aware irregular blocking method**
+//!   (Algorithm 3): fine-grained boundaries in dense regions, coarse in
+//!   sparse regions, driven by the feature curve.
+//! * [`regular`] — regular fixed-size 2D blocking (the PanguLU baseline).
+//! * [`selection`] — PanguLU's selection tree picking a regular block size
+//!   from matrix order and post-symbolic nnz.
+//! * [`partition`] — materializes a blocking into a [`partition::BlockedMatrix`]:
+//!   per-block local CSC patterns + values over the filled L+U pattern.
+//! * [`stats`] — per-block / per-level nonzero balance audits (Fig 5).
+
+pub mod feature;
+pub mod irregular;
+pub mod partition;
+pub mod regular;
+pub mod selection;
+pub mod stats;
+
+pub use feature::{DiagFeature, FeatureCurve};
+pub use irregular::{irregular_blocking, IrregularParams};
+pub use partition::{Block, BlockedMatrix};
+pub use regular::regular_blocking;
+pub use selection::select_block_size;
+pub use stats::BalanceReport;
+
+/// A blocking of an `n×n` matrix: strictly increasing boundary positions
+/// `P_0 = 0 < P_1 < … < P_p = n` (the paper's `ptr` array).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Blocking {
+    n: usize,
+    positions: Vec<usize>,
+}
+
+impl Blocking {
+    /// Build from boundary positions; validates monotonicity and coverage.
+    pub fn new(n: usize, positions: Vec<usize>) -> Self {
+        assert!(!positions.is_empty(), "empty blocking");
+        assert_eq!(positions[0], 0, "blocking must start at 0");
+        assert_eq!(*positions.last().unwrap(), n, "blocking must end at n");
+        assert!(
+            positions.windows(2).all(|w| w[0] < w[1]),
+            "blocking positions must be strictly increasing"
+        );
+        Self { n, positions }
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of block rows/columns.
+    pub fn num_blocks(&self) -> usize {
+        self.positions.len() - 1
+    }
+
+    /// Boundary positions `P_0..=P_p`.
+    pub fn positions(&self) -> &[usize] {
+        &self.positions
+    }
+
+    /// Size of block `k`.
+    pub fn block_size(&self, k: usize) -> usize {
+        self.positions[k + 1] - self.positions[k]
+    }
+
+    /// All block sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        (0..self.num_blocks()).map(|k| self.block_size(k)).collect()
+    }
+
+    /// Block index containing row/col `i` (binary search).
+    pub fn block_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        match self.positions.binary_search(&i) {
+            Ok(k) if k == self.positions.len() - 1 => k - 1,
+            Ok(k) => k,
+            Err(k) => k - 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_of_finds_containing_block() {
+        let b = Blocking::new(10, vec![0, 3, 7, 10]);
+        assert_eq!(b.num_blocks(), 3);
+        assert_eq!(b.block_of(0), 0);
+        assert_eq!(b.block_of(2), 0);
+        assert_eq!(b.block_of(3), 1);
+        assert_eq!(b.block_of(6), 1);
+        assert_eq!(b.block_of(7), 2);
+        assert_eq!(b.block_of(9), 2);
+        assert_eq!(b.sizes(), vec![3, 4, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonmonotonic() {
+        Blocking::new(10, vec![0, 5, 5, 10]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_end() {
+        Blocking::new(10, vec![0, 5]);
+    }
+}

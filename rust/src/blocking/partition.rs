@@ -1,0 +1,378 @@
+//! Materialize a [`Blocking`] over the filled L+U pattern into per-block
+//! local CSC storage — the data structure the numeric factorization
+//! engine operates on (PanguLU's "blocked sparse storage").
+
+use super::Blocking;
+use crate::sparse::Csc;
+use std::collections::HashMap;
+
+/// One non-empty block: a local-indexed CSC sub-matrix.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Block row / block column coordinates.
+    pub bi: u32,
+    pub bj: u32,
+    /// Local dimensions.
+    pub n_rows: u32,
+    pub n_cols: u32,
+    /// Local CSC pattern (u32 indices: blocks are ≤ a few thousand wide).
+    pub col_ptr: Vec<u32>,
+    pub row_idx: Vec<u32>,
+    /// Values in pattern order. Fill positions start at 0.
+    pub values: Vec<f64>,
+    /// For **diagonal** blocks: per-column offset (within the column
+    /// slice) of the diagonal entry — precomputed so the factor kernels
+    /// skip a binary search per AXPY (perf opt-2). Empty for off-diagonal
+    /// blocks.
+    pub diag_pos: Vec<u32>,
+}
+
+impl Block {
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        let cells = self.n_rows as f64 * self.n_cols as f64;
+        if cells == 0.0 { 0.0 } else { self.nnz() as f64 / cells }
+    }
+
+    /// Local row indices of local column `c`.
+    pub fn col_rows(&self, c: usize) -> &[u32] {
+        &self.row_idx[self.col_ptr[c] as usize..self.col_ptr[c + 1] as usize]
+    }
+
+    /// Values of local column `c`.
+    pub fn col_values(&self, c: usize) -> &[f64] {
+        &self.values[self.col_ptr[c] as usize..self.col_ptr[c + 1] as usize]
+    }
+
+    /// Value at local (r, c); 0.0 if not stored.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        match self.col_rows(c).binary_search(&(r as u32)) {
+            Ok(k) => self.values[self.col_ptr[c] as usize + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Densify into a column-major `n_rows × n_cols` buffer.
+    pub fn to_dense_col_major(&self) -> Vec<f64> {
+        let (nr, nc) = (self.n_rows as usize, self.n_cols as usize);
+        let mut d = vec![0.0; nr * nc];
+        for c in 0..nc {
+            for k in self.col_ptr[c] as usize..self.col_ptr[c + 1] as usize {
+                d[c * nr + self.row_idx[k] as usize] = self.values[k];
+            }
+        }
+        d
+    }
+
+    /// Scatter a column-major dense buffer back into the stored pattern.
+    /// Entries outside the pattern must be (numerically) zero — they are
+    /// fill the symbolic phase already accounted for; a debug assertion
+    /// guards against symbolic/numeric divergence.
+    pub fn from_dense_col_major(&mut self, d: &[f64]) {
+        let nr = self.n_rows as usize;
+        for c in 0..self.n_cols as usize {
+            for k in self.col_ptr[c] as usize..self.col_ptr[c + 1] as usize {
+                self.values[k] = d[c * nr + self.row_idx[k] as usize];
+            }
+        }
+        #[cfg(debug_assertions)]
+        {
+            let mut inside = vec![false; d.len()];
+            for c in 0..self.n_cols as usize {
+                for k in self.col_ptr[c] as usize..self.col_ptr[c + 1] as usize {
+                    inside[c * nr + self.row_idx[k] as usize] = true;
+                }
+            }
+            for (p, &v) in d.iter().enumerate() {
+                debug_assert!(
+                    inside[p] || v.abs() < 1e-9,
+                    "dense kernel produced value {v} outside symbolic pattern"
+                );
+            }
+        }
+    }
+}
+
+/// A blocked sparse matrix: the set of non-empty blocks over a blocking
+/// grid, with row/column adjacency for the factorization loops.
+#[derive(Clone, Debug)]
+pub struct BlockedMatrix {
+    pub blocking: Blocking,
+    pub blocks: Vec<Block>,
+    index: HashMap<(u32, u32), u32>,
+    /// For each block column `bj`: ids of non-empty blocks sorted by `bi`.
+    pub by_col: Vec<Vec<u32>>,
+    /// For each block row `bi`: ids of non-empty blocks sorted by `bj`.
+    pub by_row: Vec<Vec<u32>>,
+}
+
+impl BlockedMatrix {
+    /// Partition `ldu` (the filled L+U pattern with values) by `blocking`.
+    pub fn build(ldu: &Csc, blocking: Blocking) -> Self {
+        let n = ldu.n_cols();
+        assert_eq!(blocking.n(), n);
+        let nb = blocking.num_blocks();
+        let positions = blocking.positions().to_vec();
+
+        struct Builder {
+            counts: Vec<u32>,
+            rows: Vec<u32>,
+            vals: Vec<f64>,
+        }
+
+        let mut blocks: Vec<Block> = Vec::new();
+        let mut builders: Vec<Option<Builder>> = (0..nb).map(|_| None).collect();
+        let mut touched: Vec<usize> = Vec::new();
+
+        // row → block-row map, computed once (a binary search per entry
+        // dominated this pass before — perf opt-3)
+        let mut row_block = vec![0u32; n];
+        for bi in 0..nb {
+            for r in positions[bi]..positions[bi + 1] {
+                row_block[r] = bi as u32;
+            }
+        }
+
+        for bj in 0..nb {
+            let (lo, hi) = (positions[bj], positions[bj + 1]);
+            let width = hi - lo;
+            // gather entries of this stripe into per-block-row builders
+            for (c_local, j) in (lo..hi).enumerate() {
+                for (i, v) in ldu.col(j) {
+                    let bi = row_block[i] as usize;
+                    let b = builders[bi].get_or_insert_with(|| {
+                        touched.push(bi);
+                        Builder {
+                            counts: vec![0u32; width],
+                            rows: Vec::new(),
+                            vals: Vec::new(),
+                        }
+                    });
+                    b.counts[c_local] += 1;
+                    b.rows.push((i - positions[bi]) as u32);
+                    b.vals.push(v);
+                }
+            }
+            // wait — entries were appended in (column, row) order *per
+            // block*? They arrive per global column, so per builder they
+            // are grouped by column already (we iterate columns outer).
+            touched.sort_unstable();
+            for &bi in &touched {
+                let b = builders[bi].take().unwrap();
+                let mut col_ptr = vec![0u32; width + 1];
+                for c in 0..width {
+                    col_ptr[c + 1] = col_ptr[c] + b.counts[c];
+                }
+                // precompute diagonal offsets for diagonal blocks
+                let diag_pos = if bi == bj {
+                    (0..width)
+                        .map(|c| {
+                            let rows = &b.rows[col_ptr[c] as usize..col_ptr[c + 1] as usize];
+                            rows.binary_search(&(c as u32))
+                                .expect("diagonal entry missing in diagonal block")
+                                as u32
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                blocks.push(Block {
+                    bi: bi as u32,
+                    bj: bj as u32,
+                    n_rows: (positions[bi + 1] - positions[bi]) as u32,
+                    n_cols: width as u32,
+                    col_ptr,
+                    row_idx: b.rows,
+                    values: b.vals,
+                    diag_pos,
+                });
+            }
+            touched.clear();
+        }
+
+        let mut index = HashMap::with_capacity(blocks.len());
+        let mut by_col: Vec<Vec<u32>> = vec![Vec::new(); nb];
+        let mut by_row: Vec<Vec<u32>> = vec![Vec::new(); nb];
+        for (id, b) in blocks.iter().enumerate() {
+            index.insert((b.bi, b.bj), id as u32);
+            by_col[b.bj as usize].push(id as u32);
+            by_row[b.bi as usize].push(id as u32);
+        }
+        for v in &mut by_col {
+            v.sort_unstable_by_key(|&id| blocks[id as usize].bi);
+        }
+        for v in &mut by_row {
+            v.sort_unstable_by_key(|&id| blocks[id as usize].bj);
+        }
+        Self { blocking, blocks, index, by_col, by_row }
+    }
+
+    pub fn nb(&self) -> usize {
+        self.blocking.num_blocks()
+    }
+
+    pub fn num_nonempty(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Block id at grid position, if non-empty.
+    pub fn block_id(&self, bi: usize, bj: usize) -> Option<u32> {
+        self.index.get(&(bi as u32, bj as u32)).copied()
+    }
+
+    pub fn block(&self, id: u32) -> &Block {
+        &self.blocks[id as usize]
+    }
+
+    pub fn block_mut(&mut self, id: u32) -> &mut Block {
+        &mut self.blocks[id as usize]
+    }
+
+    /// Total stored nonzeros across blocks (== nnz of the LDU pattern).
+    pub fn nnz(&self) -> usize {
+        self.blocks.iter().map(|b| b.nnz()).sum()
+    }
+
+    /// Reassemble the global CSC (tests / verification).
+    pub fn to_csc(&self) -> Csc {
+        let n = self.blocking.n();
+        let positions = self.blocking.positions();
+        let mut coo = crate::sparse::Coo::with_capacity(n, n, self.nnz());
+        for b in &self.blocks {
+            let (rlo, clo) = (positions[b.bi as usize], positions[b.bj as usize]);
+            for c in 0..b.n_cols as usize {
+                for k in b.col_ptr[c] as usize..b.col_ptr[c + 1] as usize {
+                    coo.push(rlo + b.row_idx[k] as usize, clo + c, b.values[k]);
+                }
+            }
+        }
+        coo.to_csc()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::regular_blocking;
+    use crate::sparse::gen;
+    use crate::symbolic;
+
+    fn blocked(n_grid: usize, bs: usize) -> (Csc, BlockedMatrix) {
+        let a = gen::grid2d_laplacian(n_grid, n_grid);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs));
+        (ldu, bm)
+    }
+
+    #[test]
+    fn round_trip_preserves_matrix() {
+        let (ldu, bm) = blocked(8, 10);
+        assert_eq!(bm.to_csc(), ldu);
+        assert_eq!(bm.nnz(), ldu.nnz());
+    }
+
+    #[test]
+    fn blocks_have_correct_dims() {
+        let (_, bm) = blocked(8, 10); // n=64, blocks 10,10,10,10,10,10,4
+        assert_eq!(bm.nb(), 7);
+        for b in &bm.blocks {
+            let er = bm.blocking.block_size(b.bi as usize);
+            let ec = bm.blocking.block_size(b.bj as usize);
+            assert_eq!(b.n_rows as usize, er);
+            assert_eq!(b.n_cols as usize, ec);
+            // all local indices in range, sorted per column
+            for c in 0..b.n_cols as usize {
+                let rows = b.col_rows(c);
+                assert!(rows.windows(2).all(|w| w[0] < w[1]));
+                assert!(rows.iter().all(|&r| r < b.n_rows));
+            }
+        }
+    }
+
+    #[test]
+    fn adjacency_lists_consistent() {
+        let (_, bm) = blocked(10, 16);
+        for (bj, ids) in bm.by_col.iter().enumerate() {
+            let bis: Vec<u32> = ids.iter().map(|&id| bm.block(id).bi).collect();
+            assert!(bis.windows(2).all(|w| w[0] < w[1]), "col {bj} not sorted");
+            for &id in ids {
+                assert_eq!(bm.block(id).bj as usize, bj);
+            }
+        }
+        for (bi, ids) in bm.by_row.iter().enumerate() {
+            for &id in ids {
+                assert_eq!(bm.block(id).bi as usize, bi);
+            }
+        }
+    }
+
+    #[test]
+    fn block_id_lookup() {
+        let (_, bm) = blocked(6, 12);
+        for (id, b) in bm.blocks.iter().enumerate() {
+            assert_eq!(bm.block_id(b.bi as usize, b.bj as usize), Some(id as u32));
+        }
+        // grid laplacian blocked by 12 on n=36: far corner block (0, nb-1)
+        // may be empty before fill... after fill with natural order it is
+        // often nonempty; just check lookup of a definitely-empty pair on
+        // a tridiagonal instead.
+        let t = gen::tridiagonal(40);
+        let sym = symbolic::analyze(&t);
+        let ldu = sym.ldu_pattern(&t);
+        let bm2 = BlockedMatrix::build(&ldu, regular_blocking(40, 10));
+        assert_eq!(bm2.block_id(0, 3), None, "tridiagonal corner must be empty");
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let (_, mut bm) = blocked(6, 9);
+        let id = bm.block_id(0, 0).unwrap();
+        let before = bm.block(id).values.clone();
+        let dense = bm.block(id).to_dense_col_major();
+        bm.block_mut(id).from_dense_col_major(&dense);
+        assert_eq!(bm.block(id).values, before);
+    }
+
+    #[test]
+    fn diag_pos_points_at_diagonal_entries() {
+        let (_, bm) = blocked(8, 10);
+        for b in &bm.blocks {
+            if b.bi == b.bj {
+                assert_eq!(b.diag_pos.len(), b.n_cols as usize);
+                for c in 0..b.n_cols as usize {
+                    let rows = b.col_rows(c);
+                    assert_eq!(rows[b.diag_pos[c] as usize] as usize, c, "block {}", b.bi);
+                }
+            } else {
+                assert!(b.diag_pos.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_blocks_not_stored() {
+        let t = gen::tridiagonal(100);
+        let sym = symbolic::analyze(&t);
+        let ldu = sym.ldu_pattern(&t);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(100, 10));
+        // tridiagonal: only diagonal + sub/super-diagonal block couples
+        assert!(bm.num_nonempty() <= 10 + 9 + 9);
+        assert!(bm.num_nonempty() >= 10);
+    }
+
+    #[test]
+    fn irregular_blocking_partition_works() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 800, ..Default::default() });
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let curve = crate::blocking::DiagFeature::from_csc(&ldu).curve();
+        let blocking =
+            crate::blocking::irregular_blocking(&curve, &crate::blocking::IrregularParams::default());
+        let bm = BlockedMatrix::build(&ldu, blocking);
+        assert_eq!(bm.to_csc(), ldu);
+    }
+}

@@ -1,0 +1,51 @@
+//! Regular fixed-size 2D blocking — the PanguLU baseline the paper
+//! compares against.
+
+use super::Blocking;
+
+/// Partition `0..n` into blocks of size `block_size` (last block may be
+/// smaller), exactly as PanguLU's regular 2D block-cyclic layout does.
+pub fn regular_blocking(n: usize, block_size: usize) -> Blocking {
+    assert!(block_size > 0, "block size must be positive");
+    assert!(n > 0, "empty matrix");
+    let mut positions = Vec::with_capacity(n / block_size + 2);
+    let mut p = 0;
+    while p < n {
+        positions.push(p);
+        p += block_size;
+    }
+    positions.push(n);
+    Blocking::new(n, positions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_division() {
+        let b = regular_blocking(100, 25);
+        assert_eq!(b.positions(), &[0, 25, 50, 75, 100]);
+        assert_eq!(b.sizes(), vec![25, 25, 25, 25]);
+    }
+
+    #[test]
+    fn ragged_tail() {
+        let b = regular_blocking(10, 4);
+        assert_eq!(b.positions(), &[0, 4, 8, 10]);
+        assert_eq!(b.sizes(), vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn block_larger_than_matrix() {
+        let b = regular_blocking(7, 100);
+        assert_eq!(b.positions(), &[0, 7]);
+        assert_eq!(b.num_blocks(), 1);
+    }
+
+    #[test]
+    fn size_one_blocks() {
+        let b = regular_blocking(3, 1);
+        assert_eq!(b.num_blocks(), 3);
+    }
+}

@@ -1,0 +1,112 @@
+//! PanguLU's block-size selection tree.
+//!
+//! PanguLU picks a regular block size from a small option set
+//! ({200, 300, 500, 1000, 2000, 5000} in the paper, §5.2) by walking a
+//! decision tree over the matrix order and the number of nonzeros after
+//! symbolic factorization. The paper's Fig 4 shows this frequently picks a
+//! suboptimal size — which is exactly what our reproduction of Fig 4/10/12
+//! demonstrates. The thresholds below follow PanguLU's published heuristic
+//! shape (order-dominated, density-adjusted).
+
+/// The block-size options of the paper (§5.2).
+pub const PANGU_SIZES: &[usize] = &[200, 300, 500, 1000, 2000, 5000];
+
+/// Select a regular block size from matrix order `n` and post-symbolic
+/// nonzero count `nnz_ldu`, PanguLU-style.
+///
+/// The tree first buckets by matrix order, then nudges one step up when the
+/// factor density (nnz per row) is high — larger blocks keep dense rows in
+/// fewer kernels — and one step down when extremely sparse.
+pub fn select_block_size(n: usize, nnz_ldu: usize) -> usize {
+    select_from(n, nnz_ldu, PANGU_SIZES)
+}
+
+/// Same tree over an arbitrary (sorted ascending) option set; the
+/// reproduction scales the option set down alongside the matrices.
+pub fn select_from(n: usize, nnz_ldu: usize, options: &[usize]) -> usize {
+    assert!(!options.is_empty());
+    let nnz_per_row = nnz_ldu as f64 / n.max(1) as f64;
+    // order bucket: index grows with matrix order
+    let mut idx = match n {
+        0..=50_000 => 0,
+        50_001..=200_000 => 1,
+        200_001..=500_000 => 2,
+        500_001..=1_000_000 => 3,
+        1_000_001..=2_000_000 => 4,
+        _ => 5,
+    };
+    // density adjustment
+    if nnz_per_row > 200.0 {
+        idx += 1;
+    } else if nnz_per_row < 10.0 && idx > 0 {
+        idx -= 1;
+    }
+    options[idx.min(options.len() - 1)]
+}
+
+/// Scaled option set for matrices of order `n`: keeps the same 6-way menu
+/// shape as PanguLU but proportional to the (smaller) reproduction sizes.
+/// For paper-scale n (≥ 3·10⁵) this returns [`PANGU_SIZES`] itself.
+pub fn scaled_options(n: usize) -> Vec<usize> {
+    if n >= 300_000 {
+        return PANGU_SIZES.to_vec();
+    }
+    // keep the ratios of the paper's menu: 200:300:500:1000:2000:5000,
+    // anchored so the middle option ~ n/24 (PanguLU's 500–1000 for ~10⁵–10⁶)
+    let anchor = (n / 24).max(8);
+    let ratios = [0.4, 0.6, 1.0, 2.0, 4.0, 10.0];
+    ratios
+        .iter()
+        .map(|r| ((anchor as f64 * r) as usize).max(4))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_orders_pick_paper_sizes() {
+        // language: n = 3.99e5, nnz(L+U) = 3.88e8
+        let s = select_block_size(399_000, 388_000_000);
+        assert!(PANGU_SIZES.contains(&s));
+        assert!(s >= 500, "large dense factor should use bigger blocks, got {s}");
+        // ecology1: n = 1e6, nnz(L+U) = 7.2e7 (very sparse: 72/row)
+        let s2 = select_block_size(1_000_000, 72_000_000);
+        assert!(PANGU_SIZES.contains(&s2));
+    }
+
+    #[test]
+    fn small_orders_pick_small_sizes() {
+        let s = select_block_size(10_000, 200_000);
+        assert!(s <= 300, "got {s}");
+    }
+
+    #[test]
+    fn density_bumps_selection_up() {
+        let sparse = select_block_size(100_000, 500_000);
+        let dense = select_block_size(100_000, 100_000_000);
+        assert!(dense >= sparse);
+    }
+
+    #[test]
+    fn scaled_options_preserve_menu_shape() {
+        let o = scaled_options(12_000);
+        assert_eq!(o.len(), 6);
+        assert!(o.windows(2).all(|w| w[0] < w[1]), "{o:?}");
+        assert!(o[0] >= 4);
+        let p = scaled_options(500_000);
+        assert_eq!(p, PANGU_SIZES);
+    }
+
+    #[test]
+    fn select_from_never_out_of_bounds() {
+        let o = [8usize, 16, 32];
+        for n in [10, 1_000, 100_000, 3_000_000] {
+            for nnz in [n, n * 100, n * 1000] {
+                let s = select_from(n, nnz, &o);
+                assert!(o.contains(&s));
+            }
+        }
+    }
+}

@@ -1,0 +1,436 @@
+//! Task-DAG construction for right-looking blocked LU.
+//!
+//! Tasks are the four block ops of Algorithm 1. Dependencies:
+//!
+//! * every block (i,j) receives its Schur updates SSSSM(i,j,k) in
+//!   ascending `k`, **chained** (serialized per target — this both encodes
+//!   the accumulation order and excludes write races);
+//! * the *finalize* op of a block (GETRF for diagonal, GESSM/TSTRF for
+//!   panels) runs after its last update;
+//! * GESSM(k,j) and TSTRF(i,k) additionally wait on GETRF(k);
+//! * SSSSM(i,j,k) additionally waits on TSTRF(i,k) and GESSM(k,j).
+//!
+//! Level = longest-path depth — the dependency-tree levels of the paper's
+//! Fig 5 (for a dense block grid, level(block) recovers `min(i,j)`-style
+//! wavefronts; sparsity shortens the chains, adding parallelism).
+
+use crate::blocking::partition::BlockedMatrix;
+use crate::gpu_model::{self, CostModel, OpClass};
+use crate::numeric::factor::BlockOp;
+use crate::numeric::kernels::cost;
+use crate::numeric::{KernelKind, KernelPolicy};
+use crate::util::Summary;
+
+use super::placement::Placement;
+
+/// One schedulable task.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub op: BlockOp,
+    /// Worker that executes this task (owner of the target block).
+    pub owner: u32,
+    /// Number of prerequisite tasks.
+    pub deps: u32,
+    /// Tasks unlocked by this one.
+    pub out: Vec<u32>,
+    /// Modeled device seconds (A100 cost model).
+    pub cost: f64,
+    /// Flop count of the op (sparse-pattern flops).
+    pub flops: f64,
+    /// Bytes produced at the target block (transfer pricing).
+    pub out_bytes: f64,
+    /// Longest-path depth.
+    pub level: u32,
+}
+
+/// The full DAG plus summary data.
+pub struct TaskDag {
+    pub tasks: Vec<Task>,
+    pub num_levels: u32,
+    pub total_flops: f64,
+    /// Critical-path modeled time (infinite workers).
+    pub critical_path: f64,
+}
+
+impl TaskDag {
+    /// Build the DAG for `bm` under a kernel policy, placement and cost
+    /// model.
+    pub fn build(
+        bm: &BlockedMatrix,
+        policy: &KernelPolicy,
+        placement: Placement,
+        model: &CostModel,
+    ) -> Self {
+        let nb = bm.nb();
+        // finalize-task id of each nonempty block, indexed by block idx
+        let nblocks = bm.blocks.len();
+        let mut tasks: Vec<Task> = Vec::with_capacity(nblocks * 2);
+        let mut finalize_id = vec![u32::MAX; nblocks];
+
+        // 1. create finalize tasks
+        for (idx, b) in bm.blocks.iter().enumerate() {
+            let (i, j) = (b.bi as usize, b.bj as usize);
+            let op = if i == j {
+                BlockOp::Getrf { k: i }
+            } else if i < j {
+                BlockOp::Gessm { k: i, j }
+            } else {
+                BlockOp::Tstrf { i, k: j }
+            };
+            let (class, flops, work) = op_cost(bm, op, policy);
+            let bytes_touched = gpu_model::sparse_bytes(b.nnz(), b.nnz());
+            // factor-type ops have a serial column dependency chain the
+            // length of the diagonal block's width; GESSM's target
+            // columns are mutually independent (only each column's
+            // substitution is chained), so it pipelines ~2× better
+            let diag_w = bm
+                .block_id(i.min(j), i.min(j))
+                .map(|id| bm.block(id).n_cols as usize)
+                .unwrap_or(0);
+            let serial_cols = if i < j { diag_w / 2 } else { diag_w };
+            let cost = model.op_time_full(class, flops, bytes_touched, work, serial_cols);
+            finalize_id[idx] = tasks.len() as u32;
+            tasks.push(Task {
+                op,
+                owner: placement.owner(i, j),
+                deps: 0,
+                out: Vec::new(),
+                cost,
+                flops,
+                out_bytes: b.nnz() as f64 * 12.0,
+                level: 0,
+            });
+        }
+
+        // finalize id by grid position
+        let fid = |bm: &BlockedMatrix, i: usize, j: usize| -> Option<u32> {
+            bm.block_id(i, j).map(|bidx| finalize_id[bidx as usize])
+        };
+
+        // 2. create SSSSM chains per block + cross edges
+        for (idx, b) in bm.blocks.iter().enumerate() {
+            let (i, j) = (b.bi as usize, b.bj as usize);
+            let kmax = i.min(j);
+            // ks = {k < kmax : (i,k) and (k,j) nonempty}
+            let row_cols: Vec<usize> = bm.by_row[i]
+                .iter()
+                .map(|&id| bm.block(id).bj as usize)
+                .take_while(|&c| c < kmax)
+                .collect();
+            let col_rows: Vec<usize> = bm.by_col[j]
+                .iter()
+                .map(|&id| bm.block(id).bi as usize)
+                .take_while(|&r| r < kmax)
+                .collect();
+            let mut ks = Vec::new();
+            let (mut a, mut c) = (0usize, 0usize);
+            while a < row_cols.len() && c < col_rows.len() {
+                match row_cols[a].cmp(&col_rows[c]) {
+                    std::cmp::Ordering::Less => a += 1,
+                    std::cmp::Ordering::Greater => c += 1,
+                    std::cmp::Ordering::Equal => {
+                        ks.push(row_cols[a]);
+                        a += 1;
+                        c += 1;
+                    }
+                }
+            }
+
+            let my_finalize = finalize_id[idx];
+            let owner = tasks[my_finalize as usize].owner;
+            let mut prev: Option<u32> = None;
+            for &k in &ks {
+                let op = BlockOp::Ssssm { i, j, k };
+                let (class, flops, work) = op_cost(bm, op, policy);
+                let src_nnz = bm.block(bm.block_id(i, k).unwrap()).nnz()
+                    + bm.block(bm.block_id(k, j).unwrap()).nnz();
+                let bytes = gpu_model::sparse_bytes(src_nnz, b.nnz());
+                let tid = tasks.len() as u32;
+                tasks.push(Task {
+                    op,
+                    owner,
+                    deps: 0,
+                    out: Vec::new(),
+                    cost: model.op_time_full(class, flops, bytes, work, 0),
+                    flops,
+                    out_bytes: b.nnz() as f64 * 12.0,
+                    level: 0,
+                });
+                // deps: TSTRF(i,k), GESSM(k,j), prev update
+                let t1 = fid(bm, i, k).expect("L source finalize");
+                let t2 = fid(bm, k, j).expect("U source finalize");
+                add_edge(&mut tasks, t1, tid);
+                add_edge(&mut tasks, t2, tid);
+                if let Some(p) = prev {
+                    add_edge(&mut tasks, p, tid);
+                }
+                prev = Some(tid);
+            }
+            // finalize waits on the last update
+            if let Some(p) = prev {
+                add_edge(&mut tasks, p, my_finalize);
+            }
+            // panel finalizes wait on GETRF of their step
+            match tasks[my_finalize as usize].op {
+                BlockOp::Gessm { k, .. } | BlockOp::Tstrf { k, .. } => {
+                    let g = fid(bm, k, k).expect("diagonal block must exist");
+                    add_edge(&mut tasks, g, my_finalize);
+                }
+                _ => {}
+            }
+        }
+
+        // 3. levels via Kahn topological sweep
+        let n = tasks.len();
+        let mut indeg: Vec<u32> = tasks.iter().map(|t| t.deps).collect();
+        let mut queue: Vec<u32> = (0..n as u32).filter(|&t| indeg[t as usize] == 0).collect();
+        let mut head = 0;
+        let mut num_levels = 0u32;
+        let mut finish = vec![0.0f64; n]; // critical-path finish times
+        let mut processed = 0usize;
+        while head < queue.len() {
+            let t = queue[head] as usize;
+            head += 1;
+            processed += 1;
+            let lvl = tasks[t].level;
+            num_levels = num_levels.max(lvl + 1);
+            finish[t] += tasks[t].cost;
+            let ft = finish[t];
+            let outs = std::mem::take(&mut tasks[t].out);
+            for &o in &outs {
+                let oi = o as usize;
+                tasks[oi].level = tasks[oi].level.max(lvl + 1);
+                finish[oi] = finish[oi].max(ft);
+                indeg[oi] -= 1;
+                if indeg[oi] == 0 {
+                    queue.push(o);
+                }
+            }
+            tasks[t].out = outs;
+        }
+        assert_eq!(processed, n, "task DAG has a cycle");
+        let critical_path = finish.iter().cloned().fold(0.0, f64::max);
+        let total_flops = tasks.iter().map(|t| t.flops).sum();
+        let _ = nb;
+        Self { tasks, num_levels, total_flops, critical_path }
+    }
+
+    /// Total modeled device-seconds (sum over tasks).
+    pub fn total_cost(&self) -> f64 {
+        self.tasks.iter().map(|t| t.cost).sum()
+    }
+
+    /// Per-level summed cost — the paper's Fig 5 "last level dominates"
+    /// diagnostic, priced in modeled seconds.
+    pub fn level_costs(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.num_levels as usize];
+        for t in &self.tasks {
+            out[t.level as usize] += t.cost;
+        }
+        out
+    }
+
+    /// Summary of per-task cost within each level (within-level balance).
+    pub fn level_summaries(&self) -> Vec<Summary> {
+        let mut per: Vec<Vec<f64>> = vec![Vec::new(); self.num_levels as usize];
+        for t in &self.tasks {
+            per[t.level as usize].push(t.cost);
+        }
+        per.iter().map(|v| Summary::of(v)).collect()
+    }
+}
+
+fn add_edge(tasks: &mut [Task], from: u32, to: u32) {
+    tasks[from as usize].out.push(to);
+    tasks[to as usize].deps += 1;
+}
+
+/// (op class, flop count, utilization work) for pricing one op under the
+/// kernel policy. Dense kernels' utilization work is the dense tile cell
+/// count (they stream the padded tile regardless of sparsity); sparse
+/// kernels' is the nonzeros they touch.
+fn op_cost(bm: &BlockedMatrix, op: BlockOp, policy: &KernelPolicy) -> (OpClass, f64, f64) {
+    match op {
+        BlockOp::Getrf { k } => {
+            let b = bm.block(bm.block_id(k, k).unwrap());
+            match policy.choose(b.density()) {
+                KernelKind::Sparse => (OpClass::SparseFactor, cost::getrf(b), b.nnz() as f64),
+                KernelKind::Dense => {
+                    let n = b.n_cols as f64;
+                    (OpClass::Dense, 2.0 / 3.0 * n * n * n, n * n)
+                }
+            }
+        }
+        BlockOp::Gessm { k, j } => {
+            let d = bm.block(bm.block_id(k, k).unwrap());
+            let t = bm.block(bm.block_id(k, j).unwrap());
+            match policy.choose(d.density().max(t.density())) {
+                KernelKind::Sparse => (
+                    OpClass::SparseFactor,
+                    cost::gessm(t, d),
+                    (d.nnz() + t.nnz()) as f64,
+                ),
+                KernelKind::Dense => {
+                    let (m, n) = (d.n_rows as f64, t.n_cols as f64);
+                    (OpClass::Dense, m * m * n, m * n)
+                }
+            }
+        }
+        BlockOp::Tstrf { i, k } => {
+            let d = bm.block(bm.block_id(k, k).unwrap());
+            let t = bm.block(bm.block_id(i, k).unwrap());
+            match policy.choose(d.density().max(t.density())) {
+                KernelKind::Sparse => (
+                    OpClass::SparseFactor,
+                    cost::tstrf(t, d),
+                    (d.nnz() + t.nnz()) as f64,
+                ),
+                KernelKind::Dense => {
+                    let (m, n) = (t.n_rows as f64, d.n_cols as f64);
+                    (OpClass::Dense, m * n * n, m * n)
+                }
+            }
+        }
+        BlockOp::Ssssm { i, j, k } => {
+            let a = bm.block(bm.block_id(i, k).unwrap());
+            let b = bm.block(bm.block_id(k, j).unwrap());
+            let c = bm
+                .block_id(i, j)
+                .map(|id| bm.block(id).density())
+                .unwrap_or(0.0);
+            match policy.choose(a.density().max(b.density()).max(c)) {
+                KernelKind::Sparse => (
+                    OpClass::SparseUpdate,
+                    cost::ssssm(a, b),
+                    (a.nnz() + b.nnz()) as f64,
+                ),
+                KernelKind::Dense => {
+                    let (m, kk, n) = (a.n_rows as f64, a.n_cols as f64, b.n_cols as f64);
+                    (OpClass::Dense, 2.0 * m * kk * n, m * n)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::{regular_blocking, BlockedMatrix};
+    use crate::sparse::gen;
+    use crate::symbolic;
+
+    fn dag_for(a: &crate::sparse::Csc, bs: usize, p: u32) -> (TaskDag, BlockedMatrix) {
+        let sym = symbolic::analyze(a);
+        let ldu = sym.ldu_pattern(a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs));
+        let dag = TaskDag::build(
+            &bm,
+            &KernelPolicy::default(),
+            Placement::square(p),
+            &CostModel::a100(),
+        );
+        (dag, bm)
+    }
+
+    #[test]
+    fn dag_is_acyclic_and_complete() {
+        let a = gen::grid2d_laplacian(10, 10);
+        let (dag, bm) = dag_for(&a, 20, 1);
+        // one finalize per nonempty block
+        let finalizes = dag
+            .tasks
+            .iter()
+            .filter(|t| !matches!(t.op, BlockOp::Ssssm { .. }))
+            .count();
+        assert_eq!(finalizes, bm.num_nonempty());
+        // dep counts consistent with out edges
+        let mut indeg = vec![0u32; dag.tasks.len()];
+        for t in &dag.tasks {
+            for &o in &t.out {
+                indeg[o as usize] += 1;
+            }
+        }
+        for (t, task) in dag.tasks.iter().enumerate() {
+            assert_eq!(indeg[t], task.deps, "task {t} {:?}", task.op);
+        }
+    }
+
+    #[test]
+    fn getrf_of_step0_has_no_deps() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let (dag, _) = dag_for(&a, 16, 1);
+        let g0 = dag
+            .tasks
+            .iter()
+            .find(|t| matches!(t.op, BlockOp::Getrf { k: 0 }))
+            .unwrap();
+        assert_eq!(g0.deps, 0);
+        assert_eq!(g0.level, 0);
+    }
+
+    #[test]
+    fn updates_chained_in_k_order() {
+        // dense-ish small matrix: block (2,2) gets updates from k=0 and 1
+        let a = gen::uniform_random(60, 0.2, 1);
+        let (dag, _) = dag_for(&a, 20, 1);
+        let u0 = dag
+            .tasks
+            .iter()
+            .position(|t| matches!(t.op, BlockOp::Ssssm { i: 2, j: 2, k: 0 }));
+        let u1 = dag
+            .tasks
+            .iter()
+            .position(|t| matches!(t.op, BlockOp::Ssssm { i: 2, j: 2, k: 1 }));
+        let (u0, u1) = (u0.expect("update k=0"), u1.expect("update k=1"));
+        assert!(
+            dag.tasks[u0].out.contains(&(u1 as u32)),
+            "k=0 update must chain into k=1 update"
+        );
+        // GETRF(2) waits on the last update
+        let g2 = dag
+            .tasks
+            .iter()
+            .position(|t| matches!(t.op, BlockOp::Getrf { k: 2 }))
+            .unwrap();
+        assert!(dag.tasks[u1].out.contains(&(g2 as u32)));
+    }
+
+    #[test]
+    fn tridiagonal_dag_is_mostly_parallel_free() {
+        // tridiagonal with 1 off-diag block coupling: level count ~ 2 per
+        // step (chain), total tasks small
+        let a = gen::tridiagonal(100);
+        let (dag, bm) = dag_for(&a, 10, 1);
+        assert_eq!(dag.tasks.len(), bm.num_nonempty() + count_ssssm(&dag));
+        assert!(dag.critical_path > 0.0);
+        assert!(dag.total_cost() >= dag.critical_path);
+    }
+
+    fn count_ssssm(dag: &TaskDag) -> usize {
+        dag.tasks
+            .iter()
+            .filter(|t| matches!(t.op, BlockOp::Ssssm { .. }))
+            .count()
+    }
+
+    #[test]
+    fn owners_match_placement() {
+        let a = gen::uniform_random(80, 0.1, 2);
+        let (dag, _) = dag_for(&a, 16, 4);
+        let p = Placement::square(4);
+        for t in &dag.tasks {
+            let (i, j) = t.op.target();
+            assert_eq!(t.owner, p.owner(i, j));
+        }
+    }
+
+    #[test]
+    fn level_costs_sum_to_total() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() });
+        let (dag, _) = dag_for(&a, 50, 1);
+        let s: f64 = dag.level_costs().iter().sum();
+        assert!((s - dag.total_cost()).abs() < 1e-9 * dag.total_cost());
+        assert_eq!(dag.level_summaries().len(), dag.num_levels as usize);
+    }
+}

@@ -1,0 +1,64 @@
+//! Load-balance metrics combining the measured run report with the
+//! modeled simulation — the quantities behind the paper's §5.3 claim that
+//! irregular blocking's benefit "is very obvious" in parallel computing.
+
+use super::simulate::SimReport;
+use super::workers::RunReport;
+use crate::util::Summary;
+
+/// Joint load report for one factorization run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Measured wall seconds.
+    pub wall_seconds: f64,
+    /// Measured per-worker busy seconds.
+    pub measured_busy: Vec<f64>,
+    /// Measured imbalance (max/mean busy).
+    pub measured_imbalance: f64,
+    /// Modeled makespan seconds (A100 cost model).
+    pub modeled_makespan: f64,
+    /// Modeled imbalance.
+    pub modeled_imbalance: f64,
+    /// Modeled utilizations.
+    pub modeled_utilization: Vec<f64>,
+}
+
+impl LoadReport {
+    pub fn new(run: &RunReport, sim: &SimReport) -> Self {
+        Self {
+            wall_seconds: run.wall_seconds,
+            measured_busy: run.busy.clone(),
+            measured_imbalance: Summary::of(&run.busy).imbalance(),
+            modeled_makespan: sim.makespan,
+            modeled_imbalance: sim.imbalance(),
+            modeled_utilization: sim.utilization.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combines_measured_and_modeled() {
+        let run = RunReport {
+            wall_seconds: 2.0,
+            busy: vec![1.0, 1.5],
+            tasks_done: vec![10, 12],
+            total_tasks: 22,
+            workers: 2,
+        };
+        let sim = SimReport {
+            makespan: 0.5,
+            busy: vec![0.2, 0.4],
+            transfer: vec![0.0, 0.01],
+            utilization: vec![0.4, 0.8],
+        };
+        let l = LoadReport::new(&run, &sim);
+        assert_eq!(l.wall_seconds, 2.0);
+        assert!((l.measured_imbalance - 1.5 / 1.25).abs() < 1e-12);
+        assert_eq!(l.modeled_makespan, 0.5);
+        assert!((l.modeled_imbalance - 0.4 / 0.3).abs() < 1e-12);
+    }
+}

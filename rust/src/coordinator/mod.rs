@@ -1,0 +1,25 @@
+//! The L3 coordinator: task-DAG construction over the blocked matrix,
+//! block-cyclic placement across workers (simulated GPUs), a threaded
+//! owner-computes executor, a discrete-event simulator pricing the same
+//! DAG on the A100 cost model, and load-balance metrics.
+//!
+//! The paper's parallel setting (PanguLU on 1–4 A100s) maps as:
+//!
+//! * GPU `g` ⇒ worker thread `g` (owner-computes: every op runs on the
+//!   owner of its output block);
+//! * PanguLU's 2D block-cyclic process grid ⇒ [`placement::Placement`];
+//! * CUDA streams/events ⇒ the dependency-counting ready queues;
+//! * measured GPU time ⇒ both measured CPU wall-clock **and** the modeled
+//!   A100 makespan from [`simulate::simulate`] (same DAG, same placement).
+
+pub mod dag;
+pub mod metrics;
+pub mod placement;
+pub mod simulate;
+pub mod workers;
+
+pub use dag::{Task, TaskDag};
+pub use metrics::LoadReport;
+pub use placement::Placement;
+pub use simulate::{simulate, SimReport};
+pub use workers::{factorize_parallel, RunReport};

@@ -1,0 +1,70 @@
+//! 2D block-cyclic placement of blocks onto workers — PanguLU's process
+//! grid (`P = Pr × Pc`, block (i,j) owned by `(i mod Pr, j mod Pc)`).
+
+/// A `Pr × Pc` worker grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub pr: u32,
+    pub pc: u32,
+}
+
+impl Placement {
+    /// Near-square grid for `p` workers (1→1×1, 2→1×2, 4→2×2, 6→2×3, …).
+    pub fn square(p: u32) -> Self {
+        assert!(p > 0);
+        let mut pr = (p as f64).sqrt() as u32;
+        while p % pr != 0 {
+            pr -= 1;
+        }
+        Self { pr, pc: p / pr }
+    }
+
+    pub fn num_workers(&self) -> u32 {
+        self.pr * self.pc
+    }
+
+    /// Owner of block (i, j).
+    pub fn owner(&self, bi: usize, bj: usize) -> u32 {
+        (bi as u32 % self.pr) * self.pc + (bj as u32 % self.pc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_grids() {
+        assert_eq!(Placement::square(1), Placement { pr: 1, pc: 1 });
+        assert_eq!(Placement::square(2), Placement { pr: 1, pc: 2 });
+        assert_eq!(Placement::square(4), Placement { pr: 2, pc: 2 });
+        assert_eq!(Placement::square(6), Placement { pr: 2, pc: 3 });
+        assert_eq!(Placement::square(7), Placement { pr: 1, pc: 7 });
+    }
+
+    #[test]
+    fn owner_in_range_and_cyclic() {
+        let p = Placement::square(4);
+        for i in 0..10 {
+            for j in 0..10 {
+                let o = p.owner(i, j);
+                assert!(o < 4);
+                assert_eq!(o, p.owner(i + 2, j + 2), "cyclic with period 2");
+            }
+        }
+        // all workers used
+        let mut seen = [false; 4];
+        for i in 0..2 {
+            for j in 0..2 {
+                seen[p.owner(i, j) as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn single_worker_owns_everything() {
+        let p = Placement::square(1);
+        assert_eq!(p.owner(3, 5), 0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Discrete-event simulation of the task DAG on `P` modeled devices —
+//! produces the *modeled A100* numbers reported next to measured
+//! CPU wall-clock in the paper-table reproductions.
+//!
+//! List scheduling, owner-computes: each task runs on the owner of its
+//! output block; a worker executes its ready tasks in ready-time order.
+//! Cross-worker data dependencies pay the link transfer cost of the
+//! producer's output block.
+
+use super::dag::TaskDag;
+use crate::gpu_model::CostModel;
+
+/// Simulation result.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Modeled end-to-end seconds.
+    pub makespan: f64,
+    /// Busy seconds per worker.
+    pub busy: Vec<f64>,
+    /// Seconds spent on modeled transfers per worker.
+    pub transfer: Vec<f64>,
+    /// Worker utilization (busy / makespan).
+    pub utilization: Vec<f64>,
+}
+
+impl SimReport {
+    /// max/mean busy-time imbalance (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        crate::util::Summary::of(&self.busy).imbalance()
+    }
+}
+
+/// Simulate `dag` on `num_workers` devices, each sustaining
+/// `model.concurrent_kernels` overlapping kernels (stream slots).
+pub fn simulate(dag: &TaskDag, num_workers: u32, model: &CostModel) -> SimReport {
+    let n = dag.tasks.len();
+    let p = num_workers as usize;
+    let slots_per = model.concurrent_kernels.max(1) as usize;
+    let mut indeg: Vec<u32> = dag.tasks.iter().map(|t| t.deps).collect();
+    let mut ready_time = vec![0.0f64; n];
+    // per-worker ready lists; each device has `slots_per` stream slots
+    let mut ready: Vec<Vec<u32>> = vec![Vec::new(); p];
+    let mut slot_time = vec![vec![0.0f64; slots_per]; p];
+    let mut busy = vec![0.0f64; p];
+    let mut transfer = vec![0.0f64; p];
+    let mut remaining = n;
+
+    for (t, task) in dag.tasks.iter().enumerate() {
+        if task.deps == 0 {
+            ready[task.owner as usize].push(t as u32);
+        }
+    }
+
+    let mut makespan = 0.0f64;
+    while remaining > 0 {
+        // pick the (worker, task, slot) combination that starts earliest
+        let mut best: Option<(f64, usize, usize, usize)> = None; // (start, worker, pos, slot)
+        for w in 0..p {
+            if ready[w].is_empty() {
+                continue;
+            }
+            // earliest-free stream slot of this device
+            let (slot, &st) = slot_time[w]
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            for (pos, &t) in ready[w].iter().enumerate() {
+                let start = st.max(ready_time[t as usize]);
+                match best {
+                    Some((bs, _, _, _)) if bs <= start => {}
+                    _ => best = Some((start, w, pos, slot)),
+                }
+            }
+        }
+        let (start, w, pos, slot) = best.expect("deadlock: no ready task but work remains");
+        let t = ready[w].swap_remove(pos) as usize;
+        let task = &dag.tasks[t];
+        let finish = start + task.cost;
+        slot_time[w][slot] = finish;
+        busy[w] += task.cost;
+        makespan = makespan.max(finish);
+        remaining -= 1;
+        for &o in &task.out {
+            let oi = o as usize;
+            let consumer = &dag.tasks[oi];
+            let mut avail = finish;
+            if consumer.owner != task.owner {
+                let tt = model.transfer_time(task.out_bytes);
+                avail += tt;
+                transfer[consumer.owner as usize] += tt;
+            }
+            ready_time[oi] = ready_time[oi].max(avail);
+            indeg[oi] -= 1;
+            if indeg[oi] == 0 {
+                ready[consumer.owner as usize].push(o);
+            }
+        }
+    }
+
+    // utilization normalized by stream capacity (1.0 = all slots busy
+    // for the whole makespan)
+    let utilization = busy
+        .iter()
+        .map(|&b| {
+            if makespan > 0.0 {
+                b / (makespan * slots_per as f64)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    SimReport { makespan, busy, transfer, utilization }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::{regular_blocking, BlockedMatrix};
+    use crate::coordinator::placement::Placement;
+    use crate::coordinator::TaskDag;
+    use crate::numeric::KernelPolicy;
+    use crate::sparse::gen;
+    use crate::symbolic;
+
+    fn sim(a: &crate::sparse::Csc, bs: usize, p: u32) -> SimReport {
+        let sym = symbolic::analyze(a);
+        let ldu = sym.ldu_pattern(a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs));
+        let model = CostModel::a100();
+        let dag = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(p), &model);
+        simulate(&dag, p, &model)
+    }
+
+    #[test]
+    fn makespan_bounded_by_total_and_critical_path() {
+        let a = gen::uniform_random(120, 0.08, 3);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(120, 24));
+        let model = CostModel::a100();
+        let dag = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(4), &model);
+        let r = simulate(&dag, 4, &model);
+        assert!(r.makespan <= dag.total_cost() + 1e-12 + r.transfer.iter().sum::<f64>());
+        assert!(r.makespan >= dag.critical_path - 1e-12);
+        // capacity bound: 4 devices × concurrent_kernels slots
+        let cap = 4.0 * model.concurrent_kernels as f64;
+        assert!(r.makespan >= dag.total_cost() / cap - 1e-12);
+    }
+
+    #[test]
+    fn single_worker_serial_model_matches_total_cost() {
+        // with stream concurrency 1, one device runs tasks back-to-back
+        let a = gen::grid2d_laplacian(8, 8);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(64, 16));
+        let model = CostModel { concurrent_kernels: 1, ..CostModel::a100() };
+        let dag = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(1), &model);
+        let r = simulate(&dag, 1, &model);
+        assert!((r.makespan - dag.total_cost()).abs() < 1e-12 * dag.total_cost().max(1.0));
+        assert_eq!(r.busy.len(), 1);
+        assert!((r.utilization[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stream_concurrency_shortens_makespan() {
+        let a = gen::uniform_random(150, 0.06, 5);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(150, 25));
+        let serial = CostModel { concurrent_kernels: 1, ..CostModel::a100() };
+        let streams = CostModel::a100();
+        let dag = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(1), &streams);
+        let r1 = simulate(&dag, 1, &serial);
+        let r8 = simulate(&dag, 1, &streams);
+        assert!(r8.makespan < r1.makespan, "{} vs {}", r8.makespan, r1.makespan);
+    }
+
+    #[test]
+    fn modeled_block_size_curve_is_u_shaped() {
+        // the paper's Fig 4: too-fine blocks pay launch overhead, too-
+        // coarse blocks pay the serial column chain; the optimum is
+        // interior. Check the modeled makespan across a size sweep.
+        let a = gen::electromagnetics_like(2600, 12, 2, 0x0F5E);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let model = CostModel::a100();
+        let mut times = Vec::new();
+        for bs in [32usize, 108, 432, 2600] {
+            let bm = BlockedMatrix::build(&ldu, regular_blocking(2600, bs));
+            let dag =
+                TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(1), &model);
+            times.push(simulate(&dag, 1, &model).makespan);
+        }
+        let interior_min = times[1].min(times[2]);
+        assert!(
+            interior_min < times[0] && interior_min < times[3],
+            "expected U-shape, got {times:?}"
+        );
+    }
+
+    #[test]
+    fn more_workers_do_not_regress_materially() {
+        // with 8-stream overlap a single device already exploits most
+        // task parallelism at this size; 4 devices add transfer cost, so
+        // allow parity but not a material regression
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 500, ..Default::default() });
+        let r1 = sim(&a, 50, 1);
+        let r4 = sim(&a, 50, 4);
+        assert!(
+            r4.makespan < 1.5 * r1.makespan,
+            "4 workers {} vs 1 worker {}",
+            r4.makespan,
+            r1.makespan
+        );
+    }
+
+    #[test]
+    fn multi_device_distributes_work_and_wins_when_throughput_bound() {
+        // throttle streams to 1 so the workload is throughput-bound, then
+        // multiple devices must win and all of them must do work
+        let a = gen::circuit_bbd(gen::CircuitParams {
+            n: 4000,
+            border_frac: 0.04,
+            border_density: 0.3,
+            interior_deg: 2,
+            seed: 8,
+        });
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(4000, 160));
+        let model = CostModel { concurrent_kernels: 1, ..CostModel::a100() };
+        let dag1 = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(1), &model);
+        let dag4 = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(4), &model);
+        let r1 = simulate(&dag1, 1, &model);
+        let r4 = simulate(&dag4, 4, &model);
+        assert!(
+            r4.makespan < r1.makespan,
+            "4 devices {} vs 1 device {}",
+            r4.makespan,
+            r1.makespan
+        );
+        assert!(r4.busy.iter().all(|&b| b > 0.0), "idle device: {:?}", r4.busy);
+    }
+
+    #[test]
+    fn imbalance_at_least_one() {
+        let a = gen::uniform_random(150, 0.05, 9);
+        let r = sim(&a, 30, 4);
+        assert!(r.imbalance() >= 1.0 - 1e-12);
+    }
+}

@@ -1,0 +1,269 @@
+//! Threaded owner-computes executor: runs the task DAG on `P` worker
+//! threads (the simulated GPUs), dependency-counting with per-worker ready
+//! queues. Python is nowhere near this path — dense ops go to the
+//! [`crate::numeric::factor::DenseBackend`] (pure rust or PJRT artifacts).
+
+use super::dag::TaskDag;
+use super::placement::Placement;
+use crate::blocking::partition::BlockedMatrix;
+use crate::gpu_model::CostModel;
+use crate::numeric::factor::{DenseBackend, FactorError, Factors, NumericMatrix};
+use crate::numeric::kernels::Workspace;
+use crate::numeric::KernelPolicy;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Execution report of a parallel factorization.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Measured wall-clock seconds of the numeric phase.
+    pub wall_seconds: f64,
+    /// Measured busy seconds per worker.
+    pub busy: Vec<f64>,
+    /// Tasks executed per worker.
+    pub tasks_done: Vec<usize>,
+    /// Total tasks.
+    pub total_tasks: usize,
+    /// Number of workers.
+    pub workers: u32,
+}
+
+impl RunReport {
+    /// max/mean measured busy-time imbalance.
+    pub fn imbalance(&self) -> f64 {
+        crate::util::Summary::of(&self.busy).imbalance()
+    }
+}
+
+struct Queues {
+    ready: Mutex<Vec<std::collections::VecDeque<u32>>>,
+    cv: Condvar,
+    done: AtomicUsize,
+    total: usize,
+    failed: Mutex<Option<FactorError>>,
+}
+
+/// Factorize `bm` on `num_workers` threads following the DAG.
+///
+/// Returns the factors plus the measured run report. The DAG must have
+/// been built with a placement matching `num_workers`.
+pub fn factorize_parallel(
+    bm: Arc<BlockedMatrix>,
+    dag: &TaskDag,
+    policy: &KernelPolicy,
+    backend: &(dyn DenseBackend + Sync),
+    num_workers: u32,
+) -> Result<(Factors, RunReport), FactorError> {
+    let nm = NumericMatrix::from_blocked(bm);
+    let p = num_workers as usize;
+    let n = dag.tasks.len();
+
+    let deps: Vec<AtomicU32> = dag.tasks.iter().map(|t| AtomicU32::new(t.deps)).collect();
+    let mut initial: Vec<std::collections::VecDeque<u32>> =
+        vec![std::collections::VecDeque::new(); p];
+    for (t, task) in dag.tasks.iter().enumerate() {
+        if task.deps == 0 {
+            initial[task.owner as usize].push_back(t as u32);
+        }
+    }
+    let q = Queues {
+        ready: Mutex::new(initial),
+        cv: Condvar::new(),
+        done: AtomicUsize::new(0),
+        total: n,
+        failed: Mutex::new(None),
+    };
+
+    let busy: Vec<Mutex<f64>> = (0..p).map(|_| Mutex::new(0.0)).collect();
+    let counts: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(0)).collect();
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..p {
+            let nm = &nm;
+            let dag = &dag;
+            let q = &q;
+            let deps = &deps;
+            let busy = &busy;
+            let counts = &counts;
+            scope.spawn(move || {
+                let mut ws = Workspace::with_capacity(nm.max_dim);
+                let mut my_busy = 0.0f64;
+                loop {
+                    // fetch next task for this worker
+                    let task_id = {
+                        let mut ready = q.ready.lock().unwrap();
+                        loop {
+                            if q.done.load(Ordering::SeqCst) >= q.total
+                                || q.failed.lock().unwrap().is_some()
+                            {
+                                break None;
+                            }
+                            if let Some(t) = ready[w].pop_front() {
+                                break Some(t);
+                            }
+                            ready = q.cv.wait(ready).unwrap();
+                        }
+                    };
+                    let Some(t) = task_id else { break };
+                    let task = &dag.tasks[t as usize];
+                    let start = Instant::now();
+                    let res = nm.execute(task.op, policy, backend, &mut ws);
+                    my_busy += start.elapsed().as_secs_f64();
+                    counts[w].fetch_add(1, Ordering::Relaxed);
+                    if let Err(e) = res {
+                        *q.failed.lock().unwrap() = Some(e);
+                        q.cv.notify_all();
+                        break;
+                    }
+                    // release dependents
+                    let mut to_push: Vec<(usize, u32)> = Vec::new();
+                    for &o in &task.out {
+                        if deps[o as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                            to_push.push((dag.tasks[o as usize].owner as usize, o));
+                        }
+                    }
+                    let finished = q.done.fetch_add(1, Ordering::SeqCst) + 1;
+                    if !to_push.is_empty() || finished >= q.total {
+                        let mut ready = q.ready.lock().unwrap();
+                        for (ow, o) in to_push {
+                            ready[ow].push_back(o);
+                        }
+                        drop(ready);
+                        q.cv.notify_all();
+                    }
+                }
+                *busy[w].lock().unwrap() = my_busy;
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    if let Some(e) = q.failed.lock().unwrap().take() {
+        return Err(e);
+    }
+    assert_eq!(q.done.load(Ordering::SeqCst), n, "not all tasks executed");
+
+    let report = RunReport {
+        wall_seconds: wall,
+        busy: busy.iter().map(|b| *b.lock().unwrap()).collect(),
+        tasks_done: counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+        total_tasks: n,
+        workers: num_workers,
+    };
+    Ok((
+        Factors { numeric: nm, sparse_ops: n, dense_ops: 0 },
+        report,
+    ))
+}
+
+/// Convenience: build DAG + run in one call (measured path).
+pub fn factorize_with_workers(
+    bm: Arc<BlockedMatrix>,
+    policy: &KernelPolicy,
+    backend: &(dyn DenseBackend + Sync),
+    num_workers: u32,
+    model: &CostModel,
+) -> Result<(Factors, RunReport, TaskDag), FactorError> {
+    let placement = Placement::square(num_workers);
+    let dag = TaskDag::build(&bm, policy, placement, model);
+    let (f, r) = factorize_parallel(bm, &dag, policy, backend, num_workers)?;
+    Ok((f, r, dag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::{regular_blocking, BlockedMatrix};
+    use crate::numeric::factor::{factorize_sequential, CpuDense};
+    use crate::sparse::{gen, residual};
+    use crate::symbolic;
+
+    fn parallel_check(a: &crate::sparse::Csc, bs: usize, p: u32) {
+        let sym = symbolic::analyze(a);
+        let ldu = sym.ldu_pattern(a);
+        let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs)));
+        let policy = KernelPolicy::default();
+        let model = CostModel::a100();
+        let (f, report, _) =
+            factorize_with_workers(bm.clone(), &policy, &CpuDense, p, &model).unwrap();
+        assert_eq!(report.tasks_done.iter().sum::<usize>(), report.total_tasks);
+        let n = a.n_cols();
+        let b: Vec<f64> = (0..n).map(|i| ((i * 7) % 11) as f64 - 5.0).collect();
+        let x = f.solve(&b);
+        let r = residual(a, &x, &b);
+        assert!(r < 1e-9, "residual {r} with {p} workers");
+
+        // parallel result must equal sequential bit-for-bit? Not exactly —
+        // update order is fixed by chaining, so yes: same order, same fp.
+        let fs = factorize_sequential(bm, &policy, &CpuDense).unwrap();
+        for (idx, _) in fs.numeric.structure.blocks.iter().enumerate() {
+            let vs = fs.numeric.block_values(idx as u32);
+            let vp = f.numeric.block_values(idx as u32);
+            assert_eq!(vs, vp, "block {idx} differs between sequential and parallel");
+        }
+    }
+
+    #[test]
+    fn one_worker_matches_sequential() {
+        parallel_check(&gen::grid2d_laplacian(8, 8), 12, 1);
+    }
+
+    #[test]
+    fn two_workers_correct() {
+        parallel_check(&gen::directed_graph(150, 4, 21), 25, 2);
+    }
+
+    #[test]
+    fn four_workers_correct() {
+        parallel_check(&gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() }), 40, 4);
+    }
+
+    #[test]
+    fn four_workers_on_bbd_irregular_blocking() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 500, ..Default::default() });
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let curve = crate::blocking::DiagFeature::from_csc(&ldu).curve();
+        let blocking = crate::blocking::irregular_blocking(
+            &curve,
+            &crate::blocking::IrregularParams::default(),
+        );
+        let bm = Arc::new(BlockedMatrix::build(&ldu, blocking));
+        let model = CostModel::a100();
+        let (f, report, _) = factorize_with_workers(
+            bm,
+            &KernelPolicy::default(),
+            &CpuDense,
+            4,
+            &model,
+        )
+        .unwrap();
+        assert_eq!(report.workers, 4);
+        let b: Vec<f64> = (0..500).map(|i| (i % 3) as f64).collect();
+        let x = f.solve(&b);
+        assert!(residual(&a, &x, &b) < 1e-9);
+    }
+
+    #[test]
+    fn zero_pivot_propagates_as_error() {
+        // singular matrix: duplicate rows
+        let mut coo = crate::sparse::Coo::new(4, 4);
+        for j in 0..4 {
+            coo.push(0, j, 1.0);
+            coo.push(1, j, 1.0);
+        }
+        coo.push(2, 2, 1.0);
+        coo.push(3, 3, 1.0);
+        coo.push(2, 0, 0.5);
+        coo.push(3, 1, 0.5);
+        let a = coo.to_csc();
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(4, 2)));
+        let model = CostModel::a100();
+        let r = factorize_with_workers(bm, &KernelPolicy::default(), &CpuDense, 2, &model);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! `repro` — CLI for the sparselu reproduction.
+//!
+//! ```text
+//! repro solve --matrix gen:bbd=4000 --workers 4 --blocking irregular
+//! repro solve --matrix path/to/suitesparse.mtx --pjrt
+//! repro analyze --matrix gen:grid2d=100x100
+//! repro bench table4 --out results
+//! repro bench all --out results --scale medium
+//! repro artifacts-check
+//! ```
+//!
+//! (No clap offline — small hand-rolled parser.)
+
+use anyhow::{bail, Context, Result};
+use sparselu::bench_harness::{self, SuiteScale};
+use sparselu::ordering::OrderingMethod;
+use sparselu::runtime::PjrtDense;
+use sparselu::solver::{SolveOptions, Solver};
+use sparselu::sparse::{gen, io, residual, Csc};
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "solve" => cmd_solve(&flags),
+        "analyze" => cmd_analyze(&flags),
+        "bench" => {
+            let exp = args
+                .get(1)
+                .filter(|a| !a.starts_with("--"))
+                .context("bench needs an experiment name (or `all`)")?;
+            let out = flags.get("out").cloned().unwrap_or_else(|| "results".into());
+            let scale = match flags.get("scale").map(String::as_str) {
+                Some("small") => SuiteScale::Small,
+                _ => SuiteScale::Medium,
+            };
+            bench_harness::run(exp, std::path::Path::new(&out), scale)
+        }
+        "artifacts-check" => cmd_artifacts_check(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `repro help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — structure-aware irregular blocking for sparse LU (CS.DC 2025 reproduction)
+
+USAGE:
+  repro solve   --matrix <SPEC> [--workers N] [--blocking B] [--ordering O] [--pjrt]
+  repro analyze --matrix <SPEC>
+  repro bench   <EXPERIMENT|all> [--out DIR] [--scale small|medium]
+  repro artifacts-check [--dir artifacts]
+
+MATRIX SPEC:
+  path/to/file.mtx             MatrixMarket file (SuiteSparse downloads work)
+  gen:grid2d=100x100           2D Laplacian          (ecology1-like)
+  gen:grid3d=20x20x18          3D Laplacian          (apache2-like)
+  gen:bbd=4000                 circuit w/ dense border (ASIC_680k-like)
+  gen:graph=2000,4             directed weighted graph (cage/language-like)
+  gen:fem=3000                 banded FEM            (boneS10-like)
+  gen:em=2500                  electromagnetics      (offshore-like)
+  gen:tridiag=5000             tridiagonal           (linear archetype)
+  gen:uniform=1500,0.01        uniform random        (quadratic archetype)
+
+BLOCKING (--blocking):
+  irregular (default) | pangulu | regular:SIZE | superlu
+
+EXPERIMENTS: {}",
+        bench_harness::EXPERIMENTS.join(" ")
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(name.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    flags.insert(name.to_string(), "true".into());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn load_matrix(spec: &str) -> Result<Csc> {
+    if let Some(gen_spec) = spec.strip_prefix("gen:") {
+        let (kind, param) = gen_spec
+            .split_once('=')
+            .context("generator spec must be gen:kind=params")?;
+        let dims: Vec<&str> = param.split(['x', ',']).collect();
+        let num = |i: usize| -> Result<usize> {
+            dims.get(i)
+                .context("missing dimension")?
+                .parse::<usize>()
+                .context("bad dimension")
+        };
+        Ok(match kind {
+            "grid2d" => gen::grid2d_laplacian(num(0)?, num(1)?),
+            "grid3d" => gen::grid3d_laplacian(num(0)?, num(1)?, num(2)?),
+            "bbd" => gen::circuit_bbd(gen::CircuitParams { n: num(0)?, ..Default::default() }),
+            "graph" => gen::directed_graph(num(0)?, num(1).unwrap_or(4), 0xBEEF),
+            "fem" => gen::banded_fem(num(0)?, &[1, 2, 3, 40, 41], 0.85, 0xFE3),
+            "em" => gen::electromagnetics_like(num(0)?, 16, 2, 0xE3),
+            "tridiag" => gen::tridiagonal(num(0)?),
+            "uniform" => {
+                let d: f64 = dims.get(1).unwrap_or(&"0.01").parse()?;
+                gen::uniform_random(num(0)?, d, 0x07)
+            }
+            other => bail!("unknown generator {other:?}"),
+        })
+    } else {
+        io::read_matrix_market(spec).with_context(|| format!("reading {spec}"))
+    }
+}
+
+fn options_from_flags(flags: &HashMap<String, String>) -> Result<SolveOptions> {
+    let workers: u32 = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let mut opts = match flags.get("blocking").map(String::as_str) {
+        None | Some("irregular") => SolveOptions::ours(workers),
+        Some("pangulu") => SolveOptions::pangulu(workers),
+        Some("superlu") => SolveOptions::superlu_like(workers),
+        Some(s) if s.starts_with("regular:") => {
+            let size: usize = s["regular:".len()..].parse().context("regular:SIZE")?;
+            SolveOptions::pangulu_with_size(workers, size)
+        }
+        Some(other) => bail!("unknown blocking {other:?}"),
+    };
+    if let Some(ord) = flags.get("ordering") {
+        opts.ordering = ord.parse::<OrderingMethod>().map_err(|e| anyhow::anyhow!(e))?;
+    }
+    Ok(opts)
+}
+
+fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
+    let spec = flags.get("matrix").context("--matrix required")?;
+    let a = load_matrix(spec)?;
+    println!("matrix: {} n={} nnz={}", spec, a.n_rows(), a.nnz());
+    let opts = options_from_flags(flags)?;
+
+    let pjrt;
+    let mut solver = if flags.contains_key("pjrt") {
+        let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+        pjrt = PjrtDense::load(&dir).context("loading PJRT artifacts (run `make artifacts`)")?;
+        println!("PJRT backend: {} artifacts loaded", pjrt.num_artifacts());
+        Solver::with_backend(opts, &pjrt)
+    } else {
+        Solver::new(opts)
+    };
+
+    let f = solver
+        .factorize(&a)
+        .map_err(|e| anyhow::anyhow!("factorization failed: {e}"))?;
+    let r = &f.report;
+    println!("\n--- pipeline report ---");
+    println!("n                : {}", r.n);
+    println!(
+        "nnz(A)           : {}  nnz(L+U): {}  (fill {:.2}x)",
+        r.nnz_a,
+        r.nnz_ldu,
+        r.nnz_ldu as f64 / r.nnz_a as f64
+    );
+    println!("flops            : {:.3e}", r.flops);
+    println!("reorder          : {:.4}s", r.reorder_seconds);
+    println!("symbolic         : {:.4}s", r.symbolic_seconds);
+    println!("preprocess       : {:.4}s", r.preprocess_seconds);
+    println!(
+        "numeric          : {:.4}s ({:.0}% of total)",
+        r.numeric_seconds,
+        r.numeric_share() * 100.0
+    );
+    println!("blocks           : {} ({} nonempty)", r.num_blocks, r.nonempty_blocks);
+    println!("tasks            : {} in {} DAG levels", r.tasks, r.dag_levels);
+    println!("block nnz CV     : {:.3}", r.balance.block_summary.cv());
+    println!(
+        "modeled A100     : makespan {:.4}s on {} device(s)",
+        r.modeled_makespan,
+        r.measured_busy.len()
+    );
+    if r.measured_busy.len() > 1 {
+        println!(
+            "measured busy    : {:?}",
+            r.measured_busy.iter().map(|b| format!("{b:.3}s")).collect::<Vec<_>>()
+        );
+    }
+
+    // verify with a solve
+    let b: Vec<f64> = (0..a.n_rows()).map(|i| 1.0 + (i % 10) as f64).collect();
+    let x = f.solve(&b);
+    let res = residual(&a, &x, &b);
+    println!("residual         : {res:.3e}");
+    if res > 1e-6 {
+        bail!("residual too large — numeric factorization suspect");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
+    let spec = flags.get("matrix").context("--matrix required")?;
+    let a = load_matrix(spec)?;
+    println!("matrix: {} n={} nnz={}", spec, a.n_rows(), a.nnz());
+
+    let perm = sparselu::ordering::order(&a, OrderingMethod::MinDegree);
+    let pa = a.permute_sym(perm.as_slice());
+    let sym = sparselu::symbolic::analyze(&pa);
+    let ldu = sym.ldu_pattern(&pa);
+    println!("after min-degree + symbolic:");
+    println!("  nnz(L+U) = {} (fill {:.2}x)", sym.nnz_ldu(), sym.fill_ratio(&a));
+    println!("  flops    = {:.3e}", sym.flops());
+
+    let feature = sparselu::blocking::DiagFeature::from_csc(&ldu);
+    let curve = feature.curve();
+    println!("diagonal block-based feature (Algorithm 2):");
+    println!(
+        "  quadratic score : {:+.4}  (≈0 linear, <0 bottom-right-heavy)",
+        curve.quadratic_score()
+    );
+    println!("  max jump        : {:.4}   (large ⇒ dense rows/cols)", curve.max_jump());
+
+    let blocking = sparselu::blocking::irregular_blocking(
+        &curve,
+        &sparselu::blocking::IrregularParams::default(),
+    );
+    let sizes = blocking.sizes();
+    let summary =
+        sparselu::util::Summary::of(&sizes.iter().map(|&s| s as f64).collect::<Vec<_>>());
+    println!("irregular blocking (Algorithm 3):");
+    println!(
+        "  {} blocks, sizes min/mean/max = {}/{:.0}/{}",
+        blocking.num_blocks(),
+        summary.min,
+        summary.mean,
+        summary.max
+    );
+    let options = sparselu::blocking::selection::scaled_options(a.n_cols());
+    let sel = sparselu::blocking::selection::select_from(a.n_cols(), ldu.nnz(), &options);
+    println!("PanguLU selection tree would pick: {sel} (from {options:?})");
+    Ok(())
+}
+
+fn cmd_artifacts_check(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
+    let pjrt = PjrtDense::load(&dir)?;
+    println!("loaded {} artifacts from {dir}", pjrt.num_artifacts());
+    println!("tile sizes: up to {}", pjrt.max_tile());
+    // smoke execution
+    use sparselu::numeric::factor::DenseBackend;
+    let n = 8;
+    let mut a = vec![0.0; n * n];
+    for i in 0..n {
+        a[i * n + i] = 4.0;
+        if i + 1 < n {
+            a[i * n + i + 1] = -1.0;
+            a[(i + 1) * n + i] = -1.0;
+        }
+    }
+    pjrt.getrf(&mut a, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("smoke GETRF on 8x8 tridiagonal: OK (pivot[0] = {})", a[0]);
+    println!("executions dispatched: {}", pjrt.executions());
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! Dense block kernels on column-major buffers.
+//!
+//! Three roles: (1) CPU implementation of the dense path PanguLU would run
+//! through cuBLAS — selected by [`super::KernelPolicy`] for dense blocks;
+//! (2) correctness oracle for the sparse kernels; (3) the same operations
+//! the AOT Pallas/XLA artifacts implement, so [`crate::runtime`] can swap
+//! them in 1:1 (`getrf_in_place` ↔ `artifacts/getrf_*.hlo.txt`, …).
+
+use super::kernels::{KernelError, PIVOT_FLOOR};
+
+/// In-place no-pivot LU of a dense `n×n` column-major matrix: on return
+/// the buffer holds `{L\U}` with L's unit diagonal implicit.
+pub fn getrf_in_place(a: &mut [f64], n: usize) -> Result<(), KernelError> {
+    debug_assert_eq!(a.len(), n * n);
+    for k in 0..n {
+        let pivot = a[k * n + k];
+        if pivot.abs() < PIVOT_FLOOR {
+            return Err(KernelError::ZeroPivot { block: (0, 0), local_col: k, value: pivot });
+        }
+        let inv = 1.0 / pivot;
+        for i in (k + 1)..n {
+            a[k * n + i] *= inv;
+        }
+        // rank-1 update of the trailing submatrix
+        for j in (k + 1)..n {
+            let ukj = a[j * n + k];
+            if ukj == 0.0 {
+                continue;
+            }
+            let (lcol, tcol) = {
+                let (lo, hi) = a.split_at_mut(j * n);
+                (&lo[k * n..k * n + n], &mut hi[..n])
+            };
+            for i in (k + 1)..n {
+                tcol[i] -= lcol[i] * ukj;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `B ← L⁻¹ B` with unit-lower `L` stored in `{L\U}` form (`lu`, `m×m`),
+/// `B` column-major `m×k`. The dense counterpart of GESSM.
+pub fn trsm_lower_unit(lu: &[f64], m: usize, b: &mut [f64], k: usize) {
+    debug_assert_eq!(lu.len(), m * m);
+    debug_assert_eq!(b.len(), m * k);
+    for c in 0..k {
+        let col = &mut b[c * m..(c + 1) * m];
+        for r in 0..m {
+            let alpha = col[r];
+            if alpha == 0.0 {
+                continue;
+            }
+            for i in (r + 1)..m {
+                col[i] -= alpha * lu[r * m + i];
+            }
+        }
+    }
+}
+
+/// `B ← B U⁻¹` with upper `U` stored in `{L\U}` form (`lu`, `k×k`),
+/// `B` column-major `m×k`. The dense counterpart of TSTRF.
+pub fn trsm_upper_right(lu: &[f64], k: usize, b: &mut [f64], m: usize) {
+    debug_assert_eq!(lu.len(), k * k);
+    debug_assert_eq!(b.len(), m * k);
+    for c in 0..k {
+        // subtract contributions of previous columns
+        for p in 0..c {
+            let upc = lu[c * k + p];
+            if upc == 0.0 {
+                continue;
+            }
+            let (prev, cur) = {
+                let (lo, hi) = b.split_at_mut(c * m);
+                (&lo[p * m..p * m + m], &mut hi[..m])
+            };
+            for i in 0..m {
+                cur[i] -= prev[i] * upc;
+            }
+        }
+        let inv = 1.0 / lu[c * k + c];
+        for i in 0..m {
+            b[c * m + i] *= inv;
+        }
+    }
+}
+
+/// `C ← C − A·B`, all column-major: `A` is `m×k`, `B` is `k×n`, `C` is
+/// `m×n`. The dense counterpart of SSSSM (and the MXU hot-spot on TPU).
+pub fn gemm_update(c: &mut [f64], a: &[f64], b: &[f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for j in 0..n {
+        let ccol = &mut c[j * m..(j + 1) * m];
+        for p in 0..k {
+            let bpj = b[j * k + p];
+            if bpj == 0.0 {
+                continue;
+            }
+            let acol = &a[p * m..(p + 1) * m];
+            for i in 0..m {
+                ccol[i] -= acol[i] * bpj;
+            }
+        }
+    }
+}
+
+/// Multiply `{L\U}` back into `A = L·U` (test helper).
+pub fn lu_multiply(lu: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n * n];
+    for j in 0..n {
+        for i in 0..n {
+            let mut s = 0.0;
+            let kmax = i.min(j);
+            for k in 0..=kmax {
+                let l = if i == k { 1.0 } else if i > k { lu[k * n + i] } else { 0.0 };
+                let u = if k <= j { lu[j * n + k] } else { 0.0 };
+                s += l * u;
+            }
+            out[j * n + i] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn random_dd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Prng::new(seed);
+        let mut a = vec![0.0; n * n];
+        for j in 0..n {
+            for i in 0..n {
+                if i != j {
+                    a[j * n + i] = rng.signed_unit();
+                }
+            }
+        }
+        for i in 0..n {
+            let row_sum: f64 = (0..n).filter(|&j| j != i).map(|j| a[j * n + i].abs()).sum();
+            a[i * n + i] = row_sum + 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn getrf_reconstructs_a() {
+        let n = 17;
+        let a = random_dd(n, 1);
+        let mut lu = a.clone();
+        getrf_in_place(&mut lu, n).unwrap();
+        let back = lu_multiply(&lu, n);
+        for p in 0..n * n {
+            assert!((back[p] - a[p]).abs() < 1e-9, "at {p}: {} vs {}", back[p], a[p]);
+        }
+    }
+
+    #[test]
+    fn getrf_rejects_singular() {
+        let mut a = vec![1.0, 1.0, 1.0, 1.0]; // singular 2x2
+        assert!(getrf_in_place(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn trsm_lower_solves() {
+        let n = 9;
+        let a = random_dd(n, 2);
+        let mut lu = a.clone();
+        getrf_in_place(&mut lu, n).unwrap();
+        let mut rng = Prng::new(3);
+        let x: Vec<f64> = (0..n * 2).map(|_| rng.signed_unit()).collect();
+        // b = L x
+        let mut b = vec![0.0; n * 2];
+        for c in 0..2 {
+            for i in 0..n {
+                let mut s = x[c * n + i];
+                for k in 0..i {
+                    s += lu[k * n + i] * x[c * n + k];
+                }
+                b[c * n + i] = s;
+            }
+        }
+        trsm_lower_unit(&lu, n, &mut b, 2);
+        for p in 0..n * 2 {
+            assert!((b[p] - x[p]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trsm_upper_right_solves() {
+        let k = 8;
+        let m = 5;
+        let a = random_dd(k, 4);
+        let mut lu = a.clone();
+        getrf_in_place(&mut lu, k).unwrap();
+        let mut rng = Prng::new(5);
+        let x: Vec<f64> = (0..m * k).map(|_| rng.signed_unit()).collect();
+        // b = X U  (b[i,c] = Σ_p x[i,p] u[p,c])
+        let mut b = vec![0.0; m * k];
+        for c in 0..k {
+            for i in 0..m {
+                let mut s = 0.0;
+                for p in 0..=c {
+                    s += x[p * m + i] * lu[c * k + p];
+                }
+                b[c * m + i] = s;
+            }
+        }
+        trsm_upper_right(&lu, k, &mut b, m);
+        for p in 0..m * k {
+            assert!((b[p] - x[p]).abs() < 1e-9, "at {p}: {} vs {}", b[p], x[p]);
+        }
+    }
+
+    #[test]
+    fn gemm_update_matches_naive() {
+        let (m, k, n) = (6, 4, 5);
+        let mut rng = Prng::new(6);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.signed_unit()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.signed_unit()).collect();
+        let c0: Vec<f64> = (0..m * n).map(|_| rng.signed_unit()).collect();
+        let mut c = c0.clone();
+        gemm_update(&mut c, &a, &b, m, k, n);
+        for j in 0..n {
+            for i in 0..m {
+                let mut want = c0[j * m + i];
+                for p in 0..k {
+                    want -= a[p * m + i] * b[j * k + p];
+                }
+                assert!((c[j * m + i] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_kernels_compose_into_block_lu() {
+        // 2x2 block dense LU via the four kernels == full dense LU
+        let n = 12;
+        let h = 7; // uneven split
+        let a = random_dd(n, 7);
+        let mut full = a.clone();
+        getrf_in_place(&mut full, n).unwrap();
+
+        // extract blocks (column-major)
+        let sub = |r0: usize, r1: usize, c0: usize, c1: usize| -> Vec<f64> {
+            let mut out = vec![0.0; (r1 - r0) * (c1 - c0)];
+            for (cc, c) in (c0..c1).enumerate() {
+                for (rr, r) in (r0..r1).enumerate() {
+                    out[cc * (r1 - r0) + rr] = a[c * n + r];
+                }
+            }
+            out
+        };
+        let mut a11 = sub(0, h, 0, h);
+        let mut a21 = sub(h, n, 0, h);
+        let mut a12 = sub(0, h, h, n);
+        let mut a22 = sub(h, n, h, n);
+        getrf_in_place(&mut a11, h).unwrap();
+        trsm_lower_unit(&a11, h, &mut a12, n - h);
+        trsm_upper_right(&a11, h, &mut a21, n - h);
+        gemm_update(&mut a22, &a21, &a12, n - h, h, n - h);
+        getrf_in_place(&mut a22, n - h).unwrap();
+
+        let check = |blk: &[f64], r0: usize, c0: usize, nr: usize, nc: usize| {
+            for c in 0..nc {
+                for r in 0..nr {
+                    let got = blk[c * nr + r];
+                    let want = full[(c0 + c) * n + r0 + r];
+                    assert!(
+                        (got - want).abs() < 1e-9,
+                        "block entry ({r},{c}) {got} vs {want}"
+                    );
+                }
+            }
+        };
+        check(&a11, 0, 0, h, h);
+        check(&a12, 0, h, h, n - h);
+        check(&a21, h, 0, n - h, h);
+        check(&a22, h, h, n - h, n - h);
+    }
+}

@@ -1,0 +1,568 @@
+//! Sparse block kernels: GETRF / GESSM / TSTRF / SSSSM on the fixed fill
+//! pattern.
+//!
+//! All four kernels use the classic *scatter–compute–gather* scheme: a
+//! block column is scattered into a dense workspace vector, updated with
+//! sparse AXPYs, and gathered back into the (pre-computed, fill-complete)
+//! pattern. Correctness relies on the symbolic closure property: any value
+//! produced by `L[·,k]·U[k,·]` products lands on a position the symbolic
+//! phase already allocated — asserted in debug builds.
+
+use crate::blocking::partition::Block;
+
+/// Reusable scratch space for the sparse kernels (one per worker thread).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Dense accumulator, sized to the largest block dimension.
+    w: Vec<f64>,
+    /// Dirty indices of `w` — debug builds only, used to assert the
+    /// symbolic-closure property in SSSSM.
+    #[cfg_attr(not(debug_assertions), allow(dead_code))]
+    touched: Vec<u32>,
+}
+
+impl Workspace {
+    pub fn with_capacity(max_dim: usize) -> Self {
+        Self { w: vec![0.0; max_dim], touched: Vec::with_capacity(max_dim) }
+    }
+
+    #[inline]
+    fn ensure(&mut self, dim: usize) {
+        if self.w.len() < dim {
+            self.w.resize(dim, 0.0);
+        }
+    }
+}
+
+/// Numerical failure modes of the no-pivot factorization.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelError {
+    /// A pivot underflowed the stability floor.
+    ZeroPivot { block: (u32, u32), local_col: usize, value: f64 },
+}
+
+impl std::fmt::Display for KernelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelError::ZeroPivot { block, local_col, value } => write!(
+                f,
+                "zero/tiny pivot {value:.3e} at local column {local_col} of diagonal block {block:?}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for KernelError {}
+
+/// Pivot magnitude below which the factorization aborts (the paper's
+/// setting delegates stability to reordering / diagonal dominance).
+pub const PIVOT_FLOOR: f64 = 1e-300;
+
+/// GETRF: factor the diagonal block in place, `vals ← {L\U}` (left-looking
+/// within the block; L gets a unit diagonal stored implicitly).
+pub fn getrf(pat: &Block, vals: &mut [f64], ws: &mut Workspace) -> Result<(), KernelError> {
+    debug_assert_eq!(pat.bi, pat.bj, "GETRF runs on diagonal blocks");
+    let n = pat.n_cols as usize;
+    ws.ensure(pat.n_rows as usize);
+    let w = &mut ws.w;
+    for c in 0..n {
+        let (start, end) = (pat.col_ptr[c] as usize, pat.col_ptr[c + 1] as usize);
+        let rows = &pat.row_idx[start..end];
+        // scatter column c
+        for (k, &r) in rows.iter().enumerate() {
+            w[r as usize] = vals[start + k];
+        }
+        // eliminate with every factored column k < c present in the pattern
+        let diag_pos = start + pat.diag_pos[c] as usize;
+        for &r in rows {
+            let k = r as usize;
+            if k >= c {
+                break; // rows sorted: U-part first
+            }
+            let alpha = w[k];
+            if alpha == 0.0 {
+                continue;
+            }
+            // w -= alpha * L[:,k]  (strictly-below-diagonal part of col k)
+            let (ks, ke) = (pat.col_ptr[k] as usize, pat.col_ptr[k + 1] as usize);
+            let lo = ks + pat.diag_pos[k] as usize + 1;
+            for (&s, &lv) in pat.row_idx[lo..ke].iter().zip(&vals[lo..ke]) {
+                w[s as usize] -= alpha * lv;
+            }
+        }
+        // pivot + scale
+        let pivot = w[c];
+        if pivot.abs() < PIVOT_FLOOR {
+            return Err(KernelError::ZeroPivot {
+                block: (pat.bi, pat.bj),
+                local_col: c,
+                value: pivot,
+            });
+        }
+        let diag_idx_in_rows = diag_pos - start;
+        for (k, &r) in rows.iter().enumerate() {
+            let ri = r as usize;
+            if k <= diag_idx_in_rows {
+                vals[start + k] = w[ri]; // U part + pivot
+            } else {
+                vals[start + k] = w[ri] / pivot; // L part, scaled
+            }
+            w[ri] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// GESSM: U-panel update `B ← L_kk⁻¹ B` where `diag` holds the factored
+/// `{L\U}_kk` and `pat/vals` is block `(k, j)`, `j > k`.
+pub fn gessm(
+    pat: &Block,
+    vals: &mut [f64],
+    diag_pat: &Block,
+    diag_vals: &[f64],
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(pat.n_rows, diag_pat.n_cols);
+    ws.ensure(pat.n_rows as usize);
+    let w = &mut ws.w;
+    for c in 0..pat.n_cols as usize {
+        let (start, end) = (pat.col_ptr[c] as usize, pat.col_ptr[c + 1] as usize);
+        let rows = &pat.row_idx[start..end];
+        if rows.is_empty() {
+            continue;
+        }
+        for (k, &r) in rows.iter().enumerate() {
+            w[r as usize] = vals[start + k];
+        }
+        // forward substitution with unit-lower L_kk, sparse driver:
+        // pattern rows of this column are exactly the reachable set.
+        for &r in rows {
+            let k = r as usize;
+            let alpha = w[k];
+            if alpha == 0.0 {
+                continue;
+            }
+            let (ks, ke) = (diag_pat.col_ptr[k] as usize, diag_pat.col_ptr[k + 1] as usize);
+            let lo = ks + diag_pat.diag_pos[k] as usize + 1;
+            for (&s, &lv) in diag_pat.row_idx[lo..ke].iter().zip(&diag_vals[lo..ke]) {
+                w[s as usize] -= alpha * lv;
+            }
+        }
+        for (k, &r) in rows.iter().enumerate() {
+            let ri = r as usize;
+            vals[start + k] = w[ri];
+            w[ri] = 0.0;
+        }
+    }
+}
+
+/// TSTRF: L-panel update `B ← B U_kk⁻¹` where `diag` holds `{L\U}_kk` and
+/// `pat/vals` is block `(i, k)`, `i > k`. Column-oriented: columns of the
+/// result depend on previously-computed columns.
+pub fn tstrf(
+    pat: &Block,
+    vals: &mut [f64],
+    diag_pat: &Block,
+    diag_vals: &[f64],
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(pat.n_cols, diag_pat.n_rows);
+    ws.ensure(pat.n_rows as usize);
+    let w = &mut ws.w;
+    for c in 0..pat.n_cols as usize {
+        let (start, end) = (pat.col_ptr[c] as usize, pat.col_ptr[c + 1] as usize);
+        let rows = &pat.row_idx[start..end];
+        if rows.is_empty() {
+            continue;
+        }
+        for (k, &r) in rows.iter().enumerate() {
+            w[r as usize] = vals[start + k];
+        }
+        // w -= X[:,k] * U[k,c] for U entries k < c of diag col c
+        let ds = diag_pat.col_ptr[c] as usize;
+        let dpos = diag_pat.diag_pos[c] as usize;
+        for t in ds..(ds + dpos) {
+            let k = diag_pat.row_idx[t] as usize;
+            let ukc = diag_vals[t];
+            if ukc == 0.0 {
+                continue;
+            }
+            let (xs, xe) = (pat.col_ptr[k] as usize, pat.col_ptr[k + 1] as usize);
+            for (&s, &xv) in pat.row_idx[xs..xe].iter().zip(&vals[xs..xe]) {
+                w[s as usize] -= xv * ukc;
+            }
+        }
+        let pivot = diag_vals[ds + dpos];
+        let inv = 1.0 / pivot;
+        for (k, &r) in rows.iter().enumerate() {
+            let ri = r as usize;
+            vals[start + k] = w[ri] * inv;
+            w[ri] = 0.0;
+        }
+    }
+}
+
+/// SSSSM: Schur-complement update `C ← C − A·B` where `A` is block `(i,k)`
+/// (L panel), `B` is block `(k,j)` (U panel), `C` is block `(i,j)`.
+///
+/// The flop hot-spot of the whole factorization (Alg. 1 line 10).
+pub fn ssssm(
+    c_pat: &Block,
+    c_vals: &mut [f64],
+    a_pat: &Block,
+    a_vals: &[f64],
+    b_pat: &Block,
+    b_vals: &[f64],
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(a_pat.n_cols, b_pat.n_rows);
+    debug_assert_eq!(c_pat.n_rows, a_pat.n_rows);
+    debug_assert_eq!(c_pat.n_cols, b_pat.n_cols);
+    ws.ensure(c_pat.n_rows as usize);
+    let w = &mut ws.w;
+    for c in 0..b_pat.n_cols as usize {
+        let (bs, be) = (b_pat.col_ptr[c] as usize, b_pat.col_ptr[c + 1] as usize);
+        if bs == be {
+            continue;
+        }
+        // track touched rows only in debug builds — in release, the
+        // symbolic-closure property guarantees every accumulated position
+        // lies inside C's pattern, so the gather loop below fully resets
+        // `w` and the branch + push per FMA can be elided from the hot
+        // loop (EXPERIMENTS.md §Perf L3 opt-1).
+        #[cfg(debug_assertions)]
+        let touched = {
+            ws.touched.clear();
+            &mut ws.touched
+        };
+        let mut any = false;
+        // w += A[:, r] * B[r, c] accumulated over B's column entries
+        for t in bs..be {
+            let r = b_pat.row_idx[t] as usize;
+            let bv = b_vals[t];
+            if bv == 0.0 {
+                continue;
+            }
+            let (as_, ae) = (a_pat.col_ptr[r] as usize, a_pat.col_ptr[r + 1] as usize);
+            any |= as_ != ae;
+            // zipped slices: one bounds check per slice, not per element
+            for (&s, &av) in a_pat.row_idx[as_..ae].iter().zip(&a_vals[as_..ae]) {
+                let si = s as usize;
+                #[cfg(debug_assertions)]
+                if w[si] == 0.0 {
+                    touched.push(s);
+                }
+                w[si] += av * bv;
+            }
+        }
+        if !any {
+            continue;
+        }
+        // gather: subtract at C's pattern positions (resetting w)
+        let (cs, ce) = (c_pat.col_ptr[c] as usize, c_pat.col_ptr[c + 1] as usize);
+        for t in cs..ce {
+            let ri = c_pat.row_idx[t] as usize;
+            let acc = w[ri];
+            if acc != 0.0 {
+                c_vals[t] -= acc;
+                w[ri] = 0.0;
+            }
+        }
+        // symbolic-closure guard: every accumulated position must have
+        // been inside C's pattern (w already reset there).
+        #[cfg(debug_assertions)]
+        for &s in ws.touched.iter() {
+            debug_assert!(
+                w[s as usize] == 0.0,
+                "SSSSM produced value outside symbolic pattern at local row {s}"
+            );
+        }
+    }
+}
+
+/// Flop cost of each kernel given the participating block patterns —
+/// consumed by the GPU cost model and the bench harness.
+pub mod cost {
+    use crate::blocking::partition::Block;
+
+    /// GETRF flops on the sparse pattern: for each column c, each U-entry
+    /// k<c triggers an AXPY of length |L(:,k)|.
+    pub fn getrf(pat: &Block) -> f64 {
+        let n = pat.n_cols as usize;
+        // approximation: Σ_c Σ_{k<c in pat(c)} |L(:,k)| ≈ use column sizes
+        let mut below = vec![0usize; n];
+        for c in 0..n {
+            let rows = pat.col_rows(c);
+            let d = rows.partition_point(|&r| (r as usize) < c);
+            below[c] = rows.len() - d - 1; // strictly below diagonal
+        }
+        let mut fl = 0.0;
+        for c in 0..n {
+            let rows = pat.col_rows(c);
+            for &r in rows {
+                let k = r as usize;
+                if k >= c {
+                    break;
+                }
+                fl += 2.0 * below[k] as f64;
+            }
+            fl += below[c] as f64; // the division
+        }
+        fl
+    }
+
+    /// GESSM flops: per target column, Σ over its entries k of |L_kk(:,k)|.
+    pub fn gessm(pat: &Block, diag: &Block) -> f64 {
+        let mut below = vec![0usize; diag.n_cols as usize];
+        for c in 0..diag.n_cols as usize {
+            let rows = diag.col_rows(c);
+            let d = rows.partition_point(|&r| (r as usize) <= c);
+            below[c] = rows.len() - d;
+        }
+        let mut fl = 0.0;
+        for c in 0..pat.n_cols as usize {
+            for &r in pat.col_rows(c) {
+                fl += 2.0 * below[r as usize] as f64;
+            }
+        }
+        fl
+    }
+
+    /// TSTRF flops: per column c, Σ over U entries k<c of |X(:,k)| + division.
+    pub fn tstrf(pat: &Block, diag: &Block) -> f64 {
+        let mut xcol = vec![0usize; pat.n_cols as usize];
+        for c in 0..pat.n_cols as usize {
+            xcol[c] = pat.col_rows(c).len();
+        }
+        let mut fl = 0.0;
+        for c in 0..pat.n_cols as usize {
+            for &dr in diag.col_rows(c) {
+                let k = dr as usize;
+                if k >= c {
+                    break;
+                }
+                fl += 2.0 * xcol[k] as f64;
+            }
+            fl += xcol[c] as f64;
+        }
+        fl
+    }
+
+    /// SSSSM flops: Σ over B entries (r,c) of 2·|A(:,r)|.
+    pub fn ssssm(a: &Block, b: &Block) -> f64 {
+        let mut acol = vec![0usize; a.n_cols as usize];
+        for c in 0..a.n_cols as usize {
+            acol[c] = a.col_rows(c).len();
+        }
+        let mut fl = 0.0;
+        for c in 0..b.n_cols as usize {
+            for &r in b.col_rows(c) {
+                fl += 2.0 * acol[r as usize] as f64;
+            }
+        }
+        fl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::{regular_blocking, BlockedMatrix};
+    use crate::numeric::dense;
+    use crate::sparse::gen;
+    use crate::symbolic;
+
+    /// Factor a small matrix with one giant block and compare {L\U}
+    /// against the dense no-pivot LU.
+    #[test]
+    fn getrf_matches_dense_lu_single_block() {
+        let a = gen::uniform_random(24, 0.2, 42);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(24, 24));
+        let id = bm.block_id(0, 0).unwrap();
+        let pat = bm.block(id);
+        let mut vals = pat.values.clone();
+        let mut ws = Workspace::with_capacity(24);
+        getrf(pat, &mut vals, &mut ws).unwrap();
+
+        // dense reference
+        let mut d = vec![0.0; 24 * 24];
+        for j in 0..24 {
+            for (i, v) in a.col(j) {
+                d[j * 24 + i] = v;
+            }
+        }
+        dense::getrf_in_place(&mut d, 24).unwrap();
+        for c in 0..24usize {
+            for (k, &r) in pat.col_rows(c).iter().enumerate() {
+                let got = vals[pat.col_ptr[c] as usize + k];
+                let want = d[c * 24 + r as usize];
+                assert!(
+                    (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                    "mismatch at ({r},{c}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn getrf_detects_zero_pivot() {
+        // 2x2 with exact cancellation: [[1,1],[1,1]] -> pivot 0 at col 1
+        let mut coo = crate::sparse::Coo::new(2, 2);
+        for i in 0..2 {
+            for j in 0..2 {
+                coo.push(i, j, 1.0);
+            }
+        }
+        let a = coo.to_csc();
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(2, 2));
+        let id = bm.block_id(0, 0).unwrap();
+        let pat = bm.block(id);
+        let mut vals = pat.values.clone();
+        let mut ws = Workspace::default();
+        let err = getrf(pat, &mut vals, &mut ws);
+        assert!(matches!(err, Err(KernelError::ZeroPivot { local_col: 1, .. })));
+    }
+
+    /// Full blocked factorization on a 2x2 block grid, every kernel
+    /// exercised, verified against dense LU of the whole matrix.
+    fn blocked_vs_dense(a: &crate::sparse::Csc, bs: usize) {
+        let n = a.n_cols();
+        let sym = symbolic::analyze(a);
+        let ldu = sym.ldu_pattern(a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(n, bs));
+        let nb = bm.nb();
+        let mut vals: Vec<Vec<f64>> = bm.blocks.iter().map(|b| b.values.clone()).collect();
+        let mut ws = Workspace::with_capacity(n);
+        for k in 0..nb {
+            let diag_id = bm.block_id(k, k).expect("diagonal block must exist") as usize;
+            {
+                let pat = &bm.blocks[diag_id];
+                let mut v = std::mem::take(&mut vals[diag_id]);
+                getrf(pat, &mut v, &mut ws).unwrap();
+                vals[diag_id] = v;
+            }
+            let diag_pat = &bm.blocks[diag_id];
+            let diag_vals = vals[diag_id].clone();
+            // panels
+            for &id in &bm.by_col[k] {
+                let b = bm.block(id);
+                if (b.bi as usize) > k {
+                    let mut v = std::mem::take(&mut vals[id as usize]);
+                    tstrf(b, &mut v, diag_pat, &diag_vals, &mut ws);
+                    vals[id as usize] = v;
+                }
+            }
+            for &id in &bm.by_row[k] {
+                let b = bm.block(id);
+                if (b.bj as usize) > k {
+                    let mut v = std::mem::take(&mut vals[id as usize]);
+                    gessm(b, &mut v, diag_pat, &diag_vals, &mut ws);
+                    vals[id as usize] = v;
+                }
+            }
+            // updates
+            let lids: Vec<u32> = bm.by_col[k]
+                .iter()
+                .copied()
+                .filter(|&id| (bm.block(id).bi as usize) > k)
+                .collect();
+            let uids: Vec<u32> = bm.by_row[k]
+                .iter()
+                .copied()
+                .filter(|&id| (bm.block(id).bj as usize) > k)
+                .collect();
+            for &lid in &lids {
+                for &uid in &uids {
+                    let (bi, bj) = (bm.block(lid).bi as usize, bm.block(uid).bj as usize);
+                    if let Some(cid) = bm.block_id(bi, bj) {
+                        let mut v = std::mem::take(&mut vals[cid as usize]);
+                        ssssm(
+                            bm.block(cid),
+                            &mut v,
+                            bm.block(lid),
+                            &vals[lid as usize],
+                            bm.block(uid),
+                            &vals[uid as usize],
+                            &mut ws,
+                        );
+                        vals[cid as usize] = v;
+                    }
+                }
+            }
+        }
+        // dense reference on the whole matrix
+        let mut d = vec![0.0; n * n];
+        for j in 0..n {
+            for (i, v) in a.col(j) {
+                d[j * n + i] = v;
+            }
+        }
+        dense::getrf_in_place(&mut d, n).unwrap();
+        let positions = bm.blocking.positions();
+        for (idx, b) in bm.blocks.iter().enumerate() {
+            let (rlo, clo) = (positions[b.bi as usize], positions[b.bj as usize]);
+            for c in 0..b.n_cols as usize {
+                for (t, &r) in b.col_rows(c).iter().enumerate() {
+                    let got = vals[idx][b.col_ptr[c] as usize + t];
+                    let want = d[(clo + c) * n + rlo + r as usize];
+                    assert!(
+                        (got - want).abs() < 1e-8 * want.abs().max(1.0),
+                        "block ({},{}) local ({r},{c}): {got} vs {want}",
+                        b.bi,
+                        b.bj
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_factorization_matches_dense_on_grid() {
+        blocked_vs_dense(&gen::grid2d_laplacian(6, 5), 8);
+    }
+
+    #[test]
+    fn blocked_factorization_matches_dense_on_unsymmetric() {
+        blocked_vs_dense(&gen::directed_graph(40, 3, 11), 11);
+    }
+
+    #[test]
+    fn blocked_factorization_matches_dense_on_bbd() {
+        let a = gen::circuit_bbd(gen::CircuitParams {
+            n: 60,
+            border_frac: 0.15,
+            border_density: 0.5,
+            interior_deg: 2,
+            seed: 5,
+        });
+        blocked_vs_dense(&a, 13);
+    }
+
+    #[test]
+    fn blocked_factorization_matches_dense_on_arrow() {
+        blocked_vs_dense(&gen::arrow_up(30), 7);
+        blocked_vs_dense(&gen::arrow_down(30), 7);
+    }
+
+    #[test]
+    fn cost_model_positive_and_scales() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = BlockedMatrix::build(&ldu, regular_blocking(64, 16));
+        let id = bm.block_id(0, 0).unwrap();
+        let c1 = cost::getrf(bm.block(id));
+        assert!(c1 > 0.0);
+        if let (Some(l), Some(u)) = (bm.block_id(1, 0), bm.block_id(0, 1)) {
+            let fl = cost::ssssm(bm.block(l), bm.block(u));
+            assert!(fl > 0.0);
+            let fl_t = cost::tstrf(bm.block(l), bm.block(id));
+            let fl_g = cost::gessm(bm.block(u), bm.block(id));
+            assert!(fl_t > 0.0 && fl_g > 0.0);
+        }
+    }
+}

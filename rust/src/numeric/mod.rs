@@ -1,0 +1,80 @@
+//! Numeric factorization (the paper's phase 3 — 50–95% of total time,
+//! Fig 1) — right-looking blocked LU over a [`crate::blocking::BlockedMatrix`].
+//!
+//! The engine mirrors PanguLU's four block kernels:
+//!
+//! | op      | effect                                   | paper Alg. 1 line |
+//! |---------|------------------------------------------|-------------------|
+//! | GETRF   | `B_kk → L_kk·U_kk` (in-place)            | 3                 |
+//! | GESSM   | `B_kj ← L_kk⁻¹·B_kj` (U panel)           | 5                 |
+//! | TSTRF   | `B_ik ← B_ik·U_kk⁻¹` (L panel)           | 6                 |
+//! | SSSSM   | `B_ij ← B_ij − B_ik·B_kj` (Schur update) | 10                |
+//!
+//! Each kernel has a **sparse** implementation ([`kernels`]) operating on
+//! the fixed fill pattern with a dense scatter workspace, and a **dense**
+//! implementation ([`dense`]) used when block density crosses the policy
+//! threshold (PanguLU's sparse/dense kernel selection) — on real hardware
+//! the dense path is the AOT-compiled Pallas/XLA artifact executed through
+//! [`crate::runtime`]; the pure-rust versions here are the CPU fallback and
+//! the correctness oracle.
+
+pub mod dense;
+pub mod factor;
+pub mod kernels;
+pub mod trisolve;
+pub mod trisolve_t;
+
+pub use factor::{factorize_sequential, FactorError, Factors, NumericMatrix};
+pub use kernels::Workspace;
+
+/// Which kernel implementation a block operation should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    Sparse,
+    Dense,
+}
+
+/// Sparse-vs-dense kernel selection policy (PanguLU's kernel selection):
+/// blocks denser than `dense_threshold` use dense kernels.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelPolicy {
+    /// Density at/above which a block op goes to the dense kernel.
+    pub dense_threshold: f64,
+    /// Force everything dense (the SuperLU_DIST-like baseline, which
+    /// computes supernodal panels with dense BLAS regardless of sparsity).
+    pub force_dense: bool,
+    /// Route dense ops through the PJRT runtime artifacts when loaded.
+    pub use_runtime: bool,
+}
+
+impl Default for KernelPolicy {
+    fn default() -> Self {
+        Self { dense_threshold: 0.30, force_dense: false, use_runtime: false }
+    }
+}
+
+impl KernelPolicy {
+    /// Decide the kernel for an op whose participating blocks have the
+    /// given maximum density.
+    pub fn choose(&self, density: f64) -> KernelKind {
+        if self.force_dense || density >= self.dense_threshold {
+            KernelKind::Dense
+        } else {
+            KernelKind::Sparse
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_thresholds() {
+        let p = KernelPolicy::default();
+        assert_eq!(p.choose(0.05), KernelKind::Sparse);
+        assert_eq!(p.choose(0.95), KernelKind::Dense);
+        let f = KernelPolicy { force_dense: true, ..Default::default() };
+        assert_eq!(f.choose(0.0), KernelKind::Dense);
+    }
+}

@@ -1,0 +1,143 @@
+//! Transpose triangular solves: `(LU)ᵀ x = b`, i.e. `Uᵀ y = b` (forward)
+//! then `Lᵀ x = y` (backward), over the same blocked `{L\U}` storage.
+//! Needed for `Aᵀx = b` — adjoint solves in sensitivity analysis and
+//! transistor-level circuit simulation (the paper's application domain).
+
+use super::factor::NumericMatrix;
+
+/// Solve `Uᵀ Lᵀ x = b` with the blocked factors (unit-lower L).
+pub fn solve_transpose(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
+    let bm = &*nm.structure;
+    let n = bm.blocking.n();
+    assert_eq!(b.len(), n);
+    let positions = bm.blocking.positions();
+    let nb = bm.nb();
+    let mut x = b.to_vec();
+
+    // ---- forward: Uᵀ y = b (Uᵀ is lower triangular) ----
+    // y[c] = (b[c] - Σ_{r<c} U[r,c]·y[r]) / U[c,c]  — a *gather* over the
+    // CSC column, so transpose solves need no transposed storage.
+    for k in 0..nb {
+        let (lo, _hi) = (positions[k], positions[k + 1]);
+        // contributions from above block-rows already applied (see below);
+        // solve within diagonal block
+        let did = bm.block_id(k, k).expect("diagonal block");
+        let dpat = bm.block(did);
+        let dvals = nm.values[did as usize].read().unwrap();
+        for c in 0..dpat.n_cols as usize {
+            let (s, _e) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
+            let dpos = dpat.diag_pos[c] as usize;
+            let mut acc = x[lo + c];
+            for t in s..(s + dpos) {
+                acc -= dvals[t] * x[lo + dpat.row_idx[t] as usize];
+            }
+            x[lo + c] = acc / dvals[s + dpos];
+        }
+        drop(dvals);
+        // propagate to the right block-columns: blocks (k, j), j > k hold
+        // U_kj; Uᵀ couples y_j ← y_k
+        for &id in &bm.by_row[k] {
+            let blk = bm.block(id);
+            let j = blk.bj as usize;
+            if j <= k {
+                continue;
+            }
+            let clo = positions[j];
+            let vals = nm.values[id as usize].read().unwrap();
+            for c in 0..blk.n_cols as usize {
+                let mut acc = 0.0;
+                for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {
+                    acc += vals[t] * x[lo + blk.row_idx[t] as usize];
+                }
+                x[clo + c] -= acc;
+            }
+        }
+    }
+
+    // ---- backward: Lᵀ x = y (Lᵀ is unit upper triangular) ----
+    // x[c] = y[c] - Σ_{r>c} L[r,c]·x[r] — gather over the L part.
+    for k in (0..nb).rev() {
+        let (lo, _hi) = (positions[k], positions[k + 1]);
+        // contributions from below block-rows: blocks (i, k), i > k hold
+        // L_ik; Lᵀ couples x_k ← x_i
+        let did = bm.block_id(k, k).expect("diagonal block");
+        for &id in &bm.by_col[k] {
+            let blk = bm.block(id);
+            let i = blk.bi as usize;
+            if i <= k {
+                continue;
+            }
+            let rlo = positions[i];
+            let vals = nm.values[id as usize].read().unwrap();
+            for c in 0..blk.n_cols as usize {
+                let mut acc = 0.0;
+                for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {
+                    acc += vals[t] * x[rlo + blk.row_idx[t] as usize];
+                }
+                x[lo + c] -= acc;
+            }
+        }
+        // within diagonal block, columns descending
+        let dpat = bm.block(did);
+        let dvals = nm.values[did as usize].read().unwrap();
+        for c in (0..dpat.n_cols as usize).rev() {
+            let (s, e) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
+            let dpos = dpat.diag_pos[c] as usize;
+            let mut acc = x[lo + c];
+            for t in (s + dpos + 1)..e {
+                acc -= dvals[t] * x[lo + dpat.row_idx[t] as usize];
+            }
+            x[lo + c] = acc; // unit diagonal
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::blocking::{regular_blocking, BlockedMatrix};
+    use crate::numeric::factor::{factorize_sequential, CpuDense};
+    use crate::numeric::KernelPolicy;
+    use crate::sparse::gen;
+    use crate::symbolic;
+    use crate::util::Prng;
+    use std::sync::Arc;
+
+    fn check_transpose_solve(a: &crate::sparse::Csc, bs: usize) {
+        let sym = symbolic::analyze(a);
+        let ldu = sym.ldu_pattern(a);
+        let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs)));
+        let f = factorize_sequential(bm, &KernelPolicy::default(), &CpuDense).unwrap();
+        let n = a.n_cols();
+        let mut rng = Prng::new(0xAD);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.signed_unit()).collect();
+        // b = Aᵀ x_true
+        let b = a.transpose().mul_vec(&x_true);
+        let x = super::solve_transpose(&f.numeric, &b);
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn transpose_solve_grid() {
+        check_transpose_solve(&gen::grid2d_laplacian(8, 8), 12);
+    }
+
+    #[test]
+    fn transpose_solve_unsymmetric() {
+        check_transpose_solve(&gen::directed_graph(150, 4, 9), 30);
+    }
+
+    #[test]
+    fn transpose_solve_bbd() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
+        check_transpose_solve(&a, 35);
+    }
+
+    #[test]
+    fn transpose_solve_identity() {
+        let a = crate::sparse::Csc::identity(10);
+        check_transpose_solve(&a, 3);
+    }
+}

@@ -1,0 +1,253 @@
+//! Block Triangular Form: Tarjan's strongly-connected components over the
+//! directed graph of A, ordered topologically.
+//!
+//! This is the decomposition KLU and Basker build on (paper Table 1 —
+//! "Block diagonal" / "Recursive block diagonal"): permuting `P A Pᵀ` to
+//! block *lower* triangular form lets each diagonal block factor
+//! independently, with no fill between blocks. Provided as a preprocessing
+//! alternative/complement to the paper's 2D blocking (and used by the
+//! comparison tooling).
+
+use super::Permutation;
+use crate::sparse::Csc;
+
+/// Result of the BTF decomposition.
+#[derive(Clone, Debug)]
+pub struct Btf {
+    /// Symmetric permutation (old → new) sorting vertices by SCC in
+    /// topological order of the condensation.
+    pub perm: Permutation,
+    /// Block boundaries in the new ordering: `blocks[k]..blocks[k+1]` is
+    /// the k-th strongly-connected diagonal block.
+    pub blocks: Vec<usize>,
+}
+
+impl Btf {
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len() - 1
+    }
+
+    /// Size of the largest diagonal block — 1 means A is permutable to
+    /// (fully) triangular form.
+    pub fn max_block(&self) -> usize {
+        self.blocks
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Compute the BTF of (the directed graph of) square `a`, using an
+/// iterative Tarjan SCC (explicit stack — no recursion depth limits).
+///
+/// Tarjan emits SCCs in *reverse* topological order of the condensation;
+/// reversing yields an ordering where every edge between distinct blocks
+/// points from an earlier block to a later one — i.e. `P A Pᵀ` is block
+/// **lower** triangular when edge `(i,j)` means `A[i,j] ≠ 0` is read as
+/// j → i… we orient so that the permuted matrix is block lower
+/// triangular: entry (i,j) with block(i) < block(j) is impossible.
+pub fn btf(a: &Csc) -> Btf {
+    let n = a.n_cols();
+    assert_eq!(a.n_rows(), n, "BTF needs a square matrix");
+
+    // adjacency: edge j -> i for every entry A[i,j] (a column reaches its
+    // rows); Tarjan over this digraph.
+    let mut index = vec![usize::MAX; n]; // discovery index
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut comp_of = vec![usize::MAX; n];
+    let mut num_comps = 0usize;
+    let mut next_index = 0usize;
+
+    // explicit DFS stack: (vertex, edge cursor)
+    let mut dfs: Vec<(usize, usize)> = Vec::new();
+    for root in 0..n {
+        if index[root] != usize::MAX {
+            continue;
+        }
+        dfs.push((root, 0));
+        index[root] = next_index;
+        low[root] = next_index;
+        next_index += 1;
+        stack.push(root);
+        on_stack[root] = true;
+
+        while let Some(&mut (v, ref mut cursor)) = dfs.last_mut() {
+            let rows = a.col_rows(v);
+            if *cursor < rows.len() {
+                let w = rows[*cursor];
+                *cursor += 1;
+                if w == v {
+                    continue; // self loop
+                }
+                if index[w] == usize::MAX {
+                    index[w] = next_index;
+                    low[w] = next_index;
+                    next_index += 1;
+                    stack.push(w);
+                    on_stack[w] = true;
+                    dfs.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            } else {
+                // retreat
+                dfs.pop();
+                if let Some(&mut (parent, _)) = dfs.last_mut() {
+                    low[parent] = low[parent].min(low[v]);
+                }
+                if low[v] == index[v] {
+                    // v is an SCC root
+                    loop {
+                        let w = stack.pop().unwrap();
+                        on_stack[w] = false;
+                        comp_of[w] = num_comps;
+                        if w == v {
+                            break;
+                        }
+                    }
+                    num_comps += 1;
+                }
+            }
+        }
+    }
+
+    // Tarjan emits components in reverse topological order of the
+    // condensation of the edge direction we traversed (v → rows of col v).
+    // With comp ids assigned in emission order, an edge col v → row w
+    // between distinct comps satisfies comp_of[w] < comp_of[v]… i.e. for
+    // entry A[w, v]: comp(row) ≤ comp(col). Ordering blocks by comp id
+    // ascending therefore makes the permuted matrix block *upper*
+    // triangular; we want lower, so order by comp id descending.
+    let mut comp_sizes = vec![0usize; num_comps];
+    for &c in &comp_of {
+        comp_sizes[c] += 1;
+    }
+    // new block order: descending comp id
+    let mut block_start = vec![0usize; num_comps + 1];
+    for k in 0..num_comps {
+        let c = num_comps - 1 - k; // comp id placed at block k
+        block_start[k + 1] = block_start[k] + comp_sizes[c];
+    }
+    let mut cursor = block_start.clone();
+    let mut perm = vec![0usize; n];
+    for old in 0..n {
+        let k = num_comps - 1 - comp_of[old];
+        perm[old] = cursor[k];
+        cursor[k] += 1;
+    }
+    Btf {
+        perm: Permutation::from_vec(perm),
+        blocks: block_start,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Coo};
+
+    fn assert_block_lower(a: &Csc, btf: &Btf) {
+        let pa = a.permute_sym(btf.perm.as_slice());
+        // block index of each new position
+        let mut blk = vec![0usize; pa.n_cols()];
+        for k in 0..btf.num_blocks() {
+            for p in btf.blocks[k]..btf.blocks[k + 1] {
+                blk[p] = k;
+            }
+        }
+        for j in 0..pa.n_cols() {
+            for (i, _) in pa.col(j) {
+                assert!(
+                    blk[i] >= blk[j],
+                    "entry ({i},{j}) above the block diagonal: blocks {} < {}",
+                    blk[i],
+                    blk[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lower_triangular_matrix_gives_singleton_blocks() {
+        // strictly lower triangular + diagonal: every vertex its own SCC
+        let mut coo = Coo::new(5, 5);
+        for i in 0..5 {
+            coo.push(i, i, 1.0);
+        }
+        coo.push(3, 1, 1.0);
+        coo.push(4, 0, 1.0);
+        let a = coo.to_csc();
+        let d = btf(&a);
+        assert_eq!(d.num_blocks(), 5);
+        assert_eq!(d.max_block(), 1);
+        assert_block_lower(&a, &d);
+    }
+
+    #[test]
+    fn directed_cycle_is_one_block() {
+        let mut coo = Coo::new(4, 4);
+        for i in 0..4 {
+            coo.push(i, i, 2.0);
+            coo.push((i + 1) % 4, i, 1.0); // cycle 0→1→2→3→0
+        }
+        let a = coo.to_csc();
+        let d = btf(&a);
+        assert_eq!(d.num_blocks(), 1);
+        assert_eq!(d.max_block(), 4);
+    }
+
+    #[test]
+    fn two_sccs_with_coupling_order_correctly() {
+        // SCC A = {0,1} (cycle), SCC B = {2,3} (cycle), edge from A-col to
+        // B-row: A[2,0] ≠ 0 means block(B) depends on block(A) downstream.
+        let mut coo = Coo::new(4, 4);
+        for i in 0..4 {
+            coo.push(i, i, 2.0);
+        }
+        coo.push(1, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        coo.push(3, 2, 1.0);
+        coo.push(2, 3, 1.0);
+        coo.push(2, 0, 0.5); // coupling
+        let a = coo.to_csc();
+        let d = btf(&a);
+        assert_eq!(d.num_blocks(), 2);
+        assert_eq!(d.max_block(), 2);
+        assert_block_lower(&a, &d);
+    }
+
+    #[test]
+    fn symmetric_connected_matrix_is_single_block() {
+        let a = gen::grid2d_laplacian(6, 6);
+        let d = btf(&a);
+        assert_eq!(d.num_blocks(), 1);
+    }
+
+    #[test]
+    fn random_digraphs_produce_valid_btf() {
+        for seed in 0..6 {
+            let a = gen::directed_graph(120, 2, seed);
+            let d = btf(&a);
+            assert!(d.perm.is_valid());
+            assert_eq!(*d.blocks.last().unwrap(), 120);
+            assert_block_lower(&a, &d);
+        }
+    }
+
+    #[test]
+    fn solving_after_btf_permutation_still_works() {
+        use crate::solver::{SolveOptions, Solver};
+        use crate::sparse::residual;
+        let a = gen::directed_graph(200, 3, 4);
+        let d = btf(&a);
+        let pa = a.permute_sym(d.perm.as_slice());
+        let mut solver = Solver::new(SolveOptions::ours(2));
+        let f = solver.factorize(&pa).unwrap();
+        let b: Vec<f64> = (0..200).map(|i| (i % 5) as f64).collect();
+        let x = f.solve(&b);
+        assert!(residual(&pa, &x, &b) < 1e-9);
+    }
+}

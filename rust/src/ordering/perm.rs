@@ -1,0 +1,142 @@
+//! Permutation type shared by ordering, symbolic and solve phases.
+
+/// A permutation of `0..n`, stored as `perm[old] = new`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Permutation {
+    perm: Vec<usize>,
+}
+
+impl Permutation {
+    /// Identity permutation of length `n`.
+    pub fn identity(n: usize) -> Self {
+        Self { perm: (0..n).collect() }
+    }
+
+    /// From an `old → new` map. Panics if not a permutation.
+    pub fn from_vec(perm: Vec<usize>) -> Self {
+        let p = Self { perm };
+        assert!(p.is_valid(), "not a permutation");
+        p
+    }
+
+    /// From a *new → old* order (list of old indices in new order),
+    /// e.g. an elimination order.
+    pub fn from_order(order: &[usize]) -> Self {
+        let mut perm = vec![usize::MAX; order.len()];
+        for (new, &old) in order.iter().enumerate() {
+            perm[old] = new;
+        }
+        Self::from_vec(perm)
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// `old → new` slice.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.perm
+    }
+
+    /// New index of `old`.
+    pub fn apply(&self, old: usize) -> usize {
+        self.perm[old]
+    }
+
+    /// Inverse permutation (`new → old`).
+    pub fn inverse(&self) -> Permutation {
+        let mut inv = vec![0usize; self.perm.len()];
+        for (old, &new) in self.perm.iter().enumerate() {
+            inv[new] = old;
+        }
+        Permutation { perm: inv }
+    }
+
+    /// Validity: bijection on `0..n`.
+    pub fn is_valid(&self) -> bool {
+        let n = self.perm.len();
+        let mut seen = vec![false; n];
+        for &p in &self.perm {
+            if p >= n || seen[p] {
+                return false;
+            }
+            seen[p] = true;
+        }
+        true
+    }
+
+    /// Permute a vector: `out[perm[i]] = v[i]`.
+    pub fn permute_vec<T: Clone>(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(v.len(), self.perm.len());
+        let mut out = v.to_vec();
+        for (old, &new) in self.perm.iter().enumerate() {
+            out[new] = v[old].clone();
+        }
+        out
+    }
+
+    /// Composition: apply `self` then `other` (`(other ∘ self)[i] = other[self[i]]`).
+    pub fn then(&self, other: &Permutation) -> Permutation {
+        assert_eq!(self.len(), other.len());
+        Permutation {
+            perm: self.perm.iter().map(|&p| other.perm[p]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverse_round_trips() {
+        let p = Permutation::from_vec(vec![2, 0, 1, 3]);
+        let inv = p.inverse();
+        for i in 0..4 {
+            assert_eq!(inv.apply(p.apply(i)), i);
+        }
+    }
+
+    #[test]
+    fn from_order_builds_old_to_new() {
+        // elimination order: first 2, then 0, then 1
+        let p = Permutation::from_order(&[2, 0, 1]);
+        assert_eq!(p.apply(2), 0);
+        assert_eq!(p.apply(0), 1);
+        assert_eq!(p.apply(1), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_duplicates() {
+        Permutation::from_vec(vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn permute_vec_places_elements() {
+        let p = Permutation::from_vec(vec![1, 2, 0]);
+        let v = p.permute_vec(&[10, 20, 30]);
+        assert_eq!(v, vec![30, 10, 20]);
+    }
+
+    #[test]
+    fn composition_applies_in_order() {
+        let p = Permutation::from_vec(vec![1, 0, 2]);
+        let q = Permutation::from_vec(vec![2, 1, 0]);
+        let c = p.then(&q);
+        for i in 0..3 {
+            assert_eq!(c.apply(i), q.apply(p.apply(i)));
+        }
+    }
+
+    #[test]
+    fn identity_is_valid_and_noop() {
+        let p = Permutation::identity(5);
+        assert!(p.is_valid());
+        assert_eq!(p.permute_vec(&[1, 2, 3, 4, 5]), vec![1, 2, 3, 4, 5]);
+    }
+}

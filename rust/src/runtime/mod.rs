@@ -1,0 +1,255 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` (L1 Pallas kernels inside an L2 jax graph,
+//! lowered once at build time) and exposes them as a
+//! [`DenseBackend`](crate::numeric::factor::DenseBackend) for the numeric
+//! engine's dense path.
+//!
+//! Interchange format is **HLO text** (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! ## Threading
+//!
+//! The `xla` crate's PJRT handles are thread-affine (`Rc` internals), so
+//! [`PjrtDense`] hosts the compiled executables on a dedicated **service
+//! thread** — worker threads submit requests over a channel and block on a
+//! per-call reply channel. This mirrors a real deployment where one GPU
+//! context serves kernel launches from a scheduler. Padding rules:
+//! identity padding keeps LU/TRSM exact, zero padding keeps GEMM exact, so
+//! padded execution matches unpadded math to fp-reassociation error.
+
+pub mod registry;
+
+pub use registry::{ArtifactRegistry, Op, TILE_SIZES};
+
+use crate::numeric::factor::DenseBackend;
+use crate::numeric::kernels::KernelError;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+enum Request {
+    Run {
+        op: Op,
+        size: usize,
+        args: Vec<Vec<f64>>,
+        reply: Sender<anyhow::Result<Vec<f64>>>,
+    },
+    Shutdown,
+}
+
+/// Dense backend executing AOT artifacts on the PJRT CPU client, hosted on
+/// a service thread. `Send + Sync`; cheap to share across workers.
+pub struct PjrtDense {
+    tx: Mutex<Sender<Request>>,
+    sizes: Vec<usize>,
+    num_artifacts: usize,
+    executions: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtDense {
+    /// Spawn the service thread and load all artifacts from `dir`.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = channel::<Request>();
+        let (boot_tx, boot_rx) = channel::<anyhow::Result<(Vec<usize>, usize)>>();
+        let executions = Arc::new(AtomicUsize::new(0));
+        let execs = executions.clone();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let reg = match ArtifactRegistry::load(&dir) {
+                    Ok(r) => {
+                        let sizes: Vec<usize> =
+                            TILE_SIZES.iter().copied().filter(|&s| reg_has(&r, s)).collect();
+                        let _ = boot_tx.send(Ok((sizes, r.len())));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run { op, size, args, reply } => {
+                            execs.fetch_add(1, Ordering::Relaxed);
+                            let res = match args.len() {
+                                1 => reg.run1(op, size, &args[0]),
+                                2 => reg.run2(op, size, &args[0], &args[1]),
+                                3 => reg.run3(op, size, &args[0], &args[1], &args[2]),
+                                n => Err(anyhow::anyhow!("bad arity {n}")),
+                            };
+                            let _ = reply.send(res);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        let (sizes, num_artifacts) = boot_rx.recv()??;
+        Ok(Self {
+            tx: Mutex::new(tx),
+            sizes,
+            num_artifacts,
+            executions,
+            handle: Some(handle),
+        })
+    }
+
+    /// The tile size used for a requested dimension.
+    pub fn tile_for(&self, n: usize) -> Option<usize> {
+        self.sizes.iter().copied().find(|&s| s >= n)
+    }
+
+    /// Largest supported tile.
+    pub fn max_tile(&self) -> usize {
+        self.sizes.last().copied().unwrap_or(0)
+    }
+
+    /// Number of loaded executables.
+    pub fn num_artifacts(&self) -> usize {
+        self.num_artifacts
+    }
+
+    /// Executions dispatched so far.
+    pub fn executions(&self) -> usize {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    fn call(&self, op: Op, size: usize, args: Vec<Vec<f64>>) -> anyhow::Result<Vec<f64>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Run { op, size, args, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("PJRT service thread gone"))?;
+        reply_rx.recv()?
+    }
+
+    fn pad_square(src: &[f64], n: usize, t: usize, identity: bool) -> Vec<f64> {
+        let mut out = vec![0.0; t * t];
+        for c in 0..n {
+            out[c * t..c * t + n].copy_from_slice(&src[c * n..(c + 1) * n]);
+        }
+        if identity {
+            for d in n..t {
+                out[d * t + d] = 1.0;
+            }
+        }
+        out
+    }
+
+    fn pad_rect(src: &[f64], m: usize, k: usize, tm: usize, tk: usize) -> Vec<f64> {
+        let mut out = vec![0.0; tm * tk];
+        for c in 0..k {
+            out[c * tm..c * tm + m].copy_from_slice(&src[c * m..(c + 1) * m]);
+        }
+        out
+    }
+
+    fn unpad_rect(dst: &mut [f64], src: &[f64], m: usize, k: usize, tm: usize) {
+        for c in 0..k {
+            dst[c * m..(c + 1) * m].copy_from_slice(&src[c * tm..c * tm + m]);
+        }
+    }
+}
+
+fn reg_has(reg: &ArtifactRegistry, size: usize) -> bool {
+    reg.tile_for(size) == Some(size)
+}
+
+impl Drop for PjrtDense {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl DenseBackend for PjrtDense {
+    fn getrf(&self, a: &mut [f64], n: usize) -> Result<(), KernelError> {
+        let t = self.tile_for(n).expect("no tile large enough for GETRF");
+        // identity padding: trailing pivots are 1, factorization unchanged
+        let padded = Self::pad_square(a, n, t, true);
+        let out = self
+            .call(Op::Getrf, t, vec![padded])
+            .expect("PJRT GETRF execution failed");
+        for d in 0..n {
+            let p = out[d * t + d];
+            if p.abs() < crate::numeric::kernels::PIVOT_FLOOR {
+                return Err(KernelError::ZeroPivot { block: (0, 0), local_col: d, value: p });
+            }
+        }
+        Self::unpad_rect(a, &out, n, n, t);
+        Ok(())
+    }
+
+    fn trsm_lower(&self, lu: &[f64], m: usize, b: &mut [f64], k: usize) {
+        let t = self.tile_for(m.max(k)).expect("no tile for TRSM-L");
+        let lu_p = Self::pad_square(lu, m, t, true);
+        let b_p = Self::pad_rect(b, m, k, t, t);
+        let out = self
+            .call(Op::TrsmLower, t, vec![lu_p, b_p])
+            .expect("PJRT TRSM-L execution failed");
+        Self::unpad_rect(b, &out, m, k, t);
+    }
+
+    fn trsm_upper(&self, lu: &[f64], k: usize, b: &mut [f64], m: usize) {
+        let t = self.tile_for(m.max(k)).expect("no tile for TRSM-U");
+        let lu_p = Self::pad_square(lu, k, t, true);
+        let b_p = Self::pad_rect(b, m, k, t, t);
+        let out = self
+            .call(Op::TrsmUpper, t, vec![lu_p, b_p])
+            .expect("PJRT TRSM-U execution failed");
+        Self::unpad_rect(b, &out, m, k, t);
+    }
+
+    fn gemm(&self, c: &mut [f64], a: &[f64], b: &[f64], m: usize, k: usize, n: usize) {
+        let t = self.tile_for(m.max(k).max(n)).expect("no tile for GEMM");
+        let a_p = Self::pad_rect(a, m, k, t, t);
+        let b_p = Self::pad_rect(b, k, n, t, t);
+        let c_p = Self::pad_rect(c, m, n, t, t);
+        let out = self
+            .call(Op::Gemm, t, vec![c_p, a_p, b_p])
+            .expect("PJRT GEMM execution failed");
+        Self::unpad_rect(c, &out, m, n, t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_round_trip() {
+        let src = vec![1.0, 2.0, 3.0, 4.0]; // 2x2 col-major
+        let p = PjrtDense::pad_square(&src, 2, 4, true);
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[1], 2.0);
+        assert_eq!(p[4], 3.0);
+        assert_eq!(p[5], 4.0);
+        assert_eq!(p[10], 1.0); // identity diag
+        assert_eq!(p[15], 1.0);
+        let mut back = vec![0.0; 4];
+        PjrtDense::unpad_rect(&mut back, &p, 2, 2, 4);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn pad_rect_zero_fills() {
+        let src = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3x2
+        let p = PjrtDense::pad_rect(&src, 3, 2, 4, 4);
+        assert_eq!(p.len(), 16);
+        assert_eq!(p[0..3], [1.0, 2.0, 3.0]);
+        assert_eq!(p[3], 0.0);
+        assert_eq!(p[4..7], [4.0, 5.0, 6.0]);
+        assert_eq!(&p[8..], &[0.0; 8]);
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(PjrtDense::load("/nonexistent/artifacts").is_err());
+    }
+}

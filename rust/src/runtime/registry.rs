@@ -1,0 +1,167 @@
+//! Artifact registry: discovers `artifacts/{op}_{size}.hlo.txt`, compiles
+//! each once on the PJRT CPU client, and dispatches executions.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Tile sizes the AOT pipeline exports (must match `python/compile/aot.py`).
+pub const TILE_SIZES: &[usize] = &[32, 64, 128, 256];
+
+/// Artifact operation kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// In-place LU of a square tile.
+    Getrf,
+    /// `L⁻¹ B` with unit-lower L from `{L\U}`.
+    TrsmLower,
+    /// `B U⁻¹` with upper U from `{L\U}`.
+    TrsmUpper,
+    /// `C − A·B`.
+    Gemm,
+}
+
+impl Op {
+    pub fn file_stem(self) -> &'static str {
+        match self {
+            Op::Getrf => "getrf",
+            Op::TrsmLower => "trsm_l",
+            Op::TrsmUpper => "trsm_u",
+            Op::Gemm => "gemm",
+        }
+    }
+
+    pub const ALL: [Op; 4] = [Op::Getrf, Op::TrsmLower, Op::TrsmUpper, Op::Gemm];
+}
+
+/// Compiled executables keyed by (op, tile size).
+///
+/// NOT `Send`/`Sync` (PJRT handles are thread-affine in the `xla` crate) —
+/// [`super::PjrtDense`] hosts one registry on a dedicated service thread.
+pub struct ArtifactRegistry {
+    _client: xla::PjRtClient,
+    exes: HashMap<(Op, usize), xla::PjRtLoadedExecutable>,
+    sizes: Vec<usize>,
+    executions: AtomicUsize,
+}
+
+impl ArtifactRegistry {
+    /// Load and compile every artifact found in `dir`. Errors if the
+    /// directory exists but holds no recognizable artifacts.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        let mut sizes: Vec<usize> = Vec::new();
+        for &size in TILE_SIZES {
+            let mut found_all = true;
+            for op in Op::ALL {
+                let path = dir.join(format!("{}_{}.hlo.txt", op.file_stem(), size));
+                if !path.exists() {
+                    found_all = false;
+                    continue;
+                }
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .with_context(|| format!("parse {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {}", path.display()))?;
+                exes.insert((op, size), exe);
+            }
+            if found_all {
+                sizes.push(size);
+            }
+        }
+        if exes.is_empty() {
+            bail!(
+                "no artifacts found in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(Self { _client: client, exes, sizes, executions: AtomicUsize::new(0) })
+    }
+
+    /// Number of compiled executables.
+    pub fn len(&self) -> usize {
+        self.exes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.exes.is_empty()
+    }
+
+    /// Total executions dispatched.
+    pub fn executions(&self) -> usize {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    /// Smallest complete tile size ≥ `n`.
+    pub fn tile_for(&self, n: usize) -> Option<usize> {
+        self.sizes.iter().copied().find(|&s| s >= n)
+    }
+
+    fn run(&self, op: Op, size: usize, args: &[xla::Literal]) -> Result<Vec<f64>> {
+        let exe = self
+            .exes
+            .get(&(op, size))
+            .with_context(|| format!("artifact {:?}@{size} not loaded", op))?;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    /// Column-major square-matrix helpers. JAX tensors are row-major; the
+    /// AOT graphs take/return **transposed** matrices so the rust side can
+    /// pass col-major buffers verbatim (a transpose in index space only —
+    /// see `python/compile/model.py`).
+    fn lit(size: usize, data: &[f64]) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), size * size);
+        Ok(xla::Literal::vec1(data).reshape(&[size as i64, size as i64])?)
+    }
+
+    pub fn run1(&self, op: Op, size: usize, a: &[f64]) -> Result<Vec<f64>> {
+        self.run(op, size, &[Self::lit(size, a)?])
+    }
+
+    pub fn run2(&self, op: Op, size: usize, a: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+        self.run(op, size, &[Self::lit(size, a)?, Self::lit(size, b)?])
+    }
+
+    pub fn run3(
+        &self,
+        op: Op,
+        size: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &[f64],
+    ) -> Result<Vec<f64>> {
+        self.run(
+            op,
+            size,
+            &[Self::lit(size, a)?, Self::lit(size, b)?, Self::lit(size, c)?],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_file_stems_unique() {
+        let stems: std::collections::HashSet<_> =
+            Op::ALL.iter().map(|o| o.file_stem()).collect();
+        assert_eq!(stems.len(), 4);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactRegistry::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,441 @@
+//! High-level solver API: reorder → symbolic → block → schedule → numeric
+//! → solve, with the paper's three configurations as presets:
+//!
+//! * [`SolveOptions::ours`] — **irregular blocking** (Algorithm 3) +
+//!   sparse kernels (the paper's contribution);
+//! * [`SolveOptions::pangulu`] — regular blocking via the selection tree +
+//!   sparse kernels (the PanguLU baseline);
+//! * [`SolveOptions::superlu_like`] — regular blocking + dense kernels
+//!   everywhere (the SuperLU_DIST-style supernodal/BLAS baseline).
+
+use crate::blocking::{
+    self, irregular_blocking, regular_blocking, BalanceReport, BlockedMatrix, Blocking,
+    DiagFeature, IrregularParams,
+};
+use crate::coordinator::{self, Placement, RunReport, SimReport, TaskDag};
+use crate::gpu_model::CostModel;
+use crate::numeric::factor::{CpuDense, DenseBackend, FactorError, Factors};
+use crate::numeric::KernelPolicy;
+use crate::ordering::{order, OrderingMethod, Permutation};
+use crate::sparse::Csc;
+use crate::symbolic;
+use crate::util::Stopwatch;
+use std::sync::Arc;
+
+/// How to partition the matrix into 2D blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BlockingPolicy {
+    /// Fixed regular block size.
+    Regular(usize),
+    /// Regular, size picked by PanguLU's selection tree (scaled menu).
+    PanguSelect,
+    /// The paper's structure-aware irregular blocking.
+    Irregular,
+}
+
+/// Full solver configuration.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    pub ordering: OrderingMethod,
+    pub blocking: BlockingPolicy,
+    pub kernels: KernelPolicy,
+    pub irregular: IrregularParams,
+    /// Worker count (simulated GPUs).
+    pub workers: u32,
+    /// Device cost model for the modeled numbers.
+    pub model: CostModel,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self {
+            ordering: OrderingMethod::MinDegree,
+            blocking: BlockingPolicy::Irregular,
+            kernels: KernelPolicy::default(),
+            irregular: IrregularParams::default(),
+            workers: 1,
+            model: CostModel::a100(),
+        }
+    }
+}
+
+impl SolveOptions {
+    /// The paper's system: irregular blocking + sparse kernels.
+    pub fn ours(workers: u32) -> Self {
+        Self { workers, ..Default::default() }
+    }
+
+    /// PanguLU baseline: selection-tree regular blocking + sparse kernels.
+    pub fn pangulu(workers: u32) -> Self {
+        Self { blocking: BlockingPolicy::PanguSelect, workers, ..Default::default() }
+    }
+
+    /// PanguLU with an explicit block size (the Fig 4/10/12 sweeps).
+    pub fn pangulu_with_size(workers: u32, size: usize) -> Self {
+        Self { blocking: BlockingPolicy::Regular(size), workers, ..Default::default() }
+    }
+
+    /// SuperLU_DIST-like baseline: dense (BLAS-style) kernels everywhere.
+    pub fn superlu_like(workers: u32) -> Self {
+        Self {
+            blocking: BlockingPolicy::PanguSelect,
+            kernels: KernelPolicy { force_dense: true, ..Default::default() },
+            workers,
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-phase timing and structural report (Fig 1 / Table 3 / §5.4 data).
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    pub n: usize,
+    pub nnz_a: usize,
+    pub nnz_ldu: usize,
+    pub flops: f64,
+    pub reorder_seconds: f64,
+    pub symbolic_seconds: f64,
+    /// Blocking + partitioning + DAG construction (the paper's §5.4
+    /// "preprocessing cost" of the numeric phase).
+    pub preprocess_seconds: f64,
+    pub numeric_seconds: f64,
+    pub num_blocks: usize,
+    pub block_sizes: Vec<usize>,
+    pub nonempty_blocks: usize,
+    pub tasks: usize,
+    pub dag_levels: u32,
+    /// Modeled single-device total cost (Σ task costs).
+    pub modeled_total_cost: f64,
+    /// Modeled makespan on `workers` devices.
+    pub modeled_makespan: f64,
+    /// Modeled per-worker utilization.
+    pub modeled_utilization: Vec<f64>,
+    /// Measured per-worker busy seconds.
+    pub measured_busy: Vec<f64>,
+    /// Block-level nnz balance.
+    pub balance: BalanceReport,
+}
+
+impl SolveReport {
+    /// Fig 1 quantity: numeric share of end-to-end time.
+    pub fn numeric_share(&self) -> f64 {
+        let total = self.reorder_seconds
+            + self.symbolic_seconds
+            + self.preprocess_seconds
+            + self.numeric_seconds;
+        if total == 0.0 { 0.0 } else { self.numeric_seconds / total }
+    }
+}
+
+/// A completed factorization: factors + permutation + report.
+pub struct Factorization {
+    factors: Factors,
+    perm: Permutation,
+    pub report: SolveReport,
+}
+
+impl Factorization {
+    /// Solve `A x = b` (applies the fill-reducing permutation around the
+    /// blocked triangular solves).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let pb = self.perm.permute_vec(b);
+        let px = self.factors.solve(&pb);
+        self.perm.inverse().permute_vec(&px)
+    }
+
+    /// Solve the transpose system `Aᵀ x = b` with the same factors
+    /// (adjoint/sensitivity solves; `PAPᵀ = LU ⇒ Aᵀ = Pᵀ(LU)ᵀP`).
+    pub fn solve_transpose(&self, b: &[f64]) -> Vec<f64> {
+        let pb = self.perm.permute_vec(b);
+        let px = self.factors.solve_transpose(&pb);
+        self.perm.inverse().permute_vec(&px)
+    }
+
+    /// Solve with iterative refinement: after the direct solve, apply up
+    /// to `max_iters` residual-correction steps (`x += A⁻¹(b − Ax)`),
+    /// stopping early once the residual stops improving. Recovers digits
+    /// lost to accumulated rounding on ill-scaled systems.
+    pub fn solve_refined(&self, a: &Csc, b: &[f64], max_iters: usize) -> Vec<f64> {
+        let mut x = self.solve(b);
+        let mut best_res = crate::sparse::residual(a, &x, b);
+        for _ in 0..max_iters {
+            if best_res == 0.0 {
+                break;
+            }
+            let ax = a.mul_vec(&x);
+            let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
+            let dx = self.solve(&r);
+            let cand: Vec<f64> = x.iter().zip(&dx).map(|(xi, di)| xi + di).collect();
+            let res = crate::sparse::residual(a, &cand, b);
+            if res < best_res {
+                x = cand;
+                best_res = res;
+            } else {
+                break;
+            }
+        }
+        x
+    }
+
+    /// Solve for several right-hand sides (factor once, solve many).
+    pub fn solve_many(&self, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        bs.iter().map(|b| self.solve(b)).collect()
+    }
+
+    pub fn factors(&self) -> &Factors {
+        &self.factors
+    }
+
+    pub fn permutation(&self) -> &Permutation {
+        &self.perm
+    }
+}
+
+/// The solver: configuration + dense backend.
+pub struct Solver<'b> {
+    opts: SolveOptions,
+    backend: &'b (dyn DenseBackend + Sync),
+}
+
+impl Solver<'static> {
+    /// Solver with the pure-rust dense backend.
+    pub fn new(opts: SolveOptions) -> Self {
+        static CPU: CpuDense = CpuDense;
+        Solver { opts, backend: &CPU }
+    }
+}
+
+impl<'b> Solver<'b> {
+    /// Solver with a custom dense backend (e.g. [`crate::runtime::PjrtDense`]).
+    pub fn with_backend(opts: SolveOptions, backend: &'b (dyn DenseBackend + Sync)) -> Self {
+        Solver { opts, backend }
+    }
+
+    pub fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    /// Run the full pipeline on `a`.
+    pub fn factorize(&mut self, a: &Csc) -> Result<Factorization, FactorError> {
+        assert_eq!(a.n_rows(), a.n_cols(), "square systems only");
+        let mut sw = Stopwatch::new();
+
+        // phase 1: reorder
+        let perm = order(a, self.opts.ordering);
+        let pa = a.permute_sym(perm.as_slice());
+        let reorder_seconds = sw.lap("reorder");
+
+        // phase 2: symbolic
+        let sym = symbolic::analyze(&pa);
+        let ldu = sym.ldu_pattern(&pa);
+        let symbolic_seconds = sw.lap("symbolic");
+
+        // phase 3a: blocking (the preprocessing the paper's §5.4 prices)
+        let blocking = self.choose_blocking(&ldu);
+        let bm = Arc::new(BlockedMatrix::build(&ldu, blocking));
+        let balance = BalanceReport::of(&bm);
+        let placement = Placement::square(self.opts.workers);
+        let dag = TaskDag::build(&bm, &self.opts.kernels, placement, &self.opts.model);
+        let preprocess_seconds = sw.lap("preprocess");
+
+        // phase 3b: numeric
+        let (factors, run) = coordinator::factorize_parallel(
+            bm.clone(),
+            &dag,
+            &self.opts.kernels,
+            self.backend,
+            self.opts.workers,
+        )?;
+        let numeric_seconds = sw.lap("numeric");
+
+        let sim = coordinator::simulate(&dag, self.opts.workers, &self.opts.model);
+        let report = build_report(
+            a, &ldu, &sym, &bm, &dag, &run, &sim, &balance,
+            reorder_seconds, symbolic_seconds, preprocess_seconds, numeric_seconds,
+        );
+        Ok(Factorization { factors, perm, report })
+    }
+
+    fn choose_blocking(&self, ldu: &Csc) -> Blocking {
+        let n = ldu.n_cols();
+        match &self.opts.blocking {
+            BlockingPolicy::Regular(size) => regular_blocking(n, (*size).min(n)),
+            BlockingPolicy::PanguSelect => {
+                let options = blocking::selection::scaled_options(n);
+                let size = blocking::selection::select_from(n, ldu.nnz(), &options);
+                regular_blocking(n, size.min(n))
+            }
+            BlockingPolicy::Irregular => {
+                let curve = DiagFeature::from_csc(ldu).curve();
+                irregular_blocking(&curve, &self.opts.irregular)
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_report(
+    a: &Csc,
+    ldu: &Csc,
+    sym: &symbolic::Symbolic,
+    bm: &BlockedMatrix,
+    dag: &TaskDag,
+    run: &RunReport,
+    sim: &SimReport,
+    balance: &BalanceReport,
+    reorder_seconds: f64,
+    symbolic_seconds: f64,
+    preprocess_seconds: f64,
+    numeric_seconds: f64,
+) -> SolveReport {
+    SolveReport {
+        n: a.n_cols(),
+        nnz_a: a.nnz(),
+        nnz_ldu: ldu.nnz(),
+        flops: sym.flops(),
+        reorder_seconds,
+        symbolic_seconds,
+        preprocess_seconds,
+        numeric_seconds,
+        num_blocks: bm.nb(),
+        block_sizes: bm.blocking.sizes(),
+        nonempty_blocks: bm.num_nonempty(),
+        tasks: dag.tasks.len(),
+        dag_levels: dag.num_levels,
+        modeled_total_cost: dag.total_cost(),
+        modeled_makespan: sim.makespan,
+        modeled_utilization: sim.utilization.clone(),
+        measured_busy: run.busy.clone(),
+        balance: balance.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, residual};
+
+    fn end_to_end(a: &Csc, opts: SolveOptions, tol: f64) -> SolveReport {
+        let mut s = Solver::new(opts);
+        let f = s.factorize(a).unwrap();
+        let n = a.n_cols();
+        let b: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) - 6.0).collect();
+        let x = f.solve(&b);
+        let r = residual(a, &x, &b);
+        assert!(r < tol, "residual {r}");
+        f.report
+    }
+
+    #[test]
+    fn ours_solves_grid() {
+        let a = gen::grid2d_laplacian(12, 12);
+        let rep = end_to_end(&a, SolveOptions::ours(1), 1e-9);
+        assert_eq!(rep.n, 144);
+        assert!(rep.nnz_ldu >= rep.nnz_a);
+        assert!(rep.flops > 0.0);
+        assert!(rep.num_blocks >= 1);
+    }
+
+    #[test]
+    fn pangulu_solves_bbd() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 400, ..Default::default() });
+        end_to_end(&a, SolveOptions::pangulu(1), 1e-9);
+    }
+
+    #[test]
+    fn superlu_like_solves() {
+        let a = gen::banded_fem(150, &[1, 9], 0.9, 4);
+        end_to_end(&a, SolveOptions::superlu_like(1), 1e-9);
+    }
+
+    #[test]
+    fn parallel_workers_solve() {
+        let a = gen::electromagnetics_like(300, 8, 2, 6);
+        let rep = end_to_end(&a, SolveOptions::ours(4), 1e-9);
+        assert_eq!(rep.measured_busy.len(), 4);
+        assert_eq!(rep.modeled_utilization.len(), 4);
+    }
+
+    #[test]
+    fn all_orderings_work() {
+        let a = gen::grid2d_laplacian(10, 10);
+        for ord in [OrderingMethod::Natural, OrderingMethod::Rcm, OrderingMethod::MinDegree] {
+            let opts = SolveOptions { ordering: ord, ..SolveOptions::ours(1) };
+            end_to_end(&a, opts, 1e-9);
+        }
+    }
+
+    #[test]
+    fn min_degree_reduces_fill_vs_natural() {
+        let a = gen::grid2d_laplacian(14, 14);
+        let md = end_to_end(
+            &a,
+            SolveOptions { ordering: OrderingMethod::MinDegree, ..SolveOptions::ours(1) },
+            1e-9,
+        );
+        let nat = end_to_end(
+            &a,
+            SolveOptions { ordering: OrderingMethod::Natural, ..SolveOptions::ours(1) },
+            1e-9,
+        );
+        assert!(md.nnz_ldu < nat.nnz_ldu);
+    }
+
+    #[test]
+    fn explicit_block_size_respected() {
+        let a = gen::grid2d_laplacian(10, 10);
+        let rep = end_to_end(&a, SolveOptions::pangulu_with_size(1, 25), 1e-9);
+        assert_eq!(rep.num_blocks, 4);
+        assert!(rep.block_sizes.iter().all(|&s| s == 25));
+    }
+
+    #[test]
+    fn transpose_solve_through_solver() {
+        let a = gen::directed_graph(180, 3, 6);
+        let mut s = Solver::new(SolveOptions::ours(2));
+        let f = s.factorize(&a).unwrap();
+        let mut rng = crate::util::Prng::new(12);
+        let x_true: Vec<f64> = (0..180).map(|_| rng.signed_unit()).collect();
+        let b = a.transpose().mul_vec(&x_true);
+        let x = f.solve_transpose(&b);
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn refined_solve_never_worse() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() });
+        let mut s = Solver::new(SolveOptions::ours(1));
+        let f = s.factorize(&a).unwrap();
+        let b: Vec<f64> = (0..300).map(|i| ((i * 13) % 7) as f64 - 3.0).collect();
+        let plain = crate::sparse::residual(&a, &f.solve(&b), &b);
+        let refined = crate::sparse::residual(&a, &f.solve_refined(&a, &b, 3), &b);
+        assert!(refined <= plain * 1.0000001, "refined {refined} vs plain {plain}");
+        assert!(refined < 1e-12);
+    }
+
+    #[test]
+    fn solve_many_matches_individual() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut s = Solver::new(SolveOptions::ours(1));
+        let f = s.factorize(&a).unwrap();
+        let bs: Vec<Vec<f64>> = (0..3)
+            .map(|k| (0..64).map(|i| ((i + k) % 5) as f64).collect())
+            .collect();
+        let many = f.solve_many(&bs);
+        for (b, x) in bs.iter().zip(&many) {
+            assert_eq!(x, &f.solve(b));
+        }
+    }
+
+    #[test]
+    fn report_phases_positive() {
+        let a = gen::directed_graph(200, 4, 8);
+        let rep = end_to_end(&a, SolveOptions::ours(2), 1e-9);
+        assert!(rep.numeric_seconds > 0.0);
+        assert!(rep.numeric_share() > 0.0 && rep.numeric_share() <= 1.0);
+        assert!(rep.modeled_makespan > 0.0);
+        assert!(rep.modeled_total_cost >= rep.modeled_makespan / 2.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Coordinate (triplet) format — the assembly format: generators and the
+//! MatrixMarket reader build a `Coo` and convert to CSC once.
+
+use super::Csc;
+
+/// Coordinate-format sparse matrix. Duplicate entries are *summed* on
+/// conversion to CSC (the MatrixMarket convention).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    n_rows: usize,
+    n_cols: usize,
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        Self { n_rows, n_cols, rows: Vec::new(), cols: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn with_capacity(n_rows: usize, n_cols: usize, cap: usize) -> Self {
+        Self {
+            n_rows,
+            n_cols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            values: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Append one entry.
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n_rows && j < self.n_cols, "entry out of bounds");
+        self.rows.push(i);
+        self.cols.push(j);
+        self.values.push(v);
+    }
+
+    /// Append entry and its transpose mirror (skips diagonal duplication).
+    pub fn push_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.push(i, j, v);
+        if i != j {
+            self.push(j, i, v);
+        }
+    }
+
+    /// Convert to CSC, summing duplicates, sorting rows within columns.
+    pub fn to_csc(&self) -> Csc {
+        let nnz = self.nnz();
+        let mut cnt = vec![0usize; self.n_cols + 1];
+        for &c in &self.cols {
+            cnt[c + 1] += 1;
+        }
+        for j in 0..self.n_cols {
+            cnt[j + 1] += cnt[j];
+        }
+        let col_ptr_raw = cnt.clone();
+        let mut next = col_ptr_raw.clone();
+        let mut ridx = vec![0usize; nnz];
+        let mut vals = vec![0.0; nnz];
+        for k in 0..nnz {
+            let c = self.cols[k];
+            let p = next[c];
+            next[c] += 1;
+            ridx[p] = self.rows[k];
+            vals[p] = self.values[k];
+        }
+        // sort within column + merge duplicates
+        let mut out_ptr = vec![0usize; self.n_cols + 1];
+        let mut out_rows = Vec::with_capacity(nnz);
+        let mut out_vals = Vec::with_capacity(nnz);
+        let mut buf: Vec<(usize, f64)> = Vec::new();
+        for j in 0..self.n_cols {
+            buf.clear();
+            for k in col_ptr_raw[j]..col_ptr_raw[j + 1] {
+                buf.push((ridx[k], vals[k]));
+            }
+            buf.sort_unstable_by_key(|&(r, _)| r);
+            let mut i = 0;
+            while i < buf.len() {
+                let r = buf[i].0;
+                let mut v = buf[i].1;
+                let mut t = i + 1;
+                while t < buf.len() && buf[t].0 == r {
+                    v += buf[t].1;
+                    t += 1;
+                }
+                out_rows.push(r);
+                out_vals.push(v);
+                i = t;
+            }
+            out_ptr[j + 1] = out_rows.len();
+        }
+        Csc::from_parts_unchecked(self.n_rows, self.n_cols, out_ptr, out_rows, out_vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csc_sorts_and_sums_duplicates() {
+        let mut c = Coo::new(3, 2);
+        c.push(2, 0, 1.0);
+        c.push(0, 0, 2.0);
+        c.push(2, 0, 3.0); // duplicate of (2,0)
+        c.push(1, 1, 4.0);
+        let m = c.to_csc();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.get(2, 0), 4.0);
+        assert_eq!(m.get(0, 0), 2.0);
+        assert_eq!(m.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn push_sym_mirrors_offdiagonal() {
+        let mut c = Coo::new(3, 3);
+        c.push_sym(0, 2, 5.0);
+        c.push_sym(1, 1, 7.0);
+        let m = c.to_csc();
+        assert_eq!(m.get(0, 2), 5.0);
+        assert_eq!(m.get(2, 0), 5.0);
+        assert_eq!(m.get(1, 1), 7.0);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn empty_coo_converts() {
+        let m = Coo::new(4, 4).to_csc();
+        assert_eq!(m.nnz(), 0);
+        m.validate().unwrap();
+    }
+}

@@ -1,0 +1,457 @@
+//! Compressed Sparse Column storage — the primary format of the solver,
+//! matching the paper (§4.2: "The sparse matrix is stored by Compressed
+//! Sparse Column (CSC) format").
+
+use super::{Coo, Csr};
+
+/// Compressed Sparse Column matrix with `f64` values.
+///
+/// Invariants (checked by [`Csc::validate`]):
+/// * `col_ptr.len() == n_cols + 1`, `col_ptr[0] == 0`, nondecreasing;
+/// * `row_idx.len() == values.len() == col_ptr[n_cols]`;
+/// * row indices within each column are strictly increasing (sorted, no
+///   duplicates) and `< n_rows`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    n_rows: usize,
+    n_cols: usize,
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Csc {
+    /// Build from raw parts, validating invariants.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        let m = Self { n_rows, n_cols, col_ptr, row_idx, values };
+        m.validate().expect("invalid CSC");
+        m
+    }
+
+    /// Build from raw parts without validation (hot paths, trusted callers).
+    pub fn from_parts_unchecked(
+        n_rows: usize,
+        n_cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        Self { n_rows, n_cols, col_ptr, row_idx, values }
+    }
+
+    /// Check all structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.col_ptr.len() != self.n_cols + 1 {
+            return Err(format!(
+                "col_ptr len {} != n_cols+1 {}",
+                self.col_ptr.len(),
+                self.n_cols + 1
+            ));
+        }
+        if self.col_ptr[0] != 0 {
+            return Err("col_ptr[0] != 0".into());
+        }
+        if *self.col_ptr.last().unwrap() != self.row_idx.len()
+            || self.row_idx.len() != self.values.len()
+        {
+            return Err("nnz mismatch between col_ptr, row_idx, values".into());
+        }
+        for j in 0..self.n_cols {
+            if self.col_ptr[j] > self.col_ptr[j + 1] {
+                return Err(format!("col_ptr decreasing at {j}"));
+            }
+            let rng = self.col_ptr[j]..self.col_ptr[j + 1];
+            for k in rng.clone() {
+                if self.row_idx[k] >= self.n_rows {
+                    return Err(format!("row index {} out of bounds", self.row_idx[k]));
+                }
+                if k > rng.start && self.row_idx[k - 1] >= self.row_idx[k] {
+                    return Err(format!("unsorted/duplicate row in column {j}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// n×n identity.
+    pub fn identity(n: usize) -> Self {
+        Self {
+            n_rows: n,
+            n_cols: n,
+            col_ptr: (0..=n).collect(),
+            row_idx: (0..n).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    /// Empty (all-zero) matrix.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
+        Self {
+            n_rows,
+            n_cols,
+            col_ptr: vec![0; n_cols + 1],
+            row_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    /// Density nnz / (rows*cols); 0 for degenerate shapes.
+    pub fn density(&self) -> f64 {
+        let cells = self.n_rows as f64 * self.n_cols as f64;
+        if cells == 0.0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells
+        }
+    }
+
+    /// Iterator over `(row, value)` pairs of column `j`.
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let rng = self.col_ptr[j]..self.col_ptr[j + 1];
+        rng.map(move |k| (self.row_idx[k], self.values[k]))
+    }
+
+    /// Row indices of column `j`.
+    pub fn col_rows(&self, j: usize) -> &[usize] {
+        &self.row_idx[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// Values of column `j`.
+    pub fn col_values(&self, j: usize) -> &[f64] {
+        &self.values[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// Value at `(i, j)`, 0.0 if not stored. Binary search within column.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let rows = self.col_rows(j);
+        match rows.binary_search(&i) {
+            Ok(k) => self.values[self.col_ptr[j] + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// `y = A x` into a caller-provided buffer (cleared first).
+    pub fn mul_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        y.fill(0.0);
+        for j in 0..self.n_cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                y[self.row_idx[k]] += self.values[k] * xj;
+            }
+        }
+    }
+
+    /// `y = A x` (allocating).
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.mul_vec_into(x, &mut y);
+        y
+    }
+
+    /// Transpose (O(nnz) bucket pass); result columns are sorted.
+    pub fn transpose(&self) -> Csc {
+        let mut cnt = vec![0usize; self.n_rows + 1];
+        for &r in &self.row_idx {
+            cnt[r + 1] += 1;
+        }
+        for i in 0..self.n_rows {
+            cnt[i + 1] += cnt[i];
+        }
+        let mut col_ptr = cnt.clone();
+        let mut row_idx = vec![0usize; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut next = col_ptr.clone();
+        for j in 0..self.n_cols {
+            for k in self.col_ptr[j]..self.col_ptr[j + 1] {
+                let r = self.row_idx[k];
+                let p = next[r];
+                next[r] += 1;
+                row_idx[p] = j;
+                values[p] = self.values[k];
+            }
+        }
+        col_ptr.truncate(self.n_rows + 1);
+        Csc {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            col_ptr,
+            row_idx,
+            values,
+        }
+    }
+
+    /// Pattern of `A + Aᵀ` (values summed; structural union). The symbolic
+    /// phase runs on this symmetrized pattern, as the paper assumes the
+    /// post-symbolic matrix has symmetric structure (§4.2).
+    pub fn plus_transpose_pattern(&self) -> Csc {
+        assert_eq!(self.n_rows, self.n_cols, "symmetrization needs square A");
+        let at = self.transpose();
+        let n = self.n_cols;
+        let mut col_ptr = vec![0usize; n + 1];
+        let mut row_idx = Vec::with_capacity(self.nnz() * 2);
+        let mut values = Vec::with_capacity(self.nnz() * 2);
+        for j in 0..n {
+            // merge two sorted runs
+            let (a_rows, a_vals) = (self.col_rows(j), self.col_values(j));
+            let (b_rows, b_vals) = (at.col_rows(j), at.col_values(j));
+            let (mut ia, mut ib) = (0usize, 0usize);
+            while ia < a_rows.len() || ib < b_rows.len() {
+                let ra = a_rows.get(ia).copied().unwrap_or(usize::MAX);
+                let rb = b_rows.get(ib).copied().unwrap_or(usize::MAX);
+                if ra < rb {
+                    row_idx.push(ra);
+                    values.push(a_vals[ia]);
+                    ia += 1;
+                } else if rb < ra {
+                    row_idx.push(rb);
+                    values.push(b_vals[ib]);
+                    ib += 1;
+                } else {
+                    row_idx.push(ra);
+                    values.push(a_vals[ia] + b_vals[ib]);
+                    ia += 1;
+                    ib += 1;
+                }
+            }
+            col_ptr[j + 1] = row_idx.len();
+        }
+        Csc {
+            n_rows: n,
+            n_cols: n,
+            col_ptr,
+            row_idx,
+            values,
+        }
+    }
+
+    /// Symmetric permutation `P A Pᵀ`: entry (i,j) moves to (perm[i], perm[j]),
+    /// where `perm[old] = new`.
+    pub fn permute_sym(&self, perm: &[usize]) -> Csc {
+        assert_eq!(self.n_rows, self.n_cols);
+        assert_eq!(perm.len(), self.n_cols);
+        let n = self.n_cols;
+        // inverse permutation: iperm[new] = old
+        let mut iperm = vec![0usize; n];
+        for (old, &new) in perm.iter().enumerate() {
+            iperm[new] = old;
+        }
+        let mut cnt = vec![0usize; n + 1];
+        for new_j in 0..n {
+            let old_j = iperm[new_j];
+            cnt[new_j + 1] = cnt[new_j] + (self.col_ptr[old_j + 1] - self.col_ptr[old_j]);
+        }
+        let col_ptr = cnt;
+        let mut row_idx = vec![0usize; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut scratch: Vec<(usize, f64)> = Vec::new();
+        for new_j in 0..n {
+            let old_j = iperm[new_j];
+            scratch.clear();
+            for k in self.col_ptr[old_j]..self.col_ptr[old_j + 1] {
+                scratch.push((perm[self.row_idx[k]], self.values[k]));
+            }
+            scratch.sort_unstable_by_key(|&(r, _)| r);
+            let base = col_ptr[new_j];
+            for (t, &(r, v)) in scratch.iter().enumerate() {
+                row_idx[base + t] = r;
+                values[base + t] = v;
+            }
+        }
+        Csc {
+            n_rows: n,
+            n_cols: n,
+            col_ptr,
+            row_idx,
+            values,
+        }
+    }
+
+    /// Dense row-major copy (small matrices / tests only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.n_cols]; self.n_rows];
+        for j in 0..self.n_cols {
+            for (i, v) in self.col(j) {
+                d[i][j] = v;
+            }
+        }
+        d
+    }
+
+    /// Structural check: does the matrix have a full (nonzero-pattern)
+    /// diagonal? Factorization without pivoting requires it.
+    pub fn has_full_diagonal(&self) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        (0..self.n_cols).all(|j| self.col_rows(j).binary_search(&j).is_ok())
+    }
+
+    /// Count of nonzeros per column.
+    pub fn col_counts(&self) -> Vec<usize> {
+        (0..self.n_cols)
+            .map(|j| self.col_ptr[j + 1] - self.col_ptr[j])
+            .collect()
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.n_rows, self.n_cols);
+        for j in 0..self.n_cols {
+            for (i, v) in self.col(j) {
+                coo.push(i, j, v);
+            }
+        }
+        coo
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        let t = self.transpose();
+        Csr::from_parts_unchecked(self.n_rows, self.n_cols, t.col_ptr, t.row_idx, t.values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csc {
+        // [1 0 2]
+        // [0 3 0]
+        // [4 0 5]
+        Csc::new(
+            3,
+            3,
+            vec![0, 2, 3, 5],
+            vec![0, 2, 1, 0, 2],
+            vec![1.0, 4.0, 3.0, 2.0, 5.0],
+        )
+    }
+
+    #[test]
+    fn get_returns_stored_and_zero() {
+        let a = sample();
+        assert_eq!(a.get(0, 0), 1.0);
+        assert_eq!(a.get(2, 0), 4.0);
+        assert_eq!(a.get(0, 1), 0.0);
+        assert_eq!(a.get(2, 2), 5.0);
+    }
+
+    #[test]
+    fn validate_rejects_unsorted() {
+        let m = Csc::from_parts_unchecked(2, 1, vec![0, 2], vec![1, 0], vec![1.0, 2.0]);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_bounds_row() {
+        let m = Csc::from_parts_unchecked(2, 1, vec![0, 1], vec![5], vec![1.0]);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_ptr() {
+        let m = Csc::from_parts_unchecked(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn mul_vec_matches_dense() {
+        let a = sample();
+        let y = a.mul_vec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![1.0 + 6.0, 6.0, 4.0 + 15.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = sample();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn transpose_moves_entries() {
+        let a = sample();
+        let at = a.transpose();
+        assert_eq!(at.get(0, 2), 4.0);
+        assert_eq!(at.get(2, 0), 2.0);
+    }
+
+    #[test]
+    fn plus_transpose_pattern_is_symmetric() {
+        let a = sample();
+        let s = a.plus_transpose_pattern();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(s.get(i, j) != 0.0, s.get(j, i) != 0.0, "({i},{j})");
+            }
+        }
+        // diagonal entries are doubled, off-diag pairs summed
+        assert_eq!(s.get(0, 0), 2.0);
+        assert_eq!(s.get(0, 2), 2.0 + 4.0);
+    }
+
+    #[test]
+    fn permute_sym_identity_is_noop() {
+        let a = sample();
+        assert_eq!(a.permute_sym(&[0, 1, 2]), a);
+    }
+
+    #[test]
+    fn permute_sym_moves_diagonal() {
+        let a = sample();
+        let p = [2usize, 0, 1]; // old 0 -> new 2, etc.
+        let b = a.permute_sym(&p);
+        assert_eq!(b.get(2, 2), a.get(0, 0));
+        assert_eq!(b.get(0, 0), a.get(1, 1));
+        assert_eq!(b.get(1, 1), a.get(2, 2));
+        assert_eq!(b.get(p[2], p[0]), a.get(2, 0));
+        assert_eq!(b.nnz(), a.nnz());
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn identity_has_full_diagonal() {
+        assert!(Csc::identity(4).has_full_diagonal());
+        assert!(!Csc::zeros(4, 4).has_full_diagonal());
+    }
+
+    #[test]
+    fn density_and_counts() {
+        let a = sample();
+        assert!((a.density() - 5.0 / 9.0).abs() < 1e-12);
+        assert_eq!(a.col_counts(), vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn csr_round_trip_preserves_entries() {
+        let a = sample();
+        let csr = a.to_csr();
+        assert_eq!(csr.get(2, 0), 4.0);
+        assert_eq!(csr.get(0, 2), 2.0);
+        let back = csr.to_csc();
+        assert_eq!(a, back);
+    }
+}

@@ -1,0 +1,99 @@
+//! Compressed Sparse Row — used where row access dominates (dense-row
+//! detection, some kernels). Thin mirror of [`super::Csc`].
+
+use super::Csc;
+
+/// Compressed Sparse Row matrix with `f64` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    n_rows: usize,
+    n_cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    pub fn from_parts_unchecked(
+        n_rows: usize,
+        n_cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        Self { n_rows, n_cols, row_ptr, col_idx, values }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Iterator over `(col, value)` of row `i`.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        (self.row_ptr[i]..self.row_ptr[i + 1]).map(move |k| (self.col_idx[k], self.values[k]))
+    }
+
+    /// Column indices of row `i`.
+    pub fn row_cols(&self, i: usize) -> &[usize] {
+        &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// Value at `(i, j)`, 0.0 if absent.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self.row_cols(i).binary_search(&j) {
+            Ok(k) => self.values[self.row_ptr[i] + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Convert back to CSC.
+    pub fn to_csc(&self) -> Csc {
+        // CSR of A viewed as CSC of Aᵀ: transpose once more.
+        let as_csc_of_t = Csc::from_parts_unchecked(
+            self.n_cols,
+            self.n_rows,
+            self.row_ptr.clone(),
+            self.col_idx.clone(),
+            self.values.clone(),
+        );
+        as_csc_of_t.transpose()
+    }
+
+    /// Nonzeros per row.
+    pub fn row_counts(&self) -> Vec<usize> {
+        (0..self.n_rows)
+            .map(|i| self.row_ptr[i + 1] - self.row_ptr[i])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::sparse::Coo;
+
+    #[test]
+    fn row_access_matches_csc() {
+        let mut c = Coo::new(3, 3);
+        c.push(0, 1, 2.0);
+        c.push(1, 0, 3.0);
+        c.push(2, 2, 4.0);
+        c.push(0, 2, 5.0);
+        let csc = c.to_csc();
+        let csr = csc.to_csr();
+        assert_eq!(csr.get(0, 1), 2.0);
+        assert_eq!(csr.get(0, 2), 5.0);
+        assert_eq!(csr.get(1, 0), 3.0);
+        assert_eq!(csr.get(1, 1), 0.0);
+        assert_eq!(csr.row_counts(), vec![2, 1, 1]);
+        let row0: Vec<_> = csr.row(0).collect();
+        assert_eq!(row0, vec![(1, 2.0), (2, 5.0)]);
+    }
+}

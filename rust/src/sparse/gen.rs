@@ -1,0 +1,515 @@
+//! Synthetic matrix generators.
+//!
+//! The paper evaluates on ten SuiteSparse matrices (Table 3). Offline we
+//! reproduce each *kind* with a generator that matches its post-symbolic
+//! nonzero-distribution archetype (§4.2, Figs 7–8, 11):
+//!
+//! | paper matrix        | kind                         | generator |
+//! |---------------------|------------------------------|-----------|
+//! | ecology1, G3_circuit| 2D/3D problem, circuit grid  | [`grid2d_laplacian`] |
+//! | apache2, boneS10    | structural / model reduction | [`grid3d_laplacian`], [`banded_fem`] |
+//! | ASIC_680k           | circuit with dense borders   | [`circuit_bbd`] |
+//! | cage12, language    | directed weighted graph      | [`directed_graph`] |
+//! | offshore, dielFilter| electromagnetics             | [`electromagnetics_like`] |
+//! | CoupCons3D, inline_1| structural, coupled          | [`banded_fem`] |
+//!
+//! Every generator returns a **row-wise diagonally dominant** matrix so the
+//! no-pivot numeric factorization (the paper's setting: stability handled in
+//! reordering) is well defined, and every matrix has a full structural
+//! diagonal.
+
+use super::{Coo, Csc};
+use crate::util::Prng;
+
+/// Accumulate off-diagonal entries, then set each diagonal to
+/// `rowsum_abs + shift` so the matrix is strictly diagonally dominant.
+fn finish_diag_dominant(n: usize, coo: &mut Coo, shift: f64) -> Csc {
+    // Sum duplicates first by converting, then recompute diagonal.
+    let m = coo.to_csc();
+    let mut row_abs = vec![0.0f64; n];
+    for j in 0..n {
+        for (i, v) in m.col(j) {
+            if i != j {
+                row_abs[i] += v.abs();
+            }
+        }
+    }
+    let mut out = Coo::with_capacity(n, n, m.nnz() + n);
+    for j in 0..n {
+        for (i, v) in m.col(j) {
+            if i != j {
+                out.push(i, j, v);
+            }
+        }
+    }
+    for i in 0..n {
+        out.push(i, i, row_abs[i] + shift);
+    }
+    out.to_csc()
+}
+
+/// 5-point 2D Laplacian on an `nx × ny` grid (dimension `nx*ny`).
+/// The classic "2D/3D problem" matrix (ecology1-like): nonzeros distributed
+/// uniformly along the diagonal — the *linear* archetype of Fig 7(a).
+pub fn grid2d_laplacian(nx: usize, ny: usize) -> Csc {
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, n, 5 * n);
+    let idx = |x: usize, y: usize| y * nx + x;
+    for y in 0..ny {
+        for x in 0..nx {
+            let c = idx(x, y);
+            coo.push(c, c, 4.0 + 1.0);
+            if x + 1 < nx {
+                coo.push(c, idx(x + 1, y), -1.0);
+                coo.push(idx(x + 1, y), c, -1.0);
+            }
+            if y + 1 < ny {
+                coo.push(c, idx(x, y + 1), -1.0);
+                coo.push(idx(x, y + 1), c, -1.0);
+            }
+        }
+    }
+    coo.to_csc()
+}
+
+/// 7-point 3D Laplacian on an `nx × ny × nz` grid — apache2-like
+/// structural problem.
+pub fn grid3d_laplacian(nx: usize, ny: usize, nz: usize) -> Csc {
+    let n = nx * ny * nz;
+    let mut coo = Coo::with_capacity(n, n, 7 * n);
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let c = idx(x, y, z);
+                coo.push(c, c, 6.0 + 1.0);
+                if x + 1 < nx {
+                    coo.push_sym(c, idx(x + 1, y, z), -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push_sym(c, idx(x, y + 1, z), -1.0);
+                }
+                if z + 1 < nz {
+                    coo.push_sym(c, idx(x, y, z + 1), -1.0);
+                }
+            }
+        }
+    }
+    coo.to_csc()
+}
+
+/// Parameters for [`circuit_bbd`].
+#[derive(Clone, Copy, Debug)]
+pub struct CircuitParams {
+    /// Total dimension.
+    pub n: usize,
+    /// Fraction of rows/cols forming the dense border at the bottom-right
+    /// (ASIC_680k concentrates ~98% of nonzeros there).
+    pub border_frac: f64,
+    /// Density of the border block coupling (0..1).
+    pub border_density: f64,
+    /// Average off-diagonal nonzeros per interior row (near-diagonal).
+    pub interior_deg: usize,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for CircuitParams {
+    fn default() -> Self {
+        Self { n: 4000, border_frac: 0.06, border_density: 0.25, interior_deg: 3, seed: 0xA51C }
+    }
+}
+
+/// Circuit-simulation matrix with Bordered Block Diagonal structure:
+/// a sparse near-diagonal interior plus dense border rows/columns at the
+/// bottom-right — the ASIC_680k archetype (Fig 11 left: ~98% of nonzeros
+/// in the bottom/right region after symbolic factorization).
+pub fn circuit_bbd(p: CircuitParams) -> Csc {
+    let n = p.n;
+    let border = ((n as f64 * p.border_frac) as usize).max(1);
+    let interior = n - border;
+    let mut rng = Prng::new(p.seed);
+    let mut coo = Coo::with_capacity(n, n, n * (p.interior_deg + 2));
+    // Interior: short-range couplings (circuit locality).
+    for i in 0..interior {
+        for _ in 0..p.interior_deg {
+            let span = 1 + rng.below(16.min(interior));
+            let j = if rng.f64() < 0.5 {
+                i.saturating_sub(span)
+            } else {
+                (i + span).min(interior - 1)
+            };
+            if j != i {
+                coo.push(i, j, -rng.range_f64(0.1, 1.0));
+            }
+        }
+        // sparse coupling into the border (every interior node touches
+        // a couple of border nets — supply rails, clocks).
+        let hits = 1 + rng.below(2);
+        for _ in 0..hits {
+            let b = interior + rng.below(border);
+            let v = -rng.range_f64(0.1, 1.0);
+            coo.push(i, b, v);
+            coo.push(b, i, v);
+        }
+    }
+    // Border block: dense-ish coupling among border nodes.
+    for bi in 0..border {
+        for bj in 0..border {
+            if bi != bj && rng.f64() < p.border_density {
+                coo.push(interior + bi, interior + bj, -rng.range_f64(0.1, 1.0));
+            }
+        }
+    }
+    finish_diag_dominant(n, &mut coo, 1.0)
+}
+
+/// Directed weighted graph matrix (cage12 / language archetype):
+/// unsymmetric pattern, moderate average degree, entries scattered
+/// broadly so symbolic factorization produces heavy fill.
+pub fn directed_graph(n: usize, avg_deg: usize, seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * (avg_deg + 1));
+    for i in 0..n {
+        // mix of local edges and long-range hops (power-law-ish reach)
+        for _ in 0..avg_deg {
+            let j = if rng.f64() < 0.7 {
+                // local: within a window
+                let w = 1 + rng.below(32.min(n));
+                if rng.f64() < 0.5 { i.saturating_sub(w) } else { (i + w).min(n - 1) }
+            } else {
+                rng.below(n)
+            };
+            if j != i {
+                coo.push(i, j, rng.signed_unit());
+            }
+        }
+    }
+    finish_diag_dominant(n, &mut coo, 1.0)
+}
+
+/// Banded FEM-like structural matrix (CoupCons3D / boneS10 / inline_1):
+/// several off-diagonal bands with small random block coupling, i.e. a
+/// multi-banded symmetric pattern.
+pub fn banded_fem(n: usize, bands: &[usize], band_fill: f64, seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * (2 * bands.len() + 1));
+    for i in 0..n {
+        for &b in bands {
+            if i + b < n && rng.f64() < band_fill {
+                coo.push_sym(i, i + b, -rng.range_f64(0.2, 1.0));
+            }
+        }
+    }
+    finish_diag_dominant(n, &mut coo, 1.0)
+}
+
+/// Electromagnetics-like matrix (offshore / dielFilterV3real): clustered
+/// dense element blocks along the diagonal plus sparse long-range coupling.
+pub fn electromagnetics_like(n: usize, cluster: usize, coupling_deg: usize, seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * (cluster + coupling_deg));
+    let mut start = 0usize;
+    while start < n {
+        let len = (cluster / 2 + rng.below(cluster.max(1))).clamp(2, n - start);
+        // dense element block
+        for a in 0..len {
+            for b in (a + 1)..len {
+                if rng.f64() < 0.7 {
+                    coo.push_sym(start + a, start + b, -rng.range_f64(0.05, 0.5));
+                }
+            }
+        }
+        start += len;
+    }
+    // long-range couplings
+    for i in 0..n {
+        for _ in 0..coupling_deg {
+            let j = rng.below(n);
+            if j != i && rng.f64() < 0.5 {
+                coo.push_sym(i, j, -rng.range_f64(0.01, 0.2));
+            }
+        }
+    }
+    finish_diag_dominant(n, &mut coo, 1.0)
+}
+
+/// Arrow matrix pointing "up": dense FIRST row and column plus diagonal.
+/// Under natural ordering this suffers full fill-in — Fig 2(a).
+pub fn arrow_up(n: usize) -> Csc {
+    let mut coo = Coo::with_capacity(n, n, 3 * n);
+    for i in 1..n {
+        coo.push(0, i, -1.0);
+        coo.push(i, 0, -1.0);
+    }
+    for i in 0..n {
+        let deg = if i == 0 { 2.0 * (n as f64 - 1.0) } else { 2.0 };
+        coo.push(i, i, deg + 1.0);
+    }
+    coo.to_csc()
+}
+
+/// Arrow matrix pointing "down": dense LAST row and column plus diagonal.
+/// Suffers NO fill-in — Fig 2(b). `arrow_up` reordered optimally.
+pub fn arrow_down(n: usize) -> Csc {
+    let mut coo = Coo::with_capacity(n, n, 3 * n);
+    let last = n - 1;
+    for i in 0..last {
+        coo.push(last, i, -1.0);
+        coo.push(i, last, -1.0);
+    }
+    for i in 0..n {
+        let deg = if i == last { 2.0 * (n as f64 - 1.0) } else { 2.0 };
+        coo.push(i, i, deg + 1.0);
+    }
+    coo.to_csc()
+}
+
+/// Tridiagonal matrix — the pure *linear* nonzero-distribution archetype
+/// (Fig 7(a)): nnz grows uniformly along the diagonal.
+pub fn tridiagonal(n: usize) -> Csc {
+    let mut coo = Coo::with_capacity(n, n, 3 * n);
+    for i in 0..n {
+        coo.push(i, i, 3.0);
+        if i + 1 < n {
+            coo.push(i, i + 1, -1.0);
+            coo.push(i + 1, i, -1.0);
+        }
+    }
+    coo.to_csc()
+}
+
+/// Uniform random sparse matrix — the *quadratic* distribution archetype
+/// (Fig 7(b)): nnz of the leading k×k submatrix grows ∝ k².
+pub fn uniform_random(n: usize, density: f64, seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let target = ((n * n) as f64 * density) as usize;
+    let mut coo = Coo::with_capacity(n, n, target + n);
+    for _ in 0..target {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i != j {
+            coo.push(i, j, rng.signed_unit());
+        }
+    }
+    finish_diag_dominant(n, &mut coo, 1.0)
+}
+
+/// Matrix with a few local dense diagonal regions — Fig 8(a): the feature
+/// curve shows partial quadratic trends with discontinuities.
+pub fn local_dense_blocks(n: usize, blocks: &[(usize, usize)], base_deg: usize, seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * base_deg);
+    // sparse background near the diagonal
+    for i in 0..n {
+        for _ in 0..base_deg {
+            let w = 1 + rng.below(8);
+            let j = if rng.f64() < 0.5 { i.saturating_sub(w) } else { (i + w).min(n - 1) };
+            if j != i {
+                coo.push(i, j, -rng.range_f64(0.1, 0.5));
+            }
+        }
+    }
+    // dense square regions [start, start+len) on the diagonal
+    for &(start, len) in blocks {
+        let end = (start + len).min(n);
+        for a in start..end {
+            for b in (a + 1)..end {
+                if rng.f64() < 0.6 {
+                    coo.push_sym(a, b, -rng.range_f64(0.05, 0.3));
+                }
+            }
+        }
+    }
+    finish_diag_dominant(n, &mut coo, 1.0)
+}
+
+/// Matrix with a few dense rows AND columns — Fig 8(b): the feature curve
+/// shows jump discontinuities at the dense row/col indices.
+pub fn dense_rows_cols(n: usize, dense_idx: &[usize], base_deg: usize, seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * base_deg + dense_idx.len() * n);
+    for i in 0..n {
+        for _ in 0..base_deg {
+            let w = 1 + rng.below(8);
+            let j = if rng.f64() < 0.5 { i.saturating_sub(w) } else { (i + w).min(n - 1) };
+            if j != i {
+                coo.push(i, j, -rng.range_f64(0.1, 0.5));
+            }
+        }
+    }
+    for &d in dense_idx {
+        assert!(d < n);
+        for j in 0..n {
+            if j != d && rng.f64() < 0.8 {
+                coo.push(d, j, -rng.range_f64(0.05, 0.3));
+                coo.push(j, d, -rng.range_f64(0.05, 0.3));
+            }
+        }
+    }
+    finish_diag_dominant(n, &mut coo, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_diag_dominant(m: &Csc) -> bool {
+        let n = m.n_rows();
+        let mut diag = vec![0.0; n];
+        let mut off = vec![0.0; n];
+        for j in 0..n {
+            for (i, v) in m.col(j) {
+                if i == j {
+                    diag[i] = v.abs();
+                } else {
+                    off[i] += v.abs();
+                }
+            }
+        }
+        (0..n).all(|i| diag[i] > off[i])
+    }
+
+    #[test]
+    fn grid2d_shape_and_pattern() {
+        let m = grid2d_laplacian(4, 3);
+        assert_eq!(m.n_rows(), 12);
+        m.validate().unwrap();
+        assert!(m.has_full_diagonal());
+        assert!(is_diag_dominant(&m));
+        // interior node has 4 neighbours
+        assert_eq!(m.col_rows(5).len(), 5); // self + 4
+    }
+
+    #[test]
+    fn grid3d_shape() {
+        let m = grid3d_laplacian(3, 3, 3);
+        assert_eq!(m.n_rows(), 27);
+        m.validate().unwrap();
+        assert!(is_diag_dominant(&m));
+    }
+
+    #[test]
+    fn circuit_bbd_concentrates_border() {
+        let p = CircuitParams { n: 600, border_frac: 0.1, ..Default::default() };
+        let m = circuit_bbd(p);
+        m.validate().unwrap();
+        assert!(m.has_full_diagonal());
+        assert!(is_diag_dominant(&m));
+        // the border block (last 10% rows/cols) should be much denser than
+        // an interior window of the same size
+        let border_start = 540;
+        let mut border_nnz = 0usize;
+        let mut interior_nnz = 0usize;
+        for j in 0..600 {
+            for (i, _) in m.col(j) {
+                if i >= border_start && j >= border_start {
+                    border_nnz += 1;
+                }
+                if (100..160).contains(&i) && (100..160).contains(&j) {
+                    interior_nnz += 1;
+                }
+            }
+        }
+        assert!(border_nnz > 4 * interior_nnz, "border {border_nnz} vs interior {interior_nnz}");
+    }
+
+    #[test]
+    fn directed_graph_is_unsymmetric_but_dominant() {
+        let m = directed_graph(300, 4, 7);
+        m.validate().unwrap();
+        assert!(is_diag_dominant(&m));
+        // pattern should not be symmetric (directed edges)
+        let mut asym = 0;
+        for j in 0..300 {
+            for (i, _) in m.col(j) {
+                if i != j && m.get(j, i) == 0.0 {
+                    asym += 1;
+                }
+            }
+        }
+        assert!(asym > 0);
+    }
+
+    #[test]
+    fn banded_fem_has_bands() {
+        let m = banded_fem(200, &[1, 10, 40], 1.0, 3);
+        m.validate().unwrap();
+        assert!(is_diag_dominant(&m));
+        assert_ne!(m.get(0, 40), 0.0);
+        assert_ne!(m.get(40, 0), 0.0);
+    }
+
+    #[test]
+    fn electromagnetics_reasonable() {
+        let m = electromagnetics_like(400, 12, 2, 11);
+        m.validate().unwrap();
+        assert!(is_diag_dominant(&m));
+        assert!(m.nnz() > 400 * 4);
+    }
+
+    #[test]
+    fn arrows_have_expected_pattern() {
+        let up = arrow_up(10);
+        let down = arrow_down(10);
+        up.validate().unwrap();
+        down.validate().unwrap();
+        assert_eq!(up.nnz(), down.nnz());
+        assert_ne!(up.get(0, 9), 0.0);
+        assert_eq!(up.get(9, 5), 0.0);
+        assert_ne!(down.get(9, 5), 0.0);
+        assert!(is_diag_dominant(&up));
+        assert!(is_diag_dominant(&down));
+    }
+
+    #[test]
+    fn tridiagonal_pattern() {
+        let m = tridiagonal(50);
+        assert_eq!(m.nnz(), 50 + 2 * 49);
+        assert!(is_diag_dominant(&m));
+    }
+
+    #[test]
+    fn uniform_random_density() {
+        let m = uniform_random(200, 0.02, 5);
+        m.validate().unwrap();
+        assert!(is_diag_dominant(&m));
+        let d = m.density();
+        assert!(d > 0.01 && d < 0.04, "density {d}");
+    }
+
+    #[test]
+    fn local_dense_blocks_denser_inside() {
+        let m = local_dense_blocks(300, &[(100, 40)], 2, 9);
+        m.validate().unwrap();
+        let mut inside = 0usize;
+        let mut outside = 0usize;
+        for j in 0..300 {
+            for (i, _) in m.col(j) {
+                if (100..140).contains(&i) && (100..140).contains(&j) {
+                    inside += 1;
+                } else if (200..240).contains(&i) && (200..240).contains(&j) {
+                    outside += 1;
+                }
+            }
+        }
+        assert!(inside > 3 * outside, "inside {inside} outside {outside}");
+    }
+
+    #[test]
+    fn dense_rows_cols_present() {
+        let m = dense_rows_cols(300, &[150], 2, 13);
+        m.validate().unwrap();
+        let csr = m.to_csr();
+        let row_n = csr.row_cols(150).len();
+        let typical = csr.row_cols(40).len();
+        assert!(row_n > 5 * typical, "dense row {row_n} vs typical {typical}");
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = directed_graph(100, 3, 42);
+        let b = directed_graph(100, 3, 42);
+        assert_eq!(a, b);
+    }
+}

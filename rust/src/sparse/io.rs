@@ -1,0 +1,205 @@
+//! MatrixMarket coordinate-format IO.
+//!
+//! The paper's suite comes from the SuiteSparse Matrix Collection, which
+//! ships `.mtx` files in this format. The reproduction uses synthetic
+//! analogues by default, but real SuiteSparse downloads drop in unchanged
+//! through [`read_matrix_market`].
+
+use super::{Coo, Csc};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Symmetry declared in the MatrixMarket header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MmSymmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+/// Read a MatrixMarket coordinate file into CSC. Supports `real`, `integer`
+/// and `pattern` fields with `general`, `symmetric` and `skew-symmetric`
+/// symmetry. Pattern entries get value 1.0.
+pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<Csc> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read_matrix_market_from(BufReader::new(f))
+}
+
+/// Read from any buffered reader (unit-testable without files).
+pub fn read_matrix_market_from(r: impl BufRead) -> Result<Csc> {
+    let mut lines = r.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("empty MatrixMarket file"),
+        }
+    };
+    let h = header.to_ascii_lowercase();
+    if !h.starts_with("%%matrixmarket") {
+        bail!("not a MatrixMarket file: header {header:?}");
+    }
+    let toks: Vec<&str> = h.split_whitespace().collect();
+    if toks.len() < 5 || toks[1] != "matrix" || toks[2] != "coordinate" {
+        bail!("only `matrix coordinate` MatrixMarket files are supported");
+    }
+    let field = toks[3];
+    let pattern = match field {
+        "real" | "integer" => false,
+        "pattern" => true,
+        other => bail!("unsupported field type {other:?} (complex not supported)"),
+    };
+    let symmetry = match toks[4] {
+        "general" => MmSymmetry::General,
+        "symmetric" => MmSymmetry::Symmetric,
+        "skew-symmetric" => MmSymmetry::SkewSymmetric,
+        other => bail!("unsupported symmetry {other:?}"),
+    };
+
+    // skip comments, read size line
+    let size_line = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                let t = l.trim();
+                if t.is_empty() || t.starts_with('%') {
+                    continue;
+                }
+                break l;
+            }
+            None => bail!("missing size line"),
+        }
+    };
+    let mut it = size_line.split_whitespace();
+    let n_rows: usize = it.next().context("rows")?.parse()?;
+    let n_cols: usize = it.next().context("cols")?.parse()?;
+    let nnz: usize = it.next().context("nnz")?.parse()?;
+
+    let mut coo = Coo::with_capacity(n_rows, n_cols, nnz * 2);
+    let mut seen = 0usize;
+    for l in lines {
+        let l = l?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("row index")?.parse::<usize>()? - 1;
+        let j: usize = it.next().context("col index")?.parse::<usize>()? - 1;
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next().context("value")?.parse()?
+        };
+        if i >= n_rows || j >= n_cols {
+            bail!("entry ({},{}) out of declared bounds", i + 1, j + 1);
+        }
+        coo.push(i, j, v);
+        match symmetry {
+            MmSymmetry::General => {}
+            MmSymmetry::Symmetric => {
+                if i != j {
+                    coo.push(j, i, v);
+                }
+            }
+            MmSymmetry::SkewSymmetric => {
+                if i != j {
+                    coo.push(j, i, -v);
+                }
+            }
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("declared nnz {nnz} but found {seen} entries");
+    }
+    Ok(coo.to_csc())
+}
+
+/// Write a CSC matrix as a `general real` MatrixMarket file.
+pub fn write_matrix_market(m: &Csc, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by sparselu")?;
+    writeln!(f, "{} {} {}", m.n_rows(), m.n_cols(), m.nnz())?;
+    for j in 0..m.n_cols() {
+        for (i, v) in m.col(j) {
+            writeln!(f, "{} {} {:.17e}", i + 1, j + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % a comment\n\
+                    2 2 3\n\
+                    1 1 1.5\n\
+                    2 1 -2.0\n\
+                    2 2 3.0\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.get(0, 0), 1.5);
+        assert_eq!(m.get(1, 0), -2.0);
+    }
+
+    #[test]
+    fn parse_symmetric_mirrors() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    3 3 2\n\
+                    2 1 5.0\n\
+                    3 3 1.0\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.get(1, 0), 5.0);
+        assert_eq!(m.get(0, 1), 5.0);
+        assert_eq!(m.nnz(), 3);
+    }
+
+    #[test]
+    fn parse_pattern_gives_unit_values() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+                    2 2 1\n\
+                    1 2\n";
+        let m = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(m.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn reject_wrong_header() {
+        assert!(read_matrix_market_from(Cursor::new("hello\n")).is_err());
+    }
+
+    #[test]
+    fn reject_nnz_mismatch() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn round_trip_through_file() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 2.0);
+        coo.push(2, 1, -1.25);
+        coo.push(1, 2, 4.0);
+        let m = coo.to_csc();
+        let dir = std::env::temp_dir().join("sparselu_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.mtx");
+        write_matrix_market(&m, &p).unwrap();
+        let back = read_matrix_market(&p).unwrap();
+        assert_eq!(m, back);
+    }
+}

@@ -1,0 +1,138 @@
+//! Elimination tree of a symmetric-pattern matrix (Liu's algorithm with
+//! path compression) and its postorder.
+
+/// Sentinel for "no parent" (tree root).
+pub const NONE: usize = usize::MAX;
+
+/// Elimination tree of the symmetric pattern `m` (use
+/// `a.plus_transpose_pattern()` for unsymmetric A). `parent[j]` is the
+/// etree parent of column j, or [`NONE`] for roots.
+pub fn etree(m: &crate::sparse::Csc) -> Vec<usize> {
+    let n = m.n_cols();
+    let mut parent = vec![NONE; n];
+    let mut ancestor = vec![NONE; n];
+    for j in 0..n {
+        for &i in m.col_rows(j) {
+            if i >= j {
+                continue; // lower part / diagonal: skip (we walk k < j)
+            }
+            // climb from i to the root of its current subtree, compressing
+            let mut k = i;
+            while ancestor[k] != NONE && ancestor[k] != j {
+                let next = ancestor[k];
+                ancestor[k] = j; // path compression
+                k = next;
+            }
+            if ancestor[k] == NONE {
+                ancestor[k] = j;
+                parent[k] = j;
+            }
+        }
+    }
+    parent
+}
+
+/// Postorder of the forest given by `parent` (children visited in index
+/// order). Returns `post` with `post[k]` = k-th node in postorder.
+pub fn postorder(parent: &[usize]) -> Vec<usize> {
+    let n = parent.len();
+    // build child lists
+    let mut head = vec![NONE; n];
+    let mut next = vec![NONE; n];
+    // iterate in reverse so child lists come out in ascending order
+    for v in (0..n).rev() {
+        let p = parent[v];
+        if p != NONE {
+            next[v] = head[p];
+            head[p] = v;
+        }
+    }
+    let mut post = Vec::with_capacity(n);
+    let mut stack = Vec::new();
+    for root in 0..n {
+        if parent[root] != NONE {
+            continue;
+        }
+        // iterative DFS producing postorder
+        stack.push((root, false));
+        while let Some((v, expanded)) = stack.pop() {
+            if expanded {
+                post.push(v);
+                continue;
+            }
+            stack.push((v, true));
+            let mut c = head[v];
+            let mut kids = Vec::new();
+            while c != NONE {
+                kids.push(c);
+                c = next[c];
+            }
+            // push in reverse so the smallest child is processed first
+            for &k in kids.iter().rev() {
+                stack.push((k, false));
+            }
+        }
+    }
+    post
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Coo};
+
+    #[test]
+    fn tridiagonal_etree_is_a_path() {
+        let m = gen::tridiagonal(6);
+        let p = etree(&m);
+        assert_eq!(p, vec![1, 2, 3, 4, 5, NONE]);
+    }
+
+    #[test]
+    fn arrow_down_etree_is_a_star_path() {
+        // all columns connect only to the last: parent[i] = n-1 directly?
+        // For arrow-down, col j has entries {j, n-1}; etree parent of each
+        // j < n-1 is n-1.
+        let m = gen::arrow_down(5);
+        let p = etree(&m);
+        assert_eq!(p, vec![4, 4, 4, 4, NONE]);
+    }
+
+    #[test]
+    fn disconnected_gives_forest() {
+        let mut coo = Coo::new(4, 4);
+        coo.push_sym(0, 1, 1.0);
+        coo.push_sym(2, 3, 1.0);
+        for i in 0..4 {
+            coo.push(i, i, 2.0);
+        }
+        let p = etree(&coo.to_csc());
+        assert_eq!(p, vec![1, NONE, 3, NONE]);
+    }
+
+    #[test]
+    fn postorder_visits_children_before_parents() {
+        let m = gen::grid2d_laplacian(5, 5).plus_transpose_pattern();
+        let parent = etree(&m);
+        let post = postorder(&parent);
+        assert_eq!(post.len(), 25);
+        let mut pos = vec![0usize; 25];
+        for (k, &v) in post.iter().enumerate() {
+            pos[v] = k;
+        }
+        for v in 0..25 {
+            if parent[v] != NONE {
+                assert!(pos[v] < pos[parent[v]], "child {v} after parent");
+            }
+        }
+    }
+
+    #[test]
+    fn postorder_is_permutation() {
+        let m = gen::directed_graph(60, 3, 1).plus_transpose_pattern();
+        let parent = etree(&m);
+        let mut post = postorder(&parent);
+        post.sort_unstable();
+        assert_eq!(post, (0..60).collect::<Vec<_>>());
+    }
+}

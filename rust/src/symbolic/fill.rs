@@ -1,0 +1,290 @@
+//! Fill-in computation: the full `L+U` pattern with fill, per-column counts
+//! and the factorization flop count (the paper's Table 3 reports
+//! `nnz(L+U)` and FLOPs for every benchmark matrix).
+
+use super::etree::{self, NONE};
+use crate::sparse::Csc;
+
+/// Result of symbolic factorization on the symmetrized pattern.
+#[derive(Clone, Debug)]
+pub struct Symbolic {
+    n: usize,
+    /// Elimination tree parents.
+    pub parent: Vec<usize>,
+    /// Row patterns of L, excluding the diagonal: `row_pats[i]` lists the
+    /// columns `k < i` with `L[i,k] ≠ 0`, sorted ascending.
+    pub row_pats: Vec<Vec<usize>>,
+    /// Per-column nonzero counts of L **including** the diagonal.
+    pub col_counts: Vec<usize>,
+}
+
+impl Symbolic {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// nnz(L) including the unit diagonal.
+    pub fn nnz_l(&self) -> usize {
+        self.col_counts.iter().sum()
+    }
+
+    /// nnz(L+U) with the shared diagonal counted once (the paper's metric).
+    pub fn nnz_ldu(&self) -> usize {
+        2 * self.nnz_l() - self.n
+    }
+
+    /// Fill-ratio versus the original matrix.
+    pub fn fill_ratio(&self, a: &Csc) -> f64 {
+        self.nnz_ldu() as f64 / a.nnz() as f64
+    }
+
+    /// Exact flop count of no-pivot LU on the symmetric pattern:
+    /// per pivot k with c_k below-diagonal entries in column k of L,
+    /// `c_k` divisions + `2·c_k²` multiply-adds in the rank-1 update.
+    pub fn flops(&self) -> f64 {
+        self.col_counts
+            .iter()
+            .map(|&c| {
+                let ck = (c - 1) as f64;
+                ck + 2.0 * ck * ck
+            })
+            .sum()
+    }
+
+    /// Assemble the full `L+U` pattern as a CSC matrix with values taken
+    /// from `a` (zero at fill positions). Column `j` holds the U-part rows
+    /// `k < j`, the diagonal, and the L-part rows `i > j`, sorted.
+    ///
+    /// `a` must be the same (permuted) matrix that was analyzed.
+    pub fn ldu_pattern(&self, a: &Csc) -> Csc {
+        let n = self.n;
+        assert_eq!(a.n_cols(), n);
+        // counts: col j gets |row_pats[j]| U-entries + 1 diag + below-diag
+        // L entries (row i > j has j in row_pats[i]).
+        let mut cnt = vec![0usize; n + 1];
+        for j in 0..n {
+            cnt[j + 1] += self.row_pats[j].len() + 1;
+        }
+        for (i, pat) in self.row_pats.iter().enumerate() {
+            debug_assert!(i < n);
+            for &k in pat {
+                cnt[k + 1] += 1;
+            }
+        }
+        for j in 0..n {
+            cnt[j + 1] += cnt[j];
+        }
+        let col_ptr = cnt;
+        let nnz = col_ptr[n];
+        let mut row_idx = vec![0usize; nnz];
+        let mut next = col_ptr.clone();
+        // U-part + diagonal first (rows < j then j, ascending because
+        // row_pats are sorted), then L-part appended in ascending row order
+        // by iterating i ascending.
+        for j in 0..n {
+            for &k in &self.row_pats[j] {
+                // U entry U[k, j] — row k of column j
+                let p = next[j];
+                row_idx[p] = k;
+                next[j] += 1;
+            }
+            let p = next[j];
+            row_idx[p] = j; // diagonal
+            next[j] += 1;
+        }
+        for i in 0..n {
+            for &k in &self.row_pats[i] {
+                // L entry L[i, k] — row i of column k; i ascending keeps order
+                let p = next[k];
+                row_idx[p] = i;
+                next[k] += 1;
+            }
+        }
+        // scatter A's values into the pattern (single allocation pass —
+        // perf opt-4: the previous version built the CSC twice)
+        let mut values = vec![0.0f64; nnz];
+        for j in 0..n {
+            let (base, end) = (col_ptr[j], col_ptr[j + 1]);
+            let rows = &row_idx[base..end];
+            for (i, v) in a.col(j) {
+                match rows.binary_search(&i) {
+                    Ok(k) => values[base + k] = v,
+                    Err(_) => panic!(
+                        "A entry ({i},{j}) outside symbolic pattern — \
+                         pattern must contain pattern(A)"
+                    ),
+                }
+            }
+        }
+        let out = Csc::from_parts_unchecked(n, n, col_ptr, row_idx, values);
+        debug_assert!(out.validate().is_ok(), "{:?}", out.validate());
+        out
+    }
+}
+
+/// Run symbolic factorization on (the symmetrization of) `a`.
+///
+/// Computes the elimination tree of `pattern(A+Aᵀ)` and the row patterns of
+/// the Cholesky factor L by the up-looking traversal: the pattern of row
+/// `i` is the union of etree paths from each `k` (with `M[i,k] ≠ 0`,
+/// `k < i`) up toward `i`.
+pub fn analyze(a: &Csc) -> Symbolic {
+    assert_eq!(a.n_rows(), a.n_cols(), "symbolic analysis needs square A");
+    let m = a.plus_transpose_pattern();
+    analyze_symmetric(&m)
+}
+
+/// As [`analyze`] but the input is already a symmetric pattern.
+pub fn analyze_symmetric(m: &Csc) -> Symbolic {
+    let n = m.n_cols();
+    let parent = etree::etree(m);
+    let mut row_pats: Vec<Vec<usize>> = Vec::with_capacity(n);
+    let mut mark = vec![usize::MAX; n];
+    let mut col_counts = vec![1usize; n]; // diagonal
+    for i in 0..n {
+        mark[i] = i;
+        let mut pat = Vec::new();
+        // entries k < i of row i == entries k < i of column i (symmetry)
+        for &k in m.col_rows(i) {
+            if k >= i {
+                break; // columns are sorted ascending
+            }
+            let mut t = k;
+            while mark[t] != i {
+                mark[t] = i;
+                pat.push(t);
+                col_counts[t] += 1;
+                t = parent[t];
+                debug_assert_ne!(t, NONE, "etree path must reach row {i}");
+            }
+        }
+        pat.sort_unstable();
+        row_pats.push(pat);
+    }
+    Symbolic { n, parent, row_pats, col_counts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    /// Dense reference: simulate fill by dense elimination on the pattern.
+    fn dense_fill_pattern(a: &Csc) -> Vec<Vec<bool>> {
+        let n = a.n_cols();
+        let m = a.plus_transpose_pattern();
+        let mut p = vec![vec![false; n]; n];
+        for j in 0..n {
+            for (i, _) in m.col(j) {
+                p[i][j] = true;
+            }
+        }
+        for i in 0..n {
+            p[i][i] = true;
+        }
+        for k in 0..n {
+            for i in (k + 1)..n {
+                if p[i][k] {
+                    for j in (k + 1)..n {
+                        if p[k][j] {
+                            p[i][j] = true;
+                        }
+                    }
+                }
+            }
+        }
+        p
+    }
+
+    fn check_against_dense(a: &Csc) {
+        let sym = analyze(a);
+        let ldu = sym.ldu_pattern(a);
+        let dense = dense_fill_pattern(a);
+        let n = a.n_cols();
+        let mut nnz_dense = 0;
+        for (i, row) in dense.iter().enumerate() {
+            for (j, &set) in row.iter().enumerate() {
+                if set {
+                    nnz_dense += 1;
+                    assert!(
+                        ldu.col_rows(j).binary_search(&i).is_ok(),
+                        "missing fill entry ({i},{j}) n={n}"
+                    );
+                }
+            }
+        }
+        assert_eq!(ldu.nnz(), nnz_dense, "extra entries beyond dense fill");
+        assert_eq!(sym.nnz_ldu(), nnz_dense);
+    }
+
+    #[test]
+    fn matches_dense_fill_on_tridiagonal() {
+        check_against_dense(&gen::tridiagonal(12));
+    }
+
+    #[test]
+    fn matches_dense_fill_on_grid() {
+        check_against_dense(&gen::grid2d_laplacian(5, 4));
+    }
+
+    #[test]
+    fn matches_dense_fill_on_random_unsymmetric() {
+        check_against_dense(&gen::directed_graph(40, 3, 17));
+    }
+
+    #[test]
+    fn matches_dense_fill_on_arrow() {
+        check_against_dense(&gen::arrow_up(15));
+        check_against_dense(&gen::arrow_down(15));
+    }
+
+    #[test]
+    fn matches_dense_fill_on_local_dense() {
+        check_against_dense(&gen::local_dense_blocks(50, &[(10, 12)], 2, 5));
+    }
+
+    #[test]
+    fn ldu_values_match_a() {
+        let a = gen::grid2d_laplacian(4, 4);
+        let sym = analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        for j in 0..16 {
+            for (i, v) in a.col(j) {
+                assert_eq!(ldu.get(i, j), v);
+            }
+        }
+    }
+
+    #[test]
+    fn tridiagonal_has_no_fill() {
+        let a = gen::tridiagonal(100);
+        let sym = analyze(&a);
+        assert_eq!(sym.nnz_ldu(), a.nnz());
+        assert_eq!(sym.fill_ratio(&a), 1.0);
+    }
+
+    #[test]
+    fn flops_of_dense_matrix() {
+        // fully dense: c_k = n-1-k; flops = Σ c + 2c²  — compare with
+        // direct summation.
+        let a = gen::arrow_up(10); // fills to dense
+        let sym = analyze(&a);
+        let expected: f64 = (0..10)
+            .map(|k| {
+                let c = (10 - 1 - k) as f64;
+                c + 2.0 * c * c
+            })
+            .sum();
+        assert_eq!(sym.flops(), expected);
+    }
+
+    #[test]
+    fn col_counts_sum_to_nnz_l() {
+        let a = gen::grid2d_laplacian(6, 6);
+        let sym = analyze(&a);
+        let total: usize = sym.col_counts.iter().sum();
+        assert_eq!(total, sym.nnz_l());
+        // L below-diag entries + U above-diag + diag == nnz_ldu
+        assert_eq!(2 * sym.nnz_l() - 36, sym.nnz_ldu());
+    }
+}

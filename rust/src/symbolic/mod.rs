@@ -1,0 +1,31 @@
+//! Symbolic factorization (the paper's phase 2).
+//!
+//! Determines the nonzero structure of L and U before any floating-point
+//! work. Because the reproduction follows the paper's assumption that the
+//! post-symbolic matrix has a **symmetric pattern** (§4.2, citing PanguLU),
+//! we compute the symbolic Cholesky pattern of `A + Aᵀ`: `pattern(L)` and
+//! `pattern(U) = pattern(L)ᵀ`.
+//!
+//! Implementation: elimination tree (Liu) + up-looking row-pattern
+//! traversal (Gilbert–Ng–Peyton), both O(nnz(L)).
+
+pub mod etree;
+pub mod fill;
+
+pub use etree::{etree, postorder};
+pub use fill::{analyze, Symbolic};
+
+#[cfg(test)]
+mod tests {
+    use crate::sparse::gen;
+
+    #[test]
+    fn arrow_matrices_fill_extremes() {
+        // Fig 2 of the paper: arrow-up ⇒ full fill; arrow-down ⇒ none.
+        let n = 40;
+        let up = super::analyze(&gen::arrow_up(n));
+        let down = super::analyze(&gen::arrow_down(n));
+        assert_eq!(up.nnz_ldu(), n * n, "arrow-up must fill completely");
+        assert_eq!(down.nnz_ldu(), 3 * n - 2, "arrow-down must not fill");
+    }
+}

@@ -1,0 +1,10 @@
+//! Small shared utilities: a deterministic PRNG (no external crates are
+//! available offline), timers, and summary statistics.
+
+pub mod prng;
+pub mod stats;
+pub mod timer;
+
+pub use prng::Prng;
+pub use stats::Summary;
+pub use timer::Stopwatch;

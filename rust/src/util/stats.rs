@@ -1,0 +1,94 @@
+//! Summary statistics used by load-balance metrics and the bench harness.
+
+/// Summary of a sample: count, min, max, mean, standard deviation,
+/// coefficient of variation and imbalance factor (max/mean).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute over a sample; returns an all-zero summary for empty input.
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self { count: 0, min: 0.0, max: 0.0, mean: 0.0, stddev: 0.0 };
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Self {
+            count: xs.len(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            mean,
+            stddev: var.sqrt(),
+        }
+    }
+
+    /// Coefficient of variation (stddev / mean); 0 when mean is 0.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 { 0.0 } else { self.stddev / self.mean }
+    }
+
+    /// Imbalance factor max/mean — the classic parallel-load metric.
+    /// 1.0 is perfectly balanced.
+    pub fn imbalance(&self) -> f64 {
+        if self.mean == 0.0 { 1.0 } else { self.max / self.mean }
+    }
+}
+
+/// Geometric mean of strictly positive values (paper reports GEOMEAN rows).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[3.0, 3.0, 3.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.imbalance(), 1.0);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn summary_of_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_min_max() {
+        let s = Summary::of(&[1.0, 5.0, 3.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_detects_skew() {
+        let balanced = Summary::of(&[10.0, 10.0, 10.0, 10.0]);
+        let skewed = Summary::of(&[1.0, 1.0, 1.0, 37.0]);
+        assert!(skewed.imbalance() > 3.0 * balanced.imbalance());
+    }
+
+    #[test]
+    fn geomean_matches_hand_computation() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Wall-clock stopwatch used for phase timing and benches.
+
+use std::time::Instant;
+
+/// Simple stopwatch accumulating named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, f64)>,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, laps: Vec::new(), last: now }
+    }
+
+    /// Record a lap since the previous lap (or construction) under `name`.
+    pub fn lap(&mut self, name: &str) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.laps.push((name.to_string(), dt));
+        self.last = now;
+        dt
+    }
+
+    /// Total elapsed seconds since construction.
+    pub fn total(&self) -> f64 {
+        self.last.duration_since(self.start).as_secs_f64()
+    }
+
+    /// All recorded laps.
+    pub fn laps(&self) -> &[(String, f64)] {
+        &self.laps
+    }
+
+    /// Seconds recorded for a named lap, if present.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.laps.iter().find(|(n, _)| n == name).map(|(_, t)| *t)
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_in_order() {
+        let mut sw = Stopwatch::new();
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert_eq!(sw.laps()[0].0, "a");
+        assert!(sw.get("b").is_some());
+        assert!(sw.get("c").is_none());
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, t) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Cross-module integration: ordering → symbolic → blocking → partition
+//! consistency on every generator archetype.
+
+use sparselu::blocking::{
+    irregular_blocking, regular_blocking, BlockedMatrix, DiagFeature, IrregularParams,
+};
+use sparselu::ordering::{order, OrderingMethod};
+use sparselu::sparse::{gen, Csc};
+use sparselu::symbolic;
+
+fn archetypes() -> Vec<(&'static str, Csc)> {
+    vec![
+        ("grid2d", gen::grid2d_laplacian(20, 20)),
+        ("grid3d", gen::grid3d_laplacian(7, 7, 7)),
+        ("bbd", gen::circuit_bbd(gen::CircuitParams { n: 500, ..Default::default() })),
+        ("graph", gen::directed_graph(400, 4, 11)),
+        ("fem", gen::banded_fem(400, &[1, 2, 17], 0.9, 5)),
+        ("em", gen::electromagnetics_like(400, 10, 2, 6)),
+        ("tridiag", gen::tridiagonal(400)),
+        ("uniform", gen::uniform_random(300, 0.03, 7)),
+        ("local_dense", gen::local_dense_blocks(400, &[(100, 60)], 2, 8)),
+        ("dense_rows", gen::dense_rows_cols(400, &[200], 2, 9)),
+        ("arrow_up", gen::arrow_up(200)),
+        ("arrow_down", gen::arrow_down(200)),
+    ]
+}
+
+#[test]
+fn symbolic_pattern_contains_a_for_all_archetypes() {
+    for (name, a) in archetypes() {
+        let perm = order(&a, OrderingMethod::MinDegree);
+        let pa = a.permute_sym(perm.as_slice());
+        let sym = symbolic::analyze(&pa);
+        let ldu = sym.ldu_pattern(&pa); // panics internally if A ⊄ pattern
+        assert!(ldu.nnz() >= pa.nnz(), "{name}");
+        assert!(ldu.has_full_diagonal(), "{name}");
+        // reported nnz consistent
+        assert_eq!(ldu.nnz(), sym.nnz_ldu(), "{name}");
+    }
+}
+
+#[test]
+fn diag_feature_total_matches_nnz_on_filled_patterns() {
+    for (name, a) in archetypes() {
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let f = DiagFeature::from_csc(&ldu);
+        assert_eq!(f.total() as usize, ldu.nnz(), "{name}");
+        let curve = f.curve();
+        assert!(curve.pct.windows(2).all(|w| w[0] <= w[1]), "{name}: curve not monotone");
+    }
+}
+
+#[test]
+fn blocked_partition_reassembles_for_both_policies() {
+    for (name, a) in archetypes() {
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let n = ldu.n_cols();
+        let curve = DiagFeature::from_csc(&ldu).curve();
+        for (policy, blocking) in [
+            ("regular", regular_blocking(n, (n / 7).max(1))),
+            ("irregular", irregular_blocking(&curve, &IrregularParams::default())),
+        ] {
+            let bm = BlockedMatrix::build(&ldu, blocking);
+            assert_eq!(bm.to_csc(), ldu, "{name}/{policy}: partition lost entries");
+            // every diagonal block present (full diagonal pattern)
+            for k in 0..bm.nb() {
+                assert!(bm.block_id(k, k).is_some(), "{name}/{policy}: diag block {k} missing");
+            }
+        }
+    }
+}
+
+#[test]
+fn orderings_are_permutations_and_reduce_or_keep_fill() {
+    for (name, a) in archetypes() {
+        let natural = symbolic::analyze(&a).nnz_ldu();
+        let perm = order(&a, OrderingMethod::MinDegree);
+        assert!(perm.is_valid(), "{name}");
+        let md = symbolic::analyze(&a.permute_sym(perm.as_slice())).nnz_ldu();
+        // min-degree should never be catastrophically worse than natural
+        assert!(
+            (md as f64) < 1.6 * natural as f64 + 100.0,
+            "{name}: md fill {md} vs natural {natural}"
+        );
+    }
+}
+
+#[test]
+fn feature_curve_classifies_the_fig7_archetypes() {
+    // linear
+    let lin = DiagFeature::from_csc(&gen::tridiagonal(2000)).curve();
+    // quadratic (uniform)
+    let sym = gen::uniform_random(800, 0.02, 3).plus_transpose_pattern();
+    let uni = DiagFeature::from_csc(&sym).curve();
+    assert!(lin.quadratic_score().abs() < 0.02);
+    assert!(uni.quadratic_score() < -0.05);
+    assert!(uni.quadratic_score() < lin.quadratic_score());
+}
+
+#[test]
+fn irregular_blocking_tracks_density_transitions() {
+    // matrix with one dense region: blocks inside the region must be finer
+    // than the widest block outside it
+    let a = gen::local_dense_blocks(2000, &[(1200, 400)], 2, 21);
+    let sym = symbolic::analyze(&a);
+    let ldu = sym.ldu_pattern(&a);
+    let curve = DiagFeature::from_csc(&ldu).curve();
+    let b = irregular_blocking(&curve, &IrregularParams::default());
+    let mut inside = Vec::new();
+    let mut outside = Vec::new();
+    for k in 0..b.num_blocks() {
+        let mid = (b.positions()[k] + b.positions()[k + 1]) / 2;
+        if (1200..1600).contains(&mid) {
+            inside.push(b.block_size(k) as f64);
+        } else if mid < 1000 {
+            outside.push(b.block_size(k) as f64);
+        }
+    }
+    let max_inside = inside.iter().cloned().fold(0.0, f64::max);
+    let max_outside = outside.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        max_inside <= max_outside,
+        "dense region blocks ({max_inside}) should be no coarser than sparse ({max_outside})"
+    );
+}

@@ -1,0 +1,155 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and agrees
+//! with the pure-rust dense kernels — the full L1→L2→AOT→L3 bridge.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use sparselu::numeric::dense;
+use sparselu::numeric::factor::{CpuDense, DenseBackend};
+use sparselu::runtime::PjrtDense;
+use sparselu::util::Prng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+fn load() -> Option<PjrtDense> {
+    let dir = artifacts_dir()?;
+    Some(PjrtDense::load(dir).expect("artifacts present but failed to load"))
+}
+
+fn random_dd(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    let mut a = vec![0.0; n * n];
+    for j in 0..n {
+        for i in 0..n {
+            if i != j {
+                a[j * n + i] = rng.signed_unit();
+            }
+        }
+    }
+    for i in 0..n {
+        let row: f64 = (0..n).filter(|&j| j != i).map(|j| a[j * n + i].abs()).sum();
+        a[i * n + i] = row + 1.0;
+    }
+    a
+}
+
+fn rand_mat(m: usize, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    (0..m * n).map(|_| rng.signed_unit()).collect()
+}
+
+fn close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < tol * y.abs().max(1.0),
+            "{what}: mismatch at {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_getrf_matches_cpu_exact_tile() {
+    let Some(pjrt) = load() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    for &n in &[32usize, 64] {
+        let a0 = random_dd(n, 42 + n as u64);
+        let mut a_cpu = a0.clone();
+        let mut a_pjrt = a0.clone();
+        CpuDense.getrf(&mut a_cpu, n).unwrap();
+        pjrt.getrf(&mut a_pjrt, n).unwrap();
+        close(&a_pjrt, &a_cpu, 1e-10, "getrf");
+    }
+}
+
+#[test]
+fn pjrt_getrf_matches_cpu_padded() {
+    let Some(pjrt) = load() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    // 5 pads to 32; 50 pads to 64; 100 pads to 128
+    for &n in &[5usize, 50, 100] {
+        let a0 = random_dd(n, 7 + n as u64);
+        let mut a_cpu = a0.clone();
+        let mut a_pjrt = a0.clone();
+        CpuDense.getrf(&mut a_cpu, n).unwrap();
+        pjrt.getrf(&mut a_pjrt, n).unwrap();
+        close(&a_pjrt, &a_cpu, 1e-9, "getrf padded");
+    }
+}
+
+#[test]
+fn pjrt_trsms_match_cpu() {
+    let Some(pjrt) = load() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let (m, k) = (40usize, 23usize);
+    let mut lu = random_dd(m, 3);
+    dense::getrf_in_place(&mut lu, m).unwrap();
+    let b0 = rand_mat(m, k, 5);
+    let mut b_cpu = b0.clone();
+    let mut b_pjrt = b0.clone();
+    CpuDense.trsm_lower(&lu, m, &mut b_cpu, k);
+    pjrt.trsm_lower(&lu, m, &mut b_pjrt, k);
+    close(&b_pjrt, &b_cpu, 1e-9, "trsm_lower");
+
+    let mut lu_k = random_dd(k, 6);
+    dense::getrf_in_place(&mut lu_k, k).unwrap();
+    let c0 = rand_mat(m, k, 8);
+    let mut c_cpu = c0.clone();
+    let mut c_pjrt = c0.clone();
+    CpuDense.trsm_upper(&lu_k, k, &mut c_cpu, m);
+    pjrt.trsm_upper(&lu_k, k, &mut c_pjrt, m);
+    close(&c_pjrt, &c_cpu, 1e-9, "trsm_upper");
+}
+
+#[test]
+fn pjrt_gemm_matches_cpu() {
+    let Some(pjrt) = load() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let (m, k, n) = (33usize, 47usize, 29usize);
+    let a = rand_mat(m, k, 1);
+    let b = rand_mat(k, n, 2);
+    let c0 = rand_mat(m, n, 3);
+    let mut c_cpu = c0.clone();
+    let mut c_pjrt = c0.clone();
+    CpuDense.gemm(&mut c_cpu, &a, &b, m, k, n);
+    pjrt.gemm(&mut c_pjrt, &a, &b, m, k, n);
+    close(&c_pjrt, &c_cpu, 1e-10, "gemm");
+    assert!(pjrt.executions() >= 1);
+}
+
+#[test]
+fn pjrt_backend_drives_full_factorization() {
+    use sparselu::solver::{BlockingPolicy, SolveOptions, Solver};
+    use sparselu::sparse::{gen, residual};
+
+    let Some(pjrt) = load() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let a = gen::electromagnetics_like(240, 10, 2, 17);
+    let opts = SolveOptions {
+        blocking: BlockingPolicy::Regular(48),
+        kernels: sparselu::numeric::KernelPolicy {
+            dense_threshold: 0.10, // push plenty of ops through PJRT
+            ..Default::default()
+        },
+        ..SolveOptions::ours(2)
+    };
+    let mut solver = Solver::with_backend(opts, &pjrt);
+    let f = solver.factorize(&a).unwrap();
+    let b: Vec<f64> = (0..240).map(|i| (i % 9) as f64 - 4.0).collect();
+    let x = f.solve(&b);
+    let r = residual(&a, &x, &b);
+    assert!(r < 1e-8, "residual {r}");
+    assert!(pjrt.executions() > 0, "dense path never dispatched to PJRT");
+}

@@ -1,0 +1,155 @@
+//! End-to-end solver integration: every preset × archetype × worker count
+//! must produce a small residual; parallel must equal sequential bitwise;
+//! failure modes surface as errors, not wrong answers.
+
+use sparselu::ordering::OrderingMethod;
+use sparselu::solver::{BlockingPolicy, SolveOptions, Solver};
+use sparselu::sparse::{gen, residual, Csc};
+use sparselu::util::Prng;
+
+fn solve_residual(a: &Csc, opts: SolveOptions) -> f64 {
+    let mut solver = Solver::new(opts);
+    let f = solver.factorize(a).expect("factorize");
+    let n = a.n_rows();
+    let mut rng = Prng::new(0xD0);
+    let b: Vec<f64> = (0..n).map(|_| rng.signed_unit() * 5.0).collect();
+    let x = f.solve(&b);
+    residual(a, &x, &b)
+}
+
+#[test]
+fn presets_solve_bbd() {
+    let a = gen::circuit_bbd(gen::CircuitParams { n: 600, ..Default::default() });
+    for opts in [
+        SolveOptions::ours(1),
+        SolveOptions::pangulu(1),
+        SolveOptions::superlu_like(1),
+    ] {
+        let r = solve_residual(&a, opts);
+        assert!(r < 1e-9, "residual {r}");
+    }
+}
+
+#[test]
+fn worker_counts_all_solve() {
+    let a = gen::electromagnetics_like(500, 12, 2, 3);
+    for w in [1, 2, 3, 4, 8] {
+        let r = solve_residual(&a, SolveOptions::ours(w));
+        assert!(r < 1e-9, "workers {w}: residual {r}");
+    }
+}
+
+#[test]
+fn parallel_equals_sequential_bitwise() {
+    // same DAG order ⇒ identical floating-point results
+    let a = gen::directed_graph(300, 4, 77);
+    let solve = |w: u32| -> Vec<f64> {
+        let mut solver = Solver::new(SolveOptions::ours(w));
+        let f = solver.factorize(&a).unwrap();
+        let b: Vec<f64> = (0..300).map(|i| (i % 11) as f64).collect();
+        f.solve(&b)
+    };
+    let x1 = solve(1);
+    let x4 = solve(4);
+    assert_eq!(x1, x4, "parallel execution changed the numerics");
+}
+
+#[test]
+fn unsymmetric_pattern_with_rcm_and_natural() {
+    let a = gen::directed_graph(250, 3, 5);
+    for ord in [OrderingMethod::Natural, OrderingMethod::Rcm] {
+        let opts = SolveOptions { ordering: ord, ..SolveOptions::ours(2) };
+        let r = solve_residual(&a, opts);
+        assert!(r < 1e-9, "{ord:?}: {r}");
+    }
+}
+
+#[test]
+fn tiny_matrices_no_panic() {
+    for n in [1usize, 2, 3, 5, 8] {
+        let a = gen::tridiagonal(n);
+        let r = solve_residual(&a, SolveOptions::ours(2));
+        assert!(r < 1e-12, "n={n}: {r}");
+    }
+}
+
+#[test]
+fn explicit_tiny_block_size() {
+    let a = gen::grid2d_laplacian(9, 9);
+    let opts = SolveOptions {
+        blocking: BlockingPolicy::Regular(3),
+        ..SolveOptions::ours(2)
+    };
+    let r = solve_residual(&a, opts);
+    assert!(r < 1e-10);
+}
+
+#[test]
+fn numerically_singular_matrix_errors() {
+    // full pattern but rank-deficient values
+    let mut coo = sparselu::sparse::Coo::new(3, 3);
+    for i in 0..3 {
+        for j in 0..3 {
+            coo.push(i, j, 1.0);
+        }
+    }
+    let a = coo.to_csc();
+    let mut solver = Solver::new(SolveOptions::ours(1));
+    assert!(solver.factorize(&a).is_err());
+}
+
+#[test]
+fn solve_matches_known_solution() {
+    // construct b = A*x_true, recover x_true
+    let a = gen::banded_fem(200, &[1, 2, 9], 0.9, 13);
+    let mut rng = Prng::new(4);
+    let x_true: Vec<f64> = (0..200).map(|_| rng.signed_unit()).collect();
+    let b = a.mul_vec(&x_true);
+    let mut solver = Solver::new(SolveOptions::ours(2));
+    let f = solver.factorize(&a).unwrap();
+    let x = f.solve(&b);
+    for (got, want) in x.iter().zip(&x_true) {
+        assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn matrix_market_round_trip_through_solver() {
+    let a = gen::grid2d_laplacian(12, 12);
+    let dir = std::env::temp_dir().join("sparselu_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("grid.mtx");
+    sparselu::sparse::io::write_matrix_market(&a, &p).unwrap();
+    let back = sparselu::sparse::io::read_matrix_market(&p).unwrap();
+    assert_eq!(a, back);
+    let r = solve_residual(&back, SolveOptions::ours(1));
+    assert!(r < 1e-10);
+}
+
+#[test]
+fn report_fields_are_consistent() {
+    let a = gen::circuit_bbd(gen::CircuitParams { n: 500, ..Default::default() });
+    let mut solver = Solver::new(SolveOptions::ours(4));
+    let f = solver.factorize(&a).unwrap();
+    let r = &f.report;
+    assert_eq!(r.n, 500);
+    assert_eq!(r.block_sizes.len(), r.num_blocks);
+    assert_eq!(r.block_sizes.iter().sum::<usize>(), 500);
+    assert!(r.nonempty_blocks >= r.num_blocks); // at least the diagonal
+    assert!(r.tasks >= r.nonempty_blocks);
+    assert_eq!(r.measured_busy.len(), 4);
+    assert!(r.modeled_makespan > 0.0);
+    assert!(r.balance.per_block_nnz.len() == r.nonempty_blocks);
+}
+
+#[test]
+fn repeated_factorization_is_deterministic() {
+    let a = gen::circuit_bbd(gen::CircuitParams { n: 400, ..Default::default() });
+    let run = || {
+        let mut solver = Solver::new(SolveOptions::ours(4));
+        let f = solver.factorize(&a).unwrap();
+        let b = vec![1.0; 400];
+        f.solve(&b)
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,259 @@
+//! Property-based tests over randomized inputs (seeded xoshiro PRNG —
+//! the proptest crate is unavailable offline, so properties are checked
+//! across a seed sweep; failures print the seed for reproduction).
+
+use sparselu::blocking::{irregular_blocking, DiagFeature, IrregularParams};
+use sparselu::ordering::Permutation;
+use sparselu::solver::{SolveOptions, Solver};
+use sparselu::sparse::{gen, residual, Coo, Csc};
+use sparselu::symbolic;
+use sparselu::util::Prng;
+
+const SEEDS: u64 = 24;
+
+/// Random diagonally-dominant sparse matrix with random size/density.
+fn random_matrix(seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let n = 20 + rng.below(280);
+    let per_row = 1 + rng.below(5);
+    let mut coo = Coo::with_capacity(n, n, n * (per_row + 1));
+    for i in 0..n {
+        for _ in 0..per_row {
+            let j = rng.below(n);
+            if j != i {
+                coo.push(i, j, rng.signed_unit());
+            }
+        }
+    }
+    // diagonal dominance
+    let m = coo.to_csc();
+    let mut row_abs = vec![0.0; n];
+    for j in 0..n {
+        for (i, v) in m.col(j) {
+            if i != j {
+                row_abs[i] += v.abs();
+            }
+        }
+    }
+    let mut out = Coo::with_capacity(n, n, m.nnz() + n);
+    for j in 0..n {
+        for (i, v) in m.col(j) {
+            if i != j {
+                out.push(i, j, v);
+            }
+        }
+    }
+    for i in 0..n {
+        out.push(i, i, row_abs[i] + 1.0);
+    }
+    out.to_csc()
+}
+
+#[test]
+fn prop_factorize_solve_small_residual() {
+    for seed in 0..SEEDS {
+        let a = random_matrix(seed);
+        let n = a.n_rows();
+        let workers = 1 + (seed % 4) as u32;
+        let mut solver = Solver::new(SolveOptions::ours(workers));
+        let f = solver.factorize(&a).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let mut rng = Prng::new(seed ^ 0xB);
+        let b: Vec<f64> = (0..n).map(|_| rng.signed_unit() * 3.0).collect();
+        let x = f.solve(&b);
+        let r = residual(&a, &x, &b);
+        assert!(r < 1e-8, "seed {seed}: residual {r}");
+    }
+}
+
+#[test]
+fn prop_lu_product_reconstructs_permuted_a() {
+    // check L·U == P·A·Pᵀ entry-wise via the factored CSC
+    for seed in 0..8 {
+        let a = random_matrix(seed);
+        let n = a.n_rows();
+        let mut solver = Solver::new(SolveOptions::ours(1));
+        let f = solver.factorize(&a).unwrap();
+        let pa = a.permute_sym(f.permutation().as_slice());
+        let lu = f.factors().to_csc();
+        // multiply L*U densely (matrices are small)
+        let mut dense = vec![vec![0.0; n]; n];
+        for j in 0..n {
+            for (i, v) in lu.col(j) {
+                dense[i][j] = v;
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let kmax = i.min(j);
+                let mut s = 0.0;
+                for k in 0..=kmax {
+                    let l = if i == k { 1.0 } else { dense[i][k] };
+                    let u = dense[k][j];
+                    if i >= k {
+                        s += l * u;
+                    }
+                }
+                let want = pa.get(i, j);
+                assert!(
+                    (s - want).abs() < 1e-8 * want.abs().max(1.0),
+                    "seed {seed} ({i},{j}): {s} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_transpose_involution() {
+    for seed in 0..SEEDS {
+        let a = random_matrix(seed);
+        assert_eq!(a.transpose().transpose(), a, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_permutation_roundtrip() {
+    for seed in 0..SEEDS {
+        let mut rng = Prng::new(seed);
+        let n = 5 + rng.below(200);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let p = Permutation::from_order(&order);
+        assert!(p.is_valid());
+        let v: Vec<usize> = (0..n).collect();
+        let w = p.permute_vec(&v);
+        let back = p.inverse().permute_vec(&w);
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_symmetric_permutation_preserves_values_multiset() {
+    for seed in 0..SEEDS {
+        let a = random_matrix(seed);
+        let n = a.n_cols();
+        let mut rng = Prng::new(seed ^ 0x5);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let p = Permutation::from_order(&order);
+        let b = a.permute_sym(p.as_slice());
+        assert_eq!(a.nnz(), b.nnz(), "seed {seed}");
+        let mut va: Vec<u64> = a.values.iter().map(|v| v.to_bits()).collect();
+        let mut vb: Vec<u64> = b.values.iter().map(|v| v.to_bits()).collect();
+        va.sort_unstable();
+        vb.sort_unstable();
+        assert_eq!(va, vb, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_diag_feature_matches_bruteforce() {
+    for seed in 0..SEEDS {
+        let a = random_matrix(seed).plus_transpose_pattern();
+        let f = DiagFeature::from_csc(&a);
+        let n = a.n_cols();
+        // brute-force at 5 probe points
+        let mut rng = Prng::new(seed ^ 0x77);
+        for _ in 0..5 {
+            let k = 1 + rng.below(n);
+            let mut cnt = 0u64;
+            for j in 0..k {
+                for &i in a.col_rows(j) {
+                    if i < k {
+                        cnt += 1;
+                    }
+                }
+            }
+            assert_eq!(f.blockptr[k], cnt, "seed {seed} k={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_irregular_blocking_partitions() {
+    for seed in 0..SEEDS {
+        let a = random_matrix(seed);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let curve = DiagFeature::from_csc(&ldu).curve();
+        let b = irregular_blocking(&curve, &IrregularParams::default());
+        let pos = b.positions();
+        assert_eq!(pos[0], 0, "seed {seed}");
+        assert_eq!(*pos.last().unwrap(), a.n_cols(), "seed {seed}");
+        assert!(pos.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+        // block_of consistent with positions
+        let mut rng = Prng::new(seed ^ 0x9);
+        for _ in 0..10 {
+            let i = rng.below(a.n_cols());
+            let k = b.block_of(i);
+            assert!(pos[k] <= i && i < pos[k + 1], "seed {seed} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_symbolic_fill_monotone_under_extra_entries() {
+    // adding entries never reduces fill
+    for seed in 0..12 {
+        let a = random_matrix(seed);
+        let base = symbolic::analyze(&a).nnz_ldu();
+        // add a few extra entries
+        let n = a.n_cols();
+        let mut rng = Prng::new(seed ^ 0x3);
+        let mut coo = Coo::with_capacity(n, n, a.nnz() + 10);
+        for j in 0..n {
+            for (i, v) in a.col(j) {
+                coo.push(i, j, v);
+            }
+        }
+        for _ in 0..10 {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            if i != j && a.get(i, j) == 0.0 {
+                coo.push(i, j, 0.01);
+            }
+        }
+        let denser = coo.to_csc();
+        let more = symbolic::analyze(&denser).nnz_ldu();
+        assert!(more >= base, "seed {seed}: {more} < {base}");
+    }
+}
+
+#[test]
+fn prop_coo_duplicate_sum() {
+    for seed in 0..SEEDS {
+        let mut rng = Prng::new(seed);
+        let n = 5 + rng.below(40);
+        let mut coo = Coo::new(n, n);
+        let mut dense = vec![0.0f64; n * n];
+        for _ in 0..200 {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            let v = rng.signed_unit();
+            coo.push(i, j, v);
+            dense[j * n + i] += v;
+        }
+        let m = coo.to_csc();
+        for j in 0..n {
+            for i in 0..n {
+                let want = dense[j * n + i];
+                let got = m.get(i, j);
+                assert!((got - want).abs() < 1e-12, "seed {seed} ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mindegree_no_worse_than_natural_on_grids() {
+    for seed in 0..6 {
+        let mut rng = Prng::new(seed);
+        let nx = 6 + rng.below(10);
+        let ny = 6 + rng.below(10);
+        let a = gen::grid2d_laplacian(nx, ny);
+        let nat = symbolic::analyze(&a).nnz_ldu();
+        let p = sparselu::ordering::order(&a, sparselu::ordering::OrderingMethod::MinDegree);
+        let md = symbolic::analyze(&a.permute_sym(p.as_slice())).nnz_ldu();
+        assert!(md <= nat, "grid {nx}x{ny}: md {md} nat {nat}");
+    }
+}
