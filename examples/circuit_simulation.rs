@@ -1,19 +1,39 @@
 //! Circuit-simulation scenario — the workload the paper's headline result
-//! targets (ASIC_680k: 4.31× over PanguLU on one GPU, 4.08× on four).
+//! targets (ASIC_680k: 4.31× over PanguLU on one GPU, 4.08× on four),
+//! now driven through the `session` subsystem.
 //!
 //! A transient circuit simulation refactorizes the same sparsity pattern
-//! with updated values at every Newton step. This example runs a small
-//! DC-operating-point-style loop: factor once per "timestep" with
-//! perturbed conductances, comparing the paper's irregular blocking
-//! against PanguLU-style regular blocking on the same BBD matrix.
+//! with updated conductances at every Newton step. The old version of
+//! this example re-ran the *entire* pipeline (ordering, symbolic,
+//! blocking, DAG construction) per step; with a `SolverSession` the
+//! structure-aware analysis runs **once** per netlist and every step pays
+//! only the numeric phase.
 //!
 //! ```text
 //! cargo run --release --example circuit_simulation
 //! ```
 
+use sparselu::session::{FactorPlan, SolverSession};
 use sparselu::solver::{SolveOptions, Solver};
-use sparselu::sparse::{gen, residual};
-use sparselu::util::Prng;
+use sparselu::sparse::{gen, residual, Csc};
+use sparselu::util::{timer::timed, Prng};
+use std::sync::Arc;
+
+/// Perturb the conductance values (same pattern) like a Newton update.
+fn newton_values(a: &Csc, rng: &mut Prng) -> Vec<f64> {
+    a.values.iter().map(|v| v * (1.0 + 0.02 * rng.signed_unit())).collect()
+}
+
+/// The matrix with the step's values (for residual checks).
+fn with_values(a: &Csc, values: &[f64]) -> Csc {
+    Csc::from_parts_unchecked(
+        a.n_rows(),
+        a.n_cols(),
+        a.col_ptr.clone(),
+        a.row_idx.clone(),
+        values.to_vec(),
+    )
+}
 
 fn main() {
     // ASIC-like netlist: sparse interior + dense supply/clock border.
@@ -30,43 +50,70 @@ fn main() {
         a.nnz()
     );
 
-    let timesteps = 5;
-    let mut rng = Prng::new(7);
+    let timesteps = 8;
+    let opts = SolveOptions::ours(4);
 
-    for (label, opts) in [
-        ("irregular (ours)", SolveOptions::ours(4)),
-        ("regular (PanguLU)", SolveOptions::pangulu(4)),
-    ] {
-        let mut total_numeric = 0.0;
-        let mut worst_residual: f64 = 0.0;
-        for _step in 0..timesteps {
-            let mut solver = Solver::new(opts.clone());
-            let f = solver.factorize(&a).expect("factorization");
-            total_numeric += f.report.numeric_seconds;
-            // transient excitation
-            let b: Vec<f64> = (0..a.n_rows()).map(|_| rng.signed_unit()).collect();
-            let x = f.solve(&b);
-            worst_residual = worst_residual.max(residual(&a, &x, &b));
+    // --- cold baseline: full pipeline per step (the pre-session path) ---
+    let (_, cold_step) = timed(|| {
+        let mut solver = Solver::new(opts.clone());
+        solver.factorize(&a).expect("cold factorization")
+    });
+
+    // --- session path: one plan, numeric-only steps ---
+    let (plan, plan_seconds) = timed(|| Arc::new(FactorPlan::build(&a, &opts)));
+    println!(
+        "\nFactorPlan built once: {:.4}s (reorder {:.4}s, symbolic {:.4}s, \
+         preprocess {:.4}s, scatter-map+sim {:.4}s)",
+        plan.report.total_seconds(),
+        plan.report.reorder_seconds,
+        plan.report.symbolic_seconds,
+        plan.report.preprocess_seconds,
+        plan.report.plan_extra_seconds,
+    );
+
+    let mut session = SolverSession::from_plan(plan.clone());
+    let mut rng = Prng::new(7);
+    let mut warm_total = 0.0;
+    let mut worst_residual: f64 = 0.0;
+    for step in 0..timesteps {
+        let values = newton_values(&a, &mut rng);
+        let rep = session.refactorize(&values).expect("refactorize");
+        warm_total += rep.scatter_seconds + rep.numeric_seconds;
+
+        // transient excitation, several sources solved in one batched sweep
+        let rhs: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..a.n_rows()).map(|_| rng.signed_unit()).collect())
+            .collect();
+        let xs = session.solve_many(&rhs);
+        let astep = with_values(&a, &values);
+        for (b, x) in rhs.iter().zip(&xs) {
+            worst_residual = worst_residual.max(residual(&astep, x, b));
         }
-        println!(
-            "{label:18}: {timesteps} factorizations, numeric total {total_numeric:.3}s, \
-             worst residual {worst_residual:.2e}"
-        );
+        if step == 0 {
+            println!(
+                "first Newton step: scatter {:.5}s + numeric {:.4}s",
+                rep.scatter_seconds, rep.numeric_seconds
+            );
+        }
     }
 
-    // Show the blocking the two policies chose.
-    let mut ours = Solver::new(SolveOptions::ours(4));
-    let f = ours.factorize(&a).unwrap();
-    let sizes = f.report.block_sizes.clone();
+    let warm_step = warm_total / timesteps as f64;
     println!(
-        "\nirregular blocking chose {} blocks; first sizes {:?} … last sizes {:?}",
-        sizes.len(),
-        &sizes[..4.min(sizes.len())],
-        &sizes[sizes.len().saturating_sub(4)..]
+        "\n{} Newton steps through one session: {:.3}s total ({:.4}s/step), \
+         worst residual {:.2e}",
+        timesteps, warm_total, warm_step, worst_residual
     );
+    println!("cold factorize (full pipeline) per step: {cold_step:.4}s");
     println!(
-        "block nnz CV {:.3}; last-level nnz share {:.1}%",
-        f.report.balance.block_summary.cv(),
-        f.report.balance.last_level_share() * 100.0
+        "amortized speedup vs cold factorization: {:.2}x/step \
+         (plan cost {:.4}s repaid after {:.1} steps)",
+        cold_step / warm_step.max(1e-12),
+        plan_seconds,
+        plan_seconds / (cold_step - warm_step).max(1e-12),
     );
+    assert!(
+        Arc::ptr_eq(session.plan(), &plan),
+        "plan constructed exactly once and reused for every step"
+    );
+    assert_eq!(session.refactor_count(), timesteps);
 }

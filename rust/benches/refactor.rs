@@ -1,0 +1,112 @@
+//! Cold-vs-warm re-factorization bench: prices exactly what the session
+//! subsystem amortizes, on paper-style generator matrices.
+//!
+//! * **cold** — full `Solver::factorize` (ordering + symbolic + blocking
+//!   + DAG + numeric) per call;
+//! * **plan** — one `FactorPlan::build` (the structure-only work);
+//! * **warm** — `SolverSession::refactorize` per call (numeric only; the
+//!   plan is constructed exactly once, before the timed region);
+//! * **cache_hit** — `PlanCache::get_or_build` on a warm cache.
+//!
+//! Emits `BENCH_refactor.json` in the working directory.
+//!
+//! ```text
+//! cargo bench --bench refactor
+//! ```
+
+mod common;
+
+use common::{bench, section};
+use sparselu::session::{FactorPlan, PlanCache, SolverSession};
+use sparselu::solver::{SolveOptions, Solver};
+use sparselu::sparse::gen;
+use std::io::Write;
+use std::sync::Arc;
+
+fn main() {
+    let suite = [
+        (
+            "ASIC-like-bbd",
+            gen::circuit_bbd(gen::CircuitParams {
+                n: 3000,
+                border_frac: 0.05,
+                border_density: 0.35,
+                interior_deg: 2,
+                seed: 0x680F,
+            }),
+        ),
+        ("ecology-like-grid2d", gen::grid2d_laplacian(45, 45)),
+        ("dielFilter-like-em", gen::electromagnetics_like(2200, 24, 2, 0xD1E1)),
+    ];
+    let opts = SolveOptions::ours(1);
+    let mut rows = Vec::new();
+
+    for (name, a) in &suite {
+        section(name);
+        let cold = bench(&format!("{name} cold factorize"), 8, || {
+            let mut solver = Solver::new(opts.clone());
+            solver.factorize(a).expect("cold factorize").report.numeric_seconds
+        });
+
+        let plan_build = bench(&format!("{name} FactorPlan::build"), 8, || {
+            FactorPlan::build(a, &opts).report.nnz_ldu
+        });
+
+        // the plan for the warm path is constructed exactly ONCE, here,
+        // outside the timed region — refactorize cannot rebuild it (the
+        // session API has no path that does structure work)
+        let plan = Arc::new(FactorPlan::build(a, &opts));
+        let mut session = SolverSession::from_plan(plan.clone());
+        let warm = bench(&format!("{name} warm refactorize"), 16, || {
+            session.refactorize(&a.values).expect("refactorize").numeric_seconds
+        });
+        assert!(
+            Arc::strong_count(&plan) >= 2,
+            "the single pre-built plan is the one the session used"
+        );
+        let refactors = session.refactor_count();
+
+        let mut cache = PlanCache::new(4);
+        let _ = cache.get_or_build(a, &opts); // warm the cache (1 miss)
+        let cache_hit = bench(&format!("{name} PlanCache hit"), 32, || {
+            cache.get_or_build(a, &opts).report.nnz_ldu
+        });
+        assert_eq!(cache.misses(), 1, "warm cache must never rebuild the plan");
+
+        let saving = cold.median - warm.median;
+        println!(
+            "  -> preprocessing saved per warm call: {saving:.6}s \
+             ({:.1}x cold/warm, {} refactorizations through one plan)",
+            cold.median / warm.median.max(1e-12),
+            refactors,
+        );
+        rows.push(format!(
+            concat!(
+                "    {{\"matrix\": \"{}\", \"n\": {}, \"nnz\": {}, ",
+                "\"cold_median_s\": {:.9}, \"plan_build_median_s\": {:.9}, ",
+                "\"warm_median_s\": {:.9}, \"cache_hit_median_s\": {:.9}, ",
+                "\"preprocess_saving_s\": {:.9}, \"cold_over_warm\": {:.3}, ",
+                "\"plan_builds_in_warm_path\": 1, \"warm_refactorizations\": {}}}"
+            ),
+            name,
+            a.n_rows(),
+            a.nnz(),
+            cold.median,
+            plan_build.median,
+            warm.median,
+            cache_hit.median,
+            saving,
+            cold.median / warm.median.max(1e-12),
+            refactors,
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"refactor\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let path = "BENCH_refactor.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_refactor.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_refactor.json");
+    println!("\nwrote {path}");
+}

@@ -56,6 +56,26 @@ pub fn factorize_parallel(
     num_workers: u32,
 ) -> Result<(Factors, RunReport), FactorError> {
     let nm = NumericMatrix::from_blocked(bm);
+    let report = run_dag(&nm, dag, policy, backend, num_workers)?;
+    let n = report.total_tasks;
+    Ok((Factors { numeric: nm, sparse_ops: n, dense_ops: 0 }, report))
+}
+
+/// Execute the task DAG over an **existing** [`NumericMatrix`] — the
+/// re-entrant core of [`factorize_parallel`].
+///
+/// This is the numeric-only path [`crate::session::SolverSession`] re-runs
+/// on every re-factorization: the blocked structure, the DAG and the
+/// per-block value storage are all preallocated by the plan/session; this
+/// function only schedules block kernels over them (the per-run dependency
+/// counters are the sole transient allocation).
+pub fn run_dag(
+    nm: &NumericMatrix,
+    dag: &TaskDag,
+    policy: &KernelPolicy,
+    backend: &(dyn DenseBackend + Sync),
+    num_workers: u32,
+) -> Result<RunReport, FactorError> {
     let p = num_workers as usize;
     let n = dag.tasks.len();
 
@@ -145,17 +165,13 @@ pub fn factorize_parallel(
     }
     assert_eq!(q.done.load(Ordering::SeqCst), n, "not all tasks executed");
 
-    let report = RunReport {
+    Ok(RunReport {
         wall_seconds: wall,
         busy: busy.iter().map(|b| *b.lock().unwrap()).collect(),
         tasks_done: counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
         total_tasks: n,
         workers: num_workers,
-    };
-    Ok((
-        Factors { numeric: nm, sparse_ops: n, dense_ops: 0 },
-        report,
-    ))
+    })
 }
 
 /// Convenience: build DAG + run in one call (measured path).

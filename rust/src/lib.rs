@@ -22,10 +22,19 @@
 //! * [`gpu_model`] — A100 roofline cost model used to report modeled GPU
 //!   times alongside measured CPU wall-clock.
 //! * [`runtime`] — PJRT CPU client wrapper loading `artifacts/*.hlo.txt`.
-//! * [`solver`] — the high-level [`solver::Solver`] API tying it together.
+//! * [`solver`] — the high-level one-shot [`solver::Solver`] API.
+//! * [`session`] — plan-cached re-factorization: an immutable
+//!   [`session::FactorPlan`] (ordering + symbolic + blocking + DAG +
+//!   placement, built once per sparsity pattern), a
+//!   [`session::SolverSession`] whose `refactorize` re-runs only the
+//!   numeric phase over preallocated storage, and a
+//!   [`session::PlanCache`] (LRU on
+//!   [`sparse::Csc::pattern_fingerprint`]) for serving workloads.
 //! * [`bench_harness`] — regenerates every table and figure of the paper.
 //!
 //! ## Quickstart
+//!
+//! One-shot solve:
 //!
 //! ```no_run
 //! use sparselu::solver::{Solver, SolveOptions, BlockingPolicy};
@@ -40,6 +49,35 @@
 //! let r = sparselu::sparse::residual(&a, &x, &b);
 //! assert!(r < 1e-8);
 //! ```
+//!
+//! ## Session workflow (repeated solves, fixed sparsity)
+//!
+//! Circuit simulation, Newton iterations and timestepping re-factorize
+//! the *same pattern* with *new values* thousands of times. Build the
+//! plan once and pay only the numeric phase per step:
+//!
+//! ```no_run
+//! use sparselu::session::{FactorPlan, PlanCache, SolverSession};
+//! use sparselu::solver::SolveOptions;
+//! use sparselu::sparse::gen;
+//! use std::sync::Arc;
+//!
+//! let a = gen::circuit_bbd(gen::CircuitParams::default());
+//! let opts = SolveOptions::ours(4);
+//!
+//! // one plan per sparsity pattern (or let a PlanCache manage them)
+//! let mut cache = PlanCache::new(8);
+//! let plan: Arc<FactorPlan> = cache.get_or_build(&a, &opts);
+//!
+//! let mut session = SolverSession::from_plan(plan);
+//! for _newton_step in 0..100 {
+//!     let values = a.values.clone(); // updated conductances, same pattern
+//!     session.refactorize(&values).unwrap(); // numeric-only, no allocation
+//!     let rhs: Vec<Vec<f64>> = vec![vec![1.0; a.n_rows()]; 4];
+//!     let xs = session.solve_many(&rhs); // batched multi-RHS solve
+//!     assert_eq!(xs.len(), 4);
+//! }
+//! ```
 
 pub mod sparse;
 pub mod ordering;
@@ -49,6 +87,7 @@ pub mod numeric;
 pub mod coordinator;
 pub mod gpu_model;
 pub mod runtime;
+pub mod session;
 pub mod solver;
 pub mod bench_harness;
 pub mod util;

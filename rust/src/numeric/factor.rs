@@ -124,6 +124,40 @@ impl NumericMatrix {
         Self { structure: bm, values, max_dim }
     }
 
+    /// Like [`Self::from_blocked`] but with zero-filled value storage —
+    /// for sessions, whose first `refactorize` overwrites every value
+    /// anyway, this skips the O(nnz) copy of the builder's stale values.
+    pub fn from_blocked_zeroed(bm: Arc<BlockedMatrix>) -> Self {
+        let values = bm
+            .blocks
+            .iter()
+            .map(|b| RwLock::new(vec![0.0; b.nnz()]))
+            .collect();
+        let max_dim = bm
+            .blocks
+            .iter()
+            .map(|b| b.n_rows.max(b.n_cols) as usize)
+            .max()
+            .unwrap_or(0);
+        Self { structure: bm, values, max_dim }
+    }
+
+    /// Zero every stored value — the first step of a numeric-only
+    /// re-factorization (new values are then scattered in through the
+    /// plan's scatter map). Takes `&mut self`, so no locks are acquired
+    /// and no storage is allocated or freed.
+    pub fn zero_values(&mut self) {
+        for v in &mut self.values {
+            v.get_mut().unwrap().fill(0.0);
+        }
+    }
+
+    /// Lock-free mutable access to one block's values (exclusive access
+    /// to the whole numeric matrix guarantees soundness).
+    pub fn values_mut(&mut self, id: u32) -> &mut [f64] {
+        self.values[id as usize].get_mut().unwrap()
+    }
+
     /// Execute one block operation with the given policy/backend.
     ///
     /// Lock discipline: sources acquired as readers before the writer

@@ -97,6 +97,139 @@ pub fn solve(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Solve `L U X = B` for several right-hand sides in one blocked sweep.
+///
+/// The factor blocks are traversed **once per block column** instead of
+/// once per right-hand side: every visited block updates all RHS columns
+/// before the sweep moves on, amortizing the pattern walk and keeping the
+/// block values hot in cache — the batched path behind
+/// [`crate::session::SolverSession::solve_many`]. Per RHS the entry-level
+/// operation order matches [`solve`] exactly, so results are bit-identical
+/// to repeated single-RHS solves.
+pub fn solve_multi(nm: &NumericMatrix, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let bm = &*nm.structure;
+    let n = bm.blocking.n();
+    let nrhs = bs.len();
+    if nrhs == 0 {
+        return Vec::new();
+    }
+    // pack row-major: x[i * nrhs + s] — one cache line serves all RHS of a row
+    let mut x = vec![0.0f64; n * nrhs];
+    for (s, b) in bs.iter().enumerate() {
+        assert_eq!(b.len(), n, "rhs {s} has wrong length");
+        for (i, &v) in b.iter().enumerate() {
+            x[i * nrhs + s] = v;
+        }
+    }
+    let positions = bm.blocking.positions();
+    let nb = bm.nb();
+    let mut alpha = vec![0.0f64; nrhs]; // per-column scratch (allocated once)
+
+    // ---- forward: L Y = B ----
+    for k in 0..nb {
+        let (lo, hi) = (positions[k], positions[k + 1]);
+        let did = bm.block_id(k, k).expect("diagonal block");
+        let dpat = bm.block(did);
+        let dvals = nm.values[did as usize].read().unwrap();
+        for c in 0..(hi - lo) {
+            alpha.copy_from_slice(&x[(lo + c) * nrhs..(lo + c + 1) * nrhs]);
+            if alpha.iter().all(|&a| a == 0.0) {
+                continue;
+            }
+            let (cs, ce) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
+            let rows = &dpat.row_idx[cs..ce];
+            let dstart = dpat.diag_pos[c] as usize + 1;
+            for t in dstart..rows.len() {
+                let v = dvals[cs + t];
+                let r = lo + rows[t] as usize;
+                for s in 0..nrhs {
+                    x[r * nrhs + s] -= alpha[s] * v;
+                }
+            }
+        }
+        drop(dvals);
+        for &id in &bm.by_col[k] {
+            let blk = bm.block(id);
+            let i = blk.bi as usize;
+            if i <= k {
+                continue;
+            }
+            let rlo = positions[i];
+            let vals = nm.values[id as usize].read().unwrap();
+            for c in 0..blk.n_cols as usize {
+                alpha.copy_from_slice(&x[(lo + c) * nrhs..(lo + c + 1) * nrhs]);
+                if alpha.iter().all(|&a| a == 0.0) {
+                    continue;
+                }
+                for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {
+                    let v = vals[t];
+                    let r = rlo + blk.row_idx[t] as usize;
+                    for s in 0..nrhs {
+                        x[r * nrhs + s] -= alpha[s] * v;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- backward: U X = Y ----
+    for k in (0..nb).rev() {
+        let (lo, hi) = (positions[k], positions[k + 1]);
+        let did = bm.block_id(k, k).expect("diagonal block");
+        let dpat = bm.block(did);
+        let dvals = nm.values[did as usize].read().unwrap();
+        for c in (0..(hi - lo)).rev() {
+            let (cs, ce) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
+            let rows = &dpat.row_idx[cs..ce];
+            let dpos = dpat.diag_pos[c] as usize;
+            let piv = dvals[cs + dpos];
+            for s in 0..nrhs {
+                let xc = x[(lo + c) * nrhs + s] / piv;
+                x[(lo + c) * nrhs + s] = xc;
+                alpha[s] = xc;
+            }
+            if alpha.iter().all(|&a| a == 0.0) {
+                continue;
+            }
+            for t in 0..dpos {
+                let v = dvals[cs + t];
+                let r = lo + rows[t] as usize;
+                for s in 0..nrhs {
+                    x[r * nrhs + s] -= alpha[s] * v;
+                }
+            }
+        }
+        drop(dvals);
+        for &id in &bm.by_col[k] {
+            let blk = bm.block(id);
+            let i = blk.bi as usize;
+            if i >= k {
+                continue;
+            }
+            let rlo = positions[i];
+            let vals = nm.values[id as usize].read().unwrap();
+            for c in 0..blk.n_cols as usize {
+                alpha.copy_from_slice(&x[(lo + c) * nrhs..(lo + c + 1) * nrhs]);
+                if alpha.iter().all(|&a| a == 0.0) {
+                    continue;
+                }
+                for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {
+                    let v = vals[t];
+                    let r = rlo + blk.row_idx[t] as usize;
+                    for s in 0..nrhs {
+                        x[r * nrhs + s] -= alpha[s] * v;
+                    }
+                }
+            }
+        }
+    }
+
+    // unpack
+    (0..nrhs)
+        .map(|s| (0..n).map(|i| x[i * nrhs + s]).collect())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use crate::blocking::{regular_blocking, BlockedMatrix};
@@ -138,6 +271,26 @@ mod tests {
         let f = factorize_sequential(bm, &KernelPolicy::default(), &CpuDense).unwrap();
         let x = f.solve(&vec![0.0; 36]);
         assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn solve_multi_matches_single_bitwise() {
+        let a = gen::banded_fem(80, &[1, 5], 0.9, 3);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(80, 13)));
+        let f = factorize_sequential(bm, &KernelPolicy::default(), &CpuDense).unwrap();
+        let mut rng = crate::util::Prng::new(99);
+        let bs: Vec<Vec<f64>> = (0..5)
+            .map(|_| (0..80).map(|_| rng.signed_unit() * 4.0).collect())
+            .collect();
+        let batched = super::solve_multi(&f.numeric, &bs);
+        assert_eq!(batched.len(), 5);
+        for (b, x) in bs.iter().zip(&batched) {
+            assert_eq!(x, &f.solve(b), "batched solve must be bit-identical");
+            assert!(residual(&a, x, b) < 1e-9);
+        }
+        assert!(super::solve_multi(&f.numeric, &[]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! [`PlanCache`] — LRU cache of [`FactorPlan`]s keyed by pattern
+//! fingerprint + solve-options signature.
+//!
+//! Serving workloads see a small working set of sparsity patterns (one
+//! per netlist / mesh / model under simulation) hit by a huge stream of
+//! numeric re-factorizations. The cache makes plan reuse automatic: the
+//! first request for a pattern pays the full structure analysis, every
+//! later request gets the shared `Arc<FactorPlan>` back in O(capacity).
+
+use super::plan::FactorPlan;
+use crate::solver::{BlockingPolicy, SolveOptions};
+use crate::sparse::Csc;
+use std::sync::Arc;
+
+/// Least-recently-used plan cache.
+pub struct PlanCache {
+    capacity: usize,
+    /// LRU order: index 0 = least recent, last = most recent. Linear
+    /// scans are fine at the capacities that make sense here (a handful
+    /// to a few hundred patterns).
+    entries: Vec<(u64, Arc<FactorPlan>)>,
+    hits: usize,
+    misses: usize,
+}
+
+impl PlanCache {
+    /// Cache holding up to `capacity` plans.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "PlanCache needs capacity >= 1");
+        Self { capacity, entries: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    /// The cache key for a matrix under given options: pattern
+    /// fingerprint mixed with an options signature, so the same pattern
+    /// under different blocking/kernel/worker settings gets distinct
+    /// plans.
+    pub fn key_for(a: &Csc, opts: &SolveOptions) -> u64 {
+        splitmix(a.pattern_fingerprint() ^ options_signature(opts))
+    }
+
+    /// Fetch the plan for `(a, opts)`, building and inserting it on miss.
+    /// On hit the plan is additionally verified against `a` (shape + nnz
+    /// + fingerprint) so a hash collision can never hand back a plan for
+    /// a different pattern. The pattern is hashed once per call.
+    pub fn get_or_build(&mut self, a: &Csc, opts: &SolveOptions) -> Arc<FactorPlan> {
+        let fp = a.pattern_fingerprint();
+        let key = splitmix(fp ^ options_signature(opts));
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            let p = &self.entries[pos].1;
+            if p.fingerprint() == fp
+                && p.n() == a.n_rows()
+                && p.n() == a.n_cols()
+                && p.nnz_a() == a.nnz()
+            {
+                self.hits += 1;
+                let entry = self.entries.remove(pos);
+                let plan = entry.1.clone();
+                self.entries.push(entry); // move to most-recent
+                return plan;
+            }
+            // fingerprint collision: evict the impostor and rebuild
+            self.entries.remove(pos);
+        }
+        self.misses += 1;
+        let plan = Arc::new(FactorPlan::build(a, opts));
+        if self.entries.len() == self.capacity {
+            self.entries.remove(0); // evict least-recent
+        }
+        self.entries.push((key, plan.clone()));
+        plan
+    }
+
+    /// Plans currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Drop every cached plan (counters are kept).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+/// Hash every option that influences a plan's structure or costs.
+fn options_signature(opts: &SolveOptions) -> u64 {
+    let mut h: u64 = 0x9e37_79b9_7f4a_7c15;
+    let mut mix = |x: u64| h = splitmix(h ^ x);
+    mix(opts.ordering as u64);
+    match &opts.blocking {
+        BlockingPolicy::Regular(s) => {
+            mix(1);
+            mix(*s as u64);
+        }
+        BlockingPolicy::PanguSelect => mix(2),
+        BlockingPolicy::Irregular => mix(3),
+    }
+    mix(opts.kernels.dense_threshold.to_bits());
+    mix(opts.kernels.force_dense as u64);
+    mix(opts.kernels.use_runtime as u64);
+    mix(opts.workers as u64);
+    let ir = &opts.irregular;
+    mix(ir.sample_points as u64);
+    mix(ir.step as u64);
+    mix(ir.max_num as u64);
+    mix(ir.threshold.map_or(u64::MAX, f64::to_bits));
+    mix(ir.min_block as u64);
+    let m = &opts.model;
+    for f in [
+        m.peak_flops,
+        m.mem_bw,
+        m.launch_overhead,
+        m.eff_sparse_factor,
+        m.eff_sparse_update,
+        m.eff_dense,
+        m.link_bw,
+        m.link_latency,
+        m.col_latency,
+        m.col_latency_quad,
+        m.sat_half_work,
+    ] {
+        mix(f.to_bits());
+    }
+    mix(m.concurrent_kernels as u64);
+    drop(mix);
+    h
+}
+
+/// splitmix64 finalizer — cheap avalanche for the key mix.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn second_request_hits_and_shares_plan() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut cache = PlanCache::new(4);
+        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1));
+        let p2 = cache.get_or_build(&a, &SolveOptions::ours(1));
+        assert!(Arc::ptr_eq(&p1, &p2), "hit must return the same plan");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn same_pattern_new_values_still_hits() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut b = a.clone();
+        for v in &mut b.values {
+            *v *= 1.5;
+        }
+        let mut cache = PlanCache::new(4);
+        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1));
+        let p2 = cache.get_or_build(&b, &SolveOptions::ours(1));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn different_options_get_distinct_plans() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut cache = PlanCache::new(4);
+        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1));
+        let p2 = cache.get_or_build(&a, &SolveOptions::pangulu(1));
+        let p3 = cache.get_or_build(&a, &SolveOptions::ours(2));
+        assert!(!Arc::ptr_eq(&p1, &p2));
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mats = [
+            gen::grid2d_laplacian(6, 6),
+            gen::grid2d_laplacian(6, 7),
+            gen::grid2d_laplacian(7, 7),
+        ];
+        let opts = SolveOptions::ours(1);
+        let mut cache = PlanCache::new(2);
+        cache.get_or_build(&mats[0], &opts);
+        cache.get_or_build(&mats[1], &opts);
+        cache.get_or_build(&mats[0], &opts); // refresh 0 → 1 is now LRU
+        cache.get_or_build(&mats[2], &opts); // evicts 1
+        assert_eq!(cache.len(), 2);
+        cache.get_or_build(&mats[0], &opts); // still cached
+        assert_eq!(cache.hits(), 2);
+        cache.get_or_build(&mats[1], &opts); // was evicted → miss
+        assert_eq!(cache.misses(), 4);
+    }
+}

@@ -1,0 +1,47 @@
+//! Plan-cached re-factorization sessions — factor the *pattern* once,
+//! factor the *values* millions of times.
+//!
+//! Everything the paper contributes (the diagonal-block feature, the
+//! irregular blocking, the task DAG over the blocks) depends only on the
+//! sparsity pattern. The dominant real workload for sparse LU — SPICE
+//! Newton iterations, transient timesteps, parameter sweeps — re-factors
+//! the **same pattern** with **new values** over and over. This module
+//! splits the pipeline accordingly:
+//!
+//! * [`FactorPlan`] — immutable, `Arc`-shareable product of the
+//!   structure-only phases: ordering + symbolic pattern + blocking +
+//!   task DAG + placement + a precomputed value scatter map.
+//! * [`SolverSession`] — binds a plan to preallocated blocked storage;
+//!   [`SolverSession::refactorize`] scatters new values and re-runs the
+//!   DAG with no symbolic work and no per-call block allocation, and
+//!   [`SolverSession::solve_many`] batches multi-RHS triangular solves.
+//! * [`PlanCache`] — LRU over [`crate::sparse::Csc::pattern_fingerprint`]
+//!   so serving paths get plan reuse without bookkeeping.
+//!
+//! ```no_run
+//! use sparselu::session::{FactorPlan, SolverSession};
+//! use sparselu::solver::SolveOptions;
+//! use sparselu::sparse::gen;
+//! use std::sync::Arc;
+//!
+//! let a = gen::circuit_bbd(gen::CircuitParams::default());
+//! let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(4)));
+//! let mut session = SolverSession::from_plan(plan);
+//! for _newton_step in 0..1000 {
+//!     // update conductances, same pattern
+//!     let values = a.values.clone();
+//!     session.refactorize(&values).unwrap();
+//!     let b = vec![1.0; a.n_rows()];
+//!     let x = session.solve(&b);
+//!     assert_eq!(x.len(), a.n_rows());
+//! }
+//! ```
+
+pub mod cache;
+pub mod plan;
+#[allow(clippy::module_inception)]
+pub mod session;
+
+pub use cache::PlanCache;
+pub use plan::{FactorPlan, PlanReport};
+pub use session::{RefactorReport, SolverSession};

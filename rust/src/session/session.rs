@@ -1,0 +1,207 @@
+//! [`SolverSession`] — the compute-many half of the split pipeline.
+//!
+//! A session binds one [`FactorPlan`] to preallocated numeric storage and
+//! a dense backend. `refactorize` scatters a new value vector through the
+//! plan's precomputed map and re-runs the plan's task DAG: **no ordering,
+//! no symbolic factorization, no blocking, no DAG construction and no
+//! per-call block allocation** happen on this path — exactly the repeated
+//! Newton-step / transient-timestep workload of SPICE-style circuit
+//! simulation the paper targets.
+
+use super::plan::FactorPlan;
+use crate::coordinator::{self, RunReport};
+use crate::numeric::factor::{CpuDense, DenseBackend, FactorError, Factors, NumericMatrix};
+use crate::numeric::{trisolve, trisolve_t};
+use crate::sparse::Csc;
+use crate::util::timer::timed;
+use std::sync::Arc;
+
+/// Timing report of one numeric-only re-factorization.
+#[derive(Clone, Debug)]
+pub struct RefactorReport {
+    /// Scatter (value placement) seconds.
+    pub scatter_seconds: f64,
+    /// DAG execution seconds.
+    pub numeric_seconds: f64,
+    /// Per-worker execution report.
+    pub run: RunReport,
+}
+
+/// A re-usable factorization session over a fixed sparsity pattern.
+pub struct SolverSession<'b> {
+    plan: Arc<FactorPlan>,
+    numeric: NumericMatrix,
+    backend: &'b (dyn DenseBackend + Sync),
+    refactor_count: usize,
+    factored: bool,
+}
+
+impl SolverSession<'static> {
+    /// Session over `plan` with the pure-rust dense backend.
+    pub fn from_plan(plan: Arc<FactorPlan>) -> Self {
+        static CPU: CpuDense = CpuDense;
+        Self::with_backend(plan, &CPU)
+    }
+}
+
+impl<'b> SolverSession<'b> {
+    /// Session over `plan` with a custom dense backend (e.g.
+    /// [`crate::runtime::PjrtDense`]). Allocates the blocked value
+    /// storage **once**; every later call reuses it.
+    pub fn with_backend(plan: Arc<FactorPlan>, backend: &'b (dyn DenseBackend + Sync)) -> Self {
+        // zero-filled storage: the first refactorize overwrites every
+        // value, so copying the plan's stale block values would be waste
+        let numeric = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
+        Self { plan, numeric, backend, refactor_count: 0, factored: false }
+    }
+
+    pub fn plan(&self) -> &Arc<FactorPlan> {
+        &self.plan
+    }
+
+    /// Number of completed re-factorizations.
+    pub fn refactor_count(&self) -> usize {
+        self.refactor_count
+    }
+
+    /// Has a successful (re-)factorization produced usable factors?
+    pub fn is_factored(&self) -> bool {
+        self.factored
+    }
+
+    /// Numeric-only re-factorization: scatter `values` (the nonzeros of
+    /// `A` in its original CSC order) into the preallocated blocked
+    /// storage and re-run the plan's task DAG.
+    ///
+    /// Results are bit-identical to a cold `Solver::factorize` of the
+    /// same matrix: the scatter reproduces the partitioner's initial
+    /// state exactly and the DAG serializes updates per target block in
+    /// the same order.
+    pub fn refactorize(&mut self, values: &[f64]) -> Result<RefactorReport, FactorError> {
+        self.factored = false;
+        let (_, scatter_seconds) = timed(|| self.plan.scatter_values(values, &mut self.numeric));
+        let opts = self.plan.options();
+        let (run, numeric_seconds) = timed(|| {
+            coordinator::run_dag(
+                &self.numeric,
+                &self.plan.dag,
+                &opts.kernels,
+                self.backend,
+                opts.workers,
+            )
+        });
+        let run = run?;
+        self.factored = true;
+        self.refactor_count += 1;
+        Ok(RefactorReport { scatter_seconds, numeric_seconds, run })
+    }
+
+    /// As [`Self::refactorize`] but takes the whole matrix and checks its
+    /// pattern against the plan first.
+    pub fn refactorize_matrix(&mut self, a: &Csc) -> Result<RefactorReport, FactorError> {
+        assert!(
+            self.plan.matches(a),
+            "matrix pattern does not match the session's FactorPlan \
+             (fingerprint {:#018x})",
+            self.plan.fingerprint()
+        );
+        self.refactorize(&a.values)
+    }
+
+    /// Solve `A x = b` with the current factors (permutation applied
+    /// around the blocked triangular solves).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert!(self.factored, "solve before a successful refactorize");
+        let pb = self.plan.permutation().permute_vec(b);
+        let px = trisolve::solve(&self.numeric, &pb);
+        self.plan.inverse_permutation().permute_vec(&px)
+    }
+
+    /// Solve `Aᵀ x = b` with the same factors.
+    pub fn solve_transpose(&self, b: &[f64]) -> Vec<f64> {
+        assert!(self.factored, "solve before a successful refactorize");
+        let pb = self.plan.permutation().permute_vec(b);
+        let px = trisolve_t::solve_transpose(&self.numeric, &pb);
+        self.plan.inverse_permutation().permute_vec(&px)
+    }
+
+    /// Solve `A X = B` for many right-hand sides in one batched blocked
+    /// sweep ([`trisolve::solve_multi`]) — factor once, solve many,
+    /// traverse the factor blocks once.
+    pub fn solve_many(&self, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        assert!(self.factored, "solve before a successful refactorize");
+        let perm = self.plan.permutation();
+        let pbs: Vec<Vec<f64>> = bs.iter().map(|b| perm.permute_vec(b)).collect();
+        let pxs = trisolve::solve_multi(&self.numeric, &pbs);
+        let inv = self.plan.inverse_permutation();
+        pxs.iter().map(|px| inv.permute_vec(px)).collect()
+    }
+
+    /// Consume the session, yielding the factors (for interop with the
+    /// one-shot [`crate::solver::Factorization`] API).
+    pub fn into_factors(self) -> Factors {
+        assert!(self.factored, "into_factors before a successful refactorize");
+        let tasks = self.plan.dag.tasks.len();
+        Factors { numeric: self.numeric, sparse_ops: tasks, dense_ops: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolveOptions;
+    use crate::sparse::{gen, residual};
+
+    fn session_for(a: &Csc, opts: SolveOptions) -> SolverSession<'static> {
+        SolverSession::from_plan(Arc::new(FactorPlan::build(a, &opts)))
+    }
+
+    #[test]
+    fn refactorize_then_solve() {
+        let a = gen::grid2d_laplacian(9, 9);
+        let mut s = session_for(&a, SolveOptions::ours(1));
+        assert!(!s.is_factored());
+        s.refactorize_matrix(&a).unwrap();
+        assert!(s.is_factored());
+        assert_eq!(s.refactor_count(), 1);
+        let b: Vec<f64> = (0..81).map(|i| (i % 7) as f64 - 3.0).collect();
+        let x = s.solve(&b);
+        assert!(residual(&a, &x, &b) < 1e-9);
+    }
+
+    #[test]
+    fn repeated_refactorize_is_deterministic() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 250, ..Default::default() });
+        let mut s = session_for(&a, SolveOptions::ours(2));
+        let b: Vec<f64> = (0..250).map(|i| ((i * 3) % 11) as f64 - 5.0).collect();
+        s.refactorize(&a.values).unwrap();
+        let x1 = s.solve(&b);
+        s.refactorize(&a.values).unwrap();
+        let x2 = s.solve(&b);
+        assert_eq!(x1, x2, "same values must reproduce bit-identical solves");
+        assert_eq!(s.refactor_count(), 2);
+    }
+
+    #[test]
+    fn transpose_solve_through_session() {
+        let a = gen::directed_graph(120, 3, 9);
+        let mut s = session_for(&a, SolveOptions::ours(1));
+        s.refactorize_matrix(&a).unwrap();
+        let mut rng = crate::util::Prng::new(4);
+        let x_true: Vec<f64> = (0..120).map(|_| rng.signed_unit()).collect();
+        let b = a.transpose().mul_vec(&x_true);
+        let x = s.solve_transpose(&b);
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn pattern_mismatch_panics() {
+        let a = gen::grid2d_laplacian(6, 6);
+        let other = gen::grid2d_laplacian(6, 7);
+        let mut s = session_for(&a, SolveOptions::ours(1));
+        let _ = s.refactorize_matrix(&other);
+    }
+}

@@ -8,18 +8,22 @@
 //! * [`SolveOptions::superlu_like`] — regular blocking + dense kernels
 //!   everywhere (the SuperLU_DIST-style supernodal/BLAS baseline).
 
-use crate::blocking::{
-    self, irregular_blocking, regular_blocking, BalanceReport, BlockedMatrix, Blocking,
-    DiagFeature, IrregularParams,
-};
-use crate::coordinator::{self, Placement, RunReport, SimReport, TaskDag};
+//! Since the session subsystem landed, `Solver` is a thin wrapper: a
+//! one-shot `factorize` builds a [`crate::session::FactorPlan`] and runs
+//! one numeric pass over it. Workloads that re-factorize a fixed
+//! pattern should hold the plan plus a
+//! [`crate::session::SolverSession`] directly (see the
+//! [`crate::session`] docs).
+
+use crate::blocking::{BalanceReport, IrregularParams};
+use crate::coordinator;
 use crate::gpu_model::CostModel;
-use crate::numeric::factor::{CpuDense, DenseBackend, FactorError, Factors};
+use crate::numeric::factor::{CpuDense, DenseBackend, FactorError, Factors, NumericMatrix};
 use crate::numeric::KernelPolicy;
-use crate::ordering::{order, OrderingMethod, Permutation};
+use crate::ordering::{OrderingMethod, Permutation};
+use crate::session::FactorPlan;
 use crate::sparse::Csc;
-use crate::symbolic;
-use crate::util::Stopwatch;
+use crate::util::timer::timed;
 use std::sync::Arc;
 
 /// How to partition the matrix into 2D blocks.
@@ -177,9 +181,15 @@ impl Factorization {
         x
     }
 
-    /// Solve for several right-hand sides (factor once, solve many).
+    /// Solve for several right-hand sides (factor once, solve many) —
+    /// batched through [`crate::numeric::trisolve::solve_multi`], so the
+    /// factor blocks are traversed once for all RHS. Results are
+    /// identical to repeated [`Self::solve`] calls.
     pub fn solve_many(&self, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
-        bs.iter().map(|b| self.solve(b)).collect()
+        let pbs: Vec<Vec<f64>> = bs.iter().map(|b| self.perm.permute_vec(b)).collect();
+        let pxs = crate::numeric::trisolve::solve_multi(&self.factors.numeric, &pbs);
+        let inv = self.perm.inverse();
+        pxs.iter().map(|px| inv.permute_vec(px)).collect()
     }
 
     pub fn factors(&self) -> &Factors {
@@ -215,87 +225,48 @@ impl<'b> Solver<'b> {
         &self.opts
     }
 
-    /// Run the full pipeline on `a`.
+    /// Run the full pipeline on `a`: build a fresh [`FactorPlan`]
+    /// (ordering → symbolic → blocking → DAG), then one numeric pass
+    /// over it.
+    ///
+    /// The one-shot path seeds the numeric storage directly from the
+    /// plan's blocked pattern (whose values *are* `a`'s, scattered during
+    /// symbolic assembly) instead of going through the session's
+    /// zero-and-scatter — identical results, no redundant O(nnz) passes.
+    /// Repeated solves on a fixed pattern should hold a
+    /// [`crate::session::SolverSession`] instead.
     pub fn factorize(&mut self, a: &Csc) -> Result<Factorization, FactorError> {
         assert_eq!(a.n_rows(), a.n_cols(), "square systems only");
-        let mut sw = Stopwatch::new();
-
-        // phase 1: reorder
-        let perm = order(a, self.opts.ordering);
-        let pa = a.permute_sym(perm.as_slice());
-        let reorder_seconds = sw.lap("reorder");
-
-        // phase 2: symbolic
-        let sym = symbolic::analyze(&pa);
-        let ldu = sym.ldu_pattern(&pa);
-        let symbolic_seconds = sw.lap("symbolic");
-
-        // phase 3a: blocking (the preprocessing the paper's §5.4 prices)
-        let blocking = self.choose_blocking(&ldu);
-        let bm = Arc::new(BlockedMatrix::build(&ldu, blocking));
-        let balance = BalanceReport::of(&bm);
-        let placement = Placement::square(self.opts.workers);
-        let dag = TaskDag::build(&bm, &self.opts.kernels, placement, &self.opts.model);
-        let preprocess_seconds = sw.lap("preprocess");
-
-        // phase 3b: numeric
-        let (factors, run) = coordinator::factorize_parallel(
-            bm.clone(),
-            &dag,
-            &self.opts.kernels,
-            self.backend,
-            self.opts.workers,
-        )?;
-        let numeric_seconds = sw.lap("numeric");
-
-        let sim = coordinator::simulate(&dag, self.opts.workers, &self.opts.model);
-        let report = build_report(
-            a, &ldu, &sym, &bm, &dag, &run, &sim, &balance,
-            reorder_seconds, symbolic_seconds, preprocess_seconds, numeric_seconds,
-        );
-        Ok(Factorization { factors, perm, report })
-    }
-
-    fn choose_blocking(&self, ldu: &Csc) -> Blocking {
-        let n = ldu.n_cols();
-        match &self.opts.blocking {
-            BlockingPolicy::Regular(size) => regular_blocking(n, (*size).min(n)),
-            BlockingPolicy::PanguSelect => {
-                let options = blocking::selection::scaled_options(n);
-                let size = blocking::selection::select_from(n, ldu.nnz(), &options);
-                regular_blocking(n, size.min(n))
-            }
-            BlockingPolicy::Irregular => {
-                let curve = DiagFeature::from_csc(ldu).curve();
-                irregular_blocking(&curve, &self.opts.irregular)
-            }
-        }
+        let plan = Arc::new(FactorPlan::build_for_oneshot(a, &self.opts));
+        let nm = NumericMatrix::from_blocked(plan.structure.clone());
+        let (run, numeric_seconds) = timed(|| {
+            coordinator::run_dag(&nm, &plan.dag, &self.opts.kernels, self.backend, self.opts.workers)
+        });
+        let run = run?;
+        let report = report_from_plan(&plan, numeric_seconds, &run.busy);
+        let factors = Factors {
+            numeric: nm,
+            sparse_ops: run.total_tasks,
+            dense_ops: 0,
+        };
+        Ok(Factorization { factors, perm: plan.permutation().clone(), report })
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn build_report(
-    a: &Csc,
-    ldu: &Csc,
-    sym: &symbolic::Symbolic,
-    bm: &BlockedMatrix,
-    dag: &TaskDag,
-    run: &RunReport,
-    sim: &SimReport,
-    balance: &BalanceReport,
-    reorder_seconds: f64,
-    symbolic_seconds: f64,
-    preprocess_seconds: f64,
-    numeric_seconds: f64,
-) -> SolveReport {
+/// Assemble the legacy per-solve report from plan products plus the
+/// numeric pass measurements.
+fn report_from_plan(plan: &FactorPlan, numeric_seconds: f64, busy: &[f64]) -> SolveReport {
+    let bm = &plan.structure;
+    let dag = &plan.dag;
+    let r = &plan.report;
     SolveReport {
-        n: a.n_cols(),
-        nnz_a: a.nnz(),
-        nnz_ldu: ldu.nnz(),
-        flops: sym.flops(),
-        reorder_seconds,
-        symbolic_seconds,
-        preprocess_seconds,
+        n: r.n,
+        nnz_a: r.nnz_a,
+        nnz_ldu: r.nnz_ldu,
+        flops: r.flops,
+        reorder_seconds: r.reorder_seconds,
+        symbolic_seconds: r.symbolic_seconds,
+        preprocess_seconds: r.preprocess_seconds,
         numeric_seconds,
         num_blocks: bm.nb(),
         block_sizes: bm.blocking.sizes(),
@@ -303,10 +274,10 @@ fn build_report(
         tasks: dag.tasks.len(),
         dag_levels: dag.num_levels,
         modeled_total_cost: dag.total_cost(),
-        modeled_makespan: sim.makespan,
-        modeled_utilization: sim.utilization.clone(),
-        measured_busy: run.busy.clone(),
-        balance: balance.clone(),
+        modeled_makespan: plan.sim.makespan,
+        modeled_utilization: plan.sim.utilization.clone(),
+        measured_busy: busy.to_vec(),
+        balance: plan.balance.clone(),
     }
 }
 

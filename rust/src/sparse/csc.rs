@@ -317,6 +317,36 @@ impl Csc {
             .collect()
     }
 
+    /// Structural fingerprint of the sparsity pattern: a 64-bit FNV-1a
+    /// hash over shape, `col_ptr` and `row_idx` — **values are ignored**.
+    /// Two matrices share a fingerprint iff (modulo hash collisions) they
+    /// have the same pattern, which is exactly the condition under which a
+    /// [`crate::session::FactorPlan`] can be reused for numeric-only
+    /// re-factorization.
+    pub fn pattern_fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: u64, x: u64) -> u64 {
+            let mut h = h;
+            for shift in [0u32, 16, 32, 48] {
+                h ^= (x >> shift) & 0xffff;
+                h = h.wrapping_mul(PRIME);
+            }
+            h
+        }
+        let mut h = OFFSET;
+        h = mix(h, self.n_rows as u64);
+        h = mix(h, self.n_cols as u64);
+        h = mix(h, self.nnz() as u64);
+        for &p in &self.col_ptr {
+            h = mix(h, p as u64);
+        }
+        for &r in &self.row_idx {
+            h = mix(h, r as u64);
+        }
+        h
+    }
+
     pub fn to_coo(&self) -> Coo {
         let mut coo = Coo::new(self.n_rows, self.n_cols);
         for j in 0..self.n_cols {
@@ -443,6 +473,22 @@ mod tests {
         let a = sample();
         assert!((a.density() - 5.0 / 9.0).abs() < 1e-12);
         assert_eq!(a.col_counts(), vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn fingerprint_ignores_values_but_not_pattern() {
+        let a = sample();
+        let mut b = sample();
+        for v in &mut b.values {
+            *v *= 3.5;
+        }
+        assert_eq!(a.pattern_fingerprint(), b.pattern_fingerprint());
+        // different pattern (drop one entry) must change the fingerprint
+        let c = Csc::new(3, 3, vec![0, 2, 3, 4], vec![0, 2, 1, 0], vec![1.0; 4]);
+        assert_ne!(a.pattern_fingerprint(), c.pattern_fingerprint());
+        // and a different shape with the same arrays must too
+        let d = Csc::new(4, 3, a.col_ptr.clone(), a.row_idx.clone(), a.values.clone());
+        assert_ne!(a.pattern_fingerprint(), d.pattern_fingerprint());
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Integration: the session subsystem's numeric-only re-factorization
+//! must be indistinguishable from a cold `Solver::factorize` — property
+//! tests across seeded random matrices (the proptest crate is unavailable
+//! offline; failures print the seed).
+
+use sparselu::session::{FactorPlan, PlanCache, SolverSession};
+use sparselu::solver::{SolveOptions, Solver};
+use sparselu::sparse::{gen, residual, Coo, Csc};
+use sparselu::util::Prng;
+use std::sync::Arc;
+
+const SEEDS: u64 = 16;
+
+/// Random diagonally-dominant sparse matrix with random size/density.
+fn random_matrix(seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let n = 20 + rng.below(230);
+    let per_row = 1 + rng.below(5);
+    let mut coo = Coo::with_capacity(n, n, n * (per_row + 1));
+    for i in 0..n {
+        for _ in 0..per_row {
+            let j = rng.below(n);
+            if j != i {
+                coo.push(i, j, rng.signed_unit());
+            }
+        }
+    }
+    let m = coo.to_csc();
+    let mut row_abs = vec![0.0; n];
+    for j in 0..n {
+        for (i, v) in m.col(j) {
+            if i != j {
+                row_abs[i] += v.abs();
+            }
+        }
+    }
+    let mut out = Coo::with_capacity(n, n, m.nnz() + n);
+    for j in 0..n {
+        for (i, v) in m.col(j) {
+            if i != j {
+                out.push(i, j, v);
+            }
+        }
+    }
+    for i in 0..n {
+        out.push(i, i, row_abs[i] + 1.0);
+    }
+    out.to_csc()
+}
+
+/// Same pattern as `a`, values perturbed deterministically.
+fn perturbed(a: &Csc, seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let values: Vec<f64> = a
+        .values
+        .iter()
+        .map(|v| v * (1.0 + 0.05 * rng.signed_unit()))
+        .collect();
+    Csc::from_parts_unchecked(
+        a.n_rows(),
+        a.n_cols(),
+        a.col_ptr.clone(),
+        a.row_idx.clone(),
+        values,
+    )
+}
+
+#[test]
+fn prop_refactorize_matches_cold_factorize_bitwise() {
+    for seed in 0..SEEDS {
+        let a = random_matrix(seed);
+        let n = a.n_rows();
+        let workers = 1 + (seed % 4) as u32;
+        let opts = SolveOptions::ours(workers);
+
+        // session: plan from the original pattern, refactorize with the
+        // values of a *different* matrix instance (same pattern)
+        let a2 = perturbed(&a, seed ^ 0xFACE);
+        let plan = Arc::new(FactorPlan::build(&a, &opts));
+        let mut session = SolverSession::from_plan(plan);
+        session
+            .refactorize_matrix(&a2)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+        // cold path on the same values
+        let mut solver = Solver::new(opts);
+        let cold = solver.factorize(&a2).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+        let mut rng = Prng::new(seed ^ 0xB0);
+        let b: Vec<f64> = (0..n).map(|_| rng.signed_unit() * 3.0).collect();
+        let x_session = session.solve(&b);
+        let x_cold = cold.solve(&b);
+        assert_eq!(
+            x_session, x_cold,
+            "seed {seed}: session refactorize must be bit-identical to cold factorize"
+        );
+        let r = residual(&a2, &x_session, &b);
+        assert!(r < 1e-8, "seed {seed}: residual {r}");
+    }
+}
+
+#[test]
+fn prop_refactorize_residual_equivalent_across_steps() {
+    // many Newton-style steps through one session stay well-conditioned
+    for seed in 0..6 {
+        let a = random_matrix(seed);
+        let n = a.n_rows();
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)));
+        let mut session = SolverSession::from_plan(plan);
+        for step in 0..5u64 {
+            let astep = perturbed(&a, seed * 31 + step);
+            session.refactorize_matrix(&astep).unwrap();
+            let b: Vec<f64> = (0..n).map(|i| ((i + step as usize) % 9) as f64 - 4.0).collect();
+            let x = session.solve(&b);
+            let r = residual(&astep, &x, &b);
+            assert!(r < 1e-8, "seed {seed} step {step}: residual {r}");
+        }
+        assert_eq!(session.refactor_count(), 5);
+    }
+}
+
+#[test]
+fn prop_solve_many_matches_repeated_single_solves() {
+    for seed in 0..SEEDS {
+        let a = random_matrix(seed);
+        let n = a.n_rows();
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let mut session = SolverSession::from_plan(plan);
+        session.refactorize_matrix(&a).unwrap();
+        let mut rng = Prng::new(seed ^ 0x51);
+        let nrhs = 1 + rng.below(6);
+        let bs: Vec<Vec<f64>> = (0..nrhs)
+            .map(|_| (0..n).map(|_| rng.signed_unit() * 5.0).collect())
+            .collect();
+        let batched = session.solve_many(&bs);
+        assert_eq!(batched.len(), nrhs);
+        for (s, (b, x)) in bs.iter().zip(&batched).enumerate() {
+            assert_eq!(
+                x,
+                &session.solve(b),
+                "seed {seed} rhs {s}: batched solve must equal single solve"
+            );
+            let r = residual(&a, x, b);
+            assert!(r < 1e-8, "seed {seed} rhs {s}: residual {r}");
+        }
+    }
+}
+
+#[test]
+fn plan_cache_serves_newton_sweep_with_one_build() {
+    let a = random_matrix(3);
+    let opts = SolveOptions::ours(2);
+    let mut cache = PlanCache::new(4);
+    let mut plans = Vec::new();
+    for step in 0..10u64 {
+        let astep = perturbed(&a, step);
+        plans.push(cache.get_or_build(&astep, &opts));
+    }
+    assert_eq!(cache.misses(), 1, "one structure analysis for the whole sweep");
+    assert_eq!(cache.hits(), 9);
+    for p in &plans[1..] {
+        assert!(Arc::ptr_eq(&plans[0], p));
+    }
+    // and the shared plan actually factorizes the perturbed steps
+    let mut session = SolverSession::from_plan(plans[0].clone());
+    let astep = perturbed(&a, 7);
+    session.refactorize_matrix(&astep).unwrap();
+    let b = vec![1.0; a.n_rows()];
+    let x = session.solve(&b);
+    assert!(residual(&astep, &x, &b) < 1e-8);
+}
+
+#[test]
+fn fingerprint_distinguishes_patterns_across_generators() {
+    let mats = [
+        gen::grid2d_laplacian(10, 10),
+        gen::grid2d_laplacian(10, 11),
+        gen::tridiagonal(100),
+        gen::circuit_bbd(gen::CircuitParams { n: 100, ..Default::default() }),
+    ];
+    let fps: Vec<u64> = mats.iter().map(|m| m.pattern_fingerprint()).collect();
+    for i in 0..fps.len() {
+        for j in (i + 1)..fps.len() {
+            assert_ne!(fps[i], fps[j], "matrices {i} and {j} collide");
+        }
+    }
+    // fingerprints are stable across clones and value changes
+    let p = perturbed(&mats[3], 5);
+    assert_eq!(p.pattern_fingerprint(), mats[3].pattern_fingerprint());
+}
