@@ -6,6 +6,9 @@
 //! * **plan** — one `FactorPlan::build` (the structure-only work);
 //! * **warm** — `SolverSession::refactorize` per call (numeric only; the
 //!   plan is constructed exactly once, before the timed region);
+//! * **partial** — `SolverSession::refactorize_partial` with a one-entry
+//!   change set confined to the trailing diagonal block (the incremental
+//!   path: dirty-block closure + pruned DAG subset);
 //! * **cache_hit** — `PlanCache::get_or_build` on a warm cache.
 //!
 //! Emits `BENCH_refactor.json` in the working directory.
@@ -17,7 +20,7 @@
 mod common;
 
 use common::{bench, section};
-use sparselu::session::{FactorPlan, PlanCache, SolverSession};
+use sparselu::session::{ChangeSet, FactorPlan, PlanCache, SolverSession};
 use sparselu::solver::{SolveOptions, Solver};
 use sparselu::sparse::gen;
 use std::io::Write;
@@ -64,7 +67,36 @@ fn main() {
             Arc::strong_count(&plan) >= 2,
             "the single pre-built plan is the one the session used"
         );
+
         let refactors = session.refactor_count();
+
+        // incremental: a one-entry change set whose permuted coordinate
+        // lands in the trailing diagonal block (the DAG sink), so the
+        // pruned subset is as small as it gets
+        let p = plan.permutation().as_slice();
+        let positions = plan.structure.blocking.positions();
+        let last_lo = positions[plan.structure.nb() - 1];
+        let r = (0..a.n_rows())
+            .find(|&i| p[i] >= last_lo && a.value_index(i, i).is_some())
+            .expect("diagonal entry in the trailing block");
+        let k = a.value_index(r, r).unwrap();
+        let base_v = a.values[k];
+        let mut executed = 0usize;
+        let mut skipped = 0usize;
+        let mut flip = 1.0f64;
+        let partial = bench(&format!("{name} partial refactorize (1 entry)"), 16, || {
+            flip = -flip; // alternate so every call is a real change
+            let cs = ChangeSet::from_value_indices([(k, base_v * (1.5 + 0.1 * flip))]);
+            let rep = session.refactorize_partial(&cs).expect("partial refactorize");
+            executed = rep.tasks_executed;
+            skipped = rep.tasks_skipped;
+            executed
+        });
+        println!(
+            "  -> partial refactorize executed {executed} of {} tasks \
+             ({skipped} skipped by reachability pruning)",
+            executed + skipped
+        );
 
         let mut cache = PlanCache::new(4);
         let _ = cache.get_or_build(a, &opts); // warm the cache (1 miss)
@@ -84,7 +116,9 @@ fn main() {
             concat!(
                 "    {{\"matrix\": \"{}\", \"n\": {}, \"nnz\": {}, ",
                 "\"cold_median_s\": {:.9}, \"plan_build_median_s\": {:.9}, ",
-                "\"warm_median_s\": {:.9}, \"cache_hit_median_s\": {:.9}, ",
+                "\"warm_median_s\": {:.9}, \"partial_median_s\": {:.9}, ",
+                "\"partial_tasks_executed\": {}, \"partial_tasks_skipped\": {}, ",
+                "\"warm_over_partial\": {:.3}, \"cache_hit_median_s\": {:.9}, ",
                 "\"preprocess_saving_s\": {:.9}, \"cold_over_warm\": {:.3}, ",
                 "\"plan_builds_in_warm_path\": 1, \"warm_refactorizations\": {}}}"
             ),
@@ -94,6 +128,10 @@ fn main() {
             cold.median,
             plan_build.median,
             warm.median,
+            partial.median,
+            executed,
+            skipped,
+            warm.median / partial.median.max(1e-12),
             cache_hit.median,
             saving,
             cold.median / warm.median.max(1e-12),

@@ -22,4 +22,4 @@ pub use dag::{Task, TaskDag};
 pub use metrics::LoadReport;
 pub use placement::Placement;
 pub use simulate::{simulate, SimReport};
-pub use workers::{factorize_parallel, run_dag, RunReport};
+pub use workers::{factorize_parallel, run_dag, run_dag_subset, RunReport};

@@ -76,14 +76,86 @@ pub fn run_dag(
     backend: &(dyn DenseBackend + Sync),
     num_workers: u32,
 ) -> Result<RunReport, FactorError> {
-    let p = num_workers as usize;
-    let n = dag.tasks.len();
+    run_dag_inner(nm, dag, None, policy, backend, num_workers)
+}
 
-    let deps: Vec<AtomicU32> = dag.tasks.iter().map(|t| AtomicU32::new(t.deps)).collect();
+/// Execute only the tasks with `in_subset[t] == true`, with the DAG's
+/// cross-task dependencies intact *within* the subset.
+///
+/// Dependency edges arriving from tasks **outside** the subset are treated
+/// as already satisfied: the caller guarantees those tasks' output blocks
+/// hold their final factored values from a previous run. This is the
+/// incremental re-factorization contract
+/// ([`crate::session::SolverSession::refactorize_partial`]): the subset is
+/// the set of tasks writing blocks forward-reachable from the dirty
+/// blocks, which is closed under "reads a recomputed block", so every
+/// out-of-subset dependency's output is unchanged by construction.
+///
+/// An all-`false` mask is valid and returns immediately with zero tasks
+/// executed.
+pub fn run_dag_subset(
+    nm: &NumericMatrix,
+    dag: &TaskDag,
+    in_subset: &[bool],
+    policy: &KernelPolicy,
+    backend: &(dyn DenseBackend + Sync),
+    num_workers: u32,
+) -> Result<RunReport, FactorError> {
+    assert_eq!(
+        in_subset.len(),
+        dag.tasks.len(),
+        "subset mask must cover every DAG task"
+    );
+    run_dag_inner(nm, dag, Some(in_subset), policy, backend, num_workers)
+}
+
+/// Is task `t` active under the (optional) subset mask?
+fn is_active(subset: Option<&[bool]>, t: usize) -> bool {
+    match subset {
+        None => true,
+        Some(mask) => mask[t],
+    }
+}
+
+fn run_dag_inner(
+    nm: &NumericMatrix,
+    dag: &TaskDag,
+    subset: Option<&[bool]>,
+    policy: &KernelPolicy,
+    backend: &(dyn DenseBackend + Sync),
+    num_workers: u32,
+) -> Result<RunReport, FactorError> {
+    let p = num_workers as usize;
+
+    // Dependency counters restricted to the active tasks: on the full
+    // path these are the DAG's stored in-degrees; on the subset path each
+    // active task counts only its in-subset predecessors.
+    let (deps, n): (Vec<AtomicU32>, usize) = match subset {
+        None => (
+            dag.tasks.iter().map(|t| AtomicU32::new(t.deps)).collect(),
+            dag.tasks.len(),
+        ),
+        Some(mask) => {
+            let mut counts = vec![0u32; dag.tasks.len()];
+            let mut total = 0usize;
+            for (t, task) in dag.tasks.iter().enumerate() {
+                if !mask[t] {
+                    continue;
+                }
+                total += 1;
+                for &o in &task.out {
+                    if mask[o as usize] {
+                        counts[o as usize] += 1;
+                    }
+                }
+            }
+            (counts.into_iter().map(AtomicU32::new).collect(), total)
+        }
+    };
     let mut initial: Vec<std::collections::VecDeque<u32>> =
         vec![std::collections::VecDeque::new(); p];
     for (t, task) in dag.tasks.iter().enumerate() {
-        if task.deps == 0 {
+        if is_active(subset, t) && deps[t].load(Ordering::Relaxed) == 0 {
             initial[task.owner as usize].push_back(t as u32);
         }
     }
@@ -137,10 +209,13 @@ pub fn run_dag(
                         q.cv.notify_all();
                         break;
                     }
-                    // release dependents
+                    // release dependents (inactive tasks have no counter
+                    // to decrement and must never enqueue)
                     let mut to_push: Vec<(usize, u32)> = Vec::new();
                     for &o in &task.out {
-                        if deps[o as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                        if is_active(subset, o as usize)
+                            && deps[o as usize].fetch_sub(1, Ordering::AcqRel) == 1
+                        {
                             to_push.push((dag.tasks[o as usize].owner as usize, o));
                         }
                     }
@@ -260,6 +335,50 @@ mod tests {
         let b: Vec<f64> = (0..500).map(|i| (i % 3) as f64).collect();
         let x = f.solve(&b);
         assert!(residual(&a, &x, &b) < 1e-9);
+    }
+
+    #[test]
+    fn subset_full_mask_matches_run_dag() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(64, 12)));
+        let policy = KernelPolicy::default();
+        let dag = TaskDag::build(&bm, &policy, Placement::square(2), &CostModel::a100());
+        let nm_full = NumericMatrix::from_blocked(bm.clone());
+        run_dag(&nm_full, &dag, &policy, &CpuDense, 2).unwrap();
+        let nm_sub = NumericMatrix::from_blocked(bm.clone());
+        let mask = vec![true; dag.tasks.len()];
+        let rep = run_dag_subset(&nm_sub, &dag, &mask, &policy, &CpuDense, 2).unwrap();
+        assert_eq!(rep.total_tasks, dag.tasks.len());
+        assert_eq!(rep.tasks_done.iter().sum::<usize>(), dag.tasks.len());
+        for id in 0..bm.blocks.len() {
+            assert_eq!(
+                nm_full.block_values(id as u32),
+                nm_sub.block_values(id as u32),
+                "block {id} differs between full-mask subset run and run_dag"
+            );
+        }
+    }
+
+    #[test]
+    fn subset_empty_mask_is_noop() {
+        let a = gen::tridiagonal(60);
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a);
+        let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(60, 10)));
+        let policy = KernelPolicy::default();
+        let dag = TaskDag::build(&bm, &policy, Placement::square(2), &CostModel::a100());
+        let nm = NumericMatrix::from_blocked(bm.clone());
+        let before: Vec<Vec<f64>> =
+            (0..bm.blocks.len()).map(|id| nm.block_values(id as u32)).collect();
+        let mask = vec![false; dag.tasks.len()];
+        let rep = run_dag_subset(&nm, &dag, &mask, &policy, &CpuDense, 2).unwrap();
+        assert_eq!(rep.total_tasks, 0);
+        assert_eq!(rep.tasks_done.iter().sum::<usize>(), 0);
+        for (id, b) in before.iter().enumerate() {
+            assert_eq!(&nm.block_values(id as u32), b, "block {id} was touched");
+        }
     }
 
     #[test]

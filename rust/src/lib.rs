@@ -27,9 +27,13 @@
 //!   [`session::FactorPlan`] (ordering + symbolic + blocking + DAG +
 //!   placement, built once per sparsity pattern), a
 //!   [`session::SolverSession`] whose `refactorize` re-runs only the
-//!   numeric phase over preallocated storage, and a
+//!   numeric phase over preallocated storage, a
 //!   [`session::PlanCache`] (LRU on
-//!   [`sparse::Csc::pattern_fingerprint`]) for serving workloads.
+//!   [`sparse::Csc::pattern_fingerprint`]) for serving workloads, and
+//!   **incremental** re-factorization
+//!   ([`session::SolverSession::refactorize_partial`] +
+//!   [`session::ChangeSet`]): when only a few A-values change, only the
+//!   DAG tasks reachable from the dirty blocks re-execute.
 //! * [`bench_harness`] — regenerates every table and figure of the paper.
 //!
 //! ## Quickstart
@@ -77,6 +81,41 @@
 //!     let xs = session.solve_many(&rhs); // batched multi-RHS solve
 //!     assert_eq!(xs.len(), 4);
 //! }
+//! ```
+//!
+//! ## Incremental re-factorization (sparse value updates)
+//!
+//! When a step changes only a handful of entries — a SPICE device stamp:
+//! one nonlinear transistor re-linearized between Newton iterations
+//! touches the 2 diagonal conductance entries of its terminal nodes —
+//! even the numeric-only full `refactorize` is overkill. A
+//! [`session::ChangeSet`] names the changed entries; the session maps
+//! them to their destination blocks through the plan's scatter map,
+//! closes the dirty set over the plan's precomputed block dependency
+//! edges, and re-runs **only** the reachable DAG tasks against the
+//! preserved factors of every other block. The result is bit-identical
+//! to a full re-factorization of the updated matrix:
+//!
+//! ```no_run
+//! use sparselu::session::{ChangeSet, FactorPlan, SolverSession};
+//! use sparselu::solver::SolveOptions;
+//! use sparselu::sparse::gen;
+//! use std::sync::Arc;
+//!
+//! let a = gen::circuit_bbd(gen::CircuitParams::default());
+//! let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(4)));
+//! let mut session = SolverSession::from_plan(plan);
+//! session.refactorize(&a.values).unwrap(); // full pass seeds the factors
+//!
+//! // device stamp: the transistor between nodes 3 and 7 re-linearized —
+//! // its two diagonal conductance entries change, nothing else
+//! let (g3, g7) = (1.2e-3, 0.8e-3);
+//! let stamp = ChangeSet::from_coords(&a, &[(3, 3, g3), (7, 7, g7)]);
+//! let report = session.refactorize_partial(&stamp).unwrap();
+//! // typically: 2 dirty blocks, a small affected closure, most tasks skipped
+//! assert!(report.tasks_executed + report.tasks_skipped == session.plan().dag.tasks.len());
+//! let x = session.solve(&vec![1.0; a.n_rows()]);
+//! assert_eq!(x.len(), a.n_rows());
 //! ```
 
 pub mod sparse;

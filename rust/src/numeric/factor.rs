@@ -158,6 +158,14 @@ impl NumericMatrix {
         self.values[id as usize].get_mut().unwrap()
     }
 
+    /// Zero one block's stored values — the block-granular reset used by
+    /// incremental re-factorization, which re-initializes only the blocks
+    /// whose tasks re-execute and leaves every other block's factored
+    /// values untouched.
+    pub fn zero_block(&mut self, id: u32) {
+        self.values[id as usize].get_mut().unwrap().fill(0.0);
+    }
+
     /// Execute one block operation with the given policy/backend.
     ///
     /// Lock discipline: sources acquired as readers before the writer

@@ -95,6 +95,14 @@ impl PlanCache {
     pub fn clear(&mut self) {
         self.entries.clear();
     }
+
+    /// Test-only: insert `plan` under an arbitrary `key`, bypassing
+    /// [`Self::key_for`] — forges the hash collision the verification
+    /// path in [`Self::get_or_build`] exists to catch.
+    #[cfg(test)]
+    fn insert_forged(&mut self, key: u64, plan: Arc<FactorPlan>) {
+        self.entries.push((key, plan));
+    }
 }
 
 /// Hash every option that influences a plan's structure or costs.
@@ -190,6 +198,60 @@ mod tests {
         assert!(!Arc::ptr_eq(&p1, &p3));
         assert_eq!(cache.misses(), 3);
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn forged_key_collision_rejected_and_rebuilt() {
+        // a plan for pattern A sits in the slot pattern B's key hashes to
+        // (as if splitmix collided); the verification pass must evict the
+        // impostor and build a genuine plan for B instead of handing A's
+        // plan back.
+        let a = gen::grid2d_laplacian(6, 6);
+        let b = gen::grid2d_laplacian(6, 7);
+        let opts = SolveOptions::ours(1);
+        let impostor = Arc::new(FactorPlan::build(&a, &opts));
+        let mut cache = PlanCache::new(4);
+        cache.insert_forged(PlanCache::key_for(&b, &opts), impostor.clone());
+        assert_eq!(cache.len(), 1);
+
+        let got = cache.get_or_build(&b, &opts);
+        assert!(!Arc::ptr_eq(&got, &impostor), "collision must not serve the impostor");
+        assert_eq!(got.fingerprint(), b.pattern_fingerprint());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        assert_eq!(cache.len(), 1, "impostor evicted, genuine plan cached");
+
+        // the genuine plan now hits normally
+        let again = cache.get_or_build(&b, &opts);
+        assert!(Arc::ptr_eq(&got, &again));
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn forged_collision_same_shape_and_nnz_still_rejected() {
+        // same n, same nnz, different pattern: only the fingerprint check
+        // can tell them apart on the verification path
+        let mk = |shift: usize| {
+            let mut coo = crate::sparse::Coo::new(6, 6);
+            for i in 0..6 {
+                coo.push(i, i, 4.0);
+            }
+            // one off-diagonal pair, placed differently per matrix
+            coo.push(shift, 5 - shift, 1.0);
+            coo.push(5 - shift, shift, 1.0);
+            coo.to_csc()
+        };
+        let a = mk(0);
+        let b = mk(1);
+        assert_eq!(a.nnz(), b.nnz());
+        assert_ne!(a.pattern_fingerprint(), b.pattern_fingerprint());
+        let opts = SolveOptions::ours(1);
+        let impostor = Arc::new(FactorPlan::build(&a, &opts));
+        let mut cache = PlanCache::new(2);
+        cache.insert_forged(PlanCache::key_for(&b, &opts), impostor.clone());
+        let got = cache.get_or_build(&b, &opts);
+        assert!(!Arc::ptr_eq(&got, &impostor));
+        assert_eq!(got.fingerprint(), b.pattern_fingerprint());
+        assert_eq!(cache.misses(), 1);
     }
 
     #[test]

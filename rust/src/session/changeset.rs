@@ -1,0 +1,135 @@
+//! [`ChangeSet`] — a sparse description of *which* values of `A` changed
+//! between two re-factorizations of the same pattern.
+//!
+//! Incremental re-factorization ([`crate::session::SolverSession::refactorize_partial`])
+//! starts from exactly this information: each changed A-nonzero lands in
+//! one block of the plan's blocked L+U structure (through the plan's
+//! scatter map), those blocks form the *dirty* seed set, and only the DAG
+//! tasks writing blocks forward-reachable from the seeds re-execute.
+//!
+//! Entries are addressed by **CSC value index** of the original `A` —
+//! the position in [`crate::sparse::Csc::values`] — which is stable for a
+//! fixed sparsity pattern. Coordinate-based construction
+//! ([`ChangeSet::from_coords`], the SPICE "device stamp" shape) and
+//! whole-matrix diffing ([`ChangeSet::from_matrix_diff`]) are provided on
+//! top of that.
+
+use crate::sparse::Csc;
+
+/// A set of `(value index, new value)` updates to the nonzeros of `A`.
+///
+/// Duplicate indices are allowed; the last update for an index wins
+/// (updates are applied in order).
+#[derive(Clone, Debug, Default)]
+pub struct ChangeSet {
+    updates: Vec<(usize, f64)>,
+}
+
+impl ChangeSet {
+    /// Empty change set (a no-op `refactorize_partial`).
+    pub fn new() -> Self {
+        Self { updates: Vec::new() }
+    }
+
+    /// Number of recorded updates.
+    pub fn len(&self) -> usize {
+        self.updates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.updates.is_empty()
+    }
+
+    /// Record a new value for the A-nonzero at CSC value index `k`.
+    pub fn push(&mut self, k: usize, new_value: f64) {
+        self.updates.push((k, new_value));
+    }
+
+    /// Build from `(value index, new value)` pairs.
+    pub fn from_value_indices(updates: impl IntoIterator<Item = (usize, f64)>) -> Self {
+        Self { updates: updates.into_iter().collect() }
+    }
+
+    /// Device-stamp style construction: updates addressed by `(row, col,
+    /// new value)` coordinate, resolved against `a`'s pattern via
+    /// [`Csc::value_index`].
+    ///
+    /// Panics if a coordinate is not in the sparsity pattern — a stamp
+    /// outside the pattern would change the *structure*, which needs a
+    /// fresh [`crate::session::FactorPlan`], not a change set.
+    pub fn from_coords(a: &Csc, stamps: &[(usize, usize, f64)]) -> Self {
+        let updates = stamps
+            .iter()
+            .map(|&(i, j, v)| {
+                let k = a.value_index(i, j).unwrap_or_else(|| {
+                    panic!("stamp ({i},{j}) is outside the sparsity pattern of A")
+                });
+                (k, v)
+            })
+            .collect();
+        Self { updates }
+    }
+
+    /// Diff two same-pattern matrices ([`Csc::value_diff`]): every entry
+    /// whose value changed becomes one update.
+    pub fn from_matrix_diff(old: &Csc, new: &Csc) -> Self {
+        Self { updates: old.value_diff(new) }
+    }
+
+    /// Diff two value vectors of the same planned pattern (e.g. the
+    /// session's [`crate::session::SolverSession::current_values`] against
+    /// the next Newton step's values).
+    pub fn from_values_diff(old: &[f64], new: &[f64]) -> Self {
+        Self { updates: crate::sparse::csc::values_diff(old, new) }
+    }
+
+    /// The recorded `(value index, new value)` updates, in push order.
+    pub fn updates(&self) -> &[(usize, f64)] {
+        &self.updates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn from_coords_resolves_value_indices() {
+        let a = gen::tridiagonal(6);
+        let cs = ChangeSet::from_coords(&a, &[(0, 0, 5.0), (2, 1, -1.0)]);
+        assert_eq!(cs.len(), 2);
+        let (k0, v0) = cs.updates()[0];
+        assert_eq!(k0, a.value_index(0, 0).unwrap());
+        assert_eq!(v0, 5.0);
+        let (k1, _) = cs.updates()[1];
+        assert_eq!(k1, a.value_index(2, 1).unwrap());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the sparsity pattern")]
+    fn from_coords_rejects_structural_stamp() {
+        let a = gen::tridiagonal(6);
+        let _ = ChangeSet::from_coords(&a, &[(0, 5, 1.0)]);
+    }
+
+    #[test]
+    fn from_values_diff_finds_changes() {
+        let a = gen::tridiagonal(5);
+        let mut new = a.values.clone();
+        new[3] += 1.0;
+        new[7] -= 2.0;
+        let cs = ChangeSet::from_values_diff(&a.values, &new);
+        assert_eq!(cs.updates(), &[(3, new[3]), (7, new[7])]);
+        assert!(ChangeSet::from_values_diff(&a.values, &a.values).is_empty());
+    }
+
+    #[test]
+    fn push_and_default_are_consistent() {
+        let mut cs = ChangeSet::default();
+        assert!(cs.is_empty());
+        cs.push(4, 2.5);
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs.updates(), &[(4, 2.5)]);
+    }
+}

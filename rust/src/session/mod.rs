@@ -17,9 +17,17 @@
 //!   [`SolverSession::solve_many`] batches multi-RHS triangular solves.
 //! * [`PlanCache`] — LRU over [`crate::sparse::Csc::pattern_fingerprint`]
 //!   so serving paths get plan reuse without bookkeeping.
+//! * [`ChangeSet`] + [`SolverSession::refactorize_partial`] —
+//!   **incremental** re-factorization: when only a few A-values change
+//!   (a SPICE device stamp, one nonlinear element between Newton steps),
+//!   the changed entries map to *dirty* blocks through the plan's
+//!   scatter map, the dirty set is closed over the plan's precomputed
+//!   block dependency edges, and only the DAG tasks writing affected
+//!   blocks re-execute — bit-identical to a full `refactorize`, at a
+//!   fraction of the task count.
 //!
 //! ```no_run
-//! use sparselu::session::{FactorPlan, SolverSession};
+//! use sparselu::session::{ChangeSet, FactorPlan, SolverSession};
 //! use sparselu::solver::SolveOptions;
 //! use sparselu::sparse::gen;
 //! use std::sync::Arc;
@@ -27,10 +35,16 @@
 //! let a = gen::circuit_bbd(gen::CircuitParams::default());
 //! let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(4)));
 //! let mut session = SolverSession::from_plan(plan);
+//! session.refactorize(&a.values).unwrap(); // full pass seeds the factors
 //! for _newton_step in 0..1000 {
-//!     // update conductances, same pattern
-//!     let values = a.values.clone();
-//!     session.refactorize(&values).unwrap();
+//!     // one device re-stamped: two conductance entries change
+//!     let g = 1.0e-3;
+//!     let cs = ChangeSet::from_coords(&a, &[(0, 0, g), (1, 1, g)]);
+//!     let report = session.refactorize_partial(&cs).unwrap();
+//!     assert_eq!(
+//!         report.tasks_executed + report.tasks_skipped,
+//!         session.plan().dag.tasks.len(),
+//!     );
 //!     let b = vec![1.0; a.n_rows()];
 //!     let x = session.solve(&b);
 //!     assert_eq!(x.len(), a.n_rows());
@@ -38,10 +52,12 @@
 //! ```
 
 pub mod cache;
+pub mod changeset;
 pub mod plan;
 #[allow(clippy::module_inception)]
 pub mod session;
 
 pub use cache::PlanCache;
+pub use changeset::ChangeSet;
 pub use plan::{FactorPlan, PlanReport};
 pub use session::{RefactorReport, SolverSession};

@@ -13,7 +13,7 @@ use crate::blocking::{
     DiagFeature,
 };
 use crate::coordinator::{simulate, Placement, SimReport, TaskDag};
-use crate::numeric::factor::NumericMatrix;
+use crate::numeric::factor::{BlockOp, NumericMatrix};
 use crate::ordering::{order, Permutation};
 use crate::solver::{BlockingPolicy, SolveOptions};
 use crate::sparse::Csc;
@@ -76,8 +76,96 @@ pub struct FactorPlan {
     /// within that block's value array after permutation.
     scatter_block: Vec<u32>,
     scatter_off: Vec<u32>,
+    /// Reachability index for incremental re-factorization (`None` for
+    /// one-shot plans, which never re-factorize partially).
+    reach: Option<ReachIndex>,
     /// Build-time stats and timings.
     pub report: PlanReport,
+}
+
+/// Precomputed per-plan structures for incremental re-factorization:
+/// which DAG tasks write each block, which blocks are read downstream of
+/// each block, and which A-nonzeros scatter into each block. Built once
+/// per plan so the warm `refactorize_partial` path only walks
+/// preallocated adjacency — the dirty-closure BFS allocates nothing.
+pub(crate) struct ReachIndex {
+    /// Block idx → ids of DAG tasks whose target is that block.
+    tasks_by_target: Vec<Vec<u32>>,
+    /// Block idx → downstream block idxs (deduped union of task
+    /// source-block → target-block edges). A value change in block `b`
+    /// can only alter factor values in blocks forward-reachable from `b`
+    /// over these edges.
+    block_out: Vec<Vec<u32>>,
+    /// CSR grouping of the scatter map by destination block:
+    /// `scatter_a[scatter_ptr[b]..scatter_ptr[b+1]]` are the A-nonzero
+    /// indices landing in block `b` — the inverse of `scatter_block`,
+    /// used to re-initialize exactly the affected blocks.
+    scatter_ptr: Vec<u32>,
+    scatter_a: Vec<u32>,
+}
+
+impl ReachIndex {
+    fn build(bm: &BlockedMatrix, dag: &TaskDag, scatter_block: &[u32]) -> Self {
+        let nblocks = bm.blocks.len();
+        let mut tasks_by_target: Vec<Vec<u32>> = vec![Vec::new(); nblocks];
+        let mut block_out: Vec<Vec<u32>> = vec![Vec::new(); nblocks];
+        for (tid, task) in dag.tasks.iter().enumerate() {
+            let (ti, tj) = task.op.target();
+            let tgt = bm.block_id(ti, tj).expect("task target block exists");
+            tasks_by_target[tgt as usize].push(tid as u32);
+            // block-granular read → write edges of this op
+            let mut src_edge = |bi: usize, bj: usize| {
+                let s = bm.block_id(bi, bj).expect("task source block exists");
+                if s != tgt {
+                    block_out[s as usize].push(tgt);
+                }
+            };
+            match task.op {
+                BlockOp::Getrf { .. } => {}
+                BlockOp::Gessm { k, .. } | BlockOp::Tstrf { k, .. } => src_edge(k, k),
+                BlockOp::Ssssm { i, j, k } => {
+                    src_edge(i, k);
+                    src_edge(k, j);
+                }
+            }
+        }
+        for outs in &mut block_out {
+            outs.sort_unstable();
+            outs.dedup();
+        }
+        // group the scatter map by destination block (counting sort)
+        let mut scatter_ptr = vec![0u32; nblocks + 1];
+        for &b in scatter_block {
+            scatter_ptr[b as usize + 1] += 1;
+        }
+        for b in 0..nblocks {
+            scatter_ptr[b + 1] += scatter_ptr[b];
+        }
+        let mut next = scatter_ptr.clone();
+        let mut scatter_a = vec![0u32; scatter_block.len()];
+        for (k, &b) in scatter_block.iter().enumerate() {
+            let p = next[b as usize] as usize;
+            next[b as usize] += 1;
+            scatter_a[p] = k as u32;
+        }
+        Self { tasks_by_target, block_out, scatter_ptr, scatter_a }
+    }
+
+    /// DAG task ids writing block `b`.
+    pub(crate) fn tasks_of(&self, b: u32) -> &[u32] {
+        &self.tasks_by_target[b as usize]
+    }
+
+    /// Blocks that read block `b` (direct downstream neighbors).
+    pub(crate) fn downstream(&self, b: u32) -> &[u32] {
+        &self.block_out[b as usize]
+    }
+
+    /// A-nonzero indices scattering into block `b`.
+    pub(crate) fn a_indices_of(&self, b: u32) -> &[u32] {
+        let (lo, hi) = (self.scatter_ptr[b as usize], self.scatter_ptr[b as usize + 1]);
+        &self.scatter_a[lo as usize..hi as usize]
+    }
 }
 
 impl FactorPlan {
@@ -118,12 +206,18 @@ impl FactorPlan {
         let dag = TaskDag::build(&structure, &opts.kernels, placement, &opts.model);
         let preprocess_seconds = sw.lap("preprocess");
 
-        // session-only extras: modeled schedule + value scatter map
+        // session-only extras: modeled schedule + value scatter map +
+        // incremental-refactorization reachability index
         let sim = simulate(&dag, opts.workers, &opts.model);
         let (scatter_block, scatter_off) = if with_scatter {
             build_scatter(a, &perm, &structure)
         } else {
             (Vec::new(), Vec::new())
+        };
+        let reach = if with_scatter {
+            Some(ReachIndex::build(&structure, &dag, &scatter_block))
+        } else {
+            None
         };
         let plan_extra_seconds = sw.lap("plan_extra");
 
@@ -150,6 +244,7 @@ impl FactorPlan {
             sim,
             scatter_block,
             scatter_off,
+            reach,
             report,
         }
     }
@@ -205,6 +300,33 @@ impl FactorPlan {
         nm.zero_values();
         for ((&b, &off), &v) in self.scatter_block.iter().zip(&self.scatter_off).zip(values) {
             nm.values_mut(b)[off as usize] = v;
+        }
+    }
+
+    /// Destination block of A-nonzero `k` under the scatter map.
+    pub(crate) fn scatter_block_of(&self, k: usize) -> u32 {
+        self.scatter_block[k]
+    }
+
+    /// Reachability index for incremental re-factorization.
+    pub(crate) fn reach(&self) -> &ReachIndex {
+        self.reach.as_ref().expect(
+            "incremental re-factorization needs a session plan \
+             (one-shot plans carry no reachability index)",
+        )
+    }
+
+    /// Re-initialize exactly one block of `nm` to its pre-factorization
+    /// state: zero the stored pattern, then scatter the block's share of
+    /// `values` (the full A value vector, CSC order) back in. This is the
+    /// block-granular counterpart of [`Self::scatter_values`], used to
+    /// reset only the blocks an incremental re-factorization re-executes.
+    pub(crate) fn rescatter_block(&self, b: u32, values: &[f64], nm: &mut NumericMatrix) {
+        let reach = self.reach();
+        nm.zero_block(b);
+        let vals = nm.values_mut(b);
+        for &k in reach.a_indices_of(b) {
+            vals[self.scatter_off[k as usize] as usize] = values[k as usize];
         }
     }
 }
@@ -305,6 +427,70 @@ mod tests {
         for (idx, blk) in plan.structure.blocks.iter().enumerate() {
             let got = nm.block_values(idx as u32);
             assert_eq!(got, blk.values, "block {idx} values diverge");
+        }
+    }
+
+    #[test]
+    fn reach_index_partitions_scatter_and_targets() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 250, ..Default::default() });
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let reach = plan.reach();
+        let nblocks = plan.structure.blocks.len();
+        // every A-nonzero appears in exactly one block's scatter group,
+        // and the group agrees with the forward scatter map
+        let mut seen = vec![false; a.nnz()];
+        for b in 0..nblocks {
+            for &k in reach.a_indices_of(b as u32) {
+                assert!(!seen[k as usize], "A index {k} grouped twice");
+                seen[k as usize] = true;
+                assert_eq!(plan.scatter_block_of(k as usize), b as u32);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every A index grouped");
+        // every DAG task appears under exactly one target block
+        let mut task_seen = vec![false; plan.dag.tasks.len()];
+        for b in 0..nblocks {
+            for &t in reach.tasks_of(b as u32) {
+                assert!(!task_seen[t as usize], "task {t} targeted twice");
+                task_seen[t as usize] = true;
+                let (ti, tj) = plan.dag.tasks[t as usize].op.target();
+                assert_eq!(plan.structure.block_id(ti, tj), Some(b as u32));
+            }
+        }
+        assert!(task_seen.iter().all(|&s| s), "every task has a target block");
+    }
+
+    #[test]
+    fn last_diagonal_block_has_no_downstream() {
+        let a = gen::grid2d_laplacian(9, 9);
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let nb = plan.structure.nb();
+        let last = plan.structure.block_id(nb - 1, nb - 1).unwrap();
+        assert!(
+            plan.reach().downstream(last).is_empty(),
+            "the trailing diagonal block is the DAG sink"
+        );
+    }
+
+    #[test]
+    fn rescatter_blocks_reproduces_full_scatter() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let mut full = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
+        plan.scatter_values(&a.values, &mut full);
+        let mut blockwise = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
+        for v in 0..plan.structure.blocks.len() {
+            blockwise.values_mut(v as u32).fill(f64::NAN); // wreck first
+        }
+        for b in 0..plan.structure.blocks.len() {
+            plan.rescatter_block(b as u32, &a.values, &mut blockwise);
+        }
+        for id in 0..plan.structure.blocks.len() {
+            assert_eq!(
+                full.block_values(id as u32),
+                blockwise.block_values(id as u32),
+                "block {id}"
+            );
         }
     }
 

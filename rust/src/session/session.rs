@@ -8,6 +8,7 @@
 //! Newton-step / transient-timestep workload of SPICE-style circuit
 //! simulation the paper targets.
 
+use super::changeset::ChangeSet;
 use super::plan::FactorPlan;
 use crate::coordinator::{self, RunReport};
 use crate::numeric::factor::{CpuDense, DenseBackend, FactorError, Factors, NumericMatrix};
@@ -16,13 +17,26 @@ use crate::sparse::Csc;
 use crate::util::timer::timed;
 use std::sync::Arc;
 
-/// Timing report of one numeric-only re-factorization.
+/// Timing + pruning report of one (full or incremental) re-factorization.
 #[derive(Clone, Debug)]
 pub struct RefactorReport {
-    /// Scatter (value placement) seconds.
+    /// Scatter (value placement / dirty-closure) seconds.
     pub scatter_seconds: f64,
     /// DAG execution seconds.
     pub numeric_seconds: f64,
+    /// DAG tasks executed in this call (the whole DAG for a full
+    /// `refactorize`; only the dirty-reachable subset for
+    /// `refactorize_partial`).
+    pub tasks_executed: usize,
+    /// DAG tasks skipped because no dirty block reaches their target
+    /// (always 0 for a full `refactorize`).
+    pub tasks_skipped: usize,
+    /// Blocks whose A-entries were touched by the change set (the seed
+    /// set of the reachability closure).
+    pub blocks_dirty: usize,
+    /// Blocks re-initialized and recomputed (forward closure of the
+    /// dirty set over the block dependency graph).
+    pub blocks_affected: usize,
     /// Per-worker execution report.
     pub run: RunReport,
 }
@@ -34,6 +48,17 @@ pub struct SolverSession<'b> {
     backend: &'b (dyn DenseBackend + Sync),
     refactor_count: usize,
     factored: bool,
+    /// A-values (CSC order) the current factors were computed from — the
+    /// baseline `refactorize_partial` applies change sets against.
+    current_values: Vec<f64>,
+    // --- preallocated scratch for the incremental warm path ---
+    /// Per-block "in the affected closure" flag.
+    affected: Vec<bool>,
+    /// Per-task "re-execute" mask handed to `run_dag_subset`.
+    in_subset: Vec<bool>,
+    /// BFS queue over block ids; after the closure completes it holds
+    /// exactly the affected blocks.
+    queue: Vec<u32>,
 }
 
 impl SolverSession<'static> {
@@ -52,11 +77,36 @@ impl<'b> SolverSession<'b> {
         // zero-filled storage: the first refactorize overwrites every
         // value, so copying the plan's stale block values would be waste
         let numeric = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
-        Self { plan, numeric, backend, refactor_count: 0, factored: false }
+        let nnz_a = plan.nnz_a();
+        let nblocks = plan.structure.blocks.len();
+        let ntasks = plan.dag.tasks.len();
+        Self {
+            plan,
+            numeric,
+            backend,
+            refactor_count: 0,
+            factored: false,
+            current_values: vec![0.0; nnz_a],
+            affected: vec![false; nblocks],
+            in_subset: vec![false; ntasks],
+            queue: Vec::with_capacity(nblocks),
+        }
     }
 
     pub fn plan(&self) -> &Arc<FactorPlan> {
         &self.plan
+    }
+
+    /// The blocked numeric storage holding the current factors.
+    pub fn numeric(&self) -> &NumericMatrix {
+        &self.numeric
+    }
+
+    /// A-values (CSC order) of the matrix the current factors correspond
+    /// to — diff the next step's values against this to build a
+    /// [`ChangeSet`] ([`ChangeSet::from_values_diff`]).
+    pub fn current_values(&self) -> &[f64] {
+        &self.current_values
     }
 
     /// Number of completed re-factorizations.
@@ -80,6 +130,7 @@ impl<'b> SolverSession<'b> {
     pub fn refactorize(&mut self, values: &[f64]) -> Result<RefactorReport, FactorError> {
         self.factored = false;
         let (_, scatter_seconds) = timed(|| self.plan.scatter_values(values, &mut self.numeric));
+        self.current_values.copy_from_slice(values);
         let opts = self.plan.options();
         let (run, numeric_seconds) = timed(|| {
             coordinator::run_dag(
@@ -93,7 +144,161 @@ impl<'b> SolverSession<'b> {
         let run = run?;
         self.factored = true;
         self.refactor_count += 1;
-        Ok(RefactorReport { scatter_seconds, numeric_seconds, run })
+        let nblocks = self.plan.structure.blocks.len();
+        Ok(RefactorReport {
+            scatter_seconds,
+            numeric_seconds,
+            tasks_executed: run.total_tasks,
+            tasks_skipped: 0,
+            blocks_dirty: nblocks,
+            blocks_affected: nblocks,
+            run,
+        })
+    }
+
+    /// Incremental re-factorization: re-run **only** the DAG tasks whose
+    /// target block is forward-reachable from the blocks the change set
+    /// touches, against the preserved factors of every other block.
+    ///
+    /// The change set's updates are applied to the session's current A
+    /// values; each updated nonzero marks its destination block *dirty*
+    /// (via the plan's scatter map), the dirty set is closed under the
+    /// plan's precomputed block dependency edges, the affected blocks are
+    /// reset to their freshly-scattered state, and
+    /// [`coordinator::run_dag_subset`] replays exactly the tasks writing
+    /// them. Unaffected blocks keep their factored values — which are
+    /// bit-identical to what a full re-factorization of the updated
+    /// matrix would recompute for them, because no value they depend on
+    /// changed and every kernel is deterministic. The result is therefore
+    /// **bit-identical to a full [`Self::refactorize`]** of the updated
+    /// values, for any change set (empty, full, or anything between).
+    ///
+    /// Requires a prior successful (full) `refactorize` — the preserved
+    /// blocks must hold valid factors — and a session plan (one built by
+    /// [`FactorPlan::build`], not the one-shot constructor).
+    pub fn refactorize_partial(&mut self, cs: &ChangeSet) -> Result<RefactorReport, FactorError> {
+        assert!(
+            self.factored,
+            "refactorize_partial needs a successful full refactorize first \
+             (there are no preserved factors to reuse)"
+        );
+        let plan = self.plan.clone();
+        let reach = plan.reach();
+        self.factored = false;
+
+        let SolverSession { current_values, affected, in_subset, queue, numeric, .. } =
+            &mut *self;
+        let ((blocks_dirty, blocks_affected), scatter_seconds) = timed(|| {
+            affected.fill(false);
+            in_subset.fill(false);
+            queue.clear();
+            // seed: destination blocks of the changed A entries; updates
+            // that bit-equal the current value are no-ops and dirty
+            // nothing (a converged loop re-stamping identical values
+            // must not trigger recomputation)
+            for &(k, v) in cs.updates() {
+                assert!(
+                    k < current_values.len(),
+                    "change-set value index {k} out of range (nnz = {})",
+                    current_values.len()
+                );
+                if v.to_bits() == current_values[k].to_bits() {
+                    continue;
+                }
+                current_values[k] = v;
+                let b = plan.scatter_block_of(k);
+                if !affected[b as usize] {
+                    affected[b as usize] = true;
+                    queue.push(b);
+                }
+            }
+            let blocks_dirty = queue.len();
+            // forward closure over the block dependency graph
+            let mut head = 0;
+            while head < queue.len() {
+                let b = queue[head];
+                head += 1;
+                for &down in reach.downstream(b) {
+                    if !affected[down as usize] {
+                        affected[down as usize] = true;
+                        queue.push(down);
+                    }
+                }
+            }
+            // reset affected blocks to their pre-factorization state and
+            // collect the task subset that rebuilds them
+            for &b in queue.iter() {
+                plan.rescatter_block(b, current_values, numeric);
+                for &t in reach.tasks_of(b) {
+                    in_subset[t as usize] = true;
+                }
+            }
+            (blocks_dirty, queue.len())
+        });
+
+        let opts = plan.options();
+        let total = plan.dag.tasks.len();
+        if blocks_affected == 0 {
+            // no dirty blocks (empty or all-identical change set): the
+            // preserved factors already are the answer — skip the worker
+            // spawn entirely so a converged Newton loop's no-op steps
+            // stay free
+            self.factored = true;
+            self.refactor_count += 1;
+            let p = opts.workers as usize;
+            return Ok(RefactorReport {
+                scatter_seconds,
+                numeric_seconds: 0.0,
+                tasks_executed: 0,
+                tasks_skipped: total,
+                blocks_dirty: 0,
+                blocks_affected: 0,
+                run: RunReport {
+                    wall_seconds: 0.0,
+                    busy: vec![0.0; p],
+                    tasks_done: vec![0; p],
+                    total_tasks: 0,
+                    workers: opts.workers,
+                },
+            });
+        }
+        let (run, numeric_seconds) = timed(|| {
+            coordinator::run_dag_subset(
+                &self.numeric,
+                &plan.dag,
+                &self.in_subset,
+                &opts.kernels,
+                self.backend,
+                opts.workers,
+            )
+        });
+        let run = run?;
+        self.factored = true;
+        self.refactor_count += 1;
+        let executed = run.total_tasks;
+        Ok(RefactorReport {
+            scatter_seconds,
+            numeric_seconds,
+            tasks_executed: executed,
+            tasks_skipped: total - executed,
+            blocks_dirty,
+            blocks_affected,
+            run,
+        })
+    }
+
+    /// As [`Self::refactorize_partial`] but takes the whole updated
+    /// matrix: diffs its values against the session's current values and
+    /// applies the resulting change set. The pattern must match the plan.
+    pub fn refactorize_partial_matrix(&mut self, a: &Csc) -> Result<RefactorReport, FactorError> {
+        assert!(
+            self.plan.matches(a),
+            "matrix pattern does not match the session's FactorPlan \
+             (fingerprint {:#018x})",
+            self.plan.fingerprint()
+        );
+        let cs = ChangeSet::from_values_diff(&self.current_values, &a.values);
+        self.refactorize_partial(&cs)
     }
 
     /// As [`Self::refactorize`] but takes the whole matrix and checks its
@@ -203,5 +408,117 @@ mod tests {
         let other = gen::grid2d_laplacian(6, 7);
         let mut s = session_for(&a, SolveOptions::ours(1));
         let _ = s.refactorize_matrix(&other);
+    }
+
+    #[test]
+    fn empty_change_set_executes_nothing_and_preserves_factors() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut s = session_for(&a, SolveOptions::ours(1));
+        s.refactorize(&a.values).unwrap();
+        let before: Vec<Vec<f64>> = (0..s.plan().structure.blocks.len())
+            .map(|id| s.numeric().block_values(id as u32))
+            .collect();
+        let rep = s.refactorize_partial(&ChangeSet::new()).unwrap();
+        assert_eq!(rep.tasks_executed, 0);
+        assert_eq!(rep.tasks_skipped, s.plan().dag.tasks.len());
+        assert_eq!(rep.blocks_dirty, 0);
+        assert_eq!(rep.blocks_affected, 0);
+        for (id, b) in before.iter().enumerate() {
+            assert_eq!(&s.numeric().block_values(id as u32), b, "block {id}");
+        }
+        assert!(s.is_factored());
+        assert_eq!(s.refactor_count(), 2);
+    }
+
+    #[test]
+    fn identical_restamp_is_a_free_noop() {
+        // a converged loop re-stamping the same values must dirty nothing
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut s = session_for(&a, SolveOptions::ours(1));
+        s.refactorize(&a.values).unwrap();
+        let k = a.value_index(30, 30).unwrap();
+        let rep = s
+            .refactorize_partial(&ChangeSet::from_value_indices([(k, a.values[k])]))
+            .unwrap();
+        assert_eq!(rep.blocks_dirty, 0);
+        assert_eq!(rep.blocks_affected, 0);
+        assert_eq!(rep.tasks_executed, 0);
+        assert!(s.is_factored());
+    }
+
+    #[test]
+    fn full_change_set_matches_full_refactorize_bitwise() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)));
+        let mut partial = SolverSession::from_plan(plan.clone());
+        partial.refactorize(&a.values).unwrap();
+        let new_values: Vec<f64> = a.values.iter().map(|v| v * 1.125).collect();
+        let cs = ChangeSet::from_values_diff(&a.values, &new_values);
+        let rep = partial.refactorize_partial(&cs).unwrap();
+        assert_eq!(rep.tasks_executed + rep.tasks_skipped, plan.dag.tasks.len());
+
+        let mut full = SolverSession::from_plan(plan.clone());
+        full.refactorize(&new_values).unwrap();
+        for id in 0..plan.structure.blocks.len() {
+            assert_eq!(
+                partial.numeric().block_values(id as u32),
+                full.numeric().block_values(id as u32),
+                "block {id} diverges"
+            );
+        }
+        assert_eq!(partial.current_values(), &new_values[..]);
+    }
+
+    #[test]
+    fn single_entry_change_prunes_and_matches() {
+        let a = gen::grid2d_laplacian(10, 10);
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let mut partial = SolverSession::from_plan(plan.clone());
+        partial.refactorize(&a.values).unwrap();
+        // bump one diagonal entry
+        let k = a.value_index(57, 57).unwrap();
+        let mut new_values = a.values.clone();
+        new_values[k] *= 2.0;
+        let rep = partial
+            .refactorize_partial(&ChangeSet::from_value_indices([(k, new_values[k])]))
+            .unwrap();
+        assert_eq!(rep.blocks_dirty, 1);
+        assert!(rep.blocks_affected >= 1);
+        assert!(rep.tasks_executed >= 1);
+
+        let mut full = SolverSession::from_plan(plan.clone());
+        full.refactorize(&new_values).unwrap();
+        for id in 0..plan.structure.blocks.len() {
+            assert_eq!(
+                partial.numeric().block_values(id as u32),
+                full.numeric().block_values(id as u32),
+                "block {id} diverges"
+            );
+        }
+        let b: Vec<f64> = (0..100).map(|i| (i % 7) as f64 - 3.0).collect();
+        assert_eq!(partial.solve(&b), full.solve(&b));
+    }
+
+    #[test]
+    fn partial_matrix_diffs_against_current_values() {
+        let a = gen::directed_graph(100, 3, 11);
+        let mut s = session_for(&a, SolveOptions::ours(1));
+        s.refactorize_matrix(&a).unwrap();
+        let mut a2 = a.clone();
+        let k = a2.value_index(40, 40).unwrap();
+        a2.values[k] += 3.5;
+        let rep = s.refactorize_partial_matrix(&a2).unwrap();
+        assert_eq!(rep.blocks_dirty, 1);
+        let b: Vec<f64> = (0..100).map(|i| ((i * 5) % 9) as f64 - 4.0).collect();
+        let x = s.solve(&b);
+        assert!(residual(&a2, &x, &b) < 1e-8);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a successful full refactorize")]
+    fn partial_before_full_panics() {
+        let a = gen::grid2d_laplacian(6, 6);
+        let mut s = session_for(&a, SolveOptions::ours(1));
+        let _ = s.refactorize_partial(&ChangeSet::new());
     }
 }

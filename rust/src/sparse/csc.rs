@@ -149,6 +149,34 @@ impl Csc {
         }
     }
 
+    /// Index into [`Self::values`] of the stored entry `(i, j)`, if any
+    /// (`None` for out-of-range coordinates too, so callers resolving
+    /// user-supplied node ids get a clean miss instead of a slice panic).
+    /// This is the coordinate → value-index map change sets are built
+    /// from: a [`crate::session::ChangeSet`] addresses A-nonzeros by
+    /// their CSC value index, which is stable for a fixed pattern.
+    pub fn value_index(&self, i: usize, j: usize) -> Option<usize> {
+        if i >= self.n_rows || j >= self.n_cols {
+            return None;
+        }
+        self.col_rows(j)
+            .binary_search(&i)
+            .ok()
+            .map(|k| self.col_ptr[j] + k)
+    }
+
+    /// `(value index, new value)` for every entry whose value differs
+    /// between `self` and `new` — the raw material of an incremental
+    /// re-factorization change set. Both matrices must have the **same
+    /// sparsity pattern** (shape, `col_ptr`, `row_idx`).
+    pub fn value_diff(&self, new: &Csc) -> Vec<(usize, f64)> {
+        assert_eq!(self.n_rows, new.n_rows, "value_diff: row count differs");
+        assert_eq!(self.n_cols, new.n_cols, "value_diff: column count differs");
+        assert_eq!(self.col_ptr, new.col_ptr, "value_diff: pattern differs (col_ptr)");
+        assert_eq!(self.row_idx, new.row_idx, "value_diff: pattern differs (row_idx)");
+        values_diff(&self.values, &new.values)
+    }
+
     /// `y = A x` into a caller-provided buffer (cleared first).
     pub fn mul_vec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n_cols);
@@ -363,6 +391,21 @@ impl Csc {
     }
 }
 
+/// `(index, new value)` for every position where two equal-length value
+/// vectors differ — shared by [`Csc::value_diff`] and
+/// [`crate::session::ChangeSet::from_values_diff`] so the diff semantics
+/// (exact comparison; a NaN entry always registers as changed) live in
+/// one place.
+pub(crate) fn values_diff(old: &[f64], new: &[f64]) -> Vec<(usize, f64)> {
+    assert_eq!(old.len(), new.len(), "value vectors must have equal length");
+    old.iter()
+        .zip(new)
+        .enumerate()
+        .filter(|(_, (o, n))| o != n)
+        .map(|(k, (_, n))| (k, *n))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -489,6 +532,43 @@ mod tests {
         // and a different shape with the same arrays must too
         let d = Csc::new(4, 3, a.col_ptr.clone(), a.row_idx.clone(), a.values.clone());
         assert_ne!(a.pattern_fingerprint(), d.pattern_fingerprint());
+    }
+
+    #[test]
+    fn value_index_matches_get() {
+        let a = sample();
+        for i in 0..3 {
+            for j in 0..3 {
+                match a.value_index(i, j) {
+                    Some(k) => assert_eq!(a.values[k], a.get(i, j), "({i},{j})"),
+                    None => assert_eq!(a.get(i, j), 0.0, "({i},{j})"),
+                }
+            }
+        }
+        assert_eq!(a.value_index(0, 0), Some(0));
+        assert_eq!(a.value_index(0, 1), None);
+        // out-of-range coordinates miss cleanly instead of panicking
+        assert_eq!(a.value_index(0, 3), None);
+        assert_eq!(a.value_index(3, 0), None);
+    }
+
+    #[test]
+    fn value_diff_finds_exactly_the_changes() {
+        let a = sample();
+        let mut b = sample();
+        b.values[1] = -7.0;
+        b.values[4] = 9.5;
+        let d = a.value_diff(&b);
+        assert_eq!(d, vec![(1, -7.0), (4, 9.5)]);
+        assert!(a.value_diff(&a.clone()).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "pattern differs")]
+    fn value_diff_rejects_different_pattern() {
+        let a = sample();
+        let c = Csc::new(3, 3, vec![0, 2, 3, 4], vec![0, 2, 1, 0], vec![1.0; 4]);
+        let _ = a.value_diff(&c);
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Shared property-test harness for the integration suites (the proptest
+//! crate is unavailable offline): seeded random matrix generators, a
+//! dense reference solver, and proptest-style shrinking helpers that
+//! bisect a failing case down to a minimal reproducer before reporting.
+#![allow(dead_code)]
+
+use sparselu::session::FactorPlan;
+use sparselu::sparse::{Coo, Csc};
+use sparselu::util::Prng;
+
+/// Random diagonally-dominant sparse matrix with seed-derived size.
+pub fn random_matrix(seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let n = 20 + rng.below(230);
+    random_matrix_with(&mut rng, n)
+}
+
+/// Like [`random_matrix`] but with the size forced to `n` — the knob the
+/// shrinker turns. Consumes the same leading PRNG draw so the value
+/// stream beyond the size choice matches [`random_matrix`].
+pub fn random_matrix_sized(seed: u64, n: usize) -> Csc {
+    let mut rng = Prng::new(seed);
+    let _ = rng.below(230); // keep the stream aligned with random_matrix
+    random_matrix_with(&mut rng, n)
+}
+
+fn random_matrix_with(rng: &mut Prng, n: usize) -> Csc {
+    let per_row = 1 + rng.below(5);
+    let mut coo = Coo::with_capacity(n, n, n * (per_row + 1));
+    for i in 0..n {
+        for _ in 0..per_row {
+            let j = rng.below(n);
+            if j != i {
+                coo.push(i, j, rng.signed_unit());
+            }
+        }
+    }
+    let m = coo.to_csc();
+    let mut row_abs = vec![0.0; n];
+    for j in 0..n {
+        for (i, v) in m.col(j) {
+            if i != j {
+                row_abs[i] += v.abs();
+            }
+        }
+    }
+    let mut out = Coo::with_capacity(n, n, m.nnz() + n);
+    for j in 0..n {
+        for (i, v) in m.col(j) {
+            if i != j {
+                out.push(i, j, v);
+            }
+        }
+    }
+    for i in 0..n {
+        out.push(i, i, row_abs[i] + 1.0);
+    }
+    out.to_csc()
+}
+
+/// Same pattern as `a`, values perturbed deterministically.
+pub fn perturbed(a: &Csc, seed: u64) -> Csc {
+    let mut rng = Prng::new(seed);
+    let values: Vec<f64> = a
+        .values
+        .iter()
+        .map(|v| v * (1.0 + 0.05 * rng.signed_unit()))
+        .collect();
+    Csc::from_parts_unchecked(
+        a.n_rows(),
+        a.n_cols(),
+        a.col_ptr.clone(),
+        a.row_idx.clone(),
+        values,
+    )
+}
+
+/// `(row, col)` coordinate of every CSC value index of `a`, in order.
+pub fn value_coords(a: &Csc) -> Vec<(usize, usize)> {
+    let mut coords = Vec::with_capacity(a.nnz());
+    for j in 0..a.n_cols() {
+        for &i in a.col_rows(j) {
+            coords.push((i, j));
+        }
+    }
+    coords
+}
+
+/// Grid block coordinates the A-entry at `(i, j)` lands in under `plan`'s
+/// permutation and blocking (the external mirror of the plan's scatter
+/// map, for choosing block-confined change sets in tests).
+pub fn block_of_entry(plan: &FactorPlan, (i, j): (usize, usize)) -> (usize, usize) {
+    let p = plan.permutation().as_slice();
+    let positions = plan.structure.blocking.positions();
+    (block_index_of(positions, p[i]), block_index_of(positions, p[j]))
+}
+
+fn block_index_of(positions: &[usize], r: usize) -> usize {
+    positions.partition_point(|&p| p <= r) - 1
+}
+
+/// Solve `Aᵀ x = b` by dense Gaussian elimination with partial pivoting —
+/// the oracle the blocked transpose solves are differenced against.
+pub fn dense_solve_transpose(a: &Csc, b: &[f64]) -> Vec<f64> {
+    let n = a.n_rows();
+    assert_eq!(n, a.n_cols());
+    assert_eq!(b.len(), n);
+    let mut m = a.transpose().to_dense();
+    let mut x = b.to_vec();
+    for c in 0..n {
+        // partial pivoting
+        let piv = (c..n)
+            .max_by(|&r1, &r2| m[r1][c].abs().partial_cmp(&m[r2][c].abs()).unwrap())
+            .unwrap();
+        m.swap(c, piv);
+        x.swap(c, piv);
+        assert!(m[c][c] != 0.0, "dense oracle: singular matrix");
+        let prow: Vec<f64> = m[c][c..n].to_vec();
+        let xc = x[c];
+        for r in c + 1..n {
+            let f = m[r][c] / prow[0];
+            if f == 0.0 {
+                continue;
+            }
+            for (t, cc) in (c..n).enumerate() {
+                m[r][cc] -= f * prow[t];
+            }
+            x[r] -= f * xc;
+        }
+    }
+    for c in (0..n).rev() {
+        let mut acc = x[c];
+        for cc in c + 1..n {
+            acc -= m[c][cc] * x[cc];
+        }
+        x[c] = acc / m[c][c];
+    }
+    x
+}
+
+/// Proptest-style shrinking: reduce a failing case before reporting it.
+pub mod shrink {
+    /// Delta-debugging (ddmin) subset minimization: repeatedly drop
+    /// chunks of `items` while `fails` keeps returning `true`, ending at
+    /// a locally-minimal failing subset (order preserved).
+    ///
+    /// `fails(&[])` is probed last; if even the empty set fails, the
+    /// empty set is returned (the items were irrelevant to the failure).
+    pub fn minimize_subset<T: Clone>(
+        items: &[T],
+        mut fails: impl FnMut(&[T]) -> bool,
+    ) -> Vec<T> {
+        let mut cur = items.to_vec();
+        let mut granularity = 2usize;
+        while cur.len() >= 2 {
+            let chunk = (cur.len() + granularity - 1) / granularity;
+            let mut reduced: Option<Vec<T>> = None;
+            let mut start = 0;
+            while start < cur.len() {
+                let end = (start + chunk).min(cur.len());
+                let cand: Vec<T> = cur[..start]
+                    .iter()
+                    .chain(cur[end..].iter())
+                    .cloned()
+                    .collect();
+                if fails(&cand) {
+                    reduced = Some(cand);
+                    break;
+                }
+                start = end;
+            }
+            match reduced {
+                Some(cand) => {
+                    cur = cand;
+                    granularity = granularity.saturating_sub(1).max(2);
+                }
+                None if granularity >= cur.len() => break,
+                None => granularity = (granularity * 2).min(cur.len()),
+            }
+        }
+        if cur.len() == 1 && fails(&[]) {
+            cur.clear();
+        }
+        cur
+    }
+
+    /// Smallest scalar in `[lo, hi]` for which `fails` holds, by
+    /// bisection. Assumes `fails(hi)`; best-effort if non-monotone.
+    pub fn minimize_scalar(lo: usize, hi: usize, mut fails: impl FnMut(usize) -> bool) -> usize {
+        let (mut lo, mut hi) = (lo, hi);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if fails(mid) {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        hi
+    }
+}

@@ -1,0 +1,393 @@
+//! Differential harness for incremental re-factorization: across seeded
+//! random (matrix, change-set) pairs, `refactorize_partial(cs)` must be
+//! **bit-identical** to a full `refactorize` of the updated values —
+//! covering empty, single-entry, single-block, scattered multi-level and
+//! full-matrix change sets. On failure the harness shrinks the case
+//! (matrix size by bisection, then the change set by delta debugging)
+//! and panics with a minimal reproducer.
+
+mod common;
+
+use common::shrink;
+use sparselu::session::{ChangeSet, FactorPlan, SolverSession};
+use sparselu::solver::{BlockingPolicy, SolveOptions, Solver};
+use sparselu::sparse::{gen, residual, Csc};
+use sparselu::util::Prng;
+use std::sync::Arc;
+
+const CASES: u64 = 64;
+
+/// Deterministic replacement value for A-nonzero `k` — a pure function of
+/// `(seed, k, old)` so a shrunken change set reproduces the same values.
+fn new_value(seed: u64, k: usize, old: f64) -> f64 {
+    let h = Prng::new(seed ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)).f64();
+    old * (1.0 + 0.04 * (2.0 * h - 1.0)) + 1e-3 * (2.0 * h - 1.0)
+}
+
+/// The change-set value indices for one case, by kind (`case % 5`):
+/// 0 = empty, 1 = single entry, 2 = confined to one block, 3 = scattered
+/// multi-level subset (~10% of nnz), 4 = full matrix.
+fn change_indices(seed: u64, a: &Csc, kind: u64) -> Vec<usize> {
+    let nnz = a.nnz();
+    let mut rng = Prng::new(seed ^ 0xC0FF_EE00);
+    match kind {
+        0 => Vec::new(),
+        1 => vec![rng.below(nnz)],
+        2 => {
+            // all entries landing in the block of one randomly-chosen
+            // entry (the external mirror of the plan's scatter map)
+            let opts = SolveOptions::ours(1 + (seed % 4) as u32);
+            let plan = FactorPlan::build(a, &opts);
+            let coords = common::value_coords(a);
+            let target = common::block_of_entry(&plan, coords[rng.below(nnz)]);
+            (0..nnz)
+                .filter(|&k| common::block_of_entry(&plan, coords[k]) == target)
+                .collect()
+        }
+        3 => {
+            let m = (1 + nnz / 10).min(nnz);
+            rng.sample_indices(nnz, m)
+        }
+        _ => (0..nnz).collect(),
+    }
+}
+
+/// Matrix with `a`'s pattern and the given values.
+fn with_values(a: &Csc, values: &[f64]) -> Csc {
+    Csc::from_parts_unchecked(
+        a.n_rows(),
+        a.n_cols(),
+        a.col_ptr.clone(),
+        a.row_idx.clone(),
+        values.to_vec(),
+    )
+}
+
+/// One differential case. `indices` out of range for the (possibly
+/// shrunken) matrix are ignored. Returns `Err(reason)` on any mismatch.
+fn check_case(seed: u64, n: usize, indices: &[usize]) -> Result<(), String> {
+    let a = common::random_matrix_sized(seed, n);
+    let nnz = a.nnz();
+    let workers = 1 + (seed % 4) as u32;
+    let opts = SolveOptions::ours(workers);
+    let plan = Arc::new(FactorPlan::build(&a, &opts));
+
+    let mut partial = SolverSession::from_plan(plan.clone());
+    partial
+        .refactorize(&a.values)
+        .map_err(|e| format!("base refactorize: {e}"))?;
+
+    let mut cs = ChangeSet::new();
+    let mut new_values = a.values.clone();
+    for &k in indices {
+        if k >= nnz {
+            continue; // index from a pre-shrink matrix size
+        }
+        let v = new_value(seed, k, a.values[k]);
+        new_values[k] = v;
+        cs.push(k, v);
+    }
+
+    let rep = partial
+        .refactorize_partial(&cs)
+        .map_err(|e| format!("partial refactorize: {e}"))?;
+    let total = plan.dag.tasks.len();
+    if rep.tasks_executed + rep.tasks_skipped != total {
+        return Err(format!(
+            "task accounting broken: executed {} + skipped {} != {total}",
+            rep.tasks_executed, rep.tasks_skipped
+        ));
+    }
+    if cs.is_empty() && (rep.tasks_executed != 0 || rep.blocks_affected != 0) {
+        return Err(format!(
+            "empty change set executed {} tasks over {} blocks",
+            rep.tasks_executed, rep.blocks_affected
+        ));
+    }
+
+    let mut full = SolverSession::from_plan(plan.clone());
+    full.refactorize(&new_values)
+        .map_err(|e| format!("full refactorize: {e}"))?;
+
+    for id in 0..plan.structure.blocks.len() {
+        let vp = partial.numeric().block_values(id as u32);
+        let vf = full.numeric().block_values(id as u32);
+        if vp != vf {
+            return Err(format!("factor block {id} diverges (partial vs full)"));
+        }
+    }
+
+    let b: Vec<f64> = (0..n).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
+    let xp = partial.solve(&b);
+    if xp != full.solve(&b) {
+        return Err("solve vectors diverge (partial vs full)".into());
+    }
+    let r = residual(&with_values(&a, &new_values), &xp, &b);
+    if r > 1e-6 {
+        return Err(format!("residual {r:.3e} after partial refactorize"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_partial_refactorize_bitwise_equals_full() {
+    for case in 0..CASES {
+        let mut rng = Prng::new(case.wrapping_mul(0x5DEE_CE66).wrapping_add(11));
+        let n = 20 + rng.below(160);
+        let a = common::random_matrix_sized(case, n);
+        let kind = case % 5;
+        let indices = change_indices(case, &a, kind);
+        if let Err(msg) = check_case(case, n, &indices) {
+            // shrink the matrix size first (bisection), re-deriving the
+            // change set at each candidate size...
+            let n_min = shrink::minimize_scalar(8, n, |nn| {
+                let aa = common::random_matrix_sized(case, nn);
+                check_case(case, nn, &change_indices(case, &aa, kind)).is_err()
+            });
+            let a_min = common::random_matrix_sized(case, n_min);
+            let idx_min = change_indices(case, &a_min, kind);
+            let (n_rep, idx_base) = if check_case(case, n_min, &idx_min).is_err() {
+                (n_min, idx_min)
+            } else {
+                (n, indices) // non-monotone bisection: keep the original
+            };
+            // ...then delta-debug the change set down to a minimal core
+            let minimal = shrink::minimize_subset(&idx_base, |sub| {
+                check_case(case, n_rep, sub).is_err()
+            });
+            panic!(
+                "differential failure (case {case}, kind {kind}): {msg}\n\
+                 minimal reproducer: seed={case}, n={n_rep}, workers={}, \
+                 change indices={minimal:?}",
+                1 + (case % 4)
+            );
+        }
+    }
+}
+
+/// Acceptance criterion: a change set confined to one leaf block of a
+/// ≥16-block matrix executes strictly fewer tasks than the full DAG and
+/// still produces factors bit-identical to a **cold** factorization of
+/// the updated matrix.
+#[test]
+fn leaf_block_change_prunes_tasks_and_matches_cold_factorize() {
+    let a = gen::grid2d_laplacian(20, 20); // n = 400
+    let opts = SolveOptions {
+        blocking: BlockingPolicy::Regular(25), // 16 blocks of 25
+        ..SolveOptions::ours(1)
+    };
+    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let nb = plan.structure.nb();
+    assert!(nb >= 16, "need a >=16-block grid, got {nb}");
+
+    let mut session = SolverSession::from_plan(plan.clone());
+    session.refactorize(&a.values).unwrap();
+
+    // a diagonal A-entry whose permuted row lands in the trailing
+    // diagonal block — the leaf/sink of the block dependency DAG
+    let p = plan.permutation().as_slice();
+    let positions = plan.structure.blocking.positions();
+    let last_lo = positions[nb - 1];
+    let r = (0..a.n_rows())
+        .find(|&i| p[i] >= last_lo && a.value_index(i, i).is_some())
+        .expect("diagonal entry in the trailing block");
+    let k = a.value_index(r, r).unwrap();
+    let bumped = a.values[k] * 1.5;
+
+    let rep = session
+        .refactorize_partial(&ChangeSet::from_value_indices([(k, bumped)]))
+        .unwrap();
+    assert_eq!(rep.blocks_dirty, 1);
+    assert_eq!(rep.blocks_affected, 1, "trailing diagonal block is a DAG sink");
+    assert!(
+        rep.tasks_executed < plan.dag.tasks.len(),
+        "pruned run must execute strictly fewer tasks ({} vs {})",
+        rep.tasks_executed,
+        plan.dag.tasks.len()
+    );
+    assert!(rep.tasks_skipped > 0);
+
+    // bit-identical to a cold factorization of the updated matrix
+    let mut updated = a.clone();
+    updated.values[k] = bumped;
+    let mut solver = Solver::new(opts);
+    let cold = solver.factorize(&updated).unwrap();
+    for id in 0..plan.structure.blocks.len() {
+        assert_eq!(
+            session.numeric().block_values(id as u32),
+            cold.factors().numeric.block_values(id as u32),
+            "block {id} differs from cold factorization"
+        );
+    }
+    let b: Vec<f64> = (0..400).map(|i| (i % 9) as f64 - 4.0).collect();
+    assert_eq!(session.solve(&b), cold.solve(&b));
+}
+
+/// A change in the *first* block must invalidate downstream blocks (the
+/// opposite extreme of the leaf-block case) and still match bitwise.
+#[test]
+fn root_block_change_cascades_and_matches_full() {
+    let a = gen::grid2d_laplacian(16, 16); // n = 256
+    let opts = SolveOptions {
+        blocking: BlockingPolicy::Regular(16),
+        ..SolveOptions::ours(2)
+    };
+    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let p = plan.permutation().as_slice();
+    let positions = plan.structure.blocking.positions();
+    let first_hi = positions[1];
+    let r = (0..a.n_rows())
+        .find(|&i| p[i] < first_hi && a.value_index(i, i).is_some())
+        .expect("diagonal entry in the leading block");
+    let k = a.value_index(r, r).unwrap();
+
+    let mut session = SolverSession::from_plan(plan.clone());
+    session.refactorize(&a.values).unwrap();
+    let mut new_values = a.values.clone();
+    new_values[k] *= 1.25;
+    let rep = session
+        .refactorize_partial(&ChangeSet::from_value_indices([(k, new_values[k])]))
+        .unwrap();
+    assert_eq!(rep.blocks_dirty, 1);
+    assert!(
+        rep.blocks_affected > 1,
+        "a leading-block change must cascade (affected {})",
+        rep.blocks_affected
+    );
+
+    let mut full = SolverSession::from_plan(plan.clone());
+    full.refactorize(&new_values).unwrap();
+    for id in 0..plan.structure.blocks.len() {
+        assert_eq!(
+            session.numeric().block_values(id as u32),
+            full.numeric().block_values(id as u32),
+            "block {id}"
+        );
+    }
+}
+
+/// A sequence of partial refactorizations (accumulating changes) stays
+/// bit-identical to full refactorizations of the running values.
+#[test]
+fn accumulated_partial_steps_track_full_refactorize() {
+    let a = common::random_matrix_sized(77, 90);
+    let opts = SolveOptions::ours(2);
+    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let mut inc = SolverSession::from_plan(plan.clone());
+    inc.refactorize(&a.values).unwrap();
+    let mut values = a.values.clone();
+    let mut rng = Prng::new(0xACC);
+    for step in 0..6 {
+        let mut cs = ChangeSet::new();
+        for _ in 0..(1 + rng.below(4)) {
+            let k = rng.below(values.len());
+            values[k] *= 1.0 + 0.03 * rng.signed_unit();
+            cs.push(k, values[k]);
+        }
+        inc.refactorize_partial(&cs).unwrap();
+        let mut full = SolverSession::from_plan(plan.clone());
+        full.refactorize(&values).unwrap();
+        for id in 0..plan.structure.blocks.len() {
+            assert_eq!(
+                inc.numeric().block_values(id as u32),
+                full.numeric().block_values(id as u32),
+                "step {step}, block {id}"
+            );
+        }
+    }
+    assert_eq!(inc.refactor_count(), 7);
+}
+
+// ---- transpose solves: differential check against a dense oracle ----
+
+#[test]
+fn solve_transpose_matches_dense_oracle() {
+    let cases: Vec<Csc> = vec![
+        gen::grid2d_laplacian(5, 5),
+        gen::tridiagonal(30),
+        gen::directed_graph(40, 3, 5),
+        gen::circuit_bbd(gen::CircuitParams { n: 60, ..Default::default() }),
+        common::random_matrix_sized(9, 35),
+    ];
+    for (ci, a) in cases.iter().enumerate() {
+        let n = a.n_rows();
+        let mut rng = Prng::new(0x7A + ci as u64);
+        let b: Vec<f64> = (0..n).map(|_| rng.signed_unit() * 2.0).collect();
+        let want = common::dense_solve_transpose(a, &b);
+
+        // one-shot path: Factorization::solve_transpose → trisolve_t
+        let mut solver = Solver::new(SolveOptions::ours(1));
+        let f = solver.factorize(a).unwrap();
+        let got = f.solve_transpose(&b);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-7 * w.abs().max(1.0),
+                "case {ci}, x[{i}]: blocked {g} vs dense {w}"
+            );
+        }
+
+        // session path: SolverSession::solve_transpose over the same factors
+        let plan = Arc::new(FactorPlan::build(a, &SolveOptions::ours(2)));
+        let mut s = SolverSession::from_plan(plan);
+        s.refactorize(&a.values).unwrap();
+        let got2 = s.solve_transpose(&b);
+        for (i, (g, w)) in got2.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-7 * w.abs().max(1.0),
+                "case {ci} (session), x[{i}]: blocked {g} vs dense {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn solve_transpose_after_partial_refactorize_matches_dense_oracle() {
+    let a = common::random_matrix_sized(21, 50);
+    let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+    let mut s = SolverSession::from_plan(plan);
+    s.refactorize(&a.values).unwrap();
+    let k = a.value_index(10, 10).expect("diagonal entry");
+    let mut new_values = a.values.clone();
+    new_values[k] *= 1.75;
+    s.refactorize_partial(&ChangeSet::from_value_indices([(k, new_values[k])]))
+        .unwrap();
+    let updated = with_values(&a, &new_values);
+    let b: Vec<f64> = (0..50).map(|i| ((i * 3) % 7) as f64 - 3.0).collect();
+    let want = common::dense_solve_transpose(&updated, &b);
+    let got = s.solve_transpose(&b);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-7 * w.abs().max(1.0),
+            "x[{i}]: blocked {g} vs dense {w}"
+        );
+    }
+}
+
+// ---- the shrinker itself ----
+
+#[test]
+fn shrinker_isolates_minimal_failing_pair() {
+    let items: Vec<usize> = (0..40).collect();
+    let minimal = shrink::minimize_subset(&items, |s| s.contains(&7) && s.contains(&23));
+    assert_eq!(minimal, vec![7, 23]);
+}
+
+#[test]
+fn shrinker_returns_empty_when_items_are_irrelevant() {
+    let items: Vec<usize> = (0..10).collect();
+    let minimal = shrink::minimize_subset(&items, |_| true);
+    assert!(minimal.is_empty());
+}
+
+#[test]
+fn shrinker_keeps_single_culprit() {
+    let items: Vec<u32> = (0..33).collect();
+    let minimal = shrink::minimize_subset(&items, |s| s.contains(&31));
+    assert_eq!(minimal, vec![31]);
+}
+
+#[test]
+fn scalar_shrinker_bisects_to_threshold() {
+    assert_eq!(shrink::minimize_scalar(0, 100, |x| x >= 37), 37);
+    assert_eq!(shrink::minimize_scalar(5, 5, |_| true), 5);
+}

@@ -1,69 +1,19 @@
 //! Integration: the session subsystem's numeric-only re-factorization
 //! must be indistinguishable from a cold `Solver::factorize` — property
 //! tests across seeded random matrices (the proptest crate is unavailable
-//! offline; failures print the seed).
+//! offline; failures print the seed). Generators and shrinking helpers
+//! are shared with `differential.rs` through `tests/common/`.
 
+mod common;
+
+use common::{perturbed, random_matrix};
 use sparselu::session::{FactorPlan, PlanCache, SolverSession};
 use sparselu::solver::{SolveOptions, Solver};
-use sparselu::sparse::{gen, residual, Coo, Csc};
+use sparselu::sparse::{gen, residual};
 use sparselu::util::Prng;
 use std::sync::Arc;
 
 const SEEDS: u64 = 16;
-
-/// Random diagonally-dominant sparse matrix with random size/density.
-fn random_matrix(seed: u64) -> Csc {
-    let mut rng = Prng::new(seed);
-    let n = 20 + rng.below(230);
-    let per_row = 1 + rng.below(5);
-    let mut coo = Coo::with_capacity(n, n, n * (per_row + 1));
-    for i in 0..n {
-        for _ in 0..per_row {
-            let j = rng.below(n);
-            if j != i {
-                coo.push(i, j, rng.signed_unit());
-            }
-        }
-    }
-    let m = coo.to_csc();
-    let mut row_abs = vec![0.0; n];
-    for j in 0..n {
-        for (i, v) in m.col(j) {
-            if i != j {
-                row_abs[i] += v.abs();
-            }
-        }
-    }
-    let mut out = Coo::with_capacity(n, n, m.nnz() + n);
-    for j in 0..n {
-        for (i, v) in m.col(j) {
-            if i != j {
-                out.push(i, j, v);
-            }
-        }
-    }
-    for i in 0..n {
-        out.push(i, i, row_abs[i] + 1.0);
-    }
-    out.to_csc()
-}
-
-/// Same pattern as `a`, values perturbed deterministically.
-fn perturbed(a: &Csc, seed: u64) -> Csc {
-    let mut rng = Prng::new(seed);
-    let values: Vec<f64> = a
-        .values
-        .iter()
-        .map(|v| v * (1.0 + 0.05 * rng.signed_unit()))
-        .collect();
-    Csc::from_parts_unchecked(
-        a.n_rows(),
-        a.n_cols(),
-        a.col_ptr.clone(),
-        a.row_idx.clone(),
-        values,
-    )
-}
 
 #[test]
 fn prop_refactorize_matches_cold_factorize_bitwise() {
