@@ -137,7 +137,8 @@ fn main() {
                 (n0, n0, session.current_values()[a.value_index(n0, n0).unwrap()] + g),
                 (n1, n1, session.current_values()[a.value_index(n1, n1).unwrap()] + g),
             ],
-        );
+        )
+        .expect("device stamp lies inside the netlist pattern");
         let rep = session.refactorize_partial(&stamp).expect("partial refactorize");
         stamp_total += rep.scatter_seconds + rep.numeric_seconds;
         last_exec = rep.tasks_executed;

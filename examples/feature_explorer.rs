@@ -44,7 +44,7 @@ fn main() {
     for (name, a) in cases {
         // feature on the post-symbolic pattern, as the paper prescribes
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let curve = DiagFeature::from_csc(&ldu).curve();
         let sampled = curve.sample(48);
         println!("\n{name}");

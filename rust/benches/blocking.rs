@@ -16,7 +16,7 @@ use sparselu::symbolic;
 fn main() {
     let a = gen::circuit_bbd(gen::CircuitParams { n: 6800, ..Default::default() });
     let sym = symbolic::analyze(&a);
-    let ldu = sym.ldu_pattern(&a);
+    let ldu = sym.ldu_pattern(&a).unwrap();
     let n = ldu.n_cols();
     println!("matrix: BBD n={n} nnz(L+U)={}", ldu.nnz());
 

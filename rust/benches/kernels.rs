@@ -15,7 +15,7 @@ fn main() {
     section("sparse kernels on BBD blocks (block size 256)");
     let a = gen::circuit_bbd(gen::CircuitParams { n: 2048, ..Default::default() });
     let sym = symbolic::analyze(&a);
-    let ldu = sym.ldu_pattern(&a);
+    let ldu = sym.ldu_pattern(&a).unwrap();
     let bm = BlockedMatrix::build(&ldu, regular_blocking(2048, 256));
     let nb = bm.nb();
     let mut ws = Workspace::with_capacity(512);

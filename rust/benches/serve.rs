@@ -1,0 +1,86 @@
+//! Serving-layer throughput bench: the closed-loop load generator
+//! (`serve::loadgen`) drives a shared-plan `SessionPool` with 8 client
+//! threads over two matrices and two scenario mixes, reporting
+//! throughput and p50/p99 latency per scenario.
+//!
+//! Emits `BENCH_serve.json` in the working directory (uploaded by CI
+//! next to `BENCH_refactor.json`).
+//!
+//! ```text
+//! cargo bench --bench serve
+//! ```
+
+use sparselu::serve::loadgen::{self, LoadgenConfig};
+use sparselu::serve::ScenarioMix;
+use sparselu::session::FactorPlan;
+use sparselu::solver::SolveOptions;
+use sparselu::sparse::gen;
+use std::io::Write;
+use std::sync::Arc;
+
+fn main() {
+    let suite = [
+        (
+            "ASIC-like-bbd",
+            gen::circuit_bbd(gen::CircuitParams {
+                n: 1500,
+                border_frac: 0.05,
+                border_density: 0.35,
+                interior_deg: 2,
+                seed: 0x680F,
+            }),
+            // SPICE-shaped traffic: stamps dominate
+            ScenarioMix { full: 1, stamp: 6, solve: 3 },
+        ),
+        (
+            "ecology-like-grid2d",
+            gen::grid2d_laplacian(38, 38),
+            // solver-service-shaped traffic: solves dominate
+            ScenarioMix { full: 2, stamp: 2, solve: 6 },
+        ),
+    ];
+    let opts = SolveOptions::ours(1);
+    let mut objects = Vec::new();
+
+    for (name, a, mix) in &suite {
+        println!("\n=== {name} (n={}, nnz={}) ===", a.n_rows(), a.nnz());
+        let plan = Arc::new(FactorPlan::build(a, &opts));
+        let cfg = LoadgenConfig {
+            clients: 8,
+            requests_per_client: 24,
+            pool_sessions: 4,
+            mix: *mix,
+            seed: 0xBE7C,
+        };
+        let report = loadgen::run(a, plan, &cfg);
+        println!(
+            "{} requests in {:.3}s -> {:.1} req/s  (sessions created: {}, \
+             tasks {} executed / {} skipped)",
+            report.total_requests,
+            report.wall_seconds,
+            report.throughput_rps,
+            report.sessions_created,
+            report.tasks_executed,
+            report.tasks_skipped,
+        );
+        for (scenario, s) in &report.per_scenario {
+            if s.count == 0 {
+                continue;
+            }
+            println!(
+                "  {scenario:6} x{:<4} p50 {:>9.6}s  p99 {:>9.6}s  max {:>9.6}s",
+                s.count, s.p50_s, s.p99_s, s.max_s
+            );
+        }
+        objects.push(report.to_json(name, a.n_rows(), a.nnz()).trim_end().to_string());
+    }
+
+    let json = format!(
+        "{{\n\"bench\": \"serve-suite\",\n\"results\": [\n{}\n]\n}}\n",
+        objects.join(",\n")
+    );
+    let path = "BENCH_serve.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_serve.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_serve.json");
+    println!("\nwrote {path}");
+}

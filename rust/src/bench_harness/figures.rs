@@ -127,7 +127,7 @@ pub fn fig5_balance(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
     let perm = crate::ordering::order(&m.matrix, crate::ordering::OrderingMethod::MinDegree);
     let pa = m.matrix.permute_sym(perm.as_slice());
     let sym = symbolic::analyze(&pa);
-    let ldu = sym.ldu_pattern(&pa);
+    let ldu = sym.ldu_pattern(&pa).expect("A within its own symbolic pattern");
     let n = ldu.n_cols();
     let curve = DiagFeature::from_csc(&ldu).curve();
     let irr = irregular_blocking(&curve, &IrregularParams::default());
@@ -197,7 +197,7 @@ pub fn fig9_blocking_example(out_dir: &Path) -> anyhow::Result<()> {
     println!("Fig 9 — irregular blocking worked example");
     let a = gen::local_dense_blocks(1200, &[(800, 250)], 2, 0x91);
     let sym = symbolic::analyze(&a);
-    let ldu = sym.ldu_pattern(&a);
+    let ldu = sym.ldu_pattern(&a).expect("A within its own symbolic pattern");
     let curve = DiagFeature::from_csc(&ldu).curve();
     let params = IrregularParams { sample_points: 24, min_block: 16, ..Default::default() };
     let blocking = irregular_blocking(&curve, &params);
@@ -228,7 +228,7 @@ pub fn fig11_distributions(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<
         let perm = crate::ordering::order(&m.matrix, method);
         let pa = m.matrix.permute_sym(perm.as_slice());
         let sym = symbolic::analyze(&pa);
-        let ldu = sym.ldu_pattern(&pa);
+        let ldu = sym.ldu_pattern(&pa).expect("A within its own symbolic pattern");
         let curve = DiagFeature::from_csc(&ldu).curve();
         // paper: ASIC bottom-right-heavy (98% in last region), ecology linear
         let last_20pct = 1.0 - curve.pct[(ldu.n_cols() as f64 * 0.8) as usize];

@@ -183,7 +183,7 @@ pub fn ablations(out_dir: &Path, scale: SuiteScale) -> anyhow::Result<()> {
         let perm = crate::ordering::order(bbd, crate::ordering::OrderingMethod::MinDegree);
         let pa = bbd.permute_sym(perm.as_slice());
         let sym = crate::symbolic::analyze(&pa);
-        let ldu = sym.ldu_pattern(&pa);
+        let ldu = sym.ldu_pattern(&pa).expect("A within its own symbolic pattern");
         let curve = crate::blocking::DiagFeature::from_csc(&ldu).curve();
         let blocking = crate::blocking::irregular_blocking(
             &curve,

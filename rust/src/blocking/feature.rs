@@ -155,7 +155,7 @@ mod tests {
     fn algorithm2_matches_brute_force_on_filled_pattern() {
         let a = gen::directed_graph(50, 3, 7);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let f = DiagFeature::from_csc(&ldu);
         assert_eq!(f.blockptr, brute_blockptr(&ldu));
     }

@@ -135,7 +135,7 @@ mod tests {
 
     fn curve_of(a: &crate::sparse::Csc) -> FeatureCurve {
         let sym = symbolic::analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         DiagFeature::from_csc(&ldu).curve()
     }
 
@@ -194,7 +194,7 @@ mod tests {
             seed: 2,
         });
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let curve = DiagFeature::from_csc(&ldu).curve();
         let irr = irregular_blocking(&curve, &IrregularParams::default());
         let reg = crate::blocking::regular_blocking(3000, 3000 / irr.num_blocks().max(1));

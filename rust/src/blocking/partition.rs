@@ -263,7 +263,7 @@ mod tests {
     fn blocked(n_grid: usize, bs: usize) -> (Csc, BlockedMatrix) {
         let a = gen::grid2d_laplacian(n_grid, n_grid);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs));
         (ldu, bm)
     }
@@ -322,7 +322,7 @@ mod tests {
         // a tridiagonal instead.
         let t = gen::tridiagonal(40);
         let sym = symbolic::analyze(&t);
-        let ldu = sym.ldu_pattern(&t);
+        let ldu = sym.ldu_pattern(&t).unwrap();
         let bm2 = BlockedMatrix::build(&ldu, regular_blocking(40, 10));
         assert_eq!(bm2.block_id(0, 3), None, "tridiagonal corner must be empty");
     }
@@ -357,7 +357,7 @@ mod tests {
     fn empty_blocks_not_stored() {
         let t = gen::tridiagonal(100);
         let sym = symbolic::analyze(&t);
-        let ldu = sym.ldu_pattern(&t);
+        let ldu = sym.ldu_pattern(&t).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(100, 10));
         // tridiagonal: only diagonal + sub/super-diagonal block couples
         assert!(bm.num_nonempty() <= 10 + 9 + 9);
@@ -368,7 +368,7 @@ mod tests {
     fn irregular_blocking_partition_works() {
         let a = gen::circuit_bbd(gen::CircuitParams { n: 800, ..Default::default() });
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let curve = crate::blocking::DiagFeature::from_csc(&ldu).curve();
         let blocking =
             crate::blocking::irregular_blocking(&curve, &crate::blocking::IrregularParams::default());

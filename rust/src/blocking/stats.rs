@@ -77,7 +77,7 @@ mod tests {
     use crate::symbolic;
 
     fn ldu_of(a: &crate::sparse::Csc) -> crate::sparse::Csc {
-        symbolic::analyze(a).ldu_pattern(a)
+        symbolic::analyze(a).ldu_pattern(a).unwrap()
     }
 
     #[test]

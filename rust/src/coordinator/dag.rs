@@ -322,7 +322,7 @@ mod tests {
 
     fn dag_for(a: &crate::sparse::Csc, bs: usize, p: u32) -> (TaskDag, BlockedMatrix) {
         let sym = symbolic::analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs));
         let dag = TaskDag::build(
             &bm,

@@ -125,7 +125,7 @@ mod tests {
 
     fn sim(a: &crate::sparse::Csc, bs: usize, p: u32) -> SimReport {
         let sym = symbolic::analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs));
         let model = CostModel::a100();
         let dag = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(p), &model);
@@ -136,7 +136,7 @@ mod tests {
     fn makespan_bounded_by_total_and_critical_path() {
         let a = gen::uniform_random(120, 0.08, 3);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(120, 24));
         let model = CostModel::a100();
         let dag = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(4), &model);
@@ -153,7 +153,7 @@ mod tests {
         // with stream concurrency 1, one device runs tasks back-to-back
         let a = gen::grid2d_laplacian(8, 8);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(64, 16));
         let model = CostModel { concurrent_kernels: 1, ..CostModel::a100() };
         let dag = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(1), &model);
@@ -167,7 +167,7 @@ mod tests {
     fn stream_concurrency_shortens_makespan() {
         let a = gen::uniform_random(150, 0.06, 5);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(150, 25));
         let serial = CostModel { concurrent_kernels: 1, ..CostModel::a100() };
         let streams = CostModel::a100();
@@ -184,7 +184,7 @@ mod tests {
         // interior. Check the modeled makespan across a size sweep.
         let a = gen::electromagnetics_like(2600, 12, 2, 0x0F5E);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let model = CostModel::a100();
         let mut times = Vec::new();
         for bs in [32usize, 108, 432, 2600] {
@@ -228,7 +228,7 @@ mod tests {
             seed: 8,
         });
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(4000, 160));
         let model = CostModel { concurrent_kernels: 1, ..CostModel::a100() };
         let dag1 = TaskDag::build(&bm, &KernelPolicy::default(), Placement::square(1), &model);

@@ -273,7 +273,7 @@ mod tests {
 
     fn parallel_check(a: &crate::sparse::Csc, bs: usize, p: u32) {
         let sym = symbolic::analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs)));
         let policy = KernelPolicy::default();
         let model = CostModel::a100();
@@ -315,7 +315,7 @@ mod tests {
     fn four_workers_on_bbd_irregular_blocking() {
         let a = gen::circuit_bbd(gen::CircuitParams { n: 500, ..Default::default() });
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let curve = crate::blocking::DiagFeature::from_csc(&ldu).curve();
         let blocking = crate::blocking::irregular_blocking(
             &curve,
@@ -341,7 +341,7 @@ mod tests {
     fn subset_full_mask_matches_run_dag() {
         let a = gen::grid2d_laplacian(8, 8);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(64, 12)));
         let policy = KernelPolicy::default();
         let dag = TaskDag::build(&bm, &policy, Placement::square(2), &CostModel::a100());
@@ -365,7 +365,7 @@ mod tests {
     fn subset_empty_mask_is_noop() {
         let a = gen::tridiagonal(60);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(60, 10)));
         let policy = KernelPolicy::default();
         let dag = TaskDag::build(&bm, &policy, Placement::square(2), &CostModel::a100());
@@ -395,7 +395,7 @@ mod tests {
         coo.push(3, 1, 0.5);
         let a = coo.to_csc();
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(4, 2)));
         let model = CostModel::a100();
         let r = factorize_with_workers(bm, &KernelPolicy::default(), &CpuDense, 2, &model);

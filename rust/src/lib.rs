@@ -34,6 +34,15 @@
 //!   ([`session::SolverSession::refactorize_partial`] +
 //!   [`session::ChangeSet`]): when only a few A-values change, only the
 //!   DAG tasks reachable from the dirty blocks re-execute.
+//! * [`serve`] — the multi-client serving layer over `session`:
+//!   [`serve::SessionPool`] (N sessions sharing one plan,
+//!   checkout/checkin, lazy growth), [`serve::Batcher`] (bounded queue
+//!   coalescing solves into multi-RHS sweeps and routing stamps partial
+//!   vs full via [`session::SolverSession::estimate_partial`]),
+//!   [`serve::persist`] (versioned checksummed plan files +
+//!   [`session::PlanCache::warm_from_dir`] for one-disk-read cold
+//!   starts), and [`serve::loadgen`] (the closed-loop throughput /
+//!   tail-latency bench behind `repro serve-bench`).
 //! * [`bench_harness`] — regenerates every table and figure of the paper.
 //!
 //! ## Quickstart
@@ -110,7 +119,7 @@
 //! // device stamp: the transistor between nodes 3 and 7 re-linearized —
 //! // its two diagonal conductance entries change, nothing else
 //! let (g3, g7) = (1.2e-3, 0.8e-3);
-//! let stamp = ChangeSet::from_coords(&a, &[(3, 3, g3), (7, 7, g7)]);
+//! let stamp = ChangeSet::from_coords(&a, &[(3, 3, g3), (7, 7, g7)]).unwrap();
 //! let report = session.refactorize_partial(&stamp).unwrap();
 //! // typically: 2 dirty blocks, a small affected closure, most tasks skipped
 //! assert!(report.tasks_executed + report.tasks_skipped == session.plan().dag.tasks.len());
@@ -126,6 +135,7 @@ pub mod numeric;
 pub mod coordinator;
 pub mod gpu_model;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod solver;
 pub mod bench_harness;

@@ -6,6 +6,7 @@
 //! repro analyze --matrix gen:grid2d=100x100
 //! repro bench table4 --out results
 //! repro bench all --out results --scale medium
+//! repro serve-bench --matrix gen:bbd=2000 --clients 8 --mix 1,6,3
 //! repro artifacts-check
 //! ```
 //!
@@ -15,9 +16,13 @@ use anyhow::{bail, Context, Result};
 use sparselu::bench_harness::{self, SuiteScale};
 use sparselu::ordering::OrderingMethod;
 use sparselu::runtime::PjrtDense;
+use sparselu::serve::{loadgen, persist, ScenarioMix};
+use sparselu::session::{FactorPlan, PlanCache};
 use sparselu::solver::{SolveOptions, Solver};
 use sparselu::sparse::{gen, io, residual, Csc};
+use sparselu::util::timer::timed;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 fn main() {
     if let Err(e) = run() {
@@ -48,6 +53,7 @@ fn run() -> Result<()> {
             };
             bench_harness::run(exp, std::path::Path::new(&out), scale)
         }
+        "serve-bench" => cmd_serve_bench(&flags),
         "artifacts-check" => cmd_artifacts_check(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -65,7 +71,17 @@ USAGE:
   repro solve   --matrix <SPEC> [--workers N] [--blocking B] [--ordering O] [--pjrt]
   repro analyze --matrix <SPEC>
   repro bench   <EXPERIMENT|all> [--out DIR] [--scale small|medium]
+  repro serve-bench [--matrix SPEC] [--clients K] [--requests N] [--sessions S]
+                    [--mix F,S,V] [--plan-dir DIR] [--out FILE] [--workers N] [--blocking B]
   repro artifacts-check [--dir artifacts]
+
+SERVE-BENCH (the serving-layer load generator):
+  K closed-loop client threads drive a shared-plan session pool over a
+  full-refactorize / device-stamp / solve-only scenario mix (--mix
+  weights, default 1,6,3) and the run's throughput + p50/p99 latency per
+  scenario is written to --out (default BENCH_serve.json). With
+  --plan-dir the FactorPlan is persisted there and warm-loaded on the
+  next run (cold start = one disk read, no symbolic/blocking).
 
 MATRIX SPEC:
   path/to/file.mtx             MatrixMarket file (SuiteSparse downloads work)
@@ -228,7 +244,7 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
     let perm = sparselu::ordering::order(&a, OrderingMethod::MinDegree);
     let pa = a.permute_sym(perm.as_slice());
     let sym = sparselu::symbolic::analyze(&pa);
-    let ldu = sym.ldu_pattern(&pa);
+    let ldu = sym.ldu_pattern(&pa).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("after min-degree + symbolic:");
     println!("  nnz(L+U) = {} (fill {:.2}x)", sym.nnz_ldu(), sym.fill_ratio(&a));
     println!("  flops    = {:.3e}", sym.flops());
@@ -260,6 +276,114 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
     let options = sparselu::blocking::selection::scaled_options(a.n_cols());
     let sel = sparselu::blocking::selection::select_from(a.n_cols(), ldu.nnz(), &options);
     println!("PanguLU selection tree would pick: {sel} (from {options:?})");
+    Ok(())
+}
+
+fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let spec = flags.get("matrix").cloned().unwrap_or_else(|| "gen:bbd=2000".into());
+    let a = load_matrix(&spec)?;
+    let opts = options_from_flags(flags)?;
+    let clients: usize = flags.get("clients").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(40);
+    let sessions: usize = flags
+        .get("sessions")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(|| clients.clamp(1, 4));
+    if clients == 0 || requests == 0 || sessions == 0 {
+        bail!("--clients, --requests and --sessions must all be >= 1");
+    }
+    let mix = match flags.get("mix") {
+        Some(s) => {
+            let weights: Vec<u32> = s
+                .split(',')
+                .map(|p| p.trim().parse::<u32>())
+                .collect::<Result<_, _>>()
+                .context("--mix F,S,V (three integer weights)")?;
+            if weights.len() != 3 {
+                bail!("--mix needs exactly three weights: full,stamp,solve");
+            }
+            ScenarioMix { full: weights[0], stamp: weights[1], solve: weights[2] }
+        }
+        None => ScenarioMix::default(),
+    };
+    if mix.full + mix.stamp + mix.solve == 0 {
+        bail!("--mix needs at least one positive weight");
+    }
+    let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_serve.json".into());
+    println!("matrix: {} n={} nnz={}", spec, a.n_rows(), a.nnz());
+
+    // plan acquisition — through the persistence layer when --plan-dir
+    // is given, so repeat runs take the serving restart's warm path
+    let plan = match flags.get("plan-dir") {
+        Some(dir) => {
+            let dir = std::path::Path::new(dir);
+            std::fs::create_dir_all(dir)?;
+            let mut cache = PlanCache::new(4);
+            let warm = cache.warm_from_dir(dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+            for (path, err) in &warm.skipped {
+                eprintln!("warning: skipped plan file {}: {err}", path.display());
+            }
+            let (plan, acquire_seconds) = timed(|| cache.get_or_build(&a, &opts));
+            let how = if cache.misses() == 0 { "warm-loaded from disk" } else { "built cold" };
+            println!(
+                "plan {how} in {acquire_seconds:.4}s ({} file(s) warmed from {})",
+                warm.loaded,
+                dir.display()
+            );
+            persist::save_plan_to_dir(&plan, dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+            plan
+        }
+        None => {
+            let (plan, build_seconds) = timed(|| Arc::new(FactorPlan::build(&a, &opts)));
+            println!(
+                "plan built in {build_seconds:.4}s (pass --plan-dir DIR to persist/warm it)"
+            );
+            plan
+        }
+    };
+
+    let cfg = loadgen::LoadgenConfig {
+        clients,
+        requests_per_client: requests,
+        pool_sessions: sessions,
+        mix,
+        seed: 0x5E27E,
+    };
+    println!(
+        "load: {clients} clients x {requests} requests, pool cap {sessions}, \
+         mix full:{} stamp:{} solve:{}",
+        mix.full, mix.stamp, mix.solve
+    );
+    let report = loadgen::run(&a, plan, &cfg);
+
+    println!("\n--- serve bench ---");
+    println!("requests         : {} in {:.3}s", report.total_requests, report.wall_seconds);
+    println!("throughput       : {:.1} req/s", report.throughput_rps);
+    println!(
+        "sessions created : {} of {} allowed (lazy growth)",
+        report.sessions_created, cfg.pool_sessions
+    );
+    println!(
+        "tasks            : {} executed, {} skipped by reachability pruning",
+        report.tasks_executed, report.tasks_skipped
+    );
+    println!(
+        "latency          : p50 {:.5}s  p99 {:.5}s  max {:.5}s",
+        report.overall.p50_s, report.overall.p99_s, report.overall.max_s
+    );
+    for (name, s) in &report.per_scenario {
+        if s.count == 0 {
+            continue;
+        }
+        println!(
+            "  {name:6} x{:<5} p50 {:.5}s  p99 {:.5}s  max {:.5}s",
+            s.count, s.p50_s, s.p99_s, s.max_s
+        );
+    }
+    std::fs::write(&out, report.to_json(&spec, a.n_rows(), a.nnz()))
+        .with_context(|| format!("writing {out}"))?;
+    println!("\nwrote {out}");
     Ok(())
 }
 

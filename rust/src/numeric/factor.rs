@@ -86,6 +86,14 @@ pub enum FactorError {
     Kernel(KernelError),
     /// A diagonal block of the grid is structurally empty.
     MissingDiagonal(usize),
+    /// A coordinate addressed an entry outside the sparsity pattern the
+    /// structure was built for — e.g. a device stamp at a position `A`
+    /// has no nonzero at. Changing the *pattern* needs a fresh symbolic
+    /// analysis / [`crate::session::FactorPlan`], not a value update, and
+    /// a serving path must reject such client input instead of aborting.
+    OutOfPattern { row: usize, col: usize },
+    /// A matrix whose dimension does not match the analyzed structure.
+    DimensionMismatch { got: usize, want: usize },
 }
 
 impl std::fmt::Display for FactorError {
@@ -94,6 +102,12 @@ impl std::fmt::Display for FactorError {
             FactorError::Kernel(e) => write!(f, "kernel failure: {e}"),
             FactorError::MissingDiagonal(k) => {
                 write!(f, "diagonal block {k} structurally empty (singular pattern)")
+            }
+            FactorError::OutOfPattern { row, col } => {
+                write!(f, "entry ({row},{col}) is outside the sparsity pattern")
+            }
+            FactorError::DimensionMismatch { got, want } => {
+                write!(f, "matrix has dimension {got}, analyzed structure expects {want}")
             }
         }
     }
@@ -405,7 +419,7 @@ mod tests {
 
     fn factor(a: &crate::sparse::Csc, bs: usize, policy: &KernelPolicy) -> Factors {
         let sym = symbolic::analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs)));
         factorize_sequential(bm, policy, &CpuDense).unwrap()
     }
@@ -469,7 +483,7 @@ mod tests {
     fn irregular_blocking_factorizes_too() {
         let a = gen::circuit_bbd(gen::CircuitParams { n: 400, ..Default::default() });
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let curve = crate::blocking::DiagFeature::from_csc(&ldu).curve();
         let blocking = crate::blocking::irregular_blocking(
             &curve,

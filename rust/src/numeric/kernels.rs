@@ -378,7 +378,7 @@ mod tests {
     fn getrf_matches_dense_lu_single_block() {
         let a = gen::uniform_random(24, 0.2, 42);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(24, 24));
         let id = bm.block_id(0, 0).unwrap();
         let pat = bm.block(id);
@@ -417,7 +417,7 @@ mod tests {
         }
         let a = coo.to_csc();
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(2, 2));
         let id = bm.block_id(0, 0).unwrap();
         let pat = bm.block(id);
@@ -432,7 +432,7 @@ mod tests {
     fn blocked_vs_dense(a: &crate::sparse::Csc, bs: usize) {
         let n = a.n_cols();
         let sym = symbolic::analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(n, bs));
         let nb = bm.nb();
         let mut vals: Vec<Vec<f64>> = bm.blocks.iter().map(|b| b.values.clone()).collect();
@@ -552,7 +552,7 @@ mod tests {
     fn cost_model_positive_and_scales() {
         let a = gen::grid2d_laplacian(8, 8);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = BlockedMatrix::build(&ldu, regular_blocking(64, 16));
         let id = bm.block_id(0, 0).unwrap();
         let c1 = cost::getrf(bm.block(id));

@@ -241,7 +241,7 @@ mod tests {
 
     fn solve_check(a: &crate::sparse::Csc, bs: usize) {
         let sym = symbolic::analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs)));
         let f = factorize_sequential(bm, &KernelPolicy::default(), &CpuDense).unwrap();
         let n = a.n_cols();
@@ -266,7 +266,7 @@ mod tests {
     fn solve_with_zero_rhs_gives_zero() {
         let a = gen::grid2d_laplacian(6, 6);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(36, 6)));
         let f = factorize_sequential(bm, &KernelPolicy::default(), &CpuDense).unwrap();
         let x = f.solve(&vec![0.0; 36]);
@@ -277,7 +277,7 @@ mod tests {
     fn solve_multi_matches_single_bitwise() {
         let a = gen::banded_fem(80, &[1, 5], 0.9, 3);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(80, 13)));
         let f = factorize_sequential(bm, &KernelPolicy::default(), &CpuDense).unwrap();
         let mut rng = crate::util::Prng::new(99);
@@ -297,7 +297,7 @@ mod tests {
     fn solve_identity_returns_rhs() {
         let a = crate::sparse::Csc::identity(20);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(20, 4)));
         let f = factorize_sequential(bm, &KernelPolicy::default(), &CpuDense).unwrap();
         let b: Vec<f64> = (0..20).map(|i| i as f64).collect();

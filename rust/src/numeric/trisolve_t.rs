@@ -105,7 +105,7 @@ mod tests {
 
     fn check_transpose_solve(a: &crate::sparse::Csc, bs: usize) {
         let sym = symbolic::analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs)));
         let f = factorize_sequential(bm, &KernelPolicy::default(), &CpuDense).unwrap();
         let n = a.n_cols();

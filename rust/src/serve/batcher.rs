@@ -1,0 +1,446 @@
+//! [`Batcher`] — a bounded request queue that coalesces solve requests
+//! into batched multi-RHS calls and routes device stamps through the
+//! cheapest re-factorization path.
+//!
+//! Decoupling request *arrival* from task *execution* is where
+//! multi-client factorization throughput comes from (the asynchronous
+//! task-based solver literature): clients [`Batcher::submit`] without
+//! holding a session, and a worker holding a checked-out session
+//! [`Batcher::drain`]s the queue, which
+//!
+//! * coalesces each **consecutive run of [`Request::Solve`]s** into one
+//!   [`crate::session::SolverSession::solve_many`] call (the factor
+//!   blocks are traversed once for the whole batch);
+//! * routes each [`Request::Stamp`] through
+//!   [`crate::session::SolverSession::estimate_partial`]: small closures
+//!   go down the pruned [`refactorize_partial`] path, closures above the
+//!   threshold fall back to a full numeric refactorize (whose
+//!   whole-matrix scatter is cheaper than block-by-block rescatter once
+//!   most blocks are dirty anyway);
+//! * rejects malformed client input ([`ServeError`]) instead of
+//!   panicking — a serving process must outlive any one request.
+//!
+//! [`refactorize_partial`]: crate::session::SolverSession::refactorize_partial
+
+use crate::numeric::factor::FactorError;
+use crate::session::{ChangeSet, SolverSession};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One client request against a session's current plan/pattern.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Full numeric re-factorization to a new value vector (CSC order of
+    /// the planned pattern).
+    Refactorize { values: Vec<f64> },
+    /// Incremental device stamp: a sparse set of value updates.
+    Stamp { changes: ChangeSet },
+    /// Solve `A x = b` against the current factors.
+    Solve { rhs: Vec<f64> },
+}
+
+/// Request discriminant carried on reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    Refactorize,
+    Stamp,
+    Solve,
+}
+
+/// Serving failure — returned to the client, never a process abort.
+#[derive(Debug)]
+pub enum ServeError {
+    /// The bounded queue is at capacity; the client must back off.
+    QueueFull { capacity: usize },
+    /// A solve or stamp arrived before any successful factorization
+    /// seeded the session's factors.
+    NotFactored,
+    /// A value vector whose length does not match the planned pattern.
+    WrongValueCount { got: usize, want: usize },
+    /// A stamp addressed a value index past the planned pattern's nnz.
+    StampOutOfRange { index: usize, nnz: usize },
+    /// The factorization itself failed (zero pivot, out-of-pattern
+    /// stamp, …).
+    Factor(FactorError),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { capacity } => {
+                write!(f, "request queue full (capacity {capacity})")
+            }
+            ServeError::NotFactored => {
+                write!(f, "no factors yet: a full refactorize must precede solves/stamps")
+            }
+            ServeError::WrongValueCount { got, want } => {
+                write!(f, "value vector has {got} entries, planned pattern has {want}")
+            }
+            ServeError::StampOutOfRange { index, nnz } => {
+                write!(f, "stamp value index {index} out of range (pattern nnz = {nnz})")
+            }
+            ServeError::Factor(e) => write!(f, "factorization failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<FactorError> for ServeError {
+    fn from(e: FactorError) -> Self {
+        ServeError::Factor(e)
+    }
+}
+
+/// Per-request execution report.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub kind: RequestKind,
+    /// Seconds the request sat in the queue before its batch started
+    /// executing.
+    pub queue_seconds: f64,
+    /// Number of requests executed together with this one (solve
+    /// coalescing run length; 1 for refactorize/stamp).
+    pub batch_size: usize,
+    /// DAG tasks executed on behalf of this request (0 for solves).
+    pub tasks_executed: usize,
+    /// DAG tasks skipped by reachability pruning (0 for solves and full
+    /// refactorizes).
+    pub tasks_skipped: usize,
+    /// Stamp requests: whether the batcher chose the pruned partial path
+    /// (`false` = estimator sent it down the full refactorize).
+    pub went_partial: bool,
+    /// Solve requests: the solution vector.
+    pub solution: Option<Vec<f64>>,
+}
+
+/// Bounded, coalescing request queue over one session.
+///
+/// The batcher itself is single-threaded by design — one batcher drains
+/// into one checked-out session; concurrency comes from running several
+/// batcher+session pairs against a [`crate::serve::SessionPool`].
+pub struct Batcher {
+    capacity: usize,
+    /// Stamps whose estimated run fraction exceeds this go down the full
+    /// refactorize path instead of the pruned partial path.
+    partial_threshold: f64,
+    queue: VecDeque<(Request, Instant)>,
+}
+
+impl Batcher {
+    /// Queue bounded at `capacity` requests, with the default routing
+    /// threshold (stamps re-running more than half the DAG go full).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "Batcher needs capacity >= 1");
+        Self { capacity, partial_threshold: 0.5, queue: VecDeque::new() }
+    }
+
+    /// Override the partial-vs-full routing threshold (fraction of DAG
+    /// tasks; `1.0` always goes partial, `0.0` always full — both still
+    /// bit-identical, only the execution path differs).
+    pub fn with_partial_threshold(mut self, threshold: f64) -> Self {
+        assert!((0.0..=1.0).contains(&threshold), "threshold must be in [0, 1]");
+        self.partial_threshold = threshold;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue a request, rejecting it when the queue is at capacity.
+    pub fn submit(&mut self, request: Request) -> Result<(), ServeError> {
+        if self.queue.len() == self.capacity {
+            return Err(ServeError::QueueFull { capacity: self.capacity });
+        }
+        self.queue.push_back((request, Instant::now()));
+        Ok(())
+    }
+
+    /// Execute every queued request against `session`, in submission
+    /// order, returning one outcome per request — the queue is always
+    /// fully consumed and one malformed or failing request can never
+    /// swallow its neighbors' work or results.
+    ///
+    /// Only *valid* consecutive solves coalesce into one multi-RHS
+    /// sweep; an invalid solve (wrong RHS length, no factors yet) gets
+    /// its own `Err` entry and the requests around it are served
+    /// normally.
+    pub fn drain(
+        &mut self,
+        session: &mut SolverSession<'_>,
+    ) -> Vec<Result<ServeReport, ServeError>> {
+        let mut outcomes = Vec::with_capacity(self.queue.len());
+        while let Some((request, submitted)) = self.queue.pop_front() {
+            match request {
+                Request::Solve { rhs } => {
+                    let n = session.plan().n();
+                    if !session.is_factored() {
+                        outcomes.push(Err(ServeError::NotFactored));
+                        continue;
+                    }
+                    if rhs.len() != n {
+                        outcomes.push(Err(ServeError::WrongValueCount {
+                            got: rhs.len(),
+                            want: n,
+                        }));
+                        continue;
+                    }
+                    // coalesce the following consecutive *valid* solves
+                    // into one batched multi-RHS sweep; an invalid one
+                    // ends the run and is handled on its own next turn
+                    let mut batch = vec![rhs];
+                    let mut waits = vec![submitted];
+                    while let Some((Request::Solve { rhs }, _)) = self.queue.front() {
+                        if rhs.len() != n {
+                            break;
+                        }
+                        let Some((Request::Solve { rhs }, t)) = self.queue.pop_front() else {
+                            unreachable!("front() just matched a solve");
+                        };
+                        batch.push(rhs);
+                        waits.push(t);
+                    }
+                    let start = Instant::now();
+                    let xs = session.solve_many(&batch);
+                    let batch_size = batch.len();
+                    for (x, t) in xs.into_iter().zip(waits) {
+                        outcomes.push(Ok(ServeReport {
+                            kind: RequestKind::Solve,
+                            queue_seconds: start.duration_since(t).as_secs_f64(),
+                            batch_size,
+                            tasks_executed: 0,
+                            tasks_skipped: 0,
+                            went_partial: false,
+                            solution: Some(x),
+                        }));
+                    }
+                }
+                Request::Refactorize { values } => {
+                    let want = session.plan().nnz_a();
+                    if values.len() != want {
+                        outcomes.push(Err(ServeError::WrongValueCount {
+                            got: values.len(),
+                            want,
+                        }));
+                        continue;
+                    }
+                    let start = Instant::now();
+                    let outcome = session.refactorize(&values).map(|rep| ServeReport {
+                        kind: RequestKind::Refactorize,
+                        queue_seconds: start.duration_since(submitted).as_secs_f64(),
+                        batch_size: 1,
+                        tasks_executed: rep.tasks_executed,
+                        tasks_skipped: rep.tasks_skipped,
+                        went_partial: false,
+                        solution: None,
+                    });
+                    outcomes.push(outcome.map_err(ServeError::from));
+                }
+                Request::Stamp { changes } => {
+                    if !session.is_factored() {
+                        outcomes.push(Err(ServeError::NotFactored));
+                        continue;
+                    }
+                    let nnz = session.plan().nnz_a();
+                    if let Some(&(k, _)) =
+                        changes.updates().iter().find(|&&(k, _)| k >= nnz)
+                    {
+                        outcomes.push(Err(ServeError::StampOutOfRange { index: k, nnz }));
+                        continue;
+                    }
+                    let start = Instant::now();
+                    let est = session.estimate_partial(&changes);
+                    let go_partial = est.run_fraction() <= self.partial_threshold;
+                    let result = if go_partial {
+                        session.refactorize_partial(&changes)
+                    } else {
+                        // closure covers most of the DAG: the full path's
+                        // single whole-matrix scatter beats per-block
+                        // rescatter — results are bit-identical either way
+                        let mut values = session.current_values().to_vec();
+                        for &(k, v) in changes.updates() {
+                            values[k] = v;
+                        }
+                        session.refactorize(&values)
+                    };
+                    let outcome = result.map(|rep| ServeReport {
+                        kind: RequestKind::Stamp,
+                        queue_seconds: start.duration_since(submitted).as_secs_f64(),
+                        batch_size: 1,
+                        tasks_executed: rep.tasks_executed,
+                        tasks_skipped: rep.tasks_skipped,
+                        went_partial: go_partial,
+                        solution: None,
+                    });
+                    outcomes.push(outcome.map_err(ServeError::from));
+                }
+            }
+        }
+        outcomes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::FactorPlan;
+    use crate::solver::SolveOptions;
+    use crate::sparse::gen;
+    use std::sync::Arc;
+
+    fn session_for(a: &crate::sparse::Csc) -> SolverSession<'static> {
+        SolverSession::from_plan(Arc::new(FactorPlan::build(a, &SolveOptions::ours(1))))
+    }
+
+    #[test]
+    fn coalesces_consecutive_solves_into_one_batch() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut s = session_for(&a);
+        s.refactorize(&a.values).unwrap();
+        let mut b = Batcher::new(16);
+        let rhs: Vec<Vec<f64>> = (0..3)
+            .map(|k| (0..64).map(|i| ((i + k) % 5) as f64 - 2.0).collect())
+            .collect();
+        for r in &rhs {
+            b.submit(Request::Solve { rhs: r.clone() }).unwrap();
+        }
+        let reports: Vec<ServeReport> =
+            b.drain(&mut s).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(reports.len(), 3);
+        for (rep, r) in reports.iter().zip(&rhs) {
+            assert_eq!(rep.kind, RequestKind::Solve);
+            assert_eq!(rep.batch_size, 3, "all three solves coalesced");
+            assert_eq!(rep.solution.as_ref().unwrap(), &s.solve(r), "batched ≡ individual");
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn refactorize_breaks_a_solve_run() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut s = session_for(&a);
+        s.refactorize(&a.values).unwrap();
+        let rhs: Vec<f64> = (0..64).map(|i| (i % 7) as f64).collect();
+        let mut b = Batcher::new(16);
+        b.submit(Request::Solve { rhs: rhs.clone() }).unwrap();
+        b.submit(Request::Refactorize { values: a.values.clone() }).unwrap();
+        b.submit(Request::Solve { rhs: rhs.clone() }).unwrap();
+        b.submit(Request::Solve { rhs }).unwrap();
+        let reports: Vec<ServeReport> =
+            b.drain(&mut s).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(reports.len(), 4);
+        assert_eq!(reports[0].batch_size, 1, "run broken by the refactorize");
+        assert_eq!(reports[1].kind, RequestKind::Refactorize);
+        assert_eq!(reports[2].batch_size, 2);
+        assert_eq!(reports[3].batch_size, 2);
+    }
+
+    #[test]
+    fn stamp_routing_follows_the_estimate() {
+        let a = gen::grid2d_laplacian(10, 10);
+        let mut s = session_for(&a);
+        s.refactorize(&a.values).unwrap();
+        let k = a.value_index(57, 57).unwrap();
+        // threshold 1.0: everything goes partial
+        let mut b = Batcher::new(4).with_partial_threshold(1.0);
+        let cs = ChangeSet::from_value_indices([(k, a.values[k] * 2.0)]);
+        b.submit(Request::Stamp { changes: cs.clone() }).unwrap();
+        let reports = b.drain(&mut s);
+        let rep = reports[0].as_ref().unwrap();
+        assert!(rep.went_partial);
+        assert!(rep.tasks_skipped > 0, "partial path prunes");
+        let partial_blocks: Vec<Vec<f64>> = (0..s.plan().structure.blocks.len())
+            .map(|id| s.numeric().block_values(id as u32))
+            .collect();
+
+        // threshold 0.0: the same stamp goes down the full path —
+        // bit-identical factors, nothing pruned
+        s.refactorize(&a.values).unwrap();
+        let mut b = Batcher::new(4).with_partial_threshold(0.0);
+        b.submit(Request::Stamp { changes: cs }).unwrap();
+        let reports = b.drain(&mut s);
+        let rep = reports[0].as_ref().unwrap();
+        assert!(!rep.went_partial);
+        assert_eq!(rep.tasks_skipped, 0, "full path executes the whole DAG");
+        for (id, want) in partial_blocks.iter().enumerate() {
+            assert_eq!(&s.numeric().block_values(id as u32), want, "block {id}");
+        }
+    }
+
+    #[test]
+    fn queue_bounds_and_input_errors_are_clean() {
+        let a = gen::grid2d_laplacian(6, 6);
+        let mut s = session_for(&a);
+        let mut b = Batcher::new(1);
+        let rhs = vec![1.0; 36];
+        b.submit(Request::Solve { rhs: rhs.clone() }).unwrap();
+        assert!(matches!(
+            b.submit(Request::Solve { rhs: rhs.clone() }),
+            Err(ServeError::QueueFull { capacity: 1 })
+        ));
+        // solve before any factorization: clean per-request error
+        let outcomes = b.drain(&mut s);
+        assert!(matches!(outcomes.as_slice(), [Err(ServeError::NotFactored)]));
+        s.refactorize(&a.values).unwrap();
+        // wrong-length RHS rejected
+        b.submit(Request::Solve { rhs: vec![1.0; 35] }).unwrap();
+        let outcomes = b.drain(&mut s);
+        assert!(matches!(
+            outcomes[..],
+            [Err(ServeError::WrongValueCount { got: 35, want: 36 })]
+        ));
+        // wrong-length value vector rejected
+        b.submit(Request::Refactorize { values: vec![1.0; 3] }).unwrap();
+        let outcomes = b.drain(&mut s);
+        assert!(matches!(outcomes.as_slice(), [Err(ServeError::WrongValueCount { .. })]));
+        // out-of-range stamp index rejected without touching the session
+        let before = s.current_values().to_vec();
+        b.submit(Request::Stamp {
+            changes: ChangeSet::from_value_indices([(a.nnz() + 7, 1.0)]),
+        })
+        .unwrap();
+        let outcomes = b.drain(&mut s);
+        assert!(matches!(outcomes.as_slice(), [Err(ServeError::StampOutOfRange { .. })]));
+        assert_eq!(s.current_values(), &before[..]);
+        // failed requests are consumed; the batcher keeps serving
+        b.submit(Request::Solve { rhs }).unwrap();
+        let outcomes = b.drain(&mut s);
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].as_ref().unwrap().solution.is_some());
+    }
+
+    #[test]
+    fn bad_request_does_not_poison_its_neighbors() {
+        // one malformed solve in the middle of a run: the valid requests
+        // around it are all served, and only the bad one gets an error
+        let a = gen::grid2d_laplacian(6, 6);
+        let mut s = session_for(&a);
+        s.refactorize(&a.values).unwrap();
+        let good: Vec<f64> = (0..36).map(|i| (i % 5) as f64 - 2.0).collect();
+        let mut b = Batcher::new(8);
+        b.submit(Request::Solve { rhs: good.clone() }).unwrap();
+        b.submit(Request::Solve { rhs: vec![1.0; 35] }).unwrap(); // malformed
+        b.submit(Request::Solve { rhs: good.clone() }).unwrap();
+        b.submit(Request::Solve { rhs: good.clone() }).unwrap();
+        let outcomes = b.drain(&mut s);
+        assert_eq!(outcomes.len(), 4);
+        assert!(b.is_empty(), "the queue is fully consumed");
+        let expected = s.solve(&good);
+        assert_eq!(outcomes[0].as_ref().unwrap().batch_size, 1, "run ends at the bad one");
+        assert!(matches!(outcomes[1], Err(ServeError::WrongValueCount { .. })));
+        for outcome in &outcomes[2..] {
+            let rep = outcome.as_ref().unwrap();
+            assert_eq!(rep.batch_size, 2, "the two trailing solves re-coalesce");
+            assert_eq!(rep.solution.as_ref().unwrap(), &expected);
+        }
+    }
+}

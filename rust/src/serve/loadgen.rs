@@ -1,0 +1,374 @@
+//! `loadgen` — a closed-loop load generator driving a [`SessionPool`]
+//! from K client threads over a scenario mix, measuring serving
+//! throughput and tail latency.
+//!
+//! Each client thread loops: pick a scenario (weighted draw from a
+//! per-client deterministic PRNG), check a session out of the pool
+//! (blocking when the pool is saturated — the closed loop), execute,
+//! check back in. Request latency is measured from *before* the
+//! checkout, so pool queueing is part of the tail, exactly as a client
+//! would see it. Scenarios:
+//!
+//! * **full** — full numeric re-factorization to a perturbed value
+//!   vector (a Newton step re-stamping everything);
+//! * **stamp** — a one-entry diagonal device stamp through the pruned
+//!   [`refactorize_partial`] path;
+//! * **solve** — a triangular solve against the session's current
+//!   factors.
+//!
+//! The emitted [`LoadgenReport`] serializes to the `BENCH_serve.json`
+//! schema consumed by CI (throughput plus p50/p99 per scenario).
+//!
+//! [`refactorize_partial`]: crate::session::SolverSession::refactorize_partial
+
+use super::pool::SessionPool;
+use crate::session::{ChangeSet, FactorPlan, SolverSession};
+use crate::sparse::Csc;
+use crate::util::Prng;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Relative weights of the three request scenarios.
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioMix {
+    pub full: u32,
+    pub stamp: u32,
+    pub solve: u32,
+}
+
+impl Default for ScenarioMix {
+    /// SPICE-flavored default: mostly incremental stamps and solves,
+    /// occasional full re-stamps.
+    fn default() -> Self {
+        Self { full: 1, stamp: 6, solve: 3 }
+    }
+}
+
+impl ScenarioMix {
+    fn total(&self) -> u32 {
+        self.full + self.stamp + self.solve
+    }
+
+    fn pick(&self, draw: u32) -> Scenario {
+        if draw < self.full {
+            Scenario::Full
+        } else if draw < self.full + self.stamp {
+            Scenario::Stamp
+        } else {
+            Scenario::Solve
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Scenario {
+    Full = 0,
+    Stamp = 1,
+    Solve = 2,
+}
+
+const SCENARIO_NAMES: [&str; 3] = ["full", "stamp", "solve"];
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Client threads (closed loop: each has one request in flight).
+    pub clients: usize,
+    /// Requests issued per client.
+    pub requests_per_client: usize,
+    /// Session pool cap ([`SessionPool::new`] `max_sessions`).
+    pub pool_sessions: usize,
+    /// Scenario weights.
+    pub mix: ScenarioMix,
+    /// PRNG seed (per-client streams derive from it deterministically).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            clients: 8,
+            requests_per_client: 32,
+            pool_sessions: 4,
+            mix: ScenarioMix::default(),
+            seed: 0x5E27E,
+        }
+    }
+}
+
+/// Latency summary of one scenario (or the whole run).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencyStats {
+    fn of(latencies: &mut [f64]) -> Self {
+        if latencies.is_empty() {
+            return Self { count: 0, mean_s: 0.0, p50_s: 0.0, p99_s: 0.0, max_s: 0.0 };
+        }
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let count = latencies.len();
+        let mean_s = latencies.iter().sum::<f64>() / count as f64;
+        Self {
+            count,
+            mean_s,
+            p50_s: percentile(latencies, 0.50),
+            p99_s: percentile(latencies, 0.99),
+            max_s: latencies[count - 1],
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// End-to-end result of one load-generator run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub pool_sessions: usize,
+    pub total_requests: usize,
+    pub wall_seconds: f64,
+    /// Completed requests per wall-clock second across all clients.
+    pub throughput_rps: f64,
+    /// Sessions the pool actually materialized (≤ `pool_sessions`).
+    pub sessions_created: usize,
+    /// DAG tasks executed / skipped over the whole run (pruning value).
+    pub tasks_executed: usize,
+    pub tasks_skipped: usize,
+    pub overall: LatencyStats,
+    /// Per-scenario latency, keyed `full` / `stamp` / `solve`.
+    pub per_scenario: Vec<(&'static str, LatencyStats)>,
+}
+
+impl LoadgenReport {
+    /// Serialize to the `BENCH_serve.json` schema.
+    pub fn to_json(&self, matrix_name: &str, n: usize, nnz: usize) -> String {
+        let scenario_rows: Vec<String> = self
+            .per_scenario
+            .iter()
+            .map(|(name, s)| {
+                format!(
+                    concat!(
+                        "      {{\"scenario\": \"{}\", \"count\": {}, ",
+                        "\"mean_s\": {:.9}, \"p50_s\": {:.9}, ",
+                        "\"p99_s\": {:.9}, \"max_s\": {:.9}}}"
+                    ),
+                    name, s.count, s.mean_s, s.p50_s, s.p99_s, s.max_s
+                )
+            })
+            .collect();
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"serve\",\n",
+                "  \"matrix\": \"{}\", \"n\": {}, \"nnz\": {},\n",
+                "  \"clients\": {}, \"pool_sessions\": {}, ",
+                "\"sessions_created\": {},\n",
+                "  \"total_requests\": {}, \"wall_seconds\": {:.6}, ",
+                "\"throughput_rps\": {:.3},\n",
+                "  \"tasks_executed\": {}, \"tasks_skipped\": {},\n",
+                "  \"overall\": {{\"p50_s\": {:.9}, \"p99_s\": {:.9}, ",
+                "\"mean_s\": {:.9}}},\n",
+                "  \"scenarios\": [\n{}\n  ]\n",
+                "}}\n"
+            ),
+            matrix_name,
+            n,
+            nnz,
+            self.clients,
+            self.pool_sessions,
+            self.sessions_created,
+            self.total_requests,
+            self.wall_seconds,
+            self.throughput_rps,
+            self.tasks_executed,
+            self.tasks_skipped,
+            self.overall.p50_s,
+            self.overall.p99_s,
+            self.overall.mean_s,
+            scenario_rows.join(",\n")
+        )
+    }
+}
+
+/// Ensure `session` holds factors for `a`'s base values (a stamp or
+/// solve landing on a virgin session needs a baseline first — that work
+/// is billed to the request that needed it, as it would be in a server).
+fn ensure_factored(session: &mut SolverSession<'_>, a: &Csc) -> (usize, usize) {
+    if session.is_factored() {
+        return (0, 0);
+    }
+    let rep = session.refactorize(&a.values).expect("baseline refactorize");
+    (rep.tasks_executed, rep.tasks_skipped)
+}
+
+/// Drive `pool` with `cfg.clients` closed-loop client threads over the
+/// scenario mix. `plan` must have been built for `a`'s pattern.
+pub fn run(a: &Csc, plan: Arc<FactorPlan>, cfg: &LoadgenConfig) -> LoadgenReport {
+    assert!(plan.matches(a), "loadgen plan must match the driven matrix");
+    assert!(cfg.clients > 0 && cfg.requests_per_client > 0, "empty load");
+    assert!(cfg.mix.total() > 0, "scenario mix must have positive weight");
+    let pool = SessionPool::new(plan, cfg.pool_sessions);
+    let n = a.n_rows();
+    let mix_total = cfg.mix.total();
+
+    let t0 = Instant::now();
+    // (scenario, latency, tasks_executed, tasks_skipped) per request
+    let mut samples: Vec<(Scenario, f64, usize, usize)> =
+        Vec::with_capacity(cfg.clients * cfg.requests_per_client);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|client| {
+                let pool = &pool;
+                scope.spawn(move || {
+                    let mut rng =
+                        Prng::new(cfg.seed ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    let mut out = Vec::with_capacity(cfg.requests_per_client);
+                    for _ in 0..cfg.requests_per_client {
+                        let scenario = cfg.mix.pick(rng.below(mix_total as usize) as u32);
+                        let start = Instant::now();
+                        let mut session = pool.checkout();
+                        let (mut executed, mut skipped) = (0usize, 0usize);
+                        match scenario {
+                            Scenario::Full => {
+                                let values: Vec<f64> = a
+                                    .values
+                                    .iter()
+                                    .map(|v| v * (1.0 + 0.02 * rng.signed_unit()))
+                                    .collect();
+                                let rep =
+                                    session.refactorize(&values).expect("full refactorize");
+                                executed = rep.tasks_executed;
+                                skipped = rep.tasks_skipped;
+                            }
+                            Scenario::Stamp => {
+                                let (e0, s0) = ensure_factored(&mut session, a);
+                                let d = rng.below(n);
+                                let k = a
+                                    .value_index(d, d)
+                                    .expect("generator matrices have full diagonals");
+                                // multiplier stays within [1.015, 1.03):
+                                // never 1.0, so the stamp is a real change
+                                let nv = session.current_values()[k]
+                                    * (1.0 + 0.03 * (0.5 + 0.5 * rng.f64()));
+                                let cs = ChangeSet::from_value_indices([(k, nv)]);
+                                let rep = session
+                                    .refactorize_partial(&cs)
+                                    .expect("partial refactorize");
+                                executed = e0 + rep.tasks_executed;
+                                skipped = s0 + rep.tasks_skipped;
+                            }
+                            Scenario::Solve => {
+                                let (e0, s0) = ensure_factored(&mut session, a);
+                                let b: Vec<f64> =
+                                    (0..n).map(|_| rng.signed_unit()).collect();
+                                let x = session.solve(&b);
+                                std::hint::black_box(&x);
+                                executed = e0;
+                                skipped = s0;
+                            }
+                        }
+                        // checkin happens inside the latency window: the
+                        // request is not served until its session is
+                        // reusable by the next client
+                        drop(session);
+                        out.push((scenario, start.elapsed().as_secs_f64(), executed, skipped));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            samples.extend(h.join().expect("client thread panicked"));
+        }
+    });
+    let wall_seconds = t0.elapsed().as_secs_f64();
+
+    let total_requests = samples.len();
+    let mut overall: Vec<f64> = Vec::with_capacity(total_requests);
+    let mut per: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    let (mut tasks_executed, mut tasks_skipped) = (0usize, 0usize);
+    for &(scenario, latency, executed, skipped) in &samples {
+        overall.push(latency);
+        per[scenario as usize].push(latency);
+        tasks_executed += executed;
+        tasks_skipped += skipped;
+    }
+    let per_scenario = SCENARIO_NAMES
+        .iter()
+        .zip(per.iter_mut())
+        .map(|(&name, lat)| (name, LatencyStats::of(lat)))
+        .collect();
+    LoadgenReport {
+        clients: cfg.clients,
+        pool_sessions: cfg.pool_sessions,
+        total_requests,
+        wall_seconds,
+        throughput_rps: total_requests as f64 / wall_seconds.max(1e-12),
+        sessions_created: pool.stats().created,
+        tasks_executed,
+        tasks_skipped,
+        overall: LatencyStats::of(&mut overall),
+        per_scenario,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolveOptions;
+    use crate::sparse::gen;
+
+    #[test]
+    fn loadgen_completes_every_request_and_reports_latencies() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let cfg = LoadgenConfig {
+            clients: 4,
+            requests_per_client: 6,
+            pool_sessions: 2,
+            ..Default::default()
+        };
+        let report = run(&a, plan, &cfg);
+        assert_eq!(report.total_requests, 24);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.sessions_created <= 2, "growth bounded by the pool cap");
+        assert_eq!(report.overall.count, 24);
+        let counted: usize = report.per_scenario.iter().map(|(_, s)| s.count).sum();
+        assert_eq!(counted, 24, "every request lands in exactly one scenario bucket");
+        assert!(report.overall.p99_s >= report.overall.p50_s);
+        assert!(report.overall.max_s >= report.overall.p99_s);
+        assert!(report.tasks_executed > 0);
+        let json = report.to_json("bbd-200", a.n_rows(), a.nnz());
+        assert!(json.contains("\"bench\": \"serve\""));
+        assert!(json.contains("\"scenario\": \"stamp\""));
+    }
+
+    #[test]
+    fn same_seed_same_scenario_sequence() {
+        let mix = ScenarioMix::default();
+        let draws: Vec<Scenario> = {
+            let mut rng = Prng::new(42);
+            (0..50).map(|_| mix.pick(rng.below(mix.total() as usize) as u32)).collect()
+        };
+        let again: Vec<Scenario> = {
+            let mut rng = Prng::new(42);
+            (0..50).map(|_| mix.pick(rng.below(mix.total() as usize) as u32)).collect()
+        };
+        assert_eq!(draws, again);
+        // all three scenarios appear under the default weights
+        for s in [Scenario::Full, Scenario::Stamp, Scenario::Solve] {
+            assert!(draws.contains(&s), "{s:?} never drawn");
+        }
+    }
+}

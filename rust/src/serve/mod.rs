@@ -1,0 +1,67 @@
+//! Solver serving — the multi-client layer over the `session` subsystem.
+//!
+//! Everything the paper contributes is structure-only, which makes the
+//! **plan** the unit of scale for serving: one `Arc<FactorPlan>` carries
+//! the ordering, symbolic pattern, irregular blocking, task DAG and
+//! scatter map for a sparsity pattern, and any number of concurrent
+//! clients re-factorize *values* against it. This module turns the
+//! single-session library into that service:
+//!
+//! * [`SessionPool`] — N [`crate::session::SolverSession`]s bound to one
+//!   shared plan, with RAII checkout/checkin and lazy growth: concurrent
+//!   clients refactorize/solve without re-planning and without
+//!   allocating blocked storage per request.
+//! * [`Batcher`] — a bounded request queue that coalesces consecutive
+//!   solve requests into one batched multi-RHS sweep, routes device
+//!   stamps through [`crate::session::SolverSession::estimate_partial`]
+//!   (pruned partial path vs full refactorize), and returns clean
+//!   [`ServeError`]s for malformed client input.
+//! * [`persist`] — versioned, checksummed binary serialization of
+//!   [`crate::session::FactorPlan`] plus
+//!   [`crate::session::PlanCache::warm_from_dir`], so a cold start costs
+//!   one disk read instead of ordering + symbolic + blocking.
+//! * [`loadgen`] — a closed-loop, K-client load generator over a
+//!   full/stamp/solve scenario mix, emitting the `BENCH_serve.json`
+//!   throughput + p50/p99 report (`repro serve-bench`).
+//!
+//! ## Serving flow
+//!
+//! ```no_run
+//! use sparselu::serve::{persist, Batcher, Request, SessionPool};
+//! use sparselu::session::PlanCache;
+//! use sparselu::solver::SolveOptions;
+//! use sparselu::sparse::gen;
+//! use std::path::Path;
+//!
+//! let a = gen::circuit_bbd(gen::CircuitParams::default());
+//! let opts = SolveOptions::ours(4);
+//!
+//! // warm start: plans persisted by a previous process load in one read
+//! let mut cache = PlanCache::new(8);
+//! let warm = cache.warm_from_dir(Path::new("plans")).unwrap();
+//! println!("{} plans warmed from disk", warm.loaded);
+//! let plan = cache.get_or_build(&a, &opts); // hit if persisted before
+//! persist::save_plan_to_dir(&plan, Path::new("plans")).unwrap();
+//!
+//! // share the plan across a session pool; batch one client's requests
+//! let pool = SessionPool::new(plan, 4);
+//! let mut session = pool.checkout();
+//! session.refactorize(&a.values).unwrap();
+//! let mut batcher = Batcher::new(64);
+//! for _ in 0..3 {
+//!     batcher.submit(Request::Solve { rhs: vec![1.0; a.n_rows()] }).unwrap();
+//! }
+//! let outcomes = batcher.drain(&mut session); // one solve_many sweep,
+//! // one Ok/Err outcome per request — a bad request never poisons others
+//! assert_eq!(outcomes[0].as_ref().unwrap().batch_size, 3);
+//! ```
+
+pub mod batcher;
+pub mod loadgen;
+pub mod persist;
+pub mod pool;
+
+pub use batcher::{Batcher, Request, RequestKind, ServeError, ServeReport};
+pub use loadgen::{LoadgenConfig, LoadgenReport, ScenarioMix};
+pub use persist::{load_plan, save_plan, save_plan_to_dir, PersistError, WarmReport};
+pub use pool::{PooledSession, PoolStats, SessionPool};

@@ -1,0 +1,579 @@
+//! `persist` — versioned, checksummed binary serialization of
+//! [`FactorPlan`], so a serving process cold-starts from **one disk
+//! read** instead of re-running ordering + symbolic analysis + blocking.
+//!
+//! What is persisted is exactly what cannot be cheaply reconstructed:
+//! the solve options, the fill-reducing permutation, the pattern
+//! fingerprint, the filled L+U *pattern*, the blocking boundary
+//! positions, the value scatter map, and the symbolic flop count. The
+//! blocked structure, task DAG, modeled schedule and reachability index
+//! are deterministic functions of those parts and are rebuilt at load
+//! (`FactorPlan::from_parts`) — which also means a format reader can
+//! never disagree with the in-memory builders.
+//!
+//! Format: an 8-byte magic, a `u32` version, the payload length and an
+//! FNV-1a 64 checksum over the payload, then the little-endian payload.
+//! Corrupted or truncated files are rejected with a clean
+//! [`PersistError`]; they never panic and never produce a plan.
+
+use crate::blocking::{Blocking, IrregularParams};
+use crate::gpu_model::CostModel;
+use crate::numeric::KernelPolicy;
+use crate::ordering::{OrderingMethod, Permutation};
+use crate::session::plan::PlanParts;
+use crate::session::{FactorPlan, PlanCache};
+use crate::solver::{BlockingPolicy, SolveOptions};
+use crate::sparse::Csc;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC: [u8; 8] = *b"SLUPLAN\0";
+const VERSION: u32 = 1;
+/// File extension [`PlanCache::warm_from_dir`] scans for.
+pub const PLAN_EXT: &str = "sluplan";
+
+/// Why a plan file could not be written or read back.
+#[derive(Debug)]
+pub enum PersistError {
+    Io(std::io::Error),
+    /// The file does not start with the plan magic.
+    BadMagic,
+    /// The file's format version is not understood by this build.
+    UnsupportedVersion(u32),
+    /// The payload checksum does not match (bit rot, partial write, …).
+    ChecksumMismatch,
+    /// The file ends before the declared payload does.
+    Truncated,
+    /// The payload decoded but violates a structural invariant.
+    Malformed(String),
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Io(e) => write!(f, "io error: {e}"),
+            PersistError::BadMagic => write!(f, "not a plan file (bad magic)"),
+            PersistError::UnsupportedVersion(v) => {
+                write!(f, "unsupported plan format version {v} (this build reads {VERSION})")
+            }
+            PersistError::ChecksumMismatch => write!(f, "plan payload checksum mismatch"),
+            PersistError::Truncated => write!(f, "plan file truncated"),
+            PersistError::Malformed(why) => write!(f, "malformed plan payload: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> Self {
+        PersistError::Io(e)
+    }
+}
+
+/// FNV-1a 64 over a byte slice (the same family the pattern fingerprint
+/// uses; collisions are irrelevant here — this guards against
+/// corruption, not adversaries).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Default)]
+struct ByteWriter(Vec<u8>);
+
+impl ByteWriter {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], PersistError> {
+        let end = self.pos.checked_add(n).ok_or(PersistError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(PersistError::Truncated);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, PersistError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, PersistError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+    fn u64(&mut self) -> Result<u64, PersistError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+    fn f64(&mut self) -> Result<f64, PersistError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn len_u64(&mut self) -> Result<usize, PersistError> {
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| PersistError::Malformed(format!("length {v} exceeds usize")))
+    }
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn encode_options(w: &mut ByteWriter, o: &SolveOptions) {
+    w.u8(match o.ordering {
+        OrderingMethod::Natural => 0,
+        OrderingMethod::Rcm => 1,
+        OrderingMethod::MinDegree => 2,
+    });
+    match &o.blocking {
+        BlockingPolicy::Regular(s) => {
+            w.u8(0);
+            w.u64(*s as u64);
+        }
+        BlockingPolicy::PanguSelect => {
+            w.u8(1);
+            w.u64(0);
+        }
+        BlockingPolicy::Irregular => {
+            w.u8(2);
+            w.u64(0);
+        }
+    }
+    w.f64(o.kernels.dense_threshold);
+    w.u8(o.kernels.force_dense as u8);
+    w.u8(o.kernels.use_runtime as u8);
+    let ir = &o.irregular;
+    w.u64(ir.sample_points as u64);
+    w.u64(ir.step as u64);
+    w.u64(ir.max_num as u64);
+    match ir.threshold {
+        Some(t) => {
+            w.u8(1);
+            w.f64(t);
+        }
+        None => {
+            w.u8(0);
+            w.f64(0.0);
+        }
+    }
+    w.u64(ir.min_block as u64);
+    w.u32(o.workers);
+    let m = &o.model;
+    for v in [
+        m.peak_flops,
+        m.mem_bw,
+        m.launch_overhead,
+        m.eff_sparse_factor,
+        m.eff_sparse_update,
+        m.eff_dense,
+        m.link_bw,
+        m.link_latency,
+        m.col_latency,
+        m.col_latency_quad,
+        m.sat_half_work,
+    ] {
+        w.f64(v);
+    }
+    w.u32(m.concurrent_kernels);
+}
+
+fn decode_options(r: &mut ByteReader<'_>) -> Result<SolveOptions, PersistError> {
+    let ordering = match r.u8()? {
+        0 => OrderingMethod::Natural,
+        1 => OrderingMethod::Rcm,
+        2 => OrderingMethod::MinDegree,
+        t => return Err(PersistError::Malformed(format!("unknown ordering tag {t}"))),
+    };
+    let btag = r.u8()?;
+    let bsize = r.len_u64()?;
+    let blocking = match btag {
+        0 => BlockingPolicy::Regular(bsize),
+        1 => BlockingPolicy::PanguSelect,
+        2 => BlockingPolicy::Irregular,
+        t => return Err(PersistError::Malformed(format!("unknown blocking tag {t}"))),
+    };
+    let kernels = KernelPolicy {
+        dense_threshold: r.f64()?,
+        force_dense: r.u8()? != 0,
+        use_runtime: r.u8()? != 0,
+    };
+    let sample_points = r.len_u64()?;
+    let step = r.len_u64()?;
+    let max_num = r.len_u64()?;
+    let has_threshold = r.u8()? != 0;
+    let threshold_value = r.f64()?;
+    let threshold = has_threshold.then_some(threshold_value);
+    let min_block = r.len_u64()?;
+    let irregular = IrregularParams { sample_points, step, max_num, threshold, min_block };
+    let workers = r.u32()?;
+    if workers == 0 {
+        return Err(PersistError::Malformed("plan options have zero workers".to_string()));
+    }
+    let model = CostModel {
+        peak_flops: r.f64()?,
+        mem_bw: r.f64()?,
+        launch_overhead: r.f64()?,
+        eff_sparse_factor: r.f64()?,
+        eff_sparse_update: r.f64()?,
+        eff_dense: r.f64()?,
+        link_bw: r.f64()?,
+        link_latency: r.f64()?,
+        col_latency: r.f64()?,
+        col_latency_quad: r.f64()?,
+        sat_half_work: r.f64()?,
+        concurrent_kernels: r.u32()?,
+    };
+    Ok(SolveOptions { ordering, blocking, kernels, irregular, workers, model })
+}
+
+fn encode_payload(plan: &FactorPlan) -> Vec<u8> {
+    let mut w = ByteWriter::default();
+    encode_options(&mut w, plan.options());
+    w.u64(plan.fingerprint());
+    w.f64(plan.report.flops);
+    let perm = plan.permutation().as_slice();
+    w.u64(perm.len() as u64);
+    for &p in perm {
+        w.u64(p as u64);
+    }
+    let positions = plan.structure.blocking.positions();
+    w.u64(positions.len() as u64);
+    for &p in positions {
+        w.u64(p as u64);
+    }
+    let ldu = plan.structure.to_csc();
+    w.u64(ldu.nnz() as u64);
+    for &p in &ldu.col_ptr {
+        w.u64(p as u64);
+    }
+    for &i in &ldu.row_idx {
+        w.u64(i as u64);
+    }
+    let (scatter_block, scatter_off) = plan.scatter_maps();
+    w.u64(scatter_block.len() as u64);
+    for &b in scatter_block {
+        w.u32(b);
+    }
+    for &o in scatter_off {
+        w.u32(o);
+    }
+    w.0
+}
+
+fn decode_payload(payload: &[u8]) -> Result<PlanParts, PersistError> {
+    let malformed = |why: &str| PersistError::Malformed(why.to_string());
+    let mut r = ByteReader { buf: payload, pos: 0 };
+    let opts = decode_options(&mut r)?;
+    let fingerprint = r.u64()?;
+    let flops = r.f64()?;
+
+    let n = r.len_u64()?;
+    let mut perm = Vec::with_capacity(n);
+    for _ in 0..n {
+        perm.push(r.len_u64()?);
+    }
+    let mut seen = vec![false; n];
+    for &p in &perm {
+        if p >= n || seen[p] {
+            return Err(malformed("perm is not a permutation"));
+        }
+        seen[p] = true;
+    }
+    let perm = Permutation::from_vec(perm);
+
+    let npos = r.len_u64()?;
+    let mut positions = Vec::with_capacity(npos);
+    for _ in 0..npos {
+        positions.push(r.len_u64()?);
+    }
+    let valid_blocking = !positions.is_empty()
+        && positions[0] == 0
+        && *positions.last().unwrap() == n
+        && positions.windows(2).all(|w| w[0] < w[1]);
+    if !valid_blocking {
+        return Err(malformed("blocking positions invalid"));
+    }
+    let blocking = Blocking::new(n, positions);
+
+    let nnz_ldu = r.len_u64()?;
+    let mut col_ptr = Vec::with_capacity(n + 1);
+    for _ in 0..n + 1 {
+        col_ptr.push(r.len_u64()?);
+    }
+    let mut row_idx = Vec::with_capacity(nnz_ldu);
+    for _ in 0..nnz_ldu {
+        row_idx.push(r.len_u64()?);
+    }
+    let ldu = Csc::from_parts_unchecked(n, n, col_ptr, row_idx, vec![0.0; nnz_ldu]);
+    ldu.validate().map_err(PersistError::Malformed)?;
+
+    let nnz_a = r.len_u64()?;
+    let mut scatter_block = Vec::with_capacity(nnz_a);
+    for _ in 0..nnz_a {
+        scatter_block.push(r.u32()?);
+    }
+    let mut scatter_off = Vec::with_capacity(nnz_a);
+    for _ in 0..nnz_a {
+        scatter_off.push(r.u32()?);
+    }
+    if !r.done() {
+        return Err(malformed("trailing bytes after payload"));
+    }
+    Ok(PlanParts { opts, perm, fingerprint, ldu, blocking, scatter_block, scatter_off, flops })
+}
+
+/// Serialize a session plan to `path` (atomic overwrite of the file's
+/// contents is left to the filesystem; serving deployments should write
+/// to a temp name and rename).
+pub fn save_plan(plan: &FactorPlan, path: &Path) -> Result<(), PersistError> {
+    let (scatter_block, _) = plan.scatter_maps();
+    if scatter_block.len() != plan.nnz_a() {
+        return Err(PersistError::Malformed(
+            "plan has no scatter map (one-shot plans cannot back sessions)".to_string(),
+        ));
+    }
+    let payload = encode_payload(plan);
+    let mut out = Vec::with_capacity(28 + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Canonical file name for a plan: keyed exactly like the
+/// [`PlanCache`] slot it warms.
+pub fn plan_file_name(plan: &FactorPlan) -> String {
+    format!("plan-{:016x}.{PLAN_EXT}", PlanCache::key_of_plan(plan))
+}
+
+/// Save `plan` under its canonical name inside `dir` (created if
+/// missing); returns the written path.
+pub fn save_plan_to_dir(plan: &FactorPlan, dir: &Path) -> Result<PathBuf, PersistError> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(plan_file_name(plan));
+    save_plan(plan, &path)?;
+    Ok(path)
+}
+
+/// Deserialize a plan from `path`, verifying version and checksum, and
+/// rebuild its derived structures (`FactorPlan::from_parts`).
+pub fn load_plan(path: &Path) -> Result<Arc<FactorPlan>, PersistError> {
+    let bytes = std::fs::read(path)?;
+    let parts = decode_file(&bytes)?;
+    let plan = FactorPlan::from_parts(parts).map_err(PersistError::Malformed)?;
+    Ok(Arc::new(plan))
+}
+
+fn decode_file(bytes: &[u8]) -> Result<PlanParts, PersistError> {
+    if bytes.len() < 28 {
+        return Err(PersistError::Truncated);
+    }
+    if bytes[..8] != MAGIC {
+        return Err(PersistError::BadMagic);
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    if version != VERSION {
+        return Err(PersistError::UnsupportedVersion(version));
+    }
+    let payload_len = u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes"));
+    let checksum = u64::from_le_bytes(bytes[20..28].try_into().expect("8 bytes"));
+    let payload = &bytes[28..];
+    if payload.len() as u64 != payload_len {
+        return Err(PersistError::Truncated);
+    }
+    if fnv1a64(payload) != checksum {
+        return Err(PersistError::ChecksumMismatch);
+    }
+    decode_payload(payload)
+}
+
+/// Result of warming a [`PlanCache`] from a directory of plan files.
+#[derive(Debug)]
+pub struct WarmReport {
+    /// Plans loaded and inserted into the cache.
+    pub loaded: usize,
+    /// Files that failed to load, with the reason each was skipped —
+    /// one corrupt file must not poison the rest of the warm-up.
+    pub skipped: Vec<(PathBuf, PersistError)>,
+}
+
+impl PlanCache {
+    /// Load every `*.sluplan` file in `dir` (sorted by name for a
+    /// deterministic LRU order) into the cache. Unreadable or corrupt
+    /// files are reported in [`WarmReport::skipped`] rather than
+    /// aborting the warm-up; only a failure to list the directory
+    /// itself is an error.
+    pub fn warm_from_dir(&mut self, dir: &Path) -> Result<WarmReport, PersistError> {
+        let mut paths = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some(PLAN_EXT) {
+                paths.push(path);
+            }
+        }
+        paths.sort();
+        let mut loaded = 0usize;
+        let mut skipped = Vec::new();
+        for path in paths {
+            match load_plan(&path) {
+                Ok(plan) => {
+                    self.insert(plan);
+                    loaded += 1;
+                }
+                Err(e) => skipped.push((path, e)),
+            }
+        }
+        Ok(WarmReport { loaded, skipped })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "sparselu-persist-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn round_trip_preserves_identity_and_key() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
+        let opts = SolveOptions::ours(2);
+        let plan = FactorPlan::build(&a, &opts);
+        let dir = tmp_dir("roundtrip");
+        let path = save_plan_to_dir(&plan, &dir).unwrap();
+        let loaded = load_plan(&path).unwrap();
+        assert_eq!(loaded.fingerprint(), plan.fingerprint());
+        assert_eq!(loaded.n(), plan.n());
+        assert_eq!(loaded.nnz_a(), plan.nnz_a());
+        assert!(loaded.matches(&a), "loaded plan matches the original matrix");
+        assert_eq!(PlanCache::key_of_plan(&loaded), PlanCache::key_of_plan(&plan));
+        assert_eq!(loaded.permutation().as_slice(), plan.permutation().as_slice());
+        assert_eq!(
+            loaded.structure.blocking.positions(),
+            plan.structure.blocking.positions()
+        );
+        assert_eq!(loaded.dag.tasks.len(), plan.dag.tasks.len());
+        assert_eq!(loaded.report.reorder_seconds, 0.0, "no ordering re-run at load");
+        assert_eq!(loaded.report.symbolic_seconds, 0.0, "no symbolic re-run at load");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_and_truncated_files_are_rejected_cleanly() {
+        let a = gen::grid2d_laplacian(7, 7);
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let dir = tmp_dir("corrupt");
+        let path = save_plan_to_dir(&plan, &dir).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // flip one payload byte → checksum mismatch
+        let mut bad = good.clone();
+        let mid = 28 + (bad.len() - 28) / 2;
+        bad[mid] ^= 0x40;
+        let p = dir.join("flipped.sluplan");
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(load_plan(&p), Err(PersistError::ChecksumMismatch)));
+
+        // cut the file short → truncated
+        let p = dir.join("short.sluplan");
+        std::fs::write(&p, &good[..good.len() - 9]).unwrap();
+        assert!(matches!(load_plan(&p), Err(PersistError::Truncated)));
+
+        // shorter than the header → truncated
+        let p = dir.join("stub.sluplan");
+        std::fs::write(&p, &good[..10]).unwrap();
+        assert!(matches!(load_plan(&p), Err(PersistError::Truncated)));
+
+        // wrong magic → not a plan file
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let p = dir.join("magic.sluplan");
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(load_plan(&p), Err(PersistError::BadMagic)));
+
+        // checksum-valid but internally inconsistent (a buggy writer):
+        // wreck the last scatter offset and recompute the checksum — the
+        // load must come back Malformed, not panic in the rebuild
+        let mut bad = good.clone();
+        let len = bad.len();
+        bad[len - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        let sum = fnv1a64(&bad[28..]);
+        bad[20..28].copy_from_slice(&sum.to_le_bytes());
+        let p = dir.join("inconsistent.sluplan");
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(load_plan(&p), Err(PersistError::Malformed(_))));
+
+        // future version → unsupported
+        let mut bad = good;
+        bad[8] = 0xFF;
+        let p = dir.join("vers.sluplan");
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(load_plan(&p), Err(PersistError::UnsupportedVersion(_))));
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_from_dir_loads_good_plans_and_reports_bad_ones() {
+        let dir = tmp_dir("warm");
+        let opts = SolveOptions::ours(1);
+        let a = gen::grid2d_laplacian(6, 6);
+        let b = gen::grid2d_laplacian(6, 7);
+        let pa = FactorPlan::build(&a, &opts);
+        let pb = FactorPlan::build(&b, &opts);
+        save_plan_to_dir(&pa, &dir).unwrap();
+        save_plan_to_dir(&pb, &dir).unwrap();
+        std::fs::write(dir.join("junk.sluplan"), b"not a plan at all").unwrap();
+        std::fs::write(dir.join("ignored.txt"), b"wrong extension").unwrap();
+
+        let mut cache = PlanCache::new(8);
+        let report = cache.warm_from_dir(&dir).unwrap();
+        assert_eq!(report.loaded, 2);
+        assert_eq!(report.skipped.len(), 1, "only the junk .sluplan is skipped");
+        assert_eq!(cache.len(), 2);
+        // warmed entries serve get_or_build without a rebuild
+        let hit = cache.get_or_build(&a, &opts);
+        assert_eq!(hit.fingerprint(), a.pattern_fingerprint());
+        assert_eq!((cache.hits(), cache.misses()), (1, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn one_shot_plans_refuse_to_serialize() {
+        let a = gen::grid2d_laplacian(5, 5);
+        let plan = crate::session::FactorPlan::build_for_oneshot(&a, &SolveOptions::ours(1));
+        let dir = tmp_dir("oneshot");
+        let err = save_plan(&plan, &dir.join("x.sluplan")).unwrap_err();
+        assert!(matches!(err, PersistError::Malformed(_)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,235 @@
+//! [`SessionPool`] — N solver sessions bound to one shared
+//! [`FactorPlan`], with checkout/checkin and lazy growth.
+//!
+//! A plan is immutable and `Arc`-shared; the *sessions* (preallocated
+//! blocked value storage + scratch) are the per-client mutable state. The
+//! pool keeps that storage alive across requests so concurrent clients
+//! re-factorize and solve **without re-planning and without re-allocating
+//! blocked storage per request** — the per-worker preallocation the 2D
+//! partitioned-layout literature motivates. Checkout order is LIFO (the
+//! most recently returned session is handed out next), which keeps the
+//! hot session's storage warm in cache under bursty load.
+
+use crate::session::{FactorPlan, SolverSession};
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Counters describing pool behavior under load.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolStats {
+    /// Sessions materialized so far (lazy growth; ≤ `max_sessions`).
+    pub created: usize,
+    /// Total successful checkouts.
+    pub checkouts: usize,
+    /// Checkouts that had to block waiting for a checkin.
+    pub waits: usize,
+    /// Sessions currently idle in the pool.
+    pub idle: usize,
+    /// Sessions currently checked out.
+    pub in_use: usize,
+}
+
+struct PoolState {
+    idle: Vec<SolverSession<'static>>,
+    created: usize,
+    checkouts: usize,
+    waits: usize,
+}
+
+/// A bounded pool of [`SolverSession`]s over one shared plan.
+///
+/// Sessions are created lazily: the pool starts empty and materializes a
+/// new session (one blocked-storage allocation) only when a checkout
+/// finds no idle session and the cap has not been reached. Past the cap,
+/// [`SessionPool::checkout`] blocks until a session is returned.
+pub struct SessionPool {
+    plan: Arc<FactorPlan>,
+    max_sessions: usize,
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+impl SessionPool {
+    /// Pool over `plan`, growing lazily up to `max_sessions`.
+    pub fn new(plan: Arc<FactorPlan>, max_sessions: usize) -> Self {
+        assert!(max_sessions > 0, "SessionPool needs max_sessions >= 1");
+        Self {
+            plan,
+            max_sessions,
+            state: Mutex::new(PoolState { idle: Vec::new(), created: 0, checkouts: 0, waits: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// The shared plan every pooled session factorizes against.
+    pub fn plan(&self) -> &Arc<FactorPlan> {
+        &self.plan
+    }
+
+    /// Upper bound on concurrently live sessions.
+    pub fn max_sessions(&self) -> usize {
+        self.max_sessions
+    }
+
+    /// Check a session out, blocking if the pool is exhausted. The
+    /// returned guard derefs to the session and checks it back in (and
+    /// wakes one waiter) on drop.
+    pub fn checkout(&self) -> PooledSession<'_> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(s) = st.idle.pop() {
+                st.checkouts += 1;
+                return PooledSession { pool: self, session: Some(s) };
+            }
+            if st.created < self.max_sessions {
+                st.created += 1;
+                st.checkouts += 1;
+                drop(st); // allocate blocked storage outside the lock
+                let s = SolverSession::from_plan(self.plan.clone());
+                return PooledSession { pool: self, session: Some(s) };
+            }
+            st.waits += 1;
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking checkout: `None` when the pool is exhausted.
+    pub fn try_checkout(&self) -> Option<PooledSession<'_>> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(s) = st.idle.pop() {
+            st.checkouts += 1;
+            return Some(PooledSession { pool: self, session: Some(s) });
+        }
+        if st.created < self.max_sessions {
+            st.created += 1;
+            st.checkouts += 1;
+            drop(st);
+            let s = SolverSession::from_plan(self.plan.clone());
+            return Some(PooledSession { pool: self, session: Some(s) });
+        }
+        None
+    }
+
+    /// Current pool counters.
+    pub fn stats(&self) -> PoolStats {
+        let st = self.state.lock().unwrap();
+        PoolStats {
+            created: st.created,
+            checkouts: st.checkouts,
+            waits: st.waits,
+            idle: st.idle.len(),
+            in_use: st.created - st.idle.len(),
+        }
+    }
+
+    fn checkin(&self, session: SolverSession<'static>) {
+        let mut st = self.state.lock().unwrap();
+        st.idle.push(session);
+        drop(st);
+        self.cv.notify_one();
+    }
+}
+
+/// RAII checkout guard: derefs to the pooled [`SolverSession`] and
+/// returns it to the pool on drop (including on unwind, so a panicking
+/// client cannot leak a session).
+pub struct PooledSession<'p> {
+    pool: &'p SessionPool,
+    session: Option<SolverSession<'static>>,
+}
+
+impl Deref for PooledSession<'_> {
+    type Target = SolverSession<'static>;
+    fn deref(&self) -> &Self::Target {
+        self.session.as_ref().expect("session present until drop")
+    }
+}
+
+impl DerefMut for PooledSession<'_> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        self.session.as_mut().expect("session present until drop")
+    }
+}
+
+impl Drop for PooledSession<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.session.take() {
+            self.pool.checkin(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolveOptions;
+    use crate::sparse::gen;
+
+    fn pool_for(max: usize) -> (crate::sparse::Csc, SessionPool) {
+        let a = gen::grid2d_laplacian(8, 8);
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let pool = SessionPool::new(plan, max);
+        (a, pool)
+    }
+
+    #[test]
+    fn grows_lazily_and_reuses_returned_sessions() {
+        let (a, pool) = pool_for(4);
+        assert_eq!(pool.stats().created, 0, "no session before first checkout");
+        {
+            let mut s = pool.checkout();
+            s.refactorize(&a.values).unwrap();
+            assert_eq!(pool.stats().created, 1);
+            assert_eq!(pool.stats().in_use, 1);
+        }
+        assert_eq!(pool.stats().idle, 1);
+        // the second checkout reuses the returned session — its factors
+        // (and refactor count) survive the round trip
+        let s = pool.checkout();
+        assert!(s.is_factored());
+        assert_eq!(s.refactor_count(), 1);
+        assert_eq!(pool.stats().created, 1, "no second allocation needed");
+    }
+
+    #[test]
+    fn try_checkout_refuses_past_the_cap() {
+        let (_, pool) = pool_for(2);
+        let a = pool.try_checkout().expect("first session");
+        let b = pool.try_checkout().expect("second session");
+        assert!(pool.try_checkout().is_none(), "cap reached");
+        drop(a);
+        assert!(pool.try_checkout().is_some(), "checkin frees a slot");
+        drop(b);
+    }
+
+    #[test]
+    fn blocking_checkout_wakes_on_checkin() {
+        let (a, pool) = pool_for(1);
+        let mut first = pool.checkout();
+        first.refactorize(&a.values).unwrap();
+        std::thread::scope(|scope| {
+            let pool = &pool;
+            let waiter = scope.spawn(move || {
+                let s = pool.checkout(); // blocks until `first` drops
+                s.refactor_count()
+            });
+            // give the waiter time to block, then release
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            drop(first);
+            assert_eq!(waiter.join().unwrap(), 1, "waiter got the factored session");
+        });
+        // never more than one session materialized: the waiter was served
+        // by the checkin, not by growth past the cap
+        assert_eq!(pool.stats().created, 1);
+        assert_eq!(pool.stats().checkouts, 2);
+    }
+
+    #[test]
+    fn pooled_sessions_share_the_one_plan() {
+        let (_, pool) = pool_for(3);
+        let s1 = pool.checkout();
+        let s2 = pool.checkout();
+        assert!(Arc::ptr_eq(s1.plan(), pool.plan()));
+        assert!(Arc::ptr_eq(s1.plan(), s2.plan()));
+    }
+}

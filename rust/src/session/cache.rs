@@ -70,6 +70,29 @@ impl PlanCache {
         plan
     }
 
+    /// The cache key a (session) plan indexes under — the same key
+    /// [`Self::get_or_build`] computes for the matrix/options pair the
+    /// plan was built from.
+    pub fn key_of_plan(plan: &FactorPlan) -> u64 {
+        splitmix(plan.fingerprint() ^ options_signature(plan.options()))
+    }
+
+    /// Insert an already-built plan (e.g. one deserialized from disk by
+    /// [`crate::serve::persist`]) under its own key, as most-recent. A
+    /// plan already cached under the same key is replaced; the
+    /// least-recent entry is evicted if the cache is full. Later
+    /// `get_or_build` calls for the same pattern + options hit without
+    /// rebuilding.
+    pub fn insert(&mut self, plan: Arc<FactorPlan>) {
+        let key = Self::key_of_plan(&plan);
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(pos);
+        } else if self.entries.len() == self.capacity {
+            self.entries.remove(0); // evict least-recent
+        }
+        self.entries.push((key, plan));
+    }
+
     /// Plans currently cached.
     pub fn len(&self) -> usize {
         self.entries.len()
@@ -252,6 +275,22 @@ mod tests {
         assert!(!Arc::ptr_eq(&got, &impostor));
         assert_eq!(got.fingerprint(), b.pattern_fingerprint());
         assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn inserted_plan_hits_without_rebuilding() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let opts = SolveOptions::ours(1);
+        let plan = Arc::new(FactorPlan::build(&a, &opts));
+        let mut cache = PlanCache::new(2);
+        cache.insert(plan.clone());
+        assert_eq!(cache.len(), 1);
+        let got = cache.get_or_build(&a, &opts);
+        assert!(Arc::ptr_eq(&got, &plan), "warm insert must serve the same plan");
+        assert_eq!((cache.hits(), cache.misses()), (1, 0));
+        // re-inserting under the same key replaces rather than grows
+        cache.insert(plan.clone());
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

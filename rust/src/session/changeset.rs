@@ -14,6 +14,7 @@
 //! whole-matrix diffing ([`ChangeSet::from_matrix_diff`]) are provided on
 //! top of that.
 
+use crate::numeric::factor::FactorError;
 use crate::sparse::Csc;
 
 /// A set of `(value index, new value)` updates to the nonzeros of `A`.
@@ -54,20 +55,20 @@ impl ChangeSet {
     /// new value)` coordinate, resolved against `a`'s pattern via
     /// [`Csc::value_index`].
     ///
-    /// Panics if a coordinate is not in the sparsity pattern — a stamp
-    /// outside the pattern would change the *structure*, which needs a
-    /// fresh [`crate::session::FactorPlan`], not a change set.
-    pub fn from_coords(a: &Csc, stamps: &[(usize, usize, f64)]) -> Self {
+    /// A coordinate outside the sparsity pattern returns
+    /// [`FactorError::OutOfPattern`] — such a stamp would change the
+    /// *structure*, which needs a fresh [`crate::session::FactorPlan`],
+    /// not a change set. Serving paths forward the error to the client
+    /// instead of aborting the process.
+    pub fn from_coords(a: &Csc, stamps: &[(usize, usize, f64)]) -> Result<Self, FactorError> {
         let updates = stamps
             .iter()
-            .map(|&(i, j, v)| {
-                let k = a.value_index(i, j).unwrap_or_else(|| {
-                    panic!("stamp ({i},{j}) is outside the sparsity pattern of A")
-                });
-                (k, v)
+            .map(|&(i, j, v)| match a.value_index(i, j) {
+                Some(k) => Ok((k, v)),
+                None => Err(FactorError::OutOfPattern { row: i, col: j }),
             })
-            .collect();
-        Self { updates }
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self { updates })
     }
 
     /// Diff two same-pattern matrices ([`Csc::value_diff`]): every entry
@@ -97,7 +98,7 @@ mod tests {
     #[test]
     fn from_coords_resolves_value_indices() {
         let a = gen::tridiagonal(6);
-        let cs = ChangeSet::from_coords(&a, &[(0, 0, 5.0), (2, 1, -1.0)]);
+        let cs = ChangeSet::from_coords(&a, &[(0, 0, 5.0), (2, 1, -1.0)]).unwrap();
         assert_eq!(cs.len(), 2);
         let (k0, v0) = cs.updates()[0];
         assert_eq!(k0, a.value_index(0, 0).unwrap());
@@ -107,10 +108,20 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "outside the sparsity pattern")]
-    fn from_coords_rejects_structural_stamp() {
+    fn from_coords_rejects_structural_stamp_with_error() {
+        // a stamp outside the pattern must come back as a clean error the
+        // serving layer can forward — never a process abort
         let a = gen::tridiagonal(6);
-        let _ = ChangeSet::from_coords(&a, &[(0, 5, 1.0)]);
+        let err = ChangeSet::from_coords(&a, &[(0, 0, 1.0), (0, 5, 1.0)]).unwrap_err();
+        match err {
+            FactorError::OutOfPattern { row, col } => assert_eq!((row, col), (0, 5)),
+            other => panic!("expected OutOfPattern, got {other:?}"),
+        }
+        // out-of-range coordinates are rejected the same way
+        assert!(matches!(
+            ChangeSet::from_coords(&a, &[(9, 0, 1.0)]),
+            Err(FactorError::OutOfPattern { row: 9, col: 0 })
+        ));
     }
 
     #[test]

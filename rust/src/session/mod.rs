@@ -25,6 +25,16 @@
 //!   block dependency edges, and only the DAG tasks writing affected
 //!   blocks re-execute — bit-identical to a full `refactorize`, at a
 //!   fraction of the task count.
+//! * [`SolverSession::estimate_partial`] — the allocation-free forecast
+//!   of that pruning (dirty blocks, closure size, tasks that would run),
+//!   so schedulers can pick partial vs full per request before
+//!   executing anything.
+//!
+//! The [`crate::serve`] layer builds the multi-client serving story on
+//! top of these pieces: warm a [`PlanCache`] from persisted plan files
+//! ([`PlanCache::warm_from_dir`]), share the plan across a
+//! [`crate::serve::SessionPool`], and batch each client's requests
+//! through a [`crate::serve::Batcher`].
 //!
 //! ```no_run
 //! use sparselu::session::{ChangeSet, FactorPlan, SolverSession};
@@ -39,7 +49,7 @@
 //! for _newton_step in 0..1000 {
 //!     // one device re-stamped: two conductance entries change
 //!     let g = 1.0e-3;
-//!     let cs = ChangeSet::from_coords(&a, &[(0, 0, g), (1, 1, g)]);
+//!     let cs = ChangeSet::from_coords(&a, &[(0, 0, g), (1, 1, g)]).unwrap();
 //!     let report = session.refactorize_partial(&cs).unwrap();
 //!     assert_eq!(
 //!         report.tasks_executed + report.tasks_skipped,
@@ -60,4 +70,4 @@ pub mod session;
 pub use cache::PlanCache;
 pub use changeset::ChangeSet;
 pub use plan::{FactorPlan, PlanReport};
-pub use session::{RefactorReport, SolverSession};
+pub use session::{PartialEstimate, RefactorReport, SolverSession};

@@ -168,6 +168,24 @@ impl ReachIndex {
     }
 }
 
+/// Raw parts of a persisted session plan — everything a plan cannot (or
+/// should not) cheaply reconstruct at load time. Produced by the binary
+/// reader in [`crate::serve::persist`], consumed by
+/// [`FactorPlan::from_parts`].
+pub(crate) struct PlanParts {
+    pub opts: SolveOptions,
+    pub perm: Permutation,
+    pub fingerprint: u64,
+    /// The filled L+U pattern. Values are ignored (loaded plans carry
+    /// zeros in their blocked structure); sessions scatter real values
+    /// on every refactorize anyway.
+    pub ldu: Csc,
+    pub blocking: Blocking,
+    pub scatter_block: Vec<u32>,
+    pub scatter_off: Vec<u32>,
+    pub flops: f64,
+}
+
 impl FactorPlan {
     /// Run the structure-only pipeline on `a` under `opts`, including
     /// the value scatter map that powers re-factorization.
@@ -192,9 +210,13 @@ impl FactorPlan {
         let pa = a.permute_sym(perm.as_slice());
         let reorder_seconds = sw.lap("reorder");
 
-        // phase 2: symbolic
+        // phase 2: symbolic — infallible here: the pattern was analyzed
+        // from `pa` itself, so pattern(pa) ⊆ symbolic pattern by
+        // construction (the Err arm exists for mismatched-matrix callers)
         let sym = symbolic::analyze(&pa);
-        let ldu = sym.ldu_pattern(&pa);
+        let ldu = sym
+            .ldu_pattern(&pa)
+            .expect("pattern(A) is contained in its own symbolic pattern");
         let symbolic_seconds = sw.lap("symbolic");
 
         // phase 3a: blocking + DAG (the §5.4 preprocessing lap, same
@@ -247,6 +269,83 @@ impl FactorPlan {
             reach,
             report,
         }
+    }
+
+    /// Reassemble a session plan from persisted parts (the serde hook of
+    /// [`crate::serve::persist`]). The blocked structure, task DAG,
+    /// modeled schedule and reachability index are rebuilt — cheap and
+    /// deterministic given the persisted pattern + blocking — while the
+    /// expensive structure phases (ordering, symbolic analysis) are
+    /// **not** re-run. A loaded plan's report shows zero
+    /// reorder/symbolic seconds; preprocess/plan_extra record the
+    /// rebuild cost paid at load.
+    ///
+    /// Scatter maps are bounds-checked against the rebuilt structure, so
+    /// a checksum-valid but internally inconsistent file comes back as
+    /// `Err` instead of panicking later inside the reachability index or
+    /// a block rescatter.
+    pub(crate) fn from_parts(parts: PlanParts) -> Result<Self, String> {
+        let PlanParts {
+            opts,
+            perm,
+            fingerprint,
+            ldu,
+            blocking,
+            scatter_block,
+            scatter_off,
+            flops,
+        } = parts;
+        let mut sw = Stopwatch::new();
+        let nnz_ldu = ldu.nnz();
+        let structure = Arc::new(BlockedMatrix::build(&ldu, blocking));
+        let nblocks = structure.blocks.len() as u32;
+        for (&b, &off) in scatter_block.iter().zip(&scatter_off) {
+            if b >= nblocks {
+                return Err(format!("scatter block id {b} out of range ({nblocks} blocks)"));
+            }
+            let block_nnz = structure.blocks[b as usize].nnz();
+            if off as usize >= block_nnz {
+                return Err(format!(
+                    "scatter offset {off} out of range for block {b} (nnz {block_nnz})"
+                ));
+            }
+        }
+        let balance = BalanceReport::of(&structure);
+        let placement = Placement::square(opts.workers);
+        let dag = TaskDag::build(&structure, &opts.kernels, placement, &opts.model);
+        let preprocess_seconds = sw.lap("preprocess");
+        let sim = simulate(&dag, opts.workers, &opts.model);
+        let reach = Some(ReachIndex::build(&structure, &dag, &scatter_block));
+        let plan_extra_seconds = sw.lap("plan_extra");
+        let report = PlanReport {
+            n: perm.len(),
+            nnz_a: scatter_block.len(),
+            nnz_ldu,
+            flops,
+            reorder_seconds: 0.0,
+            symbolic_seconds: 0.0,
+            preprocess_seconds,
+            plan_extra_seconds,
+        };
+        Ok(Self {
+            opts,
+            iperm: perm.inverse(),
+            perm,
+            fingerprint,
+            structure,
+            dag,
+            balance,
+            sim,
+            scatter_block,
+            scatter_off,
+            reach,
+            report,
+        })
+    }
+
+    /// The precomputed `(block, offset)` scatter maps (persistence hook).
+    pub(crate) fn scatter_maps(&self) -> (&[u32], &[u32]) {
+        (&self.scatter_block, &self.scatter_off)
     }
 
     /// Options the plan was built under.

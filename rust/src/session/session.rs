@@ -41,6 +41,40 @@ pub struct RefactorReport {
     pub run: RunReport,
 }
 
+/// Pruning forecast of an incremental re-factorization: what
+/// [`SolverSession::refactorize_partial`] *would* do for a change set,
+/// computed without executing any task (only the session's preallocated
+/// closure scratch is touched — values, factors and counters are not).
+/// The serving batcher — and any external caller scheduling work — uses
+/// this to choose partial vs full re-factorization per request.
+#[derive(Clone, Copy, Debug)]
+pub struct PartialEstimate {
+    /// Blocks the change set's entries land in (the closure seeds).
+    pub blocks_dirty: usize,
+    /// Blocks in the forward closure (would be re-initialized and
+    /// recomputed).
+    pub blocks_affected: usize,
+    /// DAG tasks the partial pass would execute.
+    pub tasks_to_run: usize,
+    /// Total DAG tasks (a full refactorize executes all of them).
+    pub tasks_total: usize,
+    /// Modeled device-seconds of the task subset (same cost model as
+    /// `plan.dag`; compare against `plan.dag.total_cost()`).
+    pub modeled_cost: f64,
+}
+
+impl PartialEstimate {
+    /// Fraction of the DAG the partial pass would re-execute
+    /// (0.0 = free no-op, 1.0 = no cheaper than a full refactorize).
+    pub fn run_fraction(&self) -> f64 {
+        if self.tasks_total == 0 {
+            0.0
+        } else {
+            self.tasks_to_run as f64 / self.tasks_total as f64
+        }
+    }
+}
+
 /// A re-usable factorization session over a fixed sparsity pattern.
 pub struct SolverSession<'b> {
     plan: Arc<FactorPlan>,
@@ -287,6 +321,65 @@ impl<'b> SolverSession<'b> {
         })
     }
 
+    /// Forecast what [`Self::refactorize_partial`] would do for `cs`:
+    /// the same dirty-seed + forward-closure walk as the real path,
+    /// reusing the session's preallocated closure scratch (hence
+    /// `&mut self`) so the serving hot path allocates nothing. **No
+    /// task executes and no semantic state changes** — current values,
+    /// factors and counters are untouched. Updates that bit-equal the
+    /// current value are no-ops here exactly as they are on the real
+    /// path, so the forecast's counts match the report the eventual
+    /// `refactorize_partial(cs)` call would return.
+    pub fn estimate_partial(&mut self, cs: &ChangeSet) -> PartialEstimate {
+        let plan = self.plan.clone();
+        let reach = plan.reach();
+        let SolverSession { current_values, affected, queue, .. } = &mut *self;
+        affected.fill(false);
+        queue.clear();
+        for &(k, v) in cs.updates() {
+            assert!(
+                k < current_values.len(),
+                "change-set value index {k} out of range (nnz = {})",
+                current_values.len()
+            );
+            if v.to_bits() == current_values[k].to_bits() {
+                continue;
+            }
+            let b = plan.scatter_block_of(k);
+            if !affected[b as usize] {
+                affected[b as usize] = true;
+                queue.push(b);
+            }
+        }
+        let blocks_dirty = queue.len();
+        let mut head = 0;
+        while head < queue.len() {
+            let b = queue[head];
+            head += 1;
+            for &down in reach.downstream(b) {
+                if !affected[down as usize] {
+                    affected[down as usize] = true;
+                    queue.push(down);
+                }
+            }
+        }
+        let mut tasks_to_run = 0usize;
+        let mut modeled_cost = 0.0f64;
+        for &b in queue.iter() {
+            for &t in reach.tasks_of(b) {
+                tasks_to_run += 1;
+                modeled_cost += plan.dag.tasks[t as usize].cost;
+            }
+        }
+        PartialEstimate {
+            blocks_dirty,
+            blocks_affected: queue.len(),
+            tasks_to_run,
+            tasks_total: plan.dag.tasks.len(),
+            modeled_cost,
+        }
+    }
+
     /// As [`Self::refactorize_partial`] but takes the whole updated
     /// matrix: diffs its values against the session's current values and
     /// applies the resulting change set. The pattern must match the plan.
@@ -497,6 +590,32 @@ mod tests {
         }
         let b: Vec<f64> = (0..100).map(|i| (i % 7) as f64 - 3.0).collect();
         assert_eq!(partial.solve(&b), full.solve(&b));
+    }
+
+    #[test]
+    fn estimate_partial_forecasts_the_real_partial_pass() {
+        let a = gen::grid2d_laplacian(10, 10);
+        let mut s = session_for(&a, SolveOptions::ours(1));
+        s.refactorize(&a.values).unwrap();
+        let k = a.value_index(57, 57).unwrap();
+        let cs = ChangeSet::from_value_indices([(k, a.values[k] * 2.0)]);
+        let before = s.current_values().to_vec();
+        let est = s.estimate_partial(&cs);
+        assert_eq!(s.current_values(), &before[..], "estimate must not mutate the session");
+        assert!(s.is_factored(), "estimate must not invalidate the factors");
+        assert!(est.modeled_cost > 0.0);
+        assert!(est.run_fraction() > 0.0 && est.run_fraction() <= 1.0);
+        let rep = s.refactorize_partial(&cs).unwrap();
+        assert_eq!(est.blocks_dirty, rep.blocks_dirty);
+        assert_eq!(est.blocks_affected, rep.blocks_affected);
+        assert_eq!(est.tasks_to_run, rep.tasks_executed);
+        assert_eq!(est.tasks_total, rep.tasks_executed + rep.tasks_skipped);
+        // an all-identical re-stamp forecasts a free no-op
+        let same = s.current_values()[k];
+        let noop = s.estimate_partial(&ChangeSet::from_value_indices([(k, same)]));
+        assert_eq!(noop.tasks_to_run, 0);
+        assert_eq!(noop.blocks_affected, 0);
+        assert_eq!(noop.run_fraction(), 0.0);
     }
 
     #[test]

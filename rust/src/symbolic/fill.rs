@@ -3,6 +3,7 @@
 //! `nnz(L+U)` and FLOPs for every benchmark matrix).
 
 use super::etree::{self, NONE};
+use crate::numeric::factor::FactorError;
 use crate::sparse::Csc;
 
 /// Result of symbolic factorization on the symmetrized pattern.
@@ -55,10 +56,15 @@ impl Symbolic {
     /// from `a` (zero at fill positions). Column `j` holds the U-part rows
     /// `k < j`, the diagonal, and the L-part rows `i > j`, sorted.
     ///
-    /// `a` must be the same (permuted) matrix that was analyzed.
-    pub fn ldu_pattern(&self, a: &Csc) -> Csc {
+    /// `a` must be the same (permuted) matrix that was analyzed: an entry
+    /// of `a` falling outside the symbolic pattern returns
+    /// [`FactorError::OutOfPattern`] (a serving path handed a mismatched
+    /// matrix must get an error back, not abort the process).
+    pub fn ldu_pattern(&self, a: &Csc) -> Result<Csc, FactorError> {
         let n = self.n;
-        assert_eq!(a.n_cols(), n);
+        if a.n_cols() != n {
+            return Err(FactorError::DimensionMismatch { got: a.n_cols(), want: n });
+        }
         // counts: col j gets |row_pats[j]| U-entries + 1 diag + below-diag
         // L entries (row i > j has j in row_pats[i]).
         let mut cnt = vec![0usize; n + 1];
@@ -109,16 +115,13 @@ impl Symbolic {
             for (i, v) in a.col(j) {
                 match rows.binary_search(&i) {
                     Ok(k) => values[base + k] = v,
-                    Err(_) => panic!(
-                        "A entry ({i},{j}) outside symbolic pattern — \
-                         pattern must contain pattern(A)"
-                    ),
+                    Err(_) => return Err(FactorError::OutOfPattern { row: i, col: j }),
                 }
             }
         }
         let out = Csc::from_parts_unchecked(n, n, col_ptr, row_idx, values);
         debug_assert!(out.validate().is_ok(), "{:?}", out.validate());
-        out
+        Ok(out)
     }
 }
 
@@ -198,7 +201,7 @@ mod tests {
 
     fn check_against_dense(a: &Csc) {
         let sym = analyze(a);
-        let ldu = sym.ldu_pattern(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
         let dense = dense_fill_pattern(a);
         let n = a.n_cols();
         let mut nnz_dense = 0;
@@ -247,7 +250,7 @@ mod tests {
     fn ldu_values_match_a() {
         let a = gen::grid2d_laplacian(4, 4);
         let sym = analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         for j in 0..16 {
             for (i, v) in a.col(j) {
                 assert_eq!(ldu.get(i, j), v);
@@ -276,6 +279,31 @@ mod tests {
             })
             .sum();
         assert_eq!(sym.flops(), expected);
+    }
+
+    #[test]
+    fn mismatched_matrix_returns_out_of_pattern_error() {
+        // analyze a tridiagonal (no fill), then hand ldu_pattern a matrix
+        // with an entry the symbolic pattern cannot contain — the serving
+        // contract is a clean error, not a process abort
+        let a = gen::tridiagonal(6);
+        let sym = analyze(&a);
+        let mut coo = crate::sparse::Coo::new(6, 6);
+        for i in 0..6 {
+            coo.push(i, i, 2.0);
+        }
+        coo.push(0, 5, 1.0); // far off-band, outside the tridiagonal fill
+        let b = coo.to_csc();
+        match sym.ldu_pattern(&b) {
+            Err(FactorError::OutOfPattern { row: 0, col: 5 }) => {}
+            other => panic!("expected OutOfPattern(0,5), got {other:?}"),
+        }
+        // a wrong-dimension matrix is an error too, not an abort
+        let c = gen::tridiagonal(7);
+        assert!(matches!(
+            sym.ldu_pattern(&c),
+            Err(FactorError::DimensionMismatch { got: 7, want: 6 })
+        ));
     }
 
     #[test]

@@ -31,7 +31,7 @@ fn symbolic_pattern_contains_a_for_all_archetypes() {
         let perm = order(&a, OrderingMethod::MinDegree);
         let pa = a.permute_sym(perm.as_slice());
         let sym = symbolic::analyze(&pa);
-        let ldu = sym.ldu_pattern(&pa); // panics internally if A ⊄ pattern
+        let ldu = sym.ldu_pattern(&pa).unwrap(); // errors (OutOfPattern) if A ⊄ pattern
         assert!(ldu.nnz() >= pa.nnz(), "{name}");
         assert!(ldu.has_full_diagonal(), "{name}");
         // reported nnz consistent
@@ -43,7 +43,7 @@ fn symbolic_pattern_contains_a_for_all_archetypes() {
 fn diag_feature_total_matches_nnz_on_filled_patterns() {
     for (name, a) in archetypes() {
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let f = DiagFeature::from_csc(&ldu);
         assert_eq!(f.total() as usize, ldu.nnz(), "{name}");
         let curve = f.curve();
@@ -55,7 +55,7 @@ fn diag_feature_total_matches_nnz_on_filled_patterns() {
 fn blocked_partition_reassembles_for_both_policies() {
     for (name, a) in archetypes() {
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let n = ldu.n_cols();
         let curve = DiagFeature::from_csc(&ldu).curve();
         for (policy, blocking) in [
@@ -105,7 +105,7 @@ fn irregular_blocking_tracks_density_transitions() {
     // than the widest block outside it
     let a = gen::local_dense_blocks(2000, &[(1200, 400)], 2, 21);
     let sym = symbolic::analyze(&a);
-    let ldu = sym.ldu_pattern(&a);
+    let ldu = sym.ldu_pattern(&a).unwrap();
     let curve = DiagFeature::from_csc(&ldu).curve();
     let b = irregular_blocking(&curve, &IrregularParams::default());
     let mut inside = Vec::new();

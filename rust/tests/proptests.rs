@@ -174,7 +174,7 @@ fn prop_irregular_blocking_partitions() {
     for seed in 0..SEEDS {
         let a = random_matrix(seed);
         let sym = symbolic::analyze(&a);
-        let ldu = sym.ldu_pattern(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
         let curve = DiagFeature::from_csc(&ldu).curve();
         let b = irregular_blocking(&curve, &IrregularParams::default());
         let pos = b.positions();

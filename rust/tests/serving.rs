@@ -1,0 +1,192 @@
+//! Integration tests of the serving layer: the ≥8-thread pool + cache
+//! stress test (every concurrent result must bit-match a single-threaded
+//! oracle) and the persist round trip (a plan loaded from disk must
+//! reproduce bit-identical factors, full and partial).
+
+mod common;
+
+use common::perturbed;
+use sparselu::serve::{persist, Batcher, Request, SessionPool};
+use sparselu::session::{ChangeSet, FactorPlan, PlanCache, SolverSession};
+use sparselu::solver::SolveOptions;
+use sparselu::sparse::gen;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparselu-serve-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Precomputed single-threaded ground truth for one value scenario.
+struct Oracle {
+    values: Vec<f64>,
+    blocks: Vec<Vec<f64>>,
+    rhs: Vec<f64>,
+    x: Vec<f64>,
+}
+
+#[test]
+fn pool_and_cache_stress_bitwise_matches_single_thread_oracle() {
+    const THREADS: usize = 8;
+    const ITERS: usize = 6;
+    const SCENARIOS: usize = 5;
+
+    let a = gen::circuit_bbd(gen::CircuitParams { n: 260, ..Default::default() });
+    let opts = SolveOptions::ours(2);
+    let plan = Arc::new(FactorPlan::build(&a, &opts));
+
+    // ground truth, computed serially: the bitwise factors and one solve
+    // per scenario
+    let oracles: Vec<Oracle> = (0..SCENARIOS)
+        .map(|s| {
+            let values = perturbed(&a, 1000 + s as u64).values;
+            let mut session = SolverSession::from_plan(plan.clone());
+            session.refactorize(&values).unwrap();
+            let blocks = (0..plan.structure.blocks.len())
+                .map(|id| session.numeric().block_values(id as u32))
+                .collect();
+            let rhs: Vec<f64> =
+                (0..a.n_rows()).map(|i| ((i * 7 + s) % 11) as f64 - 5.0).collect();
+            let x = session.solve(&rhs);
+            Oracle { values, blocks, rhs, x }
+        })
+        .collect();
+
+    // fewer sessions than threads → checkouts contend and block, and
+    // every thread inherits sessions in arbitrary prior states
+    let pool = SessionPool::new(plan.clone(), 3);
+    let cache = Mutex::new(PlanCache::new(4));
+    cache.lock().unwrap().insert(plan.clone());
+
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let (pool, cache, plan, a, opts, oracles) =
+                (&pool, &cache, &plan, &a, &opts, &oracles);
+            scope.spawn(move || {
+                for i in 0..ITERS {
+                    let oracle = &oracles[(t * 13 + i * 7) % SCENARIOS];
+                    // hammer the shared cache: every lookup must hit and
+                    // hand back the one shared plan
+                    let cached = cache.lock().unwrap().get_or_build(a, opts);
+                    assert!(Arc::ptr_eq(&cached, plan), "cache served a different plan");
+
+                    let mut session = pool.checkout();
+                    if session.is_factored() && (t + i) % 2 == 0 {
+                        // incremental route from whatever state the pool
+                        // handed us to the scenario's values
+                        let cs = ChangeSet::from_values_diff(
+                            session.current_values(),
+                            &oracle.values,
+                        );
+                        session.refactorize_partial(&cs).unwrap();
+                    } else {
+                        session.refactorize(&oracle.values).unwrap();
+                    }
+                    for (id, want) in oracle.blocks.iter().enumerate() {
+                        assert_eq!(
+                            &session.numeric().block_values(id as u32),
+                            want,
+                            "thread {t} iter {i}: block {id} diverged from the oracle"
+                        );
+                    }
+                    assert_eq!(
+                        session.solve(&oracle.rhs),
+                        oracle.x,
+                        "thread {t} iter {i}: solve diverged from the oracle"
+                    );
+                }
+            });
+        }
+    });
+
+    let stats = pool.stats();
+    assert!(stats.created <= 3, "pool must not grow past its cap");
+    assert_eq!(stats.checkouts, THREADS * ITERS);
+    assert_eq!(stats.in_use, 0, "every guard checked its session back in");
+    let cache = cache.into_inner().unwrap();
+    assert_eq!(cache.misses(), 0, "the warmed cache never rebuilt a plan");
+    assert_eq!(cache.hits(), THREADS * ITERS);
+}
+
+#[test]
+fn persisted_plan_reproduces_bitwise_identical_factors() {
+    let a = gen::circuit_bbd(gen::CircuitParams { n: 220, ..Default::default() });
+    let opts = SolveOptions::ours(1);
+    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let dir = tmp_dir("roundtrip");
+    let path = persist::save_plan_to_dir(&plan, &dir).unwrap();
+    let loaded = persist::load_plan(&path).unwrap();
+
+    let values = perturbed(&a, 7).values;
+    let mut original = SolverSession::from_plan(plan.clone());
+    let mut warmed = SolverSession::from_plan(loaded.clone());
+    original.refactorize(&values).unwrap();
+    warmed.refactorize(&values).unwrap();
+    for id in 0..plan.structure.blocks.len() {
+        assert_eq!(
+            original.numeric().block_values(id as u32),
+            warmed.numeric().block_values(id as u32),
+            "full refactorize: block {id} differs through the loaded plan"
+        );
+    }
+    let b: Vec<f64> = (0..a.n_rows()).map(|i| ((i * 3) % 13) as f64 - 6.0).collect();
+    assert_eq!(original.solve(&b), warmed.solve(&b));
+
+    // the loaded plan's rebuilt reachability index prunes identically
+    let k = a.value_index(50, 50).unwrap();
+    let cs = ChangeSet::from_value_indices([(k, values[k] * 1.5)]);
+    let r1 = original.refactorize_partial(&cs).unwrap();
+    let r2 = warmed.refactorize_partial(&cs).unwrap();
+    assert_eq!(r1.tasks_executed, r2.tasks_executed);
+    assert_eq!(r1.blocks_affected, r2.blocks_affected);
+    for id in 0..plan.structure.blocks.len() {
+        assert_eq!(
+            original.numeric().block_values(id as u32),
+            warmed.numeric().block_values(id as u32),
+            "partial refactorize: block {id} differs through the loaded plan"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batched_serving_through_the_pool_matches_a_direct_session() {
+    let a = gen::grid2d_laplacian(9, 9);
+    let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+    let pool = SessionPool::new(plan.clone(), 2);
+
+    let k = a.value_index(40, 40).unwrap();
+    let rhs: Vec<Vec<f64>> = (0..4)
+        .map(|t| (0..a.n_rows()).map(|i| ((i + t) % 7) as f64 - 3.0).collect())
+        .collect();
+    let mut batcher = Batcher::new(16);
+    batcher.submit(Request::Refactorize { values: a.values.clone() }).unwrap();
+    batcher
+        .submit(Request::Stamp {
+            changes: ChangeSet::from_value_indices([(k, a.values[k] * 3.0)]),
+        })
+        .unwrap();
+    for r in &rhs {
+        batcher.submit(Request::Solve { rhs: r.clone() }).unwrap();
+    }
+
+    let mut session = pool.checkout();
+    let outcomes = batcher.drain(&mut session);
+    assert_eq!(outcomes.len(), 6);
+    let reports: Vec<_> = outcomes.into_iter().map(|o| o.unwrap()).collect();
+
+    // reference: the same work done directly, full refactorizes only
+    // (the stamp route — partial or full — must not change results)
+    let mut reference = SolverSession::from_plan(plan.clone());
+    let mut values = a.values.clone();
+    reference.refactorize(&values).unwrap();
+    values[k] *= 3.0;
+    reference.refactorize(&values).unwrap();
+    for (report, r) in reports[2..].iter().zip(&rhs) {
+        assert_eq!(report.batch_size, 4, "the four solves coalesced into one sweep");
+        assert_eq!(report.solution.as_ref().unwrap(), &reference.solve(r));
+        assert!(report.queue_seconds >= 0.0);
+    }
+}
