@@ -1,7 +1,9 @@
 //! Serving-layer throughput bench: the closed-loop load generator
 //! (`serve::loadgen`) drives a shared-plan `SessionPool` with 8 client
-//! threads over two matrices and two scenario mixes, reporting
-//! throughput and p50/p99 latency per scenario.
+//! threads over two matrices and two scenario mixes, then a
+//! multi-tenant scenario routes the same client count over three
+//! distinct sparsity patterns through `serve::Router`, reporting
+//! throughput and p50/p99 latency per scenario and per tenant.
 //!
 //! Emits `BENCH_serve.json` in the working directory (uploaded by CI
 //! next to `BENCH_refactor.json`).
@@ -10,8 +12,8 @@
 //! cargo bench --bench serve
 //! ```
 
-use sparselu::serve::loadgen::{self, LoadgenConfig};
-use sparselu::serve::ScenarioMix;
+use sparselu::serve::loadgen::{self, LoadgenConfig, MultiTenantConfig};
+use sparselu::serve::{RouterConfig, ScenarioMix};
 use sparselu::session::FactorPlan;
 use sparselu::solver::SolveOptions;
 use sparselu::sparse::gen;
@@ -74,6 +76,38 @@ fn main() {
         }
         objects.push(report.to_json(name, a.n_rows(), a.nnz()).trim_end().to_string());
     }
+
+    // multi-tenant scenario: 8 clients spread over 3 distinct patterns,
+    // routed by fingerprint through serve::Router to concurrent shards
+    let tenants = vec![
+        (
+            "ASIC-like-bbd".to_string(),
+            gen::circuit_bbd(gen::CircuitParams { n: 900, ..Default::default() }),
+        ),
+        ("ecology-like-grid2d".to_string(), gen::grid2d_laplacian(30, 30)),
+        ("fem-like-banded".to_string(), gen::banded_fem(800, &[1, 2, 3, 40, 41], 0.85, 0xFE3)),
+    ];
+    println!("\n=== multi-tenant ({} patterns) ===", tenants.len());
+    let mcfg = MultiTenantConfig {
+        clients: 8,
+        requests_per_client: 24,
+        burst: 4,
+        mix: ScenarioMix::default(),
+        seed: 0xBE7C,
+        router: RouterConfig::default(),
+    };
+    let multi = loadgen::run_multi(&tenants, &opts, &mcfg);
+    println!(
+        "{} requests in {:.3}s -> {:.1} req/s across {} tenants",
+        multi.total_requests, multi.wall_seconds, multi.throughput_rps, multi.tenants
+    );
+    for t in &multi.per_tenant {
+        println!(
+            "  {:20} x{:<4} {:.1} req/s  p50 {:>9.6}s  p99 {:>9.6}s",
+            t.name, t.completed, t.throughput_rps, t.latency.p50_s, t.latency.p99_s
+        );
+    }
+    objects.push(multi.to_json().trim_end().to_string());
 
     let json = format!(
         "{{\n\"bench\": \"serve-suite\",\n\"results\": [\n{}\n]\n}}\n",

@@ -12,6 +12,13 @@
 //! * [`partition`] — materializes a blocking into a [`partition::BlockedMatrix`]:
 //!   per-block local CSC patterns + values over the filled L+U pattern.
 //! * [`stats`] — per-block / per-level nonzero balance audits (Fig 5).
+//!
+//! Everything here depends **only on the sparsity pattern** (the filled
+//! L+U pattern from [`crate::symbolic`]), never on values — which is
+//! what lets [`crate::session::FactorPlan`] freeze a blocking once per
+//! pattern and re-use it across millions of numeric re-factorizations.
+//! See `ARCHITECTURE.md` at the repository root for where blocking sits
+//! in the pipeline.
 
 pub mod feature;
 pub mod irregular;

@@ -11,6 +11,15 @@
 //! * CUDA streams/events ⇒ the dependency-counting ready queues;
 //! * measured GPU time ⇒ both measured CPU wall-clock **and** the modeled
 //!   A100 makespan from [`simulate::simulate`] (same DAG, same placement).
+//!
+//! Two entry points matter downstream: [`run_dag`] executes a whole task
+//! DAG (the full re-factorization path of
+//! [`crate::session::SolverSession::refactorize`]) and
+//! [`run_dag_subset`] executes a masked task subset with out-of-subset
+//! dependencies treated as already satisfied (the pruned incremental
+//! path of [`crate::session::SolverSession::refactorize_partial`]).
+//! `ARCHITECTURE.md` at the repository root places this module in the
+//! full pipeline.
 
 pub mod dag;
 pub mod metrics;

@@ -37,13 +37,24 @@
 //! * [`serve`] — the multi-client serving layer over `session`:
 //!   [`serve::SessionPool`] (N sessions sharing one plan,
 //!   checkout/checkin, lazy growth), [`serve::Batcher`] (bounded queue
-//!   coalescing solves into multi-RHS sweeps and routing stamps partial
-//!   vs full via [`session::SolverSession::estimate_partial`]),
-//!   [`serve::persist`] (versioned checksummed plan files +
-//!   [`session::PlanCache::warm_from_dir`] for one-disk-read cold
-//!   starts), and [`serve::loadgen`] (the closed-loop throughput /
-//!   tail-latency bench behind `repro serve-bench`).
+//!   coalescing solves into multi-RHS sweeps, coalescing consecutive
+//!   stamps into one merged change set, and routing stamps partial vs
+//!   full via [`session::SolverSession::estimate_partial`]),
+//!   [`serve::Router`] (**multi-matrix tenancy**: requests routed by
+//!   pattern fingerprint to per-pattern shards — shared plan + pool +
+//!   batcher — that drain concurrently on a worker pool, with
+//!   `ShardFull` admission control and `PlanCache`-LRU-driven shard
+//!   eviction/revival), [`serve::persist`] (versioned checksummed plan
+//!   files + [`session::PlanCache::warm_from_dir`] for one-disk-read
+//!   cold starts), and [`serve::loadgen`] (the closed-loop single-pool
+//!   and multi-tenant throughput / tail-latency benches behind `repro
+//!   serve-bench`).
 //! * [`bench_harness`] — regenerates every table and figure of the paper.
+//!
+//! `ARCHITECTURE.md` at the repository root walks the whole pipeline —
+//! CSC input → ordering → symbolic → structure-aware blocking → DAG
+//! scheduling → numeric kernels, and the session/serve layers on top —
+//! with a module map and a data-flow diagram of the serving router.
 //!
 //! ## Quickstart
 //!

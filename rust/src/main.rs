@@ -16,7 +16,7 @@ use anyhow::{bail, Context, Result};
 use sparselu::bench_harness::{self, SuiteScale};
 use sparselu::ordering::OrderingMethod;
 use sparselu::runtime::PjrtDense;
-use sparselu::serve::{loadgen, persist, ScenarioMix};
+use sparselu::serve::{loadgen, persist, RouterConfig, ScenarioMix};
 use sparselu::session::{FactorPlan, PlanCache};
 use sparselu::solver::{SolveOptions, Solver};
 use sparselu::sparse::{gen, io, residual, Csc};
@@ -72,7 +72,8 @@ USAGE:
   repro analyze --matrix <SPEC>
   repro bench   <EXPERIMENT|all> [--out DIR] [--scale small|medium]
   repro serve-bench [--matrix SPEC] [--clients K] [--requests N] [--sessions S]
-                    [--mix F,S,V] [--plan-dir DIR] [--out FILE] [--workers N] [--blocking B]
+                    [--mix F,S,V] [--tenants M] [--plan-dir DIR] [--out FILE]
+                    [--workers N] [--blocking B]
   repro artifacts-check [--dir artifacts]
 
 SERVE-BENCH (the serving-layer load generator):
@@ -81,7 +82,12 @@ SERVE-BENCH (the serving-layer load generator):
   weights, default 1,6,3) and the run's throughput + p50/p99 latency per
   scenario is written to --out (default BENCH_serve.json). With
   --plan-dir the FactorPlan is persisted there and warm-loaded on the
-  next run (cold start = one disk read, no symbolic/blocking).
+  next run (cold start = one disk read, no symbolic/blocking). With
+  --tenants M >= 2 (default 3) a second, multi-tenant scenario also
+  runs: K clients spread over M distinct sparsity patterns, routed by
+  pattern fingerprint through serve::Router to per-tenant shards that
+  drain concurrently — per-tenant throughput and p50/p99 land in the
+  same JSON under "multi_tenant". --tenants 1 skips it.
 
 MATRIX SPEC:
   path/to/file.mtx             MatrixMarket file (SuiteSparse downloads work)
@@ -357,6 +363,32 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     );
     let report = loadgen::run(&a, plan, &cfg);
 
+    // the multi-tenant scenario: the same client count spread over M
+    // distinct sparsity patterns, routed through serve::Router
+    let tenants: usize = flags.get("tenants").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let multi = if tenants >= 2 {
+        let tenant_mats = tenant_matrices(tenants);
+        let mcfg = loadgen::MultiTenantConfig {
+            clients,
+            requests_per_client: requests,
+            burst: 4,
+            mix,
+            seed: 0x3E2A17,
+            router: RouterConfig {
+                sessions_per_shard: 1,
+                plan_dir: flags.get("plan-dir").map(std::path::PathBuf::from),
+                ..RouterConfig::default()
+            },
+        };
+        println!(
+            "multi-tenant: {clients} clients over {tenants} patterns ({})",
+            tenant_mats.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(", ")
+        );
+        Some(loadgen::run_multi(&tenant_mats, &opts, &mcfg))
+    } else {
+        None
+    };
+
     println!("\n--- serve bench ---");
     println!("requests         : {} in {:.3}s", report.total_requests, report.wall_seconds);
     println!("throughput       : {:.1} req/s", report.throughput_rps);
@@ -381,10 +413,63 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
             s.count, s.p50_s, s.p99_s, s.max_s
         );
     }
-    std::fs::write(&out, report.to_json(&spec, a.n_rows(), a.nnz()))
-        .with_context(|| format!("writing {out}"))?;
+
+    if let Some(multi) = &multi {
+        println!("\n--- multi-tenant serve bench ---");
+        println!(
+            "requests         : {} in {:.3}s ({:.1} req/s across {} tenants)",
+            multi.total_requests, multi.wall_seconds, multi.throughput_rps, multi.tenants
+        );
+        println!(
+            "router           : {} spin-ups, {} evictions, {} revivals, \
+             cache {}h/{}m",
+            multi.router.spin_ups,
+            multi.router.evictions,
+            multi.router.revivals,
+            multi.router.cache_hits,
+            multi.router.cache_misses
+        );
+        for t in &multi.per_tenant {
+            println!(
+                "  {:18} x{:<5} {:.1} req/s  p50 {:.5}s  p99 {:.5}s  \
+                 ({} rejections)",
+                t.name, t.completed, t.throughput_rps, t.latency.p50_s, t.latency.p99_s,
+                t.rejections
+            );
+        }
+    }
+
+    let json = match &multi {
+        None => report.to_json(&spec, a.n_rows(), a.nnz()),
+        Some(multi) => format!(
+            "{{\n\"bench\": \"serve-combined\",\n\"single\": {},\n\"multi_tenant\": {}\n}}\n",
+            report.to_json(&spec, a.n_rows(), a.nnz()).trim_end(),
+            multi.to_json().trim_end()
+        ),
+    };
+    std::fs::write(&out, json).with_context(|| format!("writing {out}"))?;
     println!("\nwrote {out}");
     Ok(())
+}
+
+/// Deterministic family of distinct sparsity patterns for the
+/// multi-tenant scenario: alternating circuit-BBD and 2D-grid tenants of
+/// staggered sizes (every pattern fingerprint is distinct).
+fn tenant_matrices(count: usize) -> Vec<(String, Csc)> {
+    (0..count)
+        .map(|i| {
+            if i % 2 == 0 {
+                let n = 500 + 123 * i;
+                (
+                    format!("bbd-{n}"),
+                    gen::circuit_bbd(gen::CircuitParams { n, ..Default::default() }),
+                )
+            } else {
+                let side = 20 + 2 * i;
+                (format!("grid-{side}x{side}"), gen::grid2d_laplacian(side, side))
+            }
+        })
+        .collect()
 }
 
 fn cmd_artifacts_check(flags: &HashMap<String, String>) -> Result<()> {

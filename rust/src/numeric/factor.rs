@@ -81,7 +81,10 @@ pub struct NumericMatrix {
 }
 
 /// Factorization failure.
-#[derive(Debug)]
+///
+/// `Clone` so a serving layer can report one failed execution to every
+/// request of a coalesced batch (see [`crate::serve::Batcher`]).
+#[derive(Clone, Debug, PartialEq)]
 pub enum FactorError {
     Kernel(KernelError),
     /// A diagonal block of the grid is structurally empty.

@@ -11,7 +11,13 @@
 //! * coalesces each **consecutive run of [`Request::Solve`]s** into one
 //!   [`crate::session::SolverSession::solve_many`] call (the factor
 //!   blocks are traversed once for the whole batch);
-//! * routes each [`Request::Stamp`] through
+//! * coalesces each **consecutive run of [`Request::Stamp`]s** into one
+//!   merged [`ChangeSet`] — change-set batching across timesteps: one
+//!   dirty-block closure and one pruned replay serve the whole run, and
+//!   because later updates win per index the merged factors are
+//!   bit-identical to stamping each set one at a time
+//!   ([`ChangeSet::extend_from`]);
+//! * routes each (merged) stamp through
 //!   [`crate::session::SolverSession::estimate_partial`]: small closures
 //!   go down the pruned [`refactorize_partial`] path, closures above the
 //!   threshold fall back to a full numeric refactorize (whose
@@ -48,10 +54,24 @@ pub enum RequestKind {
 }
 
 /// Serving failure — returned to the client, never a process abort.
-#[derive(Debug)]
+///
+/// `Clone` so one failed coalesced execution can be reported to every
+/// request that rode in it.
+#[derive(Clone, Debug)]
 pub enum ServeError {
     /// The bounded queue is at capacity; the client must back off.
     QueueFull { capacity: usize },
+    /// A tenant shard's bounded queue is at capacity — the multi-tenant
+    /// form of [`ServeError::QueueFull`], carrying the tenant key so a
+    /// client talking to a [`crate::serve::Router`] knows *which* of its
+    /// patterns is backed up.
+    ShardFull { tenant: u64, capacity: usize },
+    /// A request addressed a tenant the router has no live shard for
+    /// (never admitted, or evicted — re-admit the pattern to revive it).
+    UnknownTenant { tenant: u64 },
+    /// The router is at its shard cap and every live shard has queued or
+    /// in-flight work, so none can be evicted to make room.
+    RouterFull { max_shards: usize },
     /// A solve or stamp arrived before any successful factorization
     /// seeded the session's factors.
     NotFactored,
@@ -69,6 +89,15 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::QueueFull { capacity } => {
                 write!(f, "request queue full (capacity {capacity})")
+            }
+            ServeError::ShardFull { tenant, capacity } => {
+                write!(f, "shard for tenant {tenant:#018x} full (capacity {capacity})")
+            }
+            ServeError::UnknownTenant { tenant } => {
+                write!(f, "no live shard for tenant {tenant:#018x} (admit the pattern first)")
+            }
+            ServeError::RouterFull { max_shards } => {
+                write!(f, "router at shard capacity ({max_shards}) with no evictable shard")
             }
             ServeError::NotFactored => {
                 write!(f, "no factors yet: a full refactorize must precede solves/stamps")
@@ -99,13 +128,20 @@ pub struct ServeReport {
     /// Seconds the request sat in the queue before its batch started
     /// executing.
     pub queue_seconds: f64,
-    /// Number of requests executed together with this one (solve
-    /// coalescing run length; 1 for refactorize/stamp).
+    /// Seconds the batch this request rode in spent executing (shared by
+    /// every member of a coalesced run). `queue_seconds + exec_seconds`
+    /// is the request's server-side latency.
+    pub exec_seconds: f64,
+    /// Number of requests executed together with this one (solve or
+    /// stamp coalescing run length; 1 for refactorize).
     pub batch_size: usize,
-    /// DAG tasks executed on behalf of this request (0 for solves).
+    /// DAG tasks executed on behalf of this request (0 for solves; for a
+    /// coalesced stamp run the merged execution's count is attributed to
+    /// the run's **first** report only, so summing over reports never
+    /// double-counts work).
     pub tasks_executed: usize,
     /// DAG tasks skipped by reachability pruning (0 for solves and full
-    /// refactorizes).
+    /// refactorizes; attributed like `tasks_executed`).
     pub tasks_skipped: usize,
     /// Stamp requests: whether the batcher chose the pruned partial path
     /// (`false` = estimator sent it down the full refactorize).
@@ -124,15 +160,19 @@ pub struct Batcher {
     /// Stamps whose estimated run fraction exceeds this go down the full
     /// refactorize path instead of the pruned partial path.
     partial_threshold: f64,
+    /// Coalesce consecutive stamp requests into one merged change set
+    /// (one dirty-block closure, one pruned replay) before executing.
+    coalesce_stamps: bool,
     queue: VecDeque<(Request, Instant)>,
 }
 
 impl Batcher {
     /// Queue bounded at `capacity` requests, with the default routing
-    /// threshold (stamps re-running more than half the DAG go full).
+    /// threshold (stamps re-running more than half the DAG go full) and
+    /// stamp coalescing enabled.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "Batcher needs capacity >= 1");
-        Self { capacity, partial_threshold: 0.5, queue: VecDeque::new() }
+        Self { capacity, partial_threshold: 0.5, coalesce_stamps: true, queue: VecDeque::new() }
     }
 
     /// Override the partial-vs-full routing threshold (fraction of DAG
@@ -141,6 +181,17 @@ impl Batcher {
     pub fn with_partial_threshold(mut self, threshold: f64) -> Self {
         assert!((0.0..=1.0).contains(&threshold), "threshold must be in [0, 1]");
         self.partial_threshold = threshold;
+        self
+    }
+
+    /// Enable/disable change-set batching across timesteps (coalescing
+    /// consecutive [`Request::Stamp`]s into one merged
+    /// [`ChangeSet`] — see [`ChangeSet::extend_from`] for why the merge
+    /// is exact). On by default; turn off to force one partial
+    /// refactorize per stamp (e.g. when per-stamp task counts matter
+    /// more than throughput).
+    pub fn with_stamp_coalescing(mut self, coalesce: bool) -> Self {
+        self.coalesce_stamps = coalesce;
         self
     }
 
@@ -211,11 +262,13 @@ impl Batcher {
                     }
                     let start = Instant::now();
                     let xs = session.solve_many(&batch);
+                    let exec_seconds = start.elapsed().as_secs_f64();
                     let batch_size = batch.len();
                     for (x, t) in xs.into_iter().zip(waits) {
                         outcomes.push(Ok(ServeReport {
                             kind: RequestKind::Solve,
                             queue_seconds: start.duration_since(t).as_secs_f64(),
+                            exec_seconds,
                             batch_size,
                             tasks_executed: 0,
                             tasks_skipped: 0,
@@ -234,9 +287,12 @@ impl Batcher {
                         continue;
                     }
                     let start = Instant::now();
-                    let outcome = session.refactorize(&values).map(|rep| ServeReport {
+                    let result = session.refactorize(&values);
+                    let exec_seconds = start.elapsed().as_secs_f64();
+                    let outcome = result.map(|rep| ServeReport {
                         kind: RequestKind::Refactorize,
                         queue_seconds: start.duration_since(submitted).as_secs_f64(),
+                        exec_seconds,
                         batch_size: 1,
                         tasks_executed: rep.tasks_executed,
                         tasks_skipped: rep.tasks_skipped,
@@ -257,31 +313,72 @@ impl Batcher {
                         outcomes.push(Err(ServeError::StampOutOfRange { index: k, nnz }));
                         continue;
                     }
+                    // change-set batching across timesteps: merge the
+                    // following consecutive *valid* stamps into this one
+                    // (later updates win per index, so the merged set is
+                    // exactly "apply each stamp in order") and pay a
+                    // single dirty-block closure + pruned replay for the
+                    // whole run. An invalid stamp ends the run and is
+                    // rejected on its own next turn.
+                    let mut merged = changes;
+                    let mut waits = vec![submitted];
+                    while self.coalesce_stamps {
+                        let Some((Request::Stamp { changes }, _)) = self.queue.front() else {
+                            break;
+                        };
+                        if changes.updates().iter().any(|&(k, _)| k >= nnz) {
+                            break;
+                        }
+                        let Some((Request::Stamp { changes }, t)) = self.queue.pop_front()
+                        else {
+                            unreachable!("front() just matched a stamp");
+                        };
+                        merged.extend_from(&changes);
+                        waits.push(t);
+                    }
                     let start = Instant::now();
-                    let est = session.estimate_partial(&changes);
+                    let est = session.estimate_partial(&merged);
                     let go_partial = est.run_fraction() <= self.partial_threshold;
                     let result = if go_partial {
-                        session.refactorize_partial(&changes)
+                        session.refactorize_partial(&merged)
                     } else {
                         // closure covers most of the DAG: the full path's
                         // single whole-matrix scatter beats per-block
                         // rescatter — results are bit-identical either way
                         let mut values = session.current_values().to_vec();
-                        for &(k, v) in changes.updates() {
+                        for &(k, v) in merged.updates() {
                             values[k] = v;
                         }
                         session.refactorize(&values)
                     };
-                    let outcome = result.map(|rep| ServeReport {
-                        kind: RequestKind::Stamp,
-                        queue_seconds: start.duration_since(submitted).as_secs_f64(),
-                        batch_size: 1,
-                        tasks_executed: rep.tasks_executed,
-                        tasks_skipped: rep.tasks_skipped,
-                        went_partial: go_partial,
-                        solution: None,
-                    });
-                    outcomes.push(outcome.map_err(ServeError::from));
+                    let exec_seconds = start.elapsed().as_secs_f64();
+                    let batch_size = waits.len();
+                    match result {
+                        Ok(rep) => {
+                            for (run_pos, t) in waits.into_iter().enumerate() {
+                                // task counts attributed to the run's
+                                // first report only (see ServeReport)
+                                let leader = run_pos == 0;
+                                outcomes.push(Ok(ServeReport {
+                                    kind: RequestKind::Stamp,
+                                    queue_seconds: start.duration_since(t).as_secs_f64(),
+                                    exec_seconds,
+                                    batch_size,
+                                    tasks_executed: if leader { rep.tasks_executed } else { 0 },
+                                    tasks_skipped: if leader { rep.tasks_skipped } else { 0 },
+                                    went_partial: go_partial,
+                                    solution: None,
+                                }));
+                            }
+                        }
+                        Err(e) => {
+                            // the merged execution failed as a unit: every
+                            // stamp that rode in it gets the error
+                            for _ in waits {
+                                outcomes.push(Err(ServeError::Factor(e.clone())));
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -374,6 +471,76 @@ mod tests {
         for (id, want) in partial_blocks.iter().enumerate() {
             assert_eq!(&s.numeric().block_values(id as u32), want, "block {id}");
         }
+    }
+
+    #[test]
+    fn consecutive_stamps_coalesce_into_one_closure() {
+        let a = gen::grid2d_laplacian(10, 10);
+        let mut s = session_for(&a);
+        s.refactorize(&a.values).unwrap();
+        let ks = [
+            a.value_index(12, 12).unwrap(),
+            a.value_index(57, 57).unwrap(),
+            a.value_index(57, 57).unwrap(), // same entry restamped: later wins
+        ];
+        let news = [a.values[ks[0]] * 2.0, a.values[ks[1]] * 3.0, a.values[ks[2]] * 5.0];
+        let mut b = Batcher::new(8).with_partial_threshold(1.0);
+        for (&k, &v) in ks.iter().zip(&news) {
+            b.submit(Request::Stamp { changes: ChangeSet::from_value_indices([(k, v)]) })
+                .unwrap();
+        }
+        let reports: Vec<ServeReport> =
+            b.drain(&mut s).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(reports.len(), 3, "one report per stamp");
+        assert!(reports.iter().all(|r| r.batch_size == 3), "the run coalesced");
+        assert!(reports[0].tasks_executed > 0, "work attributed to the leader");
+        assert_eq!(reports[1].tasks_executed, 0, "followers carry no task counts");
+        assert_eq!(reports[2].tasks_executed, 0);
+
+        // oracle: stamping one at a time (coalescing off) lands on
+        // bit-identical factors
+        let mut oracle = session_for(&a);
+        oracle.refactorize(&a.values).unwrap();
+        let mut ob = Batcher::new(8).with_partial_threshold(1.0).with_stamp_coalescing(false);
+        for (&k, &v) in ks.iter().zip(&news) {
+            ob.submit(Request::Stamp { changes: ChangeSet::from_value_indices([(k, v)]) })
+                .unwrap();
+        }
+        let one_at_a_time: Vec<ServeReport> =
+            ob.drain(&mut oracle).into_iter().map(|r| r.unwrap()).collect();
+        assert!(one_at_a_time.iter().all(|r| r.batch_size == 1), "coalescing disabled");
+        for id in 0..s.plan().structure.blocks.len() {
+            assert_eq!(
+                s.numeric().block_values(id as u32),
+                oracle.numeric().block_values(id as u32),
+                "block {id}: merged stamps diverge from sequential stamps"
+            );
+        }
+        assert_eq!(s.current_values(), oracle.current_values());
+    }
+
+    #[test]
+    fn solve_breaks_a_stamp_run() {
+        let a = gen::grid2d_laplacian(8, 8);
+        let mut s = session_for(&a);
+        s.refactorize(&a.values).unwrap();
+        let k = a.value_index(20, 20).unwrap();
+        let stamp = |m: f64| Request::Stamp {
+            changes: ChangeSet::from_value_indices([(k, a.values[k] * m)]),
+        };
+        let mut b = Batcher::new(8).with_partial_threshold(1.0);
+        b.submit(stamp(2.0)).unwrap();
+        b.submit(stamp(3.0)).unwrap();
+        b.submit(Request::Solve { rhs: vec![1.0; 64] }).unwrap();
+        b.submit(stamp(4.0)).unwrap();
+        let reports: Vec<ServeReport> =
+            b.drain(&mut s).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(reports[0].batch_size, 2, "first two stamps coalesce");
+        assert_eq!(reports[1].batch_size, 2);
+        assert_eq!(reports[2].kind, RequestKind::Solve);
+        assert_eq!(reports[3].batch_size, 1, "run broken by the solve");
+        // request latency decomposition is reported
+        assert!(reports.iter().all(|r| r.queue_seconds >= 0.0 && r.exec_seconds >= 0.0));
     }
 
     #[test]

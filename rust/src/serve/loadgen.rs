@@ -1,6 +1,7 @@
-//! `loadgen` — a closed-loop load generator driving a [`SessionPool`]
-//! from K client threads over a scenario mix, measuring serving
-//! throughput and tail latency.
+//! `loadgen` — closed-loop load generators measuring serving throughput
+//! and tail latency: [`run`] drives a single-pattern [`SessionPool`]
+//! from K client threads, [`run_multi`] drives a multi-tenant
+//! [`Router`] with K clients spread over M distinct sparsity patterns.
 //!
 //! Each client thread loops: pick a scenario (weighted draw from a
 //! per-client deterministic PRNG), check a session out of the pool
@@ -21,8 +22,11 @@
 //!
 //! [`refactorize_partial`]: crate::session::SolverSession::refactorize_partial
 
+use super::batcher::{Request, ServeError, ServeReport};
 use super::pool::SessionPool;
+use super::router::{Router, RouterConfig, TenantId};
 use crate::session::{ChangeSet, FactorPlan, SolverSession};
+use crate::solver::SolveOptions;
 use crate::sparse::Csc;
 use crate::util::Prng;
 use std::sync::Arc;
@@ -323,6 +327,308 @@ pub fn run(a: &Csc, plan: Arc<FactorPlan>, cfg: &LoadgenConfig) -> LoadgenReport
     }
 }
 
+/// Multi-tenant load-generator configuration ([`run_multi`]).
+#[derive(Clone, Debug)]
+pub struct MultiTenantConfig {
+    /// Client threads, spread round-robin over the tenants (client `c`
+    /// talks to tenant `c % M`).
+    pub clients: usize,
+    /// Requests issued per client.
+    pub requests_per_client: usize,
+    /// Requests each client submits before draining its tenant's shard —
+    /// the knob that makes solve coalescing and change-set batching
+    /// visible under load.
+    pub burst: usize,
+    /// Scenario weights (each client's **first** request is always a
+    /// full refactorize so its shard's factors are seeded).
+    pub mix: ScenarioMix,
+    /// PRNG seed (per-client streams derive deterministically).
+    pub seed: u64,
+    /// Router sizing. `max_shards` is clamped up to the tenant count so
+    /// no tenant is evicted mid-run.
+    pub router: RouterConfig,
+}
+
+impl Default for MultiTenantConfig {
+    fn default() -> Self {
+        Self {
+            clients: 8,
+            requests_per_client: 32,
+            burst: 4,
+            mix: ScenarioMix::default(),
+            seed: 0x3E2A17,
+            router: RouterConfig::default(),
+        }
+    }
+}
+
+/// One tenant's share of a [`run_multi`] report.
+#[derive(Clone, Debug)]
+pub struct TenantBench {
+    pub name: String,
+    pub n: usize,
+    pub nnz: usize,
+    /// Clients assigned to this tenant.
+    pub clients: usize,
+    /// Requests that completed successfully / returned an error.
+    pub completed: usize,
+    pub errors: usize,
+    /// Submissions bounced by admission control
+    /// ([`ServeError::ShardFull`]); each was retried after a drain.
+    pub rejections: usize,
+    /// Completed requests per wall-clock second for this tenant alone.
+    pub throughput_rps: f64,
+    /// Server-side latency (queue wait + execution) of this tenant's
+    /// completed requests.
+    pub latency: LatencyStats,
+    /// DAG tasks executed / skipped on this tenant's behalf.
+    pub tasks_executed: usize,
+    pub tasks_skipped: usize,
+}
+
+/// End-to-end result of one multi-tenant load-generator run.
+#[derive(Clone, Debug)]
+pub struct MultiTenantReport {
+    pub clients: usize,
+    pub tenants: usize,
+    pub total_requests: usize,
+    pub wall_seconds: f64,
+    /// Completed requests per wall-clock second across all tenants.
+    pub throughput_rps: f64,
+    /// Router counters at the end of the run.
+    pub router: crate::serve::RouterStats,
+    /// Latency over every completed request of every tenant.
+    pub overall: LatencyStats,
+    pub per_tenant: Vec<TenantBench>,
+}
+
+impl MultiTenantReport {
+    /// Serialize to the `BENCH_serve.json` multi-tenant schema.
+    pub fn to_json(&self) -> String {
+        let tenant_rows: Vec<String> = self
+            .per_tenant
+            .iter()
+            .map(|t| {
+                format!(
+                    concat!(
+                        "      {{\"tenant\": \"{}\", \"n\": {}, \"nnz\": {}, ",
+                        "\"clients\": {}, \"completed\": {}, \"errors\": {}, ",
+                        "\"rejections\": {},\n",
+                        "       \"throughput_rps\": {:.3}, ",
+                        "\"p50_s\": {:.9}, \"p99_s\": {:.9}, ",
+                        "\"mean_s\": {:.9}, \"max_s\": {:.9},\n",
+                        "       \"tasks_executed\": {}, \"tasks_skipped\": {}}}"
+                    ),
+                    t.name,
+                    t.n,
+                    t.nnz,
+                    t.clients,
+                    t.completed,
+                    t.errors,
+                    t.rejections,
+                    t.throughput_rps,
+                    t.latency.p50_s,
+                    t.latency.p99_s,
+                    t.latency.mean_s,
+                    t.latency.max_s,
+                    t.tasks_executed,
+                    t.tasks_skipped
+                )
+            })
+            .collect();
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"serve-multi\",\n",
+                "  \"clients\": {}, \"tenants\": {}, ",
+                "\"total_requests\": {}, \"wall_seconds\": {:.6}, ",
+                "\"throughput_rps\": {:.3},\n",
+                "  \"router\": {{\"spin_ups\": {}, \"evictions\": {}, ",
+                "\"revivals\": {}, \"plans_warmed\": {}, ",
+                "\"cache_hits\": {}, \"cache_misses\": {}}},\n",
+                "  \"overall\": {{\"p50_s\": {:.9}, \"p99_s\": {:.9}, ",
+                "\"mean_s\": {:.9}}},\n",
+                "  \"per_tenant\": [\n{}\n  ]\n",
+                "}}\n"
+            ),
+            self.clients,
+            self.tenants,
+            self.total_requests,
+            self.wall_seconds,
+            self.throughput_rps,
+            self.router.spin_ups,
+            self.router.evictions,
+            self.router.revivals,
+            self.router.plans_warmed,
+            self.router.cache_hits,
+            self.router.cache_misses,
+            self.overall.p50_s,
+            self.overall.p99_s,
+            self.overall.mean_s,
+            tenant_rows.join(",\n")
+        )
+    }
+}
+
+/// Drive a multi-tenant [`Router`] with `cfg.clients` closed-loop client
+/// threads spread over `tenants` (name + matrix, one per distinct
+/// sparsity pattern). Each client submits bursts to its own tenant and
+/// drains that tenant's shard — so shards of different tenants execute
+/// concurrently, exactly the contention pattern a multi-matrix serving
+/// process sees. Latency is the server-side queue + execution time per
+/// request; per-tenant throughput counts only that tenant's completed
+/// requests.
+pub fn run_multi(
+    tenants: &[(String, Csc)],
+    opts: &SolveOptions,
+    cfg: &MultiTenantConfig,
+) -> MultiTenantReport {
+    assert!(!tenants.is_empty(), "run_multi needs at least one tenant");
+    assert!(cfg.clients > 0 && cfg.requests_per_client > 0, "empty load");
+    assert!(cfg.mix.total() > 0, "scenario mix must have positive weight");
+    let m = tenants.len();
+    let mut router_cfg = cfg.router.clone();
+    router_cfg.max_shards = router_cfg.max_shards.max(m);
+    router_cfg.plan_cache_capacity = router_cfg.plan_cache_capacity.max(router_cfg.max_shards);
+    let router = Router::new(opts.clone(), router_cfg);
+    let ids: Vec<TenantId> = tenants
+        .iter()
+        .map(|(name, a)| {
+            router.admit(a).unwrap_or_else(|e| panic!("admitting tenant {name}: {e}"))
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    // (tenant index, outcome) per completed-or-errored request
+    let mut samples: Vec<(usize, Result<ServeReport, ServeError>)> =
+        Vec::with_capacity(cfg.clients * cfg.requests_per_client);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|client| {
+                let (router, ids) = (&router, &ids);
+                scope.spawn(move || {
+                    let t_idx = client % m;
+                    let (_, a) = &tenants[t_idx];
+                    let id = ids[t_idx];
+                    let n = a.n_rows();
+                    let mut rng = Prng::new(
+                        cfg.seed ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let mut out = Vec::with_capacity(cfg.requests_per_client);
+                    let mut issued = 0;
+                    while issued < cfg.requests_per_client {
+                        let burst = cfg.burst.clamp(1, cfg.requests_per_client - issued);
+                        for _ in 0..burst {
+                            let request = if issued == 0 {
+                                // seed the shard's factors before any
+                                // stamp/solve can land
+                                Request::Refactorize { values: a.values.clone() }
+                            } else {
+                                match cfg.mix.pick(rng.below(cfg.mix.total() as usize) as u32)
+                                {
+                                    Scenario::Full => Request::Refactorize {
+                                        values: a
+                                            .values
+                                            .iter()
+                                            .map(|v| v * (1.0 + 0.02 * rng.signed_unit()))
+                                            .collect(),
+                                    },
+                                    Scenario::Stamp => {
+                                        let d = rng.below(n);
+                                        let k = a
+                                            .value_index(d, d)
+                                            .expect("generator matrices have full diagonals");
+                                        let nv = a.values[k]
+                                            * (1.0 + 0.03 * (0.5 + 0.5 * rng.f64()));
+                                        Request::Stamp {
+                                            changes: ChangeSet::from_value_indices([(k, nv)]),
+                                        }
+                                    }
+                                    Scenario::Solve => Request::Solve {
+                                        rhs: (0..n).map(|_| rng.signed_unit()).collect(),
+                                    },
+                                }
+                            };
+                            // closed loop with backpressure: a ShardFull
+                            // rejection drains our own shard, then retries
+                            loop {
+                                match router.submit(id, request.clone()) {
+                                    Ok(()) => break,
+                                    Err(ServeError::ShardFull { .. }) => {
+                                        let drained = router
+                                            .drain_tenant(id)
+                                            .expect("admitted tenant stays live");
+                                        out.extend(
+                                            drained.into_iter().map(|o| (t_idx, o)),
+                                        );
+                                    }
+                                    Err(e) => panic!("unexpected submit failure: {e}"),
+                                }
+                            }
+                            issued += 1;
+                        }
+                        let drained =
+                            router.drain_tenant(id).expect("admitted tenant stays live");
+                        out.extend(drained.into_iter().map(|o| (t_idx, o)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for handle in handles {
+            samples.extend(handle.join().expect("client thread panicked"));
+        }
+    });
+    let wall_seconds = t0.elapsed().as_secs_f64();
+
+    let mut completed = vec![0usize; m];
+    let mut errors = vec![0usize; m];
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); m];
+    let mut overall: Vec<f64> = Vec::with_capacity(samples.len());
+    for (t_idx, outcome) in &samples {
+        match outcome {
+            Ok(rep) => {
+                completed[*t_idx] += 1;
+                let latency = rep.queue_seconds + rep.exec_seconds;
+                latencies[*t_idx].push(latency);
+                overall.push(latency);
+            }
+            Err(_) => errors[*t_idx] += 1,
+        }
+    }
+    let per_tenant: Vec<TenantBench> = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, (name, a))| {
+            let stats = router.tenant_stats(ids[i]).expect("admitted tenant stays live");
+            TenantBench {
+                name: name.clone(),
+                n: a.n_rows(),
+                nnz: a.nnz(),
+                clients: (cfg.clients + m - 1 - i) / m,
+                completed: completed[i],
+                errors: errors[i],
+                rejections: stats.rejected,
+                throughput_rps: completed[i] as f64 / wall_seconds.max(1e-12),
+                latency: LatencyStats::of(&mut latencies[i]),
+                tasks_executed: stats.tasks_executed,
+                tasks_skipped: stats.tasks_skipped,
+            }
+        })
+        .collect();
+    let total_requests = samples.len();
+    MultiTenantReport {
+        clients: cfg.clients,
+        tenants: m,
+        total_requests,
+        wall_seconds,
+        throughput_rps: completed.iter().sum::<usize>() as f64 / wall_seconds.max(1e-12),
+        router: router.stats(),
+        overall: LatencyStats::of(&mut overall),
+        per_tenant,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,6 +658,44 @@ mod tests {
         let json = report.to_json("bbd-200", a.n_rows(), a.nnz());
         assert!(json.contains("\"bench\": \"serve\""));
         assert!(json.contains("\"scenario\": \"stamp\""));
+    }
+
+    #[test]
+    fn multi_tenant_loadgen_serves_every_tenant_and_reports_per_tenant() {
+        let tenants = vec![
+            ("bbd-200".to_string(), gen::circuit_bbd(gen::CircuitParams {
+                n: 200,
+                ..Default::default()
+            })),
+            ("grid-9x9".to_string(), gen::grid2d_laplacian(9, 9)),
+        ];
+        let cfg = MultiTenantConfig {
+            clients: 4,
+            requests_per_client: 6,
+            burst: 3,
+            ..Default::default()
+        };
+        let report = run_multi(&tenants, &SolveOptions::ours(1), &cfg);
+        assert_eq!(report.tenants, 2);
+        assert_eq!(report.total_requests, 24, "every request is accounted for");
+        assert_eq!(report.router.spin_ups, 2);
+        assert_eq!(report.router.evictions, 0, "no tenant evicted mid-run");
+        let completed: usize = report.per_tenant.iter().map(|t| t.completed).sum();
+        let errors: usize = report.per_tenant.iter().map(|t| t.errors).sum();
+        assert_eq!(completed + errors, 24);
+        assert_eq!(errors, 0, "seeded shards never see NotFactored");
+        for t in &report.per_tenant {
+            assert_eq!(t.clients, 2);
+            assert!(t.completed > 0, "tenant {} starved", t.name);
+            assert!(t.throughput_rps > 0.0);
+            assert!(t.latency.p99_s >= t.latency.p50_s);
+            assert!(t.tasks_executed > 0, "tenant {} never factorized", t.name);
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"bench\": \"serve-multi\""));
+        assert!(json.contains("\"tenant\": \"bbd-200\""));
+        assert!(json.contains("\"tenant\": \"grid-9x9\""));
+        assert!(json.contains("\"per_tenant\""));
     }
 
     #[test]

@@ -20,9 +20,19 @@
 //!   [`crate::session::FactorPlan`] plus
 //!   [`crate::session::PlanCache::warm_from_dir`], so a cold start costs
 //!   one disk read instead of ordering + symbolic + blocking.
+//! * [`Router`] — the **multi-tenant** front-end: requests are routed by
+//!   sparsity-pattern fingerprint to a per-pattern *shard* (one shared
+//!   plan + its own [`SessionPool`] + its own [`Batcher`]), shards drain
+//!   concurrently on a worker pool, full shard queues reject with a
+//!   clean [`ServeError::ShardFull`], and idle shards are evicted (and
+//!   later revived) following the [`crate::session::PlanCache`]'s LRU
+//!   order.
 //! * [`loadgen`] — a closed-loop, K-client load generator over a
-//!   full/stamp/solve scenario mix, emitting the `BENCH_serve.json`
-//!   throughput + p50/p99 report (`repro serve-bench`).
+//!   full/stamp/solve scenario mix — single-pool
+//!   ([`loadgen::run`]) and multi-tenant ([`loadgen::run_multi`], K
+//!   clients spread over M patterns through a [`Router`]) — emitting the
+//!   `BENCH_serve.json` throughput + p50/p99 report (`repro
+//!   serve-bench`).
 //!
 //! ## Serving flow
 //!
@@ -60,8 +70,12 @@ pub mod batcher;
 pub mod loadgen;
 pub mod persist;
 pub mod pool;
+pub mod router;
 
 pub use batcher::{Batcher, Request, RequestKind, ServeError, ServeReport};
-pub use loadgen::{LoadgenConfig, LoadgenReport, ScenarioMix};
+pub use loadgen::{
+    LoadgenConfig, LoadgenReport, MultiTenantConfig, MultiTenantReport, ScenarioMix, TenantBench,
+};
 pub use persist::{load_plan, save_plan, save_plan_to_dir, PersistError, WarmReport};
 pub use pool::{PooledSession, PoolStats, SessionPool};
+pub use router::{Router, RouterConfig, RouterStats, TenantId, TenantStats};

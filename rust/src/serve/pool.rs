@@ -42,6 +42,27 @@ struct PoolState {
 /// new session (one blocked-storage allocation) only when a checkout
 /// finds no idle session and the cap has not been reached. Past the cap,
 /// [`SessionPool::checkout`] blocks until a session is returned.
+///
+/// ```
+/// use sparselu::serve::SessionPool;
+/// use sparselu::session::FactorPlan;
+/// use sparselu::solver::SolveOptions;
+/// use sparselu::sparse::gen;
+/// use std::sync::Arc;
+///
+/// let a = gen::grid2d_laplacian(8, 8);
+/// let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+/// let pool = SessionPool::new(plan, 4); // lazy growth up to 4 sessions
+///
+/// let mut session = pool.checkout();    // RAII guard; derefs to the session
+/// session.refactorize(&a.values).unwrap();
+/// let x = session.solve(&vec![1.0; a.n_rows()]);
+/// assert_eq!(x.len(), a.n_rows());
+/// drop(session);                        // checkin: factors stay warm
+///
+/// assert!(pool.checkout().is_factored(), "the returned session is reused");
+/// assert_eq!(pool.stats().created, 1, "one allocation served both checkouts");
+/// ```
 pub struct SessionPool {
     plan: Arc<FactorPlan>,
     max_sessions: usize,

@@ -1,0 +1,690 @@
+//! [`Router`] — the multi-tenant front-end: route every request to the
+//! shard owning its **sparsity pattern**, and drain shards concurrently
+//! so tenants never serialize against each other.
+//!
+//! The paper's plan/execute split makes the *pattern* the natural unit
+//! of tenancy: everything expensive (ordering, symbolic analysis,
+//! irregular blocking, DAG construction) is per-pattern and immutable,
+//! while per-request work is numeric-only. The task-queue solver
+//! literature (asynchronous fan-both Cholesky, 2D partitioned-block
+//! task parallelism) routes *tasks* by structure rather than by arrival
+//! order to keep parallelism fed; the router applies the same idea one
+//! level up, routing whole requests by pattern fingerprint:
+//!
+//! * **Admission** — [`Router::admit`] fingerprints a matrix
+//!   ([`crate::sparse::Csc::pattern_fingerprint`] mixed with the solve
+//!   options, i.e. [`PlanCache::key_for`]) and lazily spins up a
+//!   *shard*: one `Arc<FactorPlan>` resolved through the shared
+//!   [`PlanCache`] (warmable from disk via [`crate::serve::persist`]),
+//!   one [`SessionPool`], one [`Batcher`]. Re-admitting a known pattern
+//!   is a cheap LRU touch; re-admitting an evicted one *revives* it —
+//!   usually from the still-cached plan, else from disk, else rebuilt.
+//! * **Routing** — [`Router::submit`] enqueues onto the tenant's
+//!   bounded shard queue; a full queue is a clean
+//!   [`ServeError::ShardFull`] back to that client, never backpressure
+//!   on anyone else's tenant.
+//! * **Execution** — [`Router::drain_all`] walks the live shards with a
+//!   worker pool: each shard is drained by exactly one worker at a time
+//!   (per-tenant requests keep their submission order, which is what
+//!   makes timestep streams and change-set batching sound), while
+//!   different tenants factorize concurrently on their own sessions.
+//! * **Eviction** — when the shard table is full, the victim is the
+//!   least-recently-used *idle* shard, using the [`PlanCache`]'s own
+//!   LRU order ([`PlanCache::keys_lru`]) as the source of truth — a
+//!   shard whose plan the cache already dropped is the most evictable
+//!   of all. Shards with queued or in-flight work are never evicted;
+//!   if every shard is busy, admission fails with
+//!   [`ServeError::RouterFull`].
+//!
+//! ## Serving two netlists at once
+//!
+//! ```
+//! use sparselu::serve::{Request, Router, RouterConfig};
+//! use sparselu::solver::SolveOptions;
+//! use sparselu::sparse::gen;
+//!
+//! let router = Router::new(SolveOptions::ours(1), RouterConfig::default());
+//! let a = gen::grid2d_laplacian(8, 8);
+//! let b = gen::grid2d_laplacian(8, 9); // a different sparsity pattern
+//! let ta = router.admit(&a).unwrap();  // spins the shard up (plan built once)
+//! let tb = router.admit(&b).unwrap();
+//! assert_ne!(ta, tb, "distinct patterns get distinct tenants");
+//!
+//! router.submit(ta, Request::Refactorize { values: a.values.clone() }).unwrap();
+//! router.submit(ta, Request::Solve { rhs: vec![1.0; a.n_rows()] }).unwrap();
+//! router.submit(tb, Request::Refactorize { values: b.values.clone() }).unwrap();
+//!
+//! // both tenants drain concurrently on the worker pool
+//! let drained = router.drain_all(2);
+//! assert_eq!(drained.len(), 2);
+//! for (_tenant, outcomes) in &drained {
+//!     assert!(outcomes.iter().all(|o| o.is_ok()));
+//! }
+//! ```
+
+use super::batcher::{Batcher, Request, RequestKind, ServeError, ServeReport};
+use super::persist;
+use super::pool::SessionPool;
+use crate::session::{FactorPlan, PlanCache};
+use crate::solver::SolveOptions;
+use crate::sparse::Csc;
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Stable identity of one tenant: the [`PlanCache`] key of its sparsity
+/// pattern under the router's solve options. The id survives eviction —
+/// re-admitting the same pattern yields the same id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TenantId(pub u64);
+
+/// Router sizing and policy.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Maximum live shards (tenants with materialized sessions). Beyond
+    /// this, admitting a new pattern evicts the LRU idle shard.
+    pub max_shards: usize,
+    /// Capacity of the shared [`PlanCache`]. Sized above `max_shards`
+    /// so an evicted shard's plan usually survives for a cheap revival.
+    pub plan_cache_capacity: usize,
+    /// Bound of each shard's request queue (admission control:
+    /// [`ServeError::ShardFull`] past it).
+    pub shard_queue: usize,
+    /// Session cap of each shard's [`SessionPool`]. Shard drains are
+    /// serialized per tenant, so one warm session per shard is the
+    /// steady state; the cap only bounds transient overlap (e.g. a
+    /// drain racing a snapshot taken just before an eviction).
+    pub sessions_per_shard: usize,
+    /// Stamp routing threshold forwarded to each shard's [`Batcher`].
+    pub partial_threshold: f64,
+    /// Change-set batching across timesteps, forwarded to each shard's
+    /// [`Batcher`].
+    pub coalesce_stamps: bool,
+    /// When set: warm the plan cache from this directory at startup and
+    /// persist every freshly built plan into it (best-effort — IO
+    /// failures degrade to cold builds, they never fail serving).
+    pub plan_dir: Option<PathBuf>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            max_shards: 8,
+            plan_cache_capacity: 16,
+            shard_queue: 64,
+            sessions_per_shard: 1,
+            partial_threshold: 0.5,
+            coalesce_stamps: true,
+            plan_dir: None,
+        }
+    }
+}
+
+/// Cumulative per-tenant serving metrics, aggregated from every
+/// [`ServeReport`] the tenant's shard produced.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantStats {
+    /// Requests accepted into the shard queue.
+    pub submitted: usize,
+    /// Requests rejected at admission ([`ServeError::ShardFull`]).
+    pub rejected: usize,
+    /// Requests executed successfully.
+    pub completed: usize,
+    /// Requests that executed but returned an error to the client.
+    pub errored: usize,
+    /// Completed requests by kind.
+    pub solves: usize,
+    pub stamps: usize,
+    pub fulls: usize,
+    /// DAG tasks executed / skipped on this tenant's behalf (coalesced
+    /// runs counted once — see [`ServeReport::tasks_executed`]).
+    pub tasks_executed: usize,
+    pub tasks_skipped: usize,
+    /// Summed per-request queue wait and execution seconds.
+    pub queue_seconds: f64,
+    pub exec_seconds: f64,
+}
+
+impl TenantStats {
+    fn absorb(&mut self, outcomes: &[Result<ServeReport, ServeError>]) {
+        for outcome in outcomes {
+            match outcome {
+                Ok(rep) => {
+                    self.completed += 1;
+                    match rep.kind {
+                        RequestKind::Solve => self.solves += 1,
+                        RequestKind::Stamp => self.stamps += 1,
+                        RequestKind::Refactorize => self.fulls += 1,
+                    }
+                    self.tasks_executed += rep.tasks_executed;
+                    self.tasks_skipped += rep.tasks_skipped;
+                    self.queue_seconds += rep.queue_seconds;
+                    self.exec_seconds += rep.exec_seconds;
+                }
+                Err(_) => self.errored += 1,
+            }
+        }
+    }
+}
+
+/// Router-level counters.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterStats {
+    /// Shards currently live.
+    pub shards_live: usize,
+    /// Shards spun up over the router's lifetime (first admissions plus
+    /// revivals).
+    pub spin_ups: usize,
+    /// Shards evicted to make room.
+    pub evictions: usize,
+    /// Evicted tenants spun up again.
+    pub revivals: usize,
+    /// Plan files warm-loaded from `plan_dir` at startup.
+    pub plans_warmed: usize,
+    /// Shared plan-cache counters.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+/// One tenant's serving state: the immutable plan plus this pattern's
+/// mutable serving machinery. Everything mutable is behind its own lock,
+/// so shards never contend with each other.
+struct Shard {
+    tenant: TenantId,
+    plan: Arc<FactorPlan>,
+    pool: SessionPool,
+    batcher: Mutex<Batcher>,
+    stats: Mutex<TenantStats>,
+    /// Set (under the batcher lock, with the queue verified empty) when
+    /// the shard is evicted. A submit that looked the shard up *before*
+    /// the eviction but enqueues *after* would otherwise land its
+    /// request on an orphaned queue nobody will ever drain; checking
+    /// this flag under the same lock closes that window.
+    retired: AtomicBool,
+}
+
+impl Shard {
+    /// Execute everything queued on this shard. The batcher lock is held
+    /// for the duration, serializing drains *within* the tenant — which
+    /// is exactly the per-tenant total order timestep streams need —
+    /// while other shards drain in parallel on their own locks.
+    fn drain(&self) -> Vec<Result<ServeReport, ServeError>> {
+        let mut batcher = self.batcher.lock().unwrap();
+        if batcher.is_empty() {
+            return Vec::new();
+        }
+        // LIFO checkout hands back the warm session holding this
+        // tenant's current factors; serialized drains mean the pool
+        // never blocks here
+        let mut session = self.pool.checkout();
+        let outcomes = batcher.drain(&mut session);
+        drop(session);
+        drop(batcher);
+        self.stats.lock().unwrap().absorb(&outcomes);
+        outcomes
+    }
+}
+
+struct RouterState {
+    cache: PlanCache,
+    /// Live shards, least-recently-touched first (admission/submission
+    /// order — kept in lockstep with the cache via [`PlanCache::touch`]).
+    shards: Vec<Arc<Shard>>,
+    /// Tenants that once had a shard and were evicted (for the revival
+    /// counter).
+    evicted: HashSet<u64>,
+    spin_ups: usize,
+    evictions: usize,
+    revivals: usize,
+    plans_warmed: usize,
+}
+
+/// Multi-tenant serving front-end over pattern-keyed shards. See the
+/// [module docs](self) for the full story.
+pub struct Router {
+    cfg: RouterConfig,
+    opts: SolveOptions,
+    state: Mutex<RouterState>,
+}
+
+impl Router {
+    /// Router serving every tenant under one set of solve options. If
+    /// `cfg.plan_dir` is set, the plan cache is warmed from it now
+    /// (best-effort: unreadable files are skipped, a missing directory
+    /// is created).
+    pub fn new(opts: SolveOptions, cfg: RouterConfig) -> Self {
+        assert!(cfg.max_shards > 0, "Router needs max_shards >= 1");
+        assert!(cfg.plan_cache_capacity >= cfg.max_shards, "cache must cover the live shards");
+        let mut cache = PlanCache::new(cfg.plan_cache_capacity);
+        let mut plans_warmed = 0;
+        if let Some(dir) = &cfg.plan_dir {
+            if let Err(e) = std::fs::create_dir_all(dir) {
+                eprintln!("router: cannot create plan dir {}: {e}", dir.display());
+            } else {
+                match cache.warm_from_dir(dir) {
+                    Ok(warm) => {
+                        plans_warmed = warm.loaded;
+                        for (path, err) in &warm.skipped {
+                            eprintln!("router: skipped plan file {}: {err}", path.display());
+                        }
+                    }
+                    Err(e) => eprintln!("router: warming from {} failed: {e}", dir.display()),
+                }
+            }
+        }
+        Self {
+            cfg,
+            opts,
+            state: Mutex::new(RouterState {
+                cache,
+                shards: Vec::new(),
+                evicted: HashSet::new(),
+                spin_ups: 0,
+                evictions: 0,
+                revivals: 0,
+                plans_warmed,
+            }),
+        }
+    }
+
+    /// Solve options every tenant is served under.
+    pub fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    /// The tenant id `a`'s pattern routes to (no shard is created).
+    pub fn tenant_of(&self, a: &Csc) -> TenantId {
+        TenantId(PlanCache::key_for(a, &self.opts))
+    }
+
+    /// Admit a matrix's sparsity pattern: return its tenant id, spinning
+    /// a shard up if none is live. The plan is resolved through the
+    /// shared cache (hit, disk-warmed file, or cold build — in that
+    /// order of cost); freshly built plans are persisted to `plan_dir`
+    /// when configured.
+    ///
+    /// Fails with [`ServeError::RouterFull`] when the shard table is at
+    /// capacity and every live shard has queued or in-flight work.
+    pub fn admit(&self, a: &Csc) -> Result<TenantId, ServeError> {
+        let tenant = self.tenant_of(a);
+        let mut st = self.state.lock().unwrap();
+        if let Some(pos) = st.shards.iter().position(|s| s.tenant == tenant) {
+            let shard = st.shards.remove(pos);
+            st.shards.push(shard);
+            st.cache.touch(tenant.0);
+            return Ok(tenant);
+        }
+        if st.shards.len() == self.cfg.max_shards {
+            self.evict_locked(&mut st)?;
+        }
+        let misses_before = st.cache.misses();
+        let plan = st.cache.get_or_build(a, &self.opts);
+        if st.cache.misses() > misses_before {
+            if let Some(dir) = &self.cfg.plan_dir {
+                if let Err(e) = persist::save_plan_to_dir(&plan, dir) {
+                    eprintln!("router: persisting plan to {} failed: {e}", dir.display());
+                }
+            }
+        }
+        let batcher = Batcher::new(self.cfg.shard_queue)
+            .with_partial_threshold(self.cfg.partial_threshold)
+            .with_stamp_coalescing(self.cfg.coalesce_stamps);
+        let shard = Arc::new(Shard {
+            tenant,
+            pool: SessionPool::new(plan.clone(), self.cfg.sessions_per_shard),
+            plan,
+            batcher: Mutex::new(batcher),
+            stats: Mutex::new(TenantStats::default()),
+            retired: AtomicBool::new(false),
+        });
+        st.shards.push(shard);
+        st.spin_ups += 1;
+        if st.evicted.remove(&tenant.0) {
+            st.revivals += 1;
+        }
+        Ok(tenant)
+    }
+
+    /// Evict the least-recently-used **idle** shard (empty queue, no
+    /// session checked out), ranking idleness by the plan cache's own
+    /// LRU order: a shard whose plan the cache already evicted ranks
+    /// before everything still cached. Busy shards are never evicted.
+    fn evict_locked(&self, st: &mut RouterState) -> Result<(), ServeError> {
+        let order = st.cache.keys_lru();
+        let rank = |key: u64| -> i64 {
+            order.iter().position(|&k| k == key).map_or(-1, |p| p as i64)
+        };
+        // pass 1: rank the currently idle shards (try_lock: a held
+        // batcher lock means a drain is in flight — that shard is busy)
+        let mut candidates: Vec<(usize, i64)> = st
+            .shards
+            .iter()
+            .enumerate()
+            .filter_map(|(i, shard)| {
+                let queue_empty = match shard.batcher.try_lock() {
+                    Ok(b) => b.is_empty(),
+                    Err(_) => false,
+                };
+                if queue_empty && shard.pool.stats().in_use == 0 {
+                    Some((i, rank(shard.tenant.0)))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        candidates.sort_by_key(|&(_, r)| r);
+        // pass 2: retire the best candidate that is *still* idle under
+        // its batcher lock. Setting `retired` with the queue verified
+        // empty under that lock means a racing submit (which looked the
+        // shard up before we removed it) either already enqueued — and
+        // we see the queue non-empty and skip — or will see the flag
+        // and get UnknownTenant. No accepted request is ever orphaned.
+        for (pos, _) in candidates {
+            let shard = &st.shards[pos];
+            let guard = shard.batcher.lock().unwrap();
+            if !guard.is_empty() || shard.pool.stats().in_use != 0 {
+                continue;
+            }
+            shard.retired.store(true, Ordering::Release);
+            drop(guard);
+            let shard = st.shards.remove(pos);
+            st.evicted.insert(shard.tenant.0);
+            st.evictions += 1;
+            // the plan itself stays in the cache under its own LRU life
+            // — revival is a cache hit until the cache too moves on
+            return Ok(());
+        }
+        Err(ServeError::RouterFull { max_shards: self.cfg.max_shards })
+    }
+
+    /// Clone the live shard for `tenant`, refreshing its recency (both
+    /// in the shard table and the plan cache).
+    fn shard_of(&self, tenant: TenantId) -> Result<Arc<Shard>, ServeError> {
+        let mut st = self.state.lock().unwrap();
+        let Some(pos) = st.shards.iter().position(|s| s.tenant == tenant) else {
+            return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+        };
+        let shard = st.shards.remove(pos);
+        st.shards.push(shard.clone());
+        st.cache.touch(tenant.0);
+        Ok(shard)
+    }
+
+    /// Enqueue a request on its tenant's shard. A full shard queue comes
+    /// back as [`ServeError::ShardFull`] — backpressure scoped to this
+    /// tenant alone.
+    pub fn submit(&self, tenant: TenantId, request: Request) -> Result<(), ServeError> {
+        let shard = self.shard_of(tenant)?;
+        let mut batcher = shard.batcher.lock().unwrap();
+        // the shard may have been evicted between the lookup above and
+        // taking its lock; the flag is only ever set under this lock, so
+        // checking it here guarantees an accepted request lands on a
+        // queue that will still be drained
+        if shard.retired.load(Ordering::Acquire) {
+            return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+        }
+        let result = batcher.submit(request);
+        drop(batcher);
+        let mut stats = shard.stats.lock().unwrap();
+        match result {
+            Ok(()) => {
+                stats.submitted += 1;
+                Ok(())
+            }
+            Err(ServeError::QueueFull { capacity }) => {
+                stats.rejected += 1;
+                Err(ServeError::ShardFull { tenant: tenant.0, capacity })
+            }
+            // Batcher::submit only rejects on a full queue today; pass
+            // anything future through untouched (it is not an admission
+            // rejection, so it does not count as one)
+            Err(other) => Err(other),
+        }
+    }
+
+    /// Drain one tenant's queue, returning its outcomes in submission
+    /// order.
+    pub fn drain_tenant(
+        &self,
+        tenant: TenantId,
+    ) -> Result<Vec<Result<ServeReport, ServeError>>, ServeError> {
+        Ok(self.shard_of(tenant)?.drain())
+    }
+
+    /// Drain every live shard on a pool of `workers` threads. Each shard
+    /// is drained by exactly one worker (per-tenant order preserved);
+    /// distinct tenants execute concurrently. Returns the non-empty
+    /// outcome groups, one per tenant that had queued work.
+    pub fn drain_all(
+        &self,
+        workers: usize,
+    ) -> Vec<(TenantId, Vec<Result<ServeReport, ServeError>>)> {
+        let shards: Vec<Arc<Shard>> = self.state.lock().unwrap().shards.clone();
+        if shards.is_empty() {
+            return Vec::new();
+        }
+        let workers = workers.clamp(1, shards.len());
+        let next = AtomicUsize::new(0);
+        let mut grouped: Vec<(TenantId, Vec<Result<ServeReport, ServeError>>)> =
+            shards.iter().map(|s| (s.tenant, Vec::new())).collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let (next, shards) = (&next, &shards);
+                    scope.spawn(move || {
+                        let mut drained = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= shards.len() {
+                                break;
+                            }
+                            let outcomes = shards[i].drain();
+                            if !outcomes.is_empty() {
+                                drained.push((i, outcomes));
+                            }
+                        }
+                        drained
+                    })
+                })
+                .collect();
+            for handle in handles {
+                for (i, outcomes) in handle.join().expect("drain worker panicked") {
+                    grouped[i].1 = outcomes;
+                }
+            }
+        });
+        grouped.retain(|(_, outcomes)| !outcomes.is_empty());
+        grouped
+    }
+
+    /// Queued (undrained) requests on a tenant's shard.
+    pub fn queued(&self, tenant: TenantId) -> Result<usize, ServeError> {
+        let st = self.state.lock().unwrap();
+        let Some(shard) = st.shards.iter().find(|s| s.tenant == tenant) else {
+            return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+        };
+        Ok(shard.batcher.lock().unwrap().len())
+    }
+
+    /// The plan a tenant's shard serves against.
+    pub fn plan_of(&self, tenant: TenantId) -> Result<Arc<FactorPlan>, ServeError> {
+        let st = self.state.lock().unwrap();
+        let Some(shard) = st.shards.iter().find(|s| s.tenant == tenant) else {
+            return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+        };
+        Ok(shard.plan.clone())
+    }
+
+    /// Cumulative metrics of one tenant (read-only: does not touch LRU
+    /// recency).
+    pub fn tenant_stats(&self, tenant: TenantId) -> Result<TenantStats, ServeError> {
+        let st = self.state.lock().unwrap();
+        let Some(shard) = st.shards.iter().find(|s| s.tenant == tenant) else {
+            return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+        };
+        let stats = *shard.stats.lock().unwrap();
+        Ok(stats)
+    }
+
+    /// Live tenants, least-recently-touched first.
+    pub fn tenants(&self) -> Vec<TenantId> {
+        self.state.lock().unwrap().shards.iter().map(|s| s.tenant).collect()
+    }
+
+    /// Router-level counters.
+    pub fn stats(&self) -> RouterStats {
+        let st = self.state.lock().unwrap();
+        RouterStats {
+            shards_live: st.shards.len(),
+            spin_ups: st.spin_ups,
+            evictions: st.evictions,
+            revivals: st.revivals,
+            plans_warmed: st.plans_warmed,
+            cache_hits: st.cache.hits(),
+            cache_misses: st.cache.misses(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn small_router(max_shards: usize, shard_queue: usize) -> Router {
+        Router::new(
+            SolveOptions::ours(1),
+            RouterConfig {
+                max_shards,
+                plan_cache_capacity: max_shards.max(2) * 2,
+                shard_queue,
+                ..RouterConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn admit_routes_same_pattern_to_same_tenant() {
+        let router = small_router(4, 8);
+        let a = gen::grid2d_laplacian(6, 6);
+        let t1 = router.admit(&a).unwrap();
+        // same pattern, different values: same tenant, no new shard
+        let mut a2 = a.clone();
+        for v in &mut a2.values {
+            *v *= 2.0;
+        }
+        let t2 = router.admit(&a2).unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(router.stats().spin_ups, 1);
+        assert_eq!(router.stats().shards_live, 1);
+        assert_eq!(router.tenant_of(&a), t1);
+        // a different pattern gets its own shard
+        let b = gen::grid2d_laplacian(6, 7);
+        let t3 = router.admit(&b).unwrap();
+        assert_ne!(t1, t3);
+        assert_eq!(router.stats().shards_live, 2);
+    }
+
+    #[test]
+    fn submit_to_unknown_tenant_is_a_clean_error() {
+        let router = small_router(2, 4);
+        let bogus = TenantId(0x1234);
+        assert!(matches!(
+            router.submit(bogus, Request::Solve { rhs: vec![1.0] }),
+            Err(ServeError::UnknownTenant { tenant: 0x1234 })
+        ));
+        assert!(matches!(
+            router.drain_tenant(bogus),
+            Err(ServeError::UnknownTenant { .. })
+        ));
+    }
+
+    #[test]
+    fn full_shard_rejects_with_shard_full_and_counts_it() {
+        let router = small_router(2, 2);
+        let a = gen::grid2d_laplacian(6, 6);
+        let t = router.admit(&a).unwrap();
+        let rhs = vec![1.0; a.n_rows()];
+        router.submit(t, Request::Refactorize { values: a.values.clone() }).unwrap();
+        router.submit(t, Request::Solve { rhs: rhs.clone() }).unwrap();
+        let err = router.submit(t, Request::Solve { rhs: rhs.clone() }).unwrap_err();
+        assert!(matches!(err, ServeError::ShardFull { capacity: 2, .. }));
+        assert_eq!(router.queued(t).unwrap(), 2);
+        // draining frees the queue; the rejection was counted per-tenant
+        let outcomes = router.drain_tenant(t).unwrap();
+        assert_eq!(outcomes.len(), 2);
+        router.submit(t, Request::Solve { rhs }).unwrap();
+        let stats = router.tenant_stats(t).unwrap();
+        assert_eq!(stats.submitted, 3);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.completed, 2);
+    }
+
+    #[test]
+    fn eviction_prefers_cache_lru_and_spares_busy_shards() {
+        let router = small_router(2, 4);
+        let a = gen::grid2d_laplacian(6, 6);
+        let b = gen::grid2d_laplacian(6, 7);
+        let c = gen::grid2d_laplacian(7, 7);
+        let ta = router.admit(&a).unwrap();
+        let tb = router.admit(&b).unwrap();
+        // `a` is LRU but busy (queued work); `b` is idle → b is evicted
+        router.submit(ta, Request::Refactorize { values: a.values.clone() }).unwrap();
+        let tc = router.admit(&c).unwrap();
+        let stats = router.stats();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.shards_live, 2);
+        let live = router.tenants();
+        assert!(live.contains(&ta), "busy shard spared");
+        assert!(live.contains(&tc));
+        assert!(!live.contains(&tb), "idle LRU shard evicted");
+        // the busy shard's queued work still drains fine
+        let outcomes = router.drain_tenant(ta).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].is_ok());
+    }
+
+    #[test]
+    fn router_full_when_every_shard_is_busy() {
+        let router = small_router(2, 4);
+        let a = gen::grid2d_laplacian(6, 6);
+        let b = gen::grid2d_laplacian(6, 7);
+        let ta = router.admit(&a).unwrap();
+        let tb = router.admit(&b).unwrap();
+        router.submit(ta, Request::Refactorize { values: a.values.clone() }).unwrap();
+        router.submit(tb, Request::Refactorize { values: b.values.clone() }).unwrap();
+        let c = gen::grid2d_laplacian(7, 7);
+        assert!(matches!(
+            router.admit(&c),
+            Err(ServeError::RouterFull { max_shards: 2 })
+        ));
+        // draining any shard makes room again
+        router.drain_tenant(ta).unwrap();
+        assert!(router.admit(&c).is_ok());
+    }
+
+    #[test]
+    fn revived_tenant_reuses_the_cached_plan() {
+        let router = small_router(1, 4);
+        let a = gen::grid2d_laplacian(6, 6);
+        let b = gen::grid2d_laplacian(6, 7);
+        let ta = router.admit(&a).unwrap();
+        let plan_a = router.plan_of(ta).unwrap();
+        router.admit(&b).unwrap(); // evicts a's shard (cap 1)
+        assert!(matches!(
+            router.submit(ta, Request::Solve { rhs: vec![1.0; 36] }),
+            Err(ServeError::UnknownTenant { .. })
+        ));
+        let misses_before = router.stats().cache_misses;
+        let ta2 = router.admit(&a).unwrap(); // revival
+        assert_eq!(ta, ta2, "tenant id is stable across eviction");
+        let stats = router.stats();
+        assert_eq!(stats.revivals, 1);
+        assert_eq!(stats.cache_misses, misses_before, "revival hit the plan cache");
+        assert!(
+            Arc::ptr_eq(&plan_a, &router.plan_of(ta2).unwrap()),
+            "the revived shard shares the original plan"
+        );
+    }
+}

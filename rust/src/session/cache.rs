@@ -93,6 +93,30 @@ impl PlanCache {
         self.entries.push((key, plan));
     }
 
+    /// Refresh `key` to most-recently-used without fetching the plan.
+    /// Returns whether the key was present.
+    ///
+    /// The serving router calls this on every request routed to a
+    /// tenant, so the cache's LRU order tracks *traffic* recency — the
+    /// same order [`crate::serve::Router`] consults ([`Self::keys_lru`])
+    /// when it must pick a shard to evict.
+    pub fn touch(&mut self, key: u64) -> bool {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            let entry = self.entries.remove(pos);
+            self.entries.push(entry);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Cached keys, least-recently-used first. A key absent from this
+    /// list has been evicted (or was never cached) — a shard whose plan
+    /// the cache already dropped is the most evictable of all.
+    pub fn keys_lru(&self) -> Vec<u64> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+
     /// Plans currently cached.
     pub fn len(&self) -> usize {
         self.entries.len()
@@ -291,6 +315,30 @@ mod tests {
         // re-inserting under the same key replaces rather than grows
         cache.insert(plan.clone());
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn touch_refreshes_recency_and_keys_lru_reports_order() {
+        let mats =
+            [gen::grid2d_laplacian(6, 6), gen::grid2d_laplacian(6, 7), gen::grid2d_laplacian(7, 7)];
+        let opts = SolveOptions::ours(1);
+        let mut cache = PlanCache::new(3);
+        let keys: Vec<u64> = mats
+            .iter()
+            .map(|a| {
+                cache.get_or_build(a, &opts);
+                PlanCache::key_for(a, &opts)
+            })
+            .collect();
+        assert_eq!(cache.keys_lru(), keys, "insertion order = recency order");
+        // touching the least-recent key moves it to the back
+        assert!(cache.touch(keys[0]));
+        assert_eq!(cache.keys_lru(), vec![keys[1], keys[2], keys[0]]);
+        assert!(!cache.touch(0xDEAD_BEEF), "unknown key untouched");
+        // a touched entry survives the next eviction
+        cache.get_or_build(&gen::grid2d_laplacian(7, 8), &opts); // evicts keys[1]
+        assert!(cache.keys_lru().contains(&keys[0]));
+        assert!(!cache.keys_lru().contains(&keys[1]));
     }
 
     #[test]

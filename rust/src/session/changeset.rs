@@ -88,6 +88,27 @@ impl ChangeSet {
     pub fn updates(&self) -> &[(usize, f64)] {
         &self.updates
     }
+
+    /// Append every update of `other` after this set's own.
+    ///
+    /// Because later updates win per index, `a.extend_from(&b)` is
+    /// equivalent to applying `a` then `b` in sequence — which is what
+    /// makes **change-set batching across timesteps** sound: a run of
+    /// consecutive device stamps coalesced into one merged set produces
+    /// factors bit-identical to stamping each set one at a time, while
+    /// paying a single dirty-block closure and one pruned DAG replay
+    /// (see [`crate::serve::Batcher`]).
+    ///
+    /// ```
+    /// use sparselu::session::ChangeSet;
+    /// let mut a = ChangeSet::from_value_indices([(3, 1.0), (5, 2.0)]);
+    /// let b = ChangeSet::from_value_indices([(5, 9.0)]);
+    /// a.extend_from(&b);
+    /// assert_eq!(a.updates(), &[(3, 1.0), (5, 2.0), (5, 9.0)]); // 5 → 9.0 wins
+    /// ```
+    pub fn extend_from(&mut self, other: &ChangeSet) {
+        self.updates.extend_from_slice(&other.updates);
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +154,20 @@ mod tests {
         let cs = ChangeSet::from_values_diff(&a.values, &new);
         assert_eq!(cs.updates(), &[(3, new[3]), (7, new[7])]);
         assert!(ChangeSet::from_values_diff(&a.values, &a.values).is_empty());
+    }
+
+    #[test]
+    fn extend_from_preserves_sequential_semantics() {
+        let mut a = ChangeSet::from_value_indices([(0, 1.0), (2, 2.0)]);
+        let b = ChangeSet::from_value_indices([(2, 7.0), (4, 3.0)]);
+        a.extend_from(&b);
+        assert_eq!(a.len(), 4);
+        // applying the merged set in order leaves index 2 at b's value
+        let mut values = vec![0.0; 5];
+        for &(k, v) in a.updates() {
+            values[k] = v;
+        }
+        assert_eq!(values, vec![1.0, 0.0, 7.0, 0.0, 3.0]);
     }
 
     #[test]

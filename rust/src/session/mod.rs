@@ -33,8 +33,10 @@
 //! The [`crate::serve`] layer builds the multi-client serving story on
 //! top of these pieces: warm a [`PlanCache`] from persisted plan files
 //! ([`PlanCache::warm_from_dir`]), share the plan across a
-//! [`crate::serve::SessionPool`], and batch each client's requests
-//! through a [`crate::serve::Batcher`].
+//! [`crate::serve::SessionPool`], batch each client's requests through
+//! a [`crate::serve::Batcher`], and serve many *patterns* at once by
+//! routing requests to per-pattern shards through a
+//! [`crate::serve::Router`] keyed by this cache.
 //!
 //! ```no_run
 //! use sparselu::session::{ChangeSet, FactorPlan, SolverSession};

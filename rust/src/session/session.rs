@@ -210,6 +210,37 @@ impl<'b> SolverSession<'b> {
     /// Requires a prior successful (full) `refactorize` — the preserved
     /// blocks must hold valid factors — and a session plan (one built by
     /// [`FactorPlan::build`], not the one-shot constructor).
+    ///
+    /// # Example: a SPICE device stamp
+    ///
+    /// One transistor between nodes 40/41 re-linearizes between Newton
+    /// iterations, so exactly two conductance entries of `A` change:
+    ///
+    /// ```
+    /// use sparselu::session::{ChangeSet, FactorPlan, SolverSession};
+    /// use sparselu::solver::SolveOptions;
+    /// use sparselu::sparse::gen;
+    /// use std::sync::Arc;
+    ///
+    /// let a = gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() });
+    /// let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)));
+    /// let mut session = SolverSession::from_plan(plan);
+    /// session.refactorize(&a.values)?;                    // full pass seeds factors
+    ///
+    /// let (g0, g1) = (1.2e-3, 0.8e-3);
+    /// let stamp = ChangeSet::from_coords(&a, &[(40, 40, g0), (41, 41, g1)])?;
+    /// let rep = session.refactorize_partial(&stamp)?;     // pruned, bit-identical
+    /// assert!(rep.blocks_dirty <= 2, "two entries seed at most two dirty blocks");
+    /// assert_eq!(
+    ///     rep.tasks_executed + rep.tasks_skipped,
+    ///     session.plan().dag.tasks.len(),
+    /// );
+    /// # Ok::<(), sparselu::numeric::factor::FactorError>(())
+    /// ```
+    ///
+    /// `from_coords` returns [`FactorError::OutOfPattern`] (instead of
+    /// panicking) when a stamp lies outside the sparsity pattern —
+    /// serving paths forward the error to the client.
     pub fn refactorize_partial(&mut self, cs: &ChangeSet) -> Result<RefactorReport, FactorError> {
         assert!(
             self.factored,

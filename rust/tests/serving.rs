@@ -1,15 +1,19 @@
 //! Integration tests of the serving layer: the ≥8-thread pool + cache
 //! stress test (every concurrent result must bit-match a single-threaded
-//! oracle) and the persist round trip (a plan loaded from disk must
-//! reproduce bit-identical factors, full and partial).
+//! oracle), the persist round trip (a plan loaded from disk must
+//! reproduce bit-identical factors, full and partial), and the
+//! multi-tenant router (concurrent tenants bit-match per-pattern
+//! oracles; shard eviction/revival and `ShardFull` backpressure behave).
 
 mod common;
 
 use common::perturbed;
-use sparselu::serve::{persist, Batcher, Request, SessionPool};
+use sparselu::serve::{
+    persist, Batcher, Request, Router, RouterConfig, ServeError, SessionPool, TenantId,
+};
 use sparselu::session::{ChangeSet, FactorPlan, PlanCache, SolverSession};
 use sparselu::solver::SolveOptions;
-use sparselu::sparse::gen;
+use sparselu::sparse::{gen, Csc};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
@@ -189,4 +193,259 @@ fn batched_serving_through_the_pool_matches_a_direct_session() {
         assert_eq!(report.solution.as_ref().unwrap(), &reference.solve(r));
         assert!(report.queue_seconds >= 0.0);
     }
+}
+
+// ---------------------------------------------------------------------
+// multi-tenant router
+// ---------------------------------------------------------------------
+
+/// One deterministic request in a tenant's traffic script.
+enum Step {
+    Full(Vec<f64>),
+    Stamp(ChangeSet),
+    Solve(Vec<f64>),
+}
+
+/// Deterministic interleaved full/stamp/solve script for one matrix.
+/// Always starts with a full refactorize so the shard's factors are
+/// seeded; stamps hit random diagonal entries (always in-pattern for the
+/// generator matrices).
+fn script_for(a: &Csc, seed: u64, len: usize) -> Vec<Step> {
+    let mut rng = sparselu::util::Prng::new(seed);
+    let n = a.n_rows();
+    let mut steps = vec![Step::Full(a.values.clone())];
+    for _ in 1..len {
+        steps.push(match rng.below(10) {
+            0..=1 => Step::Full(
+                a.values.iter().map(|v| v * (1.0 + 0.02 * rng.signed_unit())).collect(),
+            ),
+            2..=5 => {
+                let d = rng.below(n);
+                let k = a.value_index(d, d).expect("full diagonal");
+                let nv = a.values[k] * (1.0 + 0.03 * (0.5 + 0.5 * rng.f64()));
+                Step::Stamp(ChangeSet::from_value_indices([(k, nv)]))
+            }
+            _ => Step::Solve((0..n).map(|_| rng.signed_unit()).collect()),
+        });
+    }
+    steps
+}
+
+/// Single-threaded oracle: replay a script directly on a session over
+/// `plan`, returning the solution of every solve step in order.
+fn oracle_solutions(plan: &Arc<FactorPlan>, steps: &[Step]) -> Vec<Vec<f64>> {
+    let mut session = SolverSession::from_plan(plan.clone());
+    let mut solutions = Vec::new();
+    for step in steps {
+        match step {
+            Step::Full(values) => {
+                session.refactorize(values).unwrap();
+            }
+            Step::Stamp(cs) => {
+                session.refactorize_partial(cs).unwrap();
+            }
+            Step::Solve(rhs) => solutions.push(session.solve(rhs)),
+        }
+    }
+    solutions
+}
+
+fn step_request(step: &Step) -> Request {
+    match step {
+        Step::Full(values) => Request::Refactorize { values: values.clone() },
+        Step::Stamp(cs) => Request::Stamp { changes: cs.clone() },
+        Step::Solve(rhs) => Request::Solve { rhs: rhs.clone() },
+    }
+}
+
+#[test]
+fn router_stress_every_tenant_bitwise_matches_its_oracle() {
+    const STEPS: usize = 28;
+    const BURST: usize = 3;
+
+    // four tenants with four distinct sparsity patterns
+    let mats: Vec<(Csc, u64)> = vec![
+        (gen::circuit_bbd(gen::CircuitParams { n: 240, ..Default::default() }), 11),
+        (gen::grid2d_laplacian(11, 11), 22),
+        (gen::banded_fem(200, &[1, 2, 3, 20, 21], 0.85, 0xFE3), 33),
+        (gen::grid2d_laplacian(9, 13), 44),
+    ];
+    let opts = SolveOptions::ours(1);
+    let router = Router::new(
+        opts.clone(),
+        RouterConfig { max_shards: 4, plan_cache_capacity: 8, ..RouterConfig::default() },
+    );
+    let ids: Vec<TenantId> = mats.iter().map(|(a, _)| router.admit(a).unwrap()).collect();
+    assert_eq!(router.stats().shards_live, 4);
+
+    // oracles replay each script single-threaded against the *routed*
+    // plan, so factor bit-patterns are directly comparable
+    let scripts: Vec<Vec<Step>> =
+        mats.iter().map(|(a, seed)| script_for(a, *seed, STEPS)).collect();
+    let expected: Vec<Vec<Vec<f64>>> = scripts
+        .iter()
+        .zip(&ids)
+        .map(|(steps, id)| oracle_solutions(&router.plan_of(*id).unwrap(), steps))
+        .collect();
+
+    // one client thread per tenant, all hammering the router at once:
+    // tenants interleave arbitrarily on the wall clock, but each
+    // tenant's own stream keeps submission order
+    std::thread::scope(|scope| {
+        for ((steps, id), expected) in scripts.iter().zip(&ids).zip(&expected) {
+            let router = &router;
+            scope.spawn(move || {
+                let mut solutions: Vec<Vec<f64>> = Vec::new();
+                for chunk in steps.chunks(BURST) {
+                    for step in chunk {
+                        router.submit(*id, step_request(step)).unwrap();
+                    }
+                    for outcome in router.drain_tenant(*id).unwrap() {
+                        let report = outcome.expect("scripted request failed");
+                        if let Some(x) = report.solution {
+                            solutions.push(x);
+                        }
+                    }
+                }
+                assert_eq!(
+                    &solutions, expected,
+                    "tenant {id:?}: routed solutions diverge from the oracle"
+                );
+            });
+        }
+    });
+
+    // every request completed, nothing rejected, no tenant starved
+    for (id, steps) in ids.iter().zip(&scripts) {
+        let stats = router.tenant_stats(*id).unwrap();
+        assert_eq!(stats.submitted, steps.len());
+        assert_eq!(stats.completed, steps.len());
+        assert_eq!(stats.errored, 0);
+        assert_eq!(stats.rejected, 0);
+        assert!(stats.tasks_executed > 0);
+    }
+    assert_eq!(router.stats().evictions, 0, "no eviction under a fitting working set");
+}
+
+#[test]
+fn drain_all_groups_outcomes_per_tenant() {
+    let mats =
+        [gen::grid2d_laplacian(8, 8), gen::grid2d_laplacian(8, 9), gen::grid2d_laplacian(9, 9)];
+    let opts = SolveOptions::ours(1);
+    let router = Router::new(opts, RouterConfig::default());
+    let ids: Vec<TenantId> = mats.iter().map(|a| router.admit(a).unwrap()).collect();
+    let rhs: Vec<Vec<f64>> =
+        mats.iter().map(|a| (0..a.n_rows()).map(|i| (i % 5) as f64 - 2.0).collect()).collect();
+    for ((a, id), r) in mats.iter().zip(&ids).zip(&rhs) {
+        router.submit(*id, Request::Refactorize { values: a.values.clone() }).unwrap();
+        router.submit(*id, Request::Solve { rhs: r.clone() }).unwrap();
+        router.submit(*id, Request::Solve { rhs: r.clone() }).unwrap();
+    }
+    let drained = router.drain_all(3);
+    assert_eq!(drained.len(), 3, "one outcome group per tenant with queued work");
+    for ((a, id), r) in mats.iter().zip(&ids).zip(&rhs) {
+        let (_, outcomes) = drained
+            .iter()
+            .find(|(tenant, _)| tenant == id)
+            .expect("every tenant drained");
+        assert_eq!(outcomes.len(), 3);
+        // reference solve through a fresh session over the same plan
+        let mut reference = SolverSession::from_plan(router.plan_of(*id).unwrap());
+        reference.refactorize(&a.values).unwrap();
+        let want = reference.solve(r);
+        for outcome in &outcomes[1..] {
+            let report = outcome.as_ref().expect("solve failed");
+            assert_eq!(report.solution.as_ref().unwrap(), &want);
+            assert_eq!(report.batch_size, 2, "the two solves coalesced");
+        }
+        assert_eq!(router.queued(*id).unwrap(), 0, "queues fully drained");
+    }
+    // a second sweep with nothing queued drains nothing
+    assert!(router.drain_all(2).is_empty());
+}
+
+#[test]
+fn shard_full_backpressure_is_scoped_to_one_tenant() {
+    let a = gen::grid2d_laplacian(7, 7);
+    let b = gen::grid2d_laplacian(7, 8);
+    let opts = SolveOptions::ours(1);
+    let router = Router::new(
+        opts,
+        RouterConfig { shard_queue: 2, ..RouterConfig::default() },
+    );
+    let ta = router.admit(&a).unwrap();
+    let tb = router.admit(&b).unwrap();
+    router.submit(ta, Request::Refactorize { values: a.values.clone() }).unwrap();
+    router.submit(ta, Request::Solve { rhs: vec![1.0; a.n_rows()] }).unwrap();
+    // tenant a's queue is full: its client gets ShardFull with its key…
+    match router.submit(ta, Request::Solve { rhs: vec![1.0; a.n_rows()] }) {
+        Err(ServeError::ShardFull { tenant, capacity }) => {
+            assert_eq!(tenant, ta.0);
+            assert_eq!(capacity, 2);
+        }
+        other => panic!("expected ShardFull, got {other:?}"),
+    }
+    // …while tenant b admits traffic unimpeded
+    router.submit(tb, Request::Refactorize { values: b.values.clone() }).unwrap();
+    router.submit(tb, Request::Solve { rhs: vec![1.0; b.n_rows()] }).unwrap();
+    // draining tenant a reopens its queue
+    let outcomes = router.drain_tenant(ta).unwrap();
+    assert_eq!(outcomes.len(), 2);
+    assert!(outcomes.iter().all(|o| o.is_ok()));
+    router.submit(ta, Request::Solve { rhs: vec![1.0; a.n_rows()] }).unwrap();
+    assert_eq!(router.tenant_stats(ta).unwrap().rejected, 1);
+    assert_eq!(router.tenant_stats(tb).unwrap().rejected, 0);
+}
+
+#[test]
+fn evicted_tenant_revives_and_serves_bit_identical_results() {
+    let a = gen::grid2d_laplacian(8, 8);
+    let b = gen::grid2d_laplacian(8, 9);
+    let opts = SolveOptions::ours(1);
+    // one shard slot: admitting either pattern evicts the other; the
+    // plan cache (capacity 4) keeps both plans alive across evictions
+    let router = Router::new(
+        opts,
+        RouterConfig { max_shards: 1, plan_cache_capacity: 4, ..RouterConfig::default() },
+    );
+    let rhs: Vec<f64> = (0..a.n_rows()).map(|i| (i % 7) as f64 - 3.0).collect();
+
+    let ta = router.admit(&a).unwrap();
+    let plan_a = router.plan_of(ta).unwrap();
+    router.submit(ta, Request::Refactorize { values: a.values.clone() }).unwrap();
+    router.submit(ta, Request::Solve { rhs: rhs.clone() }).unwrap();
+    let first = router.drain_tenant(ta).unwrap();
+    let x_first = first[1].as_ref().unwrap().solution.clone().unwrap();
+
+    // B takes the only slot (A idle → evicted); serve B to completion
+    let tb = router.admit(&b).unwrap();
+    assert!(matches!(
+        router.submit(ta, Request::Solve { rhs: rhs.clone() }),
+        Err(ServeError::UnknownTenant { .. })
+    ), "evicted tenant is gone until re-admitted");
+    router.submit(tb, Request::Refactorize { values: b.values.clone() }).unwrap();
+    router.submit(tb, Request::Solve { rhs: vec![1.0; b.n_rows()] }).unwrap();
+    assert!(router.drain_tenant(tb).unwrap().iter().all(|o| o.is_ok()));
+
+    // revive A: same tenant id, same cached plan, fresh session state
+    let ta2 = router.admit(&a).unwrap();
+    assert_eq!(ta, ta2);
+    assert!(Arc::ptr_eq(&plan_a, &router.plan_of(ta2).unwrap()), "revival hit the plan cache");
+    // the revived shard's session has no factors yet: a premature solve
+    // is a clean per-request error…
+    router.submit(ta2, Request::Solve { rhs: rhs.clone() }).unwrap();
+    let premature = router.drain_tenant(ta2).unwrap();
+    assert!(matches!(premature.as_slice(), [Err(ServeError::NotFactored)]));
+    // …and after re-seeding, results bit-match the pre-eviction serve
+    router.submit(ta2, Request::Refactorize { values: a.values.clone() }).unwrap();
+    router.submit(ta2, Request::Solve { rhs: rhs.clone() }).unwrap();
+    let revived = router.drain_tenant(ta2).unwrap();
+    let x_revived = revived[1].as_ref().unwrap().solution.clone().unwrap();
+    assert_eq!(x_revived, x_first, "revived tenant diverges from its pre-eviction results");
+
+    let stats = router.stats();
+    assert_eq!(stats.evictions, 2, "A evicted for B, then B evicted for A's revival");
+    assert_eq!(stats.revivals, 1);
+    assert_eq!(stats.spin_ups, 3);
+    assert_eq!(stats.cache_misses, 2, "both plans built exactly once");
 }
