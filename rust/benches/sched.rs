@@ -1,0 +1,23 @@
+//! Scheduler bench: the refactorize-storm scenario comparing the
+//! spawn-per-call baseline against the persistent work-stealing executor
+//! on many tiny full + partial replays — exactly the session/serve
+//! steady state the executor exists to make cheap.
+//!
+//! Emits `BENCH_sched.json` in the working directory (also reachable as
+//! `repro sched-bench`).
+//!
+//! ```text
+//! cargo bench --bench sched
+//! ```
+
+use std::io::Write;
+
+fn main() {
+    let report = sparselu::bench_harness::sched::run(40, &[1, 2, 4]);
+    report.print();
+    let json = report.to_json();
+    let path = "BENCH_sched.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_sched.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_sched.json");
+    println!("\nwrote {path}");
+}

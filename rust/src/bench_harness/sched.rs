@@ -1,0 +1,270 @@
+//! Scheduler-health bench: the **refactorize-storm** scenario behind
+//! `repro sched-bench` and `cargo bench --bench sched`.
+//!
+//! The storm replays many tiny full and partial re-factorizations of a
+//! small fixed-pattern matrix — the session/serve steady state — under
+//! both schedulers:
+//!
+//! * **spawn** — the pre-executor baseline
+//!   ([`crate::coordinator::run_dag_spawn`]): `P` fresh OS threads, one
+//!   global ready-queue lock, counters reallocated per call;
+//! * **persistent** — the work-stealing [`crate::coordinator::Executor`]
+//!   with the session's reusable [`crate::coordinator::RunState`].
+//!
+//! Both paths produce bit-identical factors (asserted per storm), so the
+//! throughput ratio prices pure scheduling overhead. Executor counters
+//! (steals, wakeups, parks) are reported as scheduler-health metrics.
+//! Results land in `BENCH_sched.json`.
+
+use crate::coordinator::Scheduler;
+use crate::session::{ChangeSet, FactorPlan, SolverSession};
+use crate::solver::SolveOptions;
+use crate::sparse::{gen, Csc};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One (matrix, worker-count) storm measurement.
+pub struct StormResult {
+    pub name: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub workers: u32,
+    /// Replays per storm (each scheduler runs the same count).
+    pub replays: usize,
+    /// Full-refactorize replays per second.
+    pub full_spawn_rps: f64,
+    pub full_persistent_rps: f64,
+    /// Partial (one-entry change set) replays per second.
+    pub partial_spawn_rps: f64,
+    pub partial_persistent_rps: f64,
+    /// DAG tasks per full replay / per pruned partial replay.
+    pub tasks_full: usize,
+    pub tasks_partial: usize,
+    /// Executor-counter deltas over the persistent storms.
+    pub steals: u64,
+    pub wakeups: u64,
+    pub parks: u64,
+}
+
+impl StormResult {
+    /// Persistent-over-spawn throughput ratio, full replays.
+    pub fn full_speedup(&self) -> f64 {
+        self.full_persistent_rps / self.full_spawn_rps.max(1e-12)
+    }
+
+    /// Persistent-over-spawn throughput ratio, partial replays.
+    pub fn partial_speedup(&self) -> f64 {
+        self.partial_persistent_rps / self.partial_spawn_rps.max(1e-12)
+    }
+}
+
+/// The whole sched-bench run.
+pub struct SchedReport {
+    pub replays: usize,
+    pub results: Vec<StormResult>,
+}
+
+impl SchedReport {
+    /// `BENCH_sched.json` payload.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .results
+            .iter()
+            .map(|r| {
+                format!(
+                    concat!(
+                        "    {{\"matrix\": \"{}\", \"n\": {}, \"nnz\": {}, ",
+                        "\"workers\": {}, \"replays\": {}, ",
+                        "\"full_spawn_rps\": {:.3}, \"full_persistent_rps\": {:.3}, ",
+                        "\"full_speedup\": {:.3}, ",
+                        "\"partial_spawn_rps\": {:.3}, \"partial_persistent_rps\": {:.3}, ",
+                        "\"partial_speedup\": {:.3}, ",
+                        "\"tasks_full\": {}, \"tasks_partial\": {}, ",
+                        "\"steals\": {}, \"wakeups\": {}, \"parks\": {}}}"
+                    ),
+                    r.name,
+                    r.n,
+                    r.nnz,
+                    r.workers,
+                    r.replays,
+                    r.full_spawn_rps,
+                    r.full_persistent_rps,
+                    r.full_speedup(),
+                    r.partial_spawn_rps,
+                    r.partial_persistent_rps,
+                    r.partial_speedup(),
+                    r.tasks_full,
+                    r.tasks_partial,
+                    r.steals,
+                    r.wakeups,
+                    r.parks,
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"bench\": \"sched\",\n  \"scenario\": \"refactorize-storm\",\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            rows.join(",\n")
+        )
+    }
+
+    /// Human-readable table (shared by the CLI command and the bench
+    /// binary).
+    pub fn print(&self) {
+        println!("\n--- sched bench: refactorize-storm ({} replays/storm) ---", self.replays);
+        for r in &self.results {
+            println!(
+                "{:22} w={} | full {:8.1} -> {:8.1} rps ({:.2}x) | partial {:8.1} -> {:8.1} rps \
+                 ({:.2}x) | {} steals, {} wakeups, {} parks",
+                r.name,
+                r.workers,
+                r.full_spawn_rps,
+                r.full_persistent_rps,
+                r.full_speedup(),
+                r.partial_spawn_rps,
+                r.partial_persistent_rps,
+                r.partial_speedup(),
+                r.steals,
+                r.wakeups,
+                r.parks,
+            );
+        }
+    }
+}
+
+/// A-value index of a diagonal entry landing in the trailing diagonal
+/// block of the plan — the smallest possible dirty closure (the same
+/// trick as `benches/refactor.rs`).
+fn trailing_diag_index(plan: &FactorPlan, a: &Csc) -> usize {
+    let p = plan.permutation().as_slice();
+    let positions = plan.structure.blocking.positions();
+    let last_lo = positions[plan.structure.nb() - 1];
+    let r = (0..a.n_rows())
+        .find(|&i| p[i] >= last_lo && a.value_index(i, i).is_some())
+        .expect("diagonal entry in the trailing block");
+    a.value_index(r, r).unwrap()
+}
+
+/// Time `replays` full re-factorizations.
+fn full_storm(session: &mut SolverSession<'_>, values: &[f64], replays: usize) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..replays {
+        session.refactorize(values).expect("storm refactorize");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Time `replays` one-entry partial re-factorizations (values alternate
+/// so every replay does real work). Returns (seconds, tasks per replay).
+fn partial_storm(
+    session: &mut SolverSession<'_>,
+    k: usize,
+    base: f64,
+    replays: usize,
+) -> (f64, usize) {
+    let mut flip = 1.0f64;
+    let mut tasks = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..replays {
+        flip = -flip;
+        let cs = ChangeSet::from_value_indices([(k, base * (1.5 + 0.1 * flip))]);
+        let rep = session.refactorize_partial(&cs).expect("storm partial refactorize");
+        tasks = rep.tasks_executed;
+    }
+    (t0.elapsed().as_secs_f64(), tasks)
+}
+
+/// Run the refactorize-storm suite: `replays` replays per storm, one
+/// storm per (matrix, worker count).
+pub fn run(replays: usize, worker_counts: &[u32]) -> SchedReport {
+    assert!(replays >= 2, "need at least 2 replays per storm");
+    let suite = [
+        (
+            "tiny-bbd",
+            gen::circuit_bbd(gen::CircuitParams { n: 400, ..Default::default() }),
+        ),
+        ("small-grid2d", gen::grid2d_laplacian(24, 24)),
+    ];
+    let warmup = (replays / 4).max(1);
+    let mut results = Vec::new();
+    for (name, a) in &suite {
+        for &workers in worker_counts {
+            let opts = SolveOptions::ours(workers);
+            let plan = Arc::new(FactorPlan::build(a, &opts));
+            let tasks_full = plan.dag.tasks.len();
+            let mut session = SolverSession::from_plan(plan.clone());
+            session.refactorize(&a.values).expect("seed refactorize");
+            let k = trailing_diag_index(&plan, a);
+            let base = a.values[k];
+
+            // spawn-per-call baseline first
+            session.set_scheduler(Scheduler::SpawnPerCall);
+            full_storm(&mut session, &a.values, warmup);
+            let full_spawn_s = full_storm(&mut session, &a.values, replays);
+            let (partial_spawn_s, _) = partial_storm(&mut session, k, base, replays);
+            // snapshot the spawn path's final FACTORS (not inputs) for
+            // the cross-scheduler bit-match check below
+            let nblocks = plan.structure.blocks.len();
+            let spawn_blocks: Vec<Vec<f64>> =
+                (0..nblocks).map(|id| session.numeric().block_values(id as u32)).collect();
+
+            // persistent executor, same session, same work
+            session.set_scheduler(Scheduler::Persistent);
+            full_storm(&mut session, &a.values, warmup);
+            let stats0 = session.executor().stats();
+            let full_pers_s = full_storm(&mut session, &a.values, replays);
+            let (partial_pers_s, tasks_partial) = partial_storm(&mut session, k, base, replays);
+            let stats1 = session.executor().stats();
+
+            // both schedulers ended on the same final change set — their
+            // factors must agree bitwise (the differential harness covers
+            // this exhaustively; this is the bench's own sanity check)
+            for (id, spawn) in spawn_blocks.iter().enumerate() {
+                assert_eq!(
+                    &session.numeric().block_values(id as u32),
+                    spawn,
+                    "block {id} diverged between schedulers ({name}, w={workers})"
+                );
+            }
+
+            results.push(StormResult {
+                name: name.to_string(),
+                n: a.n_rows(),
+                nnz: a.nnz(),
+                workers,
+                replays,
+                full_spawn_rps: replays as f64 / full_spawn_s.max(1e-12),
+                full_persistent_rps: replays as f64 / full_pers_s.max(1e-12),
+                partial_spawn_rps: replays as f64 / partial_spawn_s.max(1e-12),
+                partial_persistent_rps: replays as f64 / partial_pers_s.max(1e-12),
+                tasks_full,
+                tasks_partial,
+                steals: stats1.steals - stats0.steals,
+                wakeups: stats1.wakeups - stats0.wakeups,
+                parks: stats1.parks - stats0.parks,
+            });
+        }
+    }
+    SchedReport { replays, results }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storm_runs_and_reports_all_combinations() {
+        let report = run(3, &[1, 2]);
+        assert_eq!(report.results.len(), 4, "2 matrices x 2 worker counts");
+        for r in &report.results {
+            assert!(r.full_spawn_rps > 0.0);
+            assert!(r.full_persistent_rps > 0.0);
+            assert!(r.partial_persistent_rps > 0.0);
+            assert!(r.tasks_partial <= r.tasks_full);
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"bench\": \"sched\""));
+        assert!(json.contains("refactorize-storm"));
+        assert!(json.contains("\"steals\""));
+    }
+}

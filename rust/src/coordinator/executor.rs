@@ -1,0 +1,980 @@
+//! [`Executor`] — the persistent work-stealing task runtime behind every
+//! DAG execution.
+//!
+//! The paper's speedups come from balancing block work across the levels
+//! of the dependency tree; the pre-executor scheduler threw much of that
+//! away at runtime: every re-factorization spawned `P` fresh OS threads,
+//! every task pop and dependent release took one global
+//! `Mutex<Vec<VecDeque>>` plus a `Condvar::notify_all` broadcast, and the
+//! dependency counters were reallocated per run. That overhead dominates
+//! exactly the small pruned replays the session/serve stack exists to
+//! make cheap. The task-parallel factorization literature (2D
+//! partitioned-block task parallelism, asynchronous fan-both solvers)
+//! gets its wins from a *persistent* task runtime instead — which is what
+//! this module provides:
+//!
+//! * **One pool, created once.** [`Executor::new`] spawns `P` worker
+//!   threads that live until the executor drops; [`Executor::shared`]
+//!   hands out one process-wide pool per worker count, so every
+//!   [`crate::session::SolverSession`], [`crate::solver::Solver`] and
+//!   [`crate::serve`] shard with the same `workers` setting shares the
+//!   same threads instead of spawning their own per call.
+//! * **Per-worker deques + stealing.** Owner-computes: a task is pushed
+//!   to the deque of its target block's owner (`owner % P`), who pops
+//!   from the front; an idle worker steals from the *tail* of the other
+//!   deques. No global ready-queue lock — contention is per-deque and
+//!   only materializes when a steal actually happens.
+//! * **Targeted wakeups + parking.** Pushing work wakes at most one
+//!   parked worker *per pushed task* (the deque's owner first, thieves
+//!   for the rest) instead of `notify_all`-broadcasting to all `P`; a
+//!   fully idle pool is parked on per-worker condvars and costs nothing.
+//! * **Allocation-free steady state.** All per-run mutable scheduling
+//!   state — dependency counters, subset-restricted counts, per-worker
+//!   busy/task tallies, seed scratch — lives in a reusable [`RunState`]
+//!   owned by the caller (preallocated per session) and is reset in
+//!   place each run instead of rebuilt; the only per-run allocation is
+//!   one small job header.
+//!
+//! ## Determinism under stealing
+//!
+//! Work stealing changes *which thread* runs a task and *when*, never
+//! *what* it computes: the DAG chains the SSSSM updates of each target
+//! block in ascending `k` (see [`crate::coordinator::dag`]), so the
+//! floating-point accumulation order per block is fixed by dependency
+//! edges alone. Any legal schedule — sequential, spawn-per-call,
+//! work-stealing, any worker count — produces bit-identical factors. The
+//! differential harness (`rust/tests/differential.rs`) asserts exactly
+//! that across matrices, worker counts and repeated runs.
+//!
+//! ## Error containment
+//!
+//! A failing task (zero pivot) cancels its job: the failing worker flags
+//! the job, [`Executor::run`] purges the job's queued entries and waits
+//! out in-flight claims before returning the error. Nothing poisons the
+//! pool — the same executor immediately serves the next run (tested in
+//! this module and in the serving stress tests).
+
+use super::dag::TaskDag;
+use super::workers::RunReport;
+use crate::numeric::factor::{DenseBackend, FactorError, NumericMatrix};
+use crate::numeric::kernels::Workspace;
+use crate::numeric::KernelPolicy;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::time::Instant;
+
+/// Which scheduler a DAG run executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheduler {
+    /// The persistent work-stealing pool ([`Executor`]) — the default.
+    Persistent,
+    /// The spawn-per-call baseline
+    /// ([`crate::coordinator::run_dag_spawn`]): `P` fresh threads and a
+    /// global ready-queue lock per call. Kept as the measured baseline
+    /// for `repro sched-bench` and as a differential-testing axis.
+    SpawnPerCall,
+}
+
+/// Is task `t` active under the (optional) subset mask? (Shared with the
+/// spawn-per-call baseline in `coordinator::workers`, so the two
+/// schedulers cannot silently diverge on subset semantics.)
+pub(super) fn is_active(subset: Option<&[bool]>, t: usize) -> bool {
+    match subset {
+        None => true,
+        Some(mask) => mask[t],
+    }
+}
+
+/// Reusable per-run scheduling state: dependency counters, per-worker
+/// tallies and seed scratch, preallocated once (per
+/// [`crate::session::SolverSession`], or lazily for one-shot callers) and
+/// reset in place at the start of every run — a DAG replay allocates
+/// nothing here in steady state.
+///
+/// The counters are atomics so executor workers can decrement them
+/// concurrently through a shared reference while the owning caller keeps
+/// the `&mut` it will use to reset them for the next epoch.
+pub struct RunState {
+    /// Per-task remaining-dependency counters (subset-restricted on the
+    /// incremental path).
+    deps: Vec<AtomicU32>,
+    /// Per-worker busy seconds, stored as `f64::to_bits` — each slot has
+    /// a single writer (its worker), so plain load/store pairs suffice.
+    busy_bits: Vec<AtomicU64>,
+    /// Per-worker executed-task tallies (single writer each).
+    tally: Vec<AtomicUsize>,
+    /// Initially-ready tasks grouped by owning worker — the seed push
+    /// buffers, reused across runs (and reused as the work stack by the
+    /// single-worker inline path).
+    seeds: Vec<Vec<u32>>,
+}
+
+impl RunState {
+    /// Empty state; sized lazily by the first run.
+    pub fn new() -> Self {
+        Self { deps: Vec::new(), busy_bits: Vec::new(), tally: Vec::new(), seeds: Vec::new() }
+    }
+
+    /// State preallocated for a DAG of `ntasks` tasks on `workers`
+    /// workers (what a session builds at construction time).
+    pub fn sized(ntasks: usize, workers: u32) -> Self {
+        let mut state = Self::new();
+        state.reserve(ntasks, workers as usize);
+        state
+    }
+
+    fn reserve(&mut self, ntasks: usize, p: usize) {
+        if self.deps.len() != ntasks {
+            self.deps.clear();
+            self.deps.resize_with(ntasks, || AtomicU32::new(0));
+        }
+        if self.busy_bits.len() != p {
+            self.busy_bits.clear();
+            self.busy_bits.resize_with(p, || AtomicU64::new(0));
+            self.tally.clear();
+            self.tally.resize_with(p, || AtomicUsize::new(0));
+        }
+        if self.seeds.len() != p {
+            self.seeds.resize_with(p, Vec::new);
+        }
+    }
+
+    /// Reset for a new epoch: refill the dependency counters (restricted
+    /// to `subset` when given), zero the tallies, and group the
+    /// initially-ready tasks by owner. Returns the number of active
+    /// tasks. In-place only — no allocation once the buffers have grown
+    /// to the plan's size.
+    fn prepare(&mut self, dag: &TaskDag, subset: Option<&[bool]>, p: usize) -> usize {
+        self.reserve(dag.tasks.len(), p);
+        for b in &mut self.busy_bits {
+            *b.get_mut() = 0;
+        }
+        for t in &mut self.tally {
+            *t.get_mut() = 0;
+        }
+        for s in &mut self.seeds {
+            s.clear();
+        }
+        let total = match subset {
+            None => {
+                for (t, task) in dag.tasks.iter().enumerate() {
+                    *self.deps[t].get_mut() = task.deps;
+                }
+                dag.tasks.len()
+            }
+            Some(mask) => {
+                // each active task counts only its in-subset
+                // predecessors; out-of-subset dependencies are treated as
+                // already satisfied (the incremental contract)
+                for d in &mut self.deps {
+                    *d.get_mut() = 0;
+                }
+                let mut total = 0usize;
+                for (t, task) in dag.tasks.iter().enumerate() {
+                    if !mask[t] {
+                        continue;
+                    }
+                    total += 1;
+                    for &o in &task.out {
+                        if mask[o as usize] {
+                            *self.deps[o as usize].get_mut() += 1;
+                        }
+                    }
+                }
+                total
+            }
+        };
+        for (t, task) in dag.tasks.iter().enumerate() {
+            if is_active(subset, t) && self.deps[t].load(Ordering::Relaxed) == 0 {
+                self.seeds[task.owner as usize % p].push(t as u32);
+            }
+        }
+        total
+    }
+}
+
+impl Default for RunState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// High bit of [`Job::claims`]: the job is cancelled, no new task of it
+/// may begin executing.
+const CANCEL: u64 = 1 << 63;
+
+struct JobStatus {
+    done: bool,
+    failed: Option<FactorError>,
+}
+
+/// One in-flight DAG run: lifetime-erased borrows of the caller's data
+/// plus the job-scoped completion/cancellation protocol. Queue entries
+/// hold an `Arc<Job>`, so a stale entry left behind by a failed run keeps
+/// only this small header alive — never the borrowed data.
+struct Job {
+    nm: *const NumericMatrix,
+    dag: *const TaskDag,
+    policy: *const KernelPolicy,
+    backend: *const (dyn DenseBackend + Sync),
+    subset: Option<*const [bool]>,
+    state: *const RunState,
+    total: usize,
+    /// Tasks executed successfully.
+    done: AtomicUsize,
+    /// Claim word: [`CANCEL`] bit + count of workers currently executing
+    /// a task of this job (i.e. currently allowed to dereference the raw
+    /// pointers above).
+    claims: AtomicU64,
+    status: Mutex<JobStatus>,
+    cv: Condvar,
+}
+
+// SAFETY: the raw pointers borrow data owned by the `Executor::run` call
+// that created the job. `run` does not return until either every task has
+// executed (all queue entries consumed) or the job has been cancelled and
+// every in-flight claim released — and a worker only dereferences the
+// pointers inside a `begin()`/`end()` claim window, which `begin()`
+// refuses to open once the cancel bit is set. All mutable state behind
+// the pointers is atomics (`RunState`) or internally locked
+// (`NumericMatrix` block RwLocks).
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Open a claim window; fails iff the job is cancelled.
+    fn begin(&self) -> bool {
+        self.claims
+            .fetch_update(Ordering::Acquire, Ordering::Relaxed, |c| {
+                if c & CANCEL != 0 {
+                    None
+                } else {
+                    Some(c + 1)
+                }
+            })
+            .is_ok()
+    }
+
+    /// Close a claim window; wakes the cancelling caller when the last
+    /// in-flight claim of a cancelled job drains.
+    fn end(&self) {
+        let prev = self.claims.fetch_sub(1, Ordering::AcqRel);
+        if prev & CANCEL != 0 && prev & !CANCEL == 1 {
+            let _guard = self.status.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// One queued unit of work: which job, which task.
+type Entry = (Arc<Job>, u32);
+
+struct Parker {
+    /// "You have been woken" flag, protected by the mutex the condvar
+    /// waits on — closes the notify-before-wait race.
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+struct Shared {
+    /// Per-worker ready deques: owner pushes/pops at the front-end pair
+    /// (`push_back`/`pop_front`), thieves take from the tail
+    /// (`pop_back`).
+    queues: Vec<Mutex<VecDeque<Entry>>>,
+    parkers: Vec<Parker>,
+    /// Workers currently idle (registered before their final rescan, so
+    /// a submitter racing that rescan still finds them here).
+    idle: Mutex<Vec<usize>>,
+    /// `idle.len()`, maintained under the `idle` lock — the lock-free
+    /// fast path of [`Shared::unpark_for`], so a saturated pool's task
+    /// completions never touch the idle mutex at all.
+    idle_count: AtomicUsize,
+    shutdown: AtomicBool,
+    steals: AtomicU64,
+    wakeups: AtomicU64,
+    parks: AtomicU64,
+    runs: AtomicU64,
+}
+
+impl Shared {
+    /// Wake up to `count` parked workers — one per task just pushed —
+    /// preferring `preferred` (the owner of the deque pushed to) first;
+    /// the others come and steal from its tail, so a fan of independent
+    /// tasks concentrated in one owner's deque still spreads across the
+    /// pool.
+    ///
+    /// Lock-free when nobody is parked (the saturated steady state):
+    /// the SeqCst `idle_count` read is sound against a concurrently
+    /// registering worker because registration (SeqCst RMW) precedes the
+    /// worker's rescan, and our queue push precedes this read — if the
+    /// worker's rescan ran before our push (so it missed the task), the
+    /// mutex ordering makes its registration happen-before this read, so
+    /// we see the count and wake it; otherwise its rescan sees the task.
+    /// Either way pushed work is never stranded.
+    fn unpark_for(&self, preferred: usize, count: usize) {
+        if count == 0 || self.idle_count.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let mut idle = self.idle.lock().unwrap();
+        for _ in 0..count {
+            let target = match idle.iter().position(|&w| w == preferred) {
+                Some(pos) => idle.swap_remove(pos),
+                None => match idle.pop() {
+                    Some(w) => w,
+                    None => break,
+                },
+            };
+            self.idle_count.fetch_sub(1, Ordering::SeqCst);
+            self.wakeups.fetch_add(1, Ordering::Relaxed);
+            // idle → parker-flag nesting is the fixed lock order; workers
+            // never take them in reverse while holding the flag
+            let mut flag = self.parkers[target].flag.lock().unwrap();
+            *flag = true;
+            self.parkers[target].cv.notify_one();
+        }
+    }
+}
+
+/// Cumulative scheduler-health counters of one [`Executor`] (reported by
+/// `repro sched-bench` into `BENCH_sched.json`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecutorStats {
+    /// DAG runs submitted.
+    pub runs: u64,
+    /// Tasks taken from another worker's deque tail.
+    pub steals: u64,
+    /// Targeted unpark signals delivered to a parked worker.
+    pub wakeups: u64,
+    /// Times a worker parked (went fully idle).
+    pub parks: u64,
+}
+
+/// Persistent worker pool executing task DAGs. See the [module
+/// docs](self) for the design; [`Executor::run`] is the single entry
+/// point ([`crate::coordinator::run_dag`] and
+/// [`crate::coordinator::run_dag_subset`] are thin wrappers over it).
+pub struct Executor {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: u32,
+}
+
+impl Executor {
+    /// Pool with `workers` persistent threads, created once and reused by
+    /// every run submitted to it.
+    ///
+    /// A 1-worker executor spawns no thread at all: its runs execute
+    /// inline on the calling thread (scheduling a 1-thread team through
+    /// queues would only add overhead, and running inline lets many
+    /// callers — e.g. concurrent serve-shard drains — each contribute
+    /// their own CPU, exactly like the spawn-per-call scheduler did).
+    pub fn new(workers: u32) -> Self {
+        assert!(workers >= 1, "Executor needs at least one worker");
+        let p = workers as usize;
+        let shared = Arc::new(Shared {
+            queues: (0..p).map(|_| Mutex::new(VecDeque::new())).collect(),
+            parkers: (0..p)
+                .map(|_| Parker { flag: Mutex::new(false), cv: Condvar::new() })
+                .collect(),
+            idle: Mutex::new(Vec::with_capacity(p)),
+            idle_count: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            steals: AtomicU64::new(0),
+            wakeups: AtomicU64::new(0),
+            parks: AtomicU64::new(0),
+            runs: AtomicU64::new(0),
+        });
+        let handles = if p == 1 {
+            Vec::new()
+        } else {
+            (0..p)
+                .map(|w| {
+                    let shared = shared.clone();
+                    std::thread::Builder::new()
+                        .name(format!("lu-exec-{w}"))
+                        .spawn(move || worker_loop(&shared, w))
+                        .expect("spawn executor worker thread")
+                })
+                .collect()
+        };
+        Self { shared, handles, workers }
+    }
+
+    /// The process-wide shared pool for `workers` — every session, solver
+    /// and serve shard built with the same worker count reuses one pool
+    /// (kept alive by its users; rebuilt on demand once all drop it).
+    pub fn shared(workers: u32) -> Arc<Executor> {
+        static REGISTRY: OnceLock<Mutex<HashMap<u32, Weak<Executor>>>> = OnceLock::new();
+        let registry = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = registry.lock().unwrap();
+        if let Some(existing) = map.get(&workers).and_then(Weak::upgrade) {
+            return existing;
+        }
+        let exec = Arc::new(Executor::new(workers));
+        map.insert(workers, Arc::downgrade(&exec));
+        exec
+    }
+
+    /// Worker count of the pool.
+    pub fn workers(&self) -> u32 {
+        self.workers
+    }
+
+    /// Cumulative scheduler-health counters (monotonic; subtract two
+    /// snapshots for a per-interval reading).
+    pub fn stats(&self) -> ExecutorStats {
+        ExecutorStats {
+            runs: self.shared.runs.load(Ordering::Relaxed),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+            wakeups: self.shared.wakeups.load(Ordering::Relaxed),
+            parks: self.shared.parks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute a task DAG (or the `subset`-masked part of it, with
+    /// out-of-subset dependencies treated as satisfied) over `nm`,
+    /// blocking until every active task ran or one failed. Concurrent
+    /// `run` calls from different threads multiplex over the same worker
+    /// pool.
+    ///
+    /// `state` carries the reusable per-run counters; callers re-running
+    /// the same DAG (sessions) should keep one `RunState` alive across
+    /// calls so the run allocates nothing.
+    pub fn run(
+        &self,
+        nm: &NumericMatrix,
+        dag: &TaskDag,
+        subset: Option<&[bool]>,
+        policy: &KernelPolicy,
+        backend: &(dyn DenseBackend + Sync),
+        state: &mut RunState,
+    ) -> Result<RunReport, FactorError> {
+        if let Some(mask) = subset {
+            assert_eq!(mask.len(), dag.tasks.len(), "subset mask must cover every DAG task");
+        }
+        let p = self.workers as usize;
+        let total = state.prepare(dag, subset, p);
+        self.shared.runs.fetch_add(1, Ordering::Relaxed);
+        if total == 0 {
+            return Ok(RunReport {
+                wall_seconds: 0.0,
+                busy: vec![0.0; p],
+                tasks_done: vec![0; p],
+                total_tasks: 0,
+                workers: self.workers,
+            });
+        }
+        if p == 1 {
+            return self.run_inline(nm, dag, subset, policy, backend, state);
+        }
+
+        let t0 = Instant::now();
+        let state_ref: &RunState = state;
+        let job = Arc::new(Job {
+            nm: nm as *const NumericMatrix,
+            dag: dag as *const TaskDag,
+            policy: policy as *const KernelPolicy,
+            backend: backend as *const (dyn DenseBackend + Sync),
+            subset: subset.map(|s| s as *const [bool]),
+            state: state_ref as *const RunState,
+            total,
+            done: AtomicUsize::new(0),
+            claims: AtomicU64::new(0),
+            status: Mutex::new(JobStatus { done: false, failed: None }),
+            cv: Condvar::new(),
+        });
+        // seed the deques (one lock per owner), then wake one worker per
+        // seeded task (owner first, thieves for the rest)
+        for w in 0..p {
+            if state_ref.seeds[w].is_empty() {
+                continue;
+            }
+            {
+                let mut q = self.shared.queues[w].lock().unwrap();
+                for &t in &state_ref.seeds[w] {
+                    q.push_back((job.clone(), t));
+                }
+            }
+            self.shared.unpark_for(w, state_ref.seeds[w].len());
+        }
+        // block until the job completes or fails
+        let failed = {
+            let mut st = job.status.lock().unwrap();
+            while !st.done {
+                st = job.cv.wait(st).unwrap();
+            }
+            st.failed.take()
+        };
+        if let Some(e) = failed {
+            // cancel-and-drain: no new claim can begin, queued entries of
+            // this job are purged, and in-flight executions are waited
+            // out — so the borrows in `job` are dead before we return and
+            // the pool is immediately reusable for the next run
+            job.claims.fetch_or(CANCEL, Ordering::AcqRel);
+            self.purge(&job);
+            {
+                let mut st = job.status.lock().unwrap();
+                while job.claims.load(Ordering::Acquire) & !CANCEL != 0 {
+                    st = job.cv.wait(st).unwrap();
+                }
+            }
+            // entries the last in-flight tasks released after the first
+            // purge: cancelled, so pop-and-skip would also discard them,
+            // but dropping them now frees the job header immediately
+            self.purge(&job);
+            return Err(e);
+        }
+        debug_assert_eq!(job.done.load(Ordering::SeqCst), total, "not all tasks executed");
+        Ok(RunReport {
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            busy: state_ref
+                .busy_bits
+                .iter()
+                .map(|b| f64::from_bits(b.load(Ordering::Relaxed)))
+                .collect(),
+            tasks_done: state_ref.tally.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            total_tasks: total,
+            workers: self.workers,
+        })
+    }
+
+    /// The 1-worker path: topological execution on the calling thread,
+    /// reusing `state.deps` as the ready-propagation counters and
+    /// `state.seeds[0]` as the work stack. No queues, no locks, no
+    /// wakeups — the cheapest possible replay of a tiny pruned DAG.
+    fn run_inline(
+        &self,
+        nm: &NumericMatrix,
+        dag: &TaskDag,
+        subset: Option<&[bool]>,
+        policy: &KernelPolicy,
+        backend: &(dyn DenseBackend + Sync),
+        state: &mut RunState,
+    ) -> Result<RunReport, FactorError> {
+        let t0 = Instant::now();
+        let mut ws = Workspace::with_capacity(nm.max_dim);
+        let mut executed = 0usize;
+        let mut busy = 0.0f64;
+        while let Some(t) = state.seeds[0].pop() {
+            let task = &dag.tasks[t as usize];
+            let started = Instant::now();
+            // same panic containment as the pool path: a buggy kernel
+            // surfaces as `Err(TaskPanic)` at every worker count, never
+            // as an unwind through the calling (e.g. serve drain) thread
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                nm.execute(task.op, policy, backend, &mut ws)
+            }))
+            .unwrap_or(Err(FactorError::TaskPanic))?;
+            busy += started.elapsed().as_secs_f64();
+            executed += 1;
+            for &o in &task.out {
+                let o_us = o as usize;
+                if is_active(subset, o_us) {
+                    let d = state.deps[o_us].get_mut();
+                    *d -= 1;
+                    if *d == 0 {
+                        state.seeds[0].push(o);
+                    }
+                }
+            }
+        }
+        Ok(RunReport {
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            busy: vec![busy],
+            tasks_done: vec![executed],
+            total_tasks: executed,
+            workers: 1,
+        })
+    }
+
+    /// Drop every queued entry of `job` from all deques.
+    fn purge(&self, job: &Arc<Job>) {
+        for q in &self.shared.queues {
+            q.lock().unwrap().retain(|(j, _)| !Arc::ptr_eq(j, job));
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        for parker in &self.shared.parkers {
+            let mut flag = parker.flag.lock().unwrap();
+            *flag = true;
+            parker.cv.notify_all();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, w: usize) {
+    let p = shared.queues.len();
+    let mut ws = Workspace::default();
+    // dependent-release scratch, reused across every task this worker
+    // ever executes (the per-task `to_push: Vec` of the old scheduler)
+    let mut to_push: Vec<(usize, u32)> = Vec::new();
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // 1) own deque (oldest first), else steal from another's tail
+        if let Some((job, t)) = rescan(shared, w, p) {
+            execute_task(shared, w, p, &job, t, &mut ws, &mut to_push);
+            continue;
+        }
+        // 2) go idle: register first, rescan second (a submitter that
+        // pushed between our scans either sees us in the idle set and
+        // wakes us, or pushed early enough for this rescan to find it),
+        // park third
+        {
+            let mut idle = shared.idle.lock().unwrap();
+            idle.push(w);
+            shared.idle_count.fetch_add(1, Ordering::SeqCst);
+        }
+        if let Some((job, t)) = rescan(shared, w, p) {
+            deregister(shared, w);
+            execute_task(shared, w, p, &job, t, &mut ws, &mut to_push);
+            continue;
+        }
+        shared.parks.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut flag = shared.parkers[w].flag.lock().unwrap();
+            while !*flag && !shared.shutdown.load(Ordering::Acquire) {
+                flag = shared.parkers[w].cv.wait(flag).unwrap();
+            }
+            *flag = false;
+        }
+        // a waker that popped us from the idle set already deregistered
+        // us; on a stale-flag wake (the set bit outlived its work) we
+        // must deregister ourselves, or duplicate registrations pile up.
+        // The flag lock is released first — wakers take idle → flag, and
+        // taking them in the opposite order here would deadlock.
+        deregister(shared, w);
+    }
+}
+
+/// Remove `w` from the idle set if a waker has not already done so.
+fn deregister(shared: &Shared, w: usize) {
+    let mut idle = shared.idle.lock().unwrap();
+    if let Some(pos) = idle.iter().position(|&x| x == w) {
+        idle.swap_remove(pos);
+        shared.idle_count.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One pass over every deque (own front, others' tails).
+fn rescan(shared: &Shared, w: usize, p: usize) -> Option<Entry> {
+    for i in 0..p {
+        let v = (w + i) % p;
+        let entry = if v == w {
+            shared.queues[v].lock().unwrap().pop_front()
+        } else {
+            shared.queues[v].lock().unwrap().pop_back()
+        };
+        if let Some(entry) = entry {
+            if v != w {
+                shared.steals.fetch_add(1, Ordering::Relaxed);
+            }
+            return Some(entry);
+        }
+    }
+    None
+}
+
+fn execute_task(
+    shared: &Shared,
+    w: usize,
+    p: usize,
+    job: &Arc<Job>,
+    t: u32,
+    ws: &mut Workspace,
+    to_push: &mut Vec<(usize, u32)>,
+) {
+    if !job.begin() {
+        // stale entry of a cancelled (failed) run — skip it
+        return;
+    }
+    // SAFETY: the claim window opened, so the owning `Executor::run` call
+    // is still blocked in its wait loop and every borrow behind these
+    // pointers is live (see the Send/Sync rationale on `Job`).
+    let nm = unsafe { &*job.nm };
+    let dag = unsafe { &*job.dag };
+    let policy = unsafe { &*job.policy };
+    let backend = unsafe { &*job.backend };
+    let state = unsafe { &*job.state };
+    let subset = job.subset.map(|s| unsafe { &*s });
+
+    let task = &dag.tasks[t as usize];
+    let started = Instant::now();
+    // a panicking kernel must not kill a pool worker: the thread is never
+    // respawned and the submitting `run` would hang forever waiting for a
+    // completion signal that cannot come. Catch the unwind, scrap the
+    // (possibly inconsistent) workspace, and route the failure through
+    // the normal cancel-and-drain error path instead.
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        nm.execute(task.op, policy, backend, ws)
+    }))
+    .unwrap_or_else(|_| {
+        *ws = Workspace::default();
+        Err(FactorError::TaskPanic)
+    });
+    let elapsed = started.elapsed().as_secs_f64();
+    // single-writer slots (only worker `w` touches index `w`), so a
+    // load/store pair is enough — no CAS, no per-worker Mutex<f64>
+    let busy = f64::from_bits(state.busy_bits[w].load(Ordering::Relaxed)) + elapsed;
+    state.busy_bits[w].store(busy.to_bits(), Ordering::Relaxed);
+    state.tally[w].fetch_add(1, Ordering::Relaxed);
+
+    match res {
+        Err(e) => {
+            // poison further claims first, then signal the caller; queued
+            // siblings are purged by `run`, in-flight ones drain through
+            // the claim count
+            job.claims.fetch_or(CANCEL, Ordering::AcqRel);
+            let mut st = job.status.lock().unwrap();
+            if st.failed.is_none() {
+                st.failed = Some(e);
+            }
+            st.done = true;
+            job.cv.notify_all();
+        }
+        Ok(()) => {
+            // release dependents: batch pushes per owner deque so each
+            // target lock is taken once, then wake at most one worker per
+            // deque pushed to
+            to_push.clear();
+            for &o in &task.out {
+                let o_us = o as usize;
+                if is_active(subset, o_us)
+                    && state.deps[o_us].fetch_sub(1, Ordering::AcqRel) == 1
+                {
+                    to_push.push((dag.tasks[o_us].owner as usize % p, o));
+                }
+            }
+            if !to_push.is_empty() {
+                to_push.sort_unstable_by_key(|&(owner, _)| owner);
+                let mut i = 0;
+                while i < to_push.len() {
+                    let owner = to_push[i].0;
+                    let mut end = i;
+                    {
+                        let mut q = shared.queues[owner].lock().unwrap();
+                        while end < to_push.len() && to_push[end].0 == owner {
+                            q.push_back((job.clone(), to_push[end].1));
+                            end += 1;
+                        }
+                    }
+                    // one wakeup per pushed task, minus the one we keep
+                    // for ourselves when pushing to our own deque (we pop
+                    // it next iteration)
+                    let pushed = end - i;
+                    let helpers = if owner == w { pushed - 1 } else { pushed };
+                    shared.unpark_for(owner, helpers);
+                    i = end;
+                }
+            }
+            let finished = job.done.fetch_add(1, Ordering::SeqCst) + 1;
+            if finished >= job.total {
+                let mut st = job.status.lock().unwrap();
+                st.done = true;
+                job.cv.notify_all();
+            }
+        }
+    }
+    job.end();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::{regular_blocking, BlockedMatrix};
+    use crate::coordinator::Placement;
+    use crate::gpu_model::CostModel;
+    use crate::numeric::factor::{factorize_sequential, CpuDense};
+    use crate::sparse::gen;
+    use crate::symbolic;
+
+    fn blocked(a: &crate::sparse::Csc, bs: usize) -> Arc<BlockedMatrix> {
+        let sym = symbolic::analyze(a);
+        let ldu = sym.ldu_pattern(a).unwrap();
+        Arc::new(BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), bs)))
+    }
+
+    fn singular_blocked() -> Arc<BlockedMatrix> {
+        // band + long-range couplings, with rows 30 and 31 made
+        // bit-identical: elimination stays exact on the duplicated pair,
+        // so the pivot at column 31 is exactly zero — deep enough in the
+        // DAG that unrelated tasks are still queued and in flight when
+        // the GETRF fails (the cancel-and-drain path, possibly on a
+        // stolen task)
+        let n = 60;
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            if i == 30 || i == 31 {
+                continue;
+            }
+            coo.push(i, i, 4.0);
+            if i + 1 < n {
+                coo.push(i, i + 1, -1.0);
+            }
+            if i >= 1 {
+                coo.push(i, i - 1, -1.0);
+            }
+            if i + 12 < n {
+                coo.push(i, i + 12, -0.5);
+            }
+            if i >= 12 {
+                coo.push(i, i - 12, -0.5);
+            }
+        }
+        for r in [30, 31] {
+            coo.push(r, 18, -0.5);
+            coo.push(r, 30, 2.0);
+            coo.push(r, 31, 2.0);
+            coo.push(r, 43, -0.5);
+        }
+        blocked(&coo.to_csc(), 10)
+    }
+
+    #[test]
+    fn pool_matches_sequential_across_worker_counts() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() });
+        let bm = blocked(&a, 40);
+        let policy = KernelPolicy::default();
+        let seq = factorize_sequential(bm.clone(), &policy, &CpuDense).unwrap();
+        for workers in [1u32, 2, 4, 8] {
+            let exec = Executor::new(workers);
+            let dag = TaskDag::build(&bm, &policy, Placement::square(workers), &CostModel::a100());
+            let mut state = RunState::new();
+            // several epochs through the same pool + state
+            for round in 0..3 {
+                let nm = NumericMatrix::from_blocked(bm.clone());
+                let rep = exec.run(&nm, &dag, None, &policy, &CpuDense, &mut state).unwrap();
+                assert_eq!(rep.total_tasks, dag.tasks.len());
+                assert_eq!(rep.tasks_done.iter().sum::<usize>(), dag.tasks.len());
+                assert_eq!(rep.workers, workers);
+                for id in 0..bm.blocks.len() {
+                    assert_eq!(
+                        nm.block_values(id as u32),
+                        seq.numeric.block_values(id as u32),
+                        "block {id} differs (workers={workers}, round={round})"
+                    );
+                }
+            }
+            assert_eq!(exec.stats().runs, 3);
+        }
+    }
+
+    #[test]
+    fn error_during_run_drains_cleanly_and_pool_is_reusable() {
+        let bad = singular_blocked();
+        let policy = KernelPolicy::default();
+        let exec = Executor::new(4);
+        let bad_dag = TaskDag::build(&bad, &policy, Placement::square(4), &CostModel::a100());
+        let mut state = RunState::new();
+        // repeated failing runs: each must return Err without hanging or
+        // poisoning the pool, wherever the failing GETRF lands (own pop
+        // or steal)
+        for _ in 0..8 {
+            let nm = NumericMatrix::from_blocked(bad.clone());
+            let res = exec.run(&nm, &bad_dag, None, &policy, &CpuDense, &mut state);
+            assert!(res.is_err(), "singular matrix must fail");
+        }
+        // the same pool and the same RunState immediately serve a good
+        // run, bit-identical to the sequential oracle
+        let a = gen::grid2d_laplacian(10, 10);
+        let bm = blocked(&a, 20);
+        let dag = TaskDag::build(&bm, &policy, Placement::square(4), &CostModel::a100());
+        let seq = factorize_sequential(bm.clone(), &policy, &CpuDense).unwrap();
+        let nm = NumericMatrix::from_blocked(bm.clone());
+        let rep = exec.run(&nm, &dag, None, &policy, &CpuDense, &mut state).unwrap();
+        assert_eq!(rep.total_tasks, dag.tasks.len());
+        for id in 0..bm.blocks.len() {
+            assert_eq!(
+                nm.block_values(id as u32),
+                seq.numeric.block_values(id as u32),
+                "block {id} differs after an Err run"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_runs_share_one_pool() {
+        // four threads each re-factorize their own matrix on ONE shared
+        // 2-worker pool; every result must bit-match its oracle
+        let exec = Arc::new(Executor::new(2));
+        let policy = KernelPolicy::default();
+        let mats = [
+            gen::grid2d_laplacian(8, 8),
+            gen::grid2d_laplacian(9, 9),
+            gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() }),
+            gen::tridiagonal(80),
+        ];
+        std::thread::scope(|scope| {
+            for a in &mats {
+                let exec = exec.clone();
+                let policy = &policy;
+                scope.spawn(move || {
+                    let bm = blocked(a, 16);
+                    let dag = TaskDag::build(&bm, policy, Placement::square(2), &CostModel::a100());
+                    let seq = factorize_sequential(bm.clone(), policy, &CpuDense).unwrap();
+                    let mut state = RunState::new();
+                    for _ in 0..4 {
+                        let nm = NumericMatrix::from_blocked(bm.clone());
+                        exec.run(&nm, &dag, None, policy, &CpuDense, &mut state).unwrap();
+                        for id in 0..bm.blocks.len() {
+                            assert_eq!(
+                                nm.block_values(id as u32),
+                                seq.numeric.block_values(id as u32),
+                                "block {id} differs under pool sharing"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(exec.stats().runs, 16);
+    }
+
+    #[test]
+    fn shared_registry_hands_out_one_pool_per_worker_count() {
+        let a = Executor::shared(3);
+        let b = Executor::shared(3);
+        assert!(Arc::ptr_eq(&a, &b), "same worker count shares one pool");
+        let c = Executor::shared(5);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c.workers(), 5);
+    }
+
+    #[test]
+    fn empty_subset_is_a_free_noop() {
+        let a = gen::tridiagonal(40);
+        let bm = blocked(&a, 10);
+        let policy = KernelPolicy::default();
+        let dag = TaskDag::build(&bm, &policy, Placement::square(2), &CostModel::a100());
+        let exec = Executor::new(2);
+        let nm = NumericMatrix::from_blocked(bm.clone());
+        let mask = vec![false; dag.tasks.len()];
+        let mut state = RunState::new();
+        let rep = exec.run(&nm, &dag, Some(&mask), &policy, &CpuDense, &mut state).unwrap();
+        assert_eq!(rep.total_tasks, 0);
+        assert_eq!(rep.tasks_done.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn idle_pool_parks_its_workers() {
+        let exec = Executor::new(4);
+        // give the freshly spawned workers a moment to find nothing and
+        // park; an idle pool must converge to "everyone parked"
+        for _ in 0..200 {
+            if exec.stats().parks >= 3 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(exec.stats().parks >= 3, "idle workers should park");
+    }
+}

@@ -12,23 +12,34 @@
 //! * measured GPU time ⇒ both measured CPU wall-clock **and** the modeled
 //!   A100 makespan from [`simulate::simulate`] (same DAG, same placement).
 //!
-//! Two entry points matter downstream: [`run_dag`] executes a whole task
-//! DAG (the full re-factorization path of
-//! [`crate::session::SolverSession::refactorize`]) and
-//! [`run_dag_subset`] executes a masked task subset with out-of-subset
-//! dependencies treated as already satisfied (the pruned incremental
-//! path of [`crate::session::SolverSession::refactorize_partial`]).
-//! `ARCHITECTURE.md` at the repository root places this module in the
-//! full pipeline.
+//! Execution happens on the persistent work-stealing
+//! [`executor::Executor`]: per-worker ready deques (owner-computes push,
+//! idle workers steal from the tail), targeted single-worker wakeups, a
+//! parking protocol so an idle pool costs nothing, and a reusable
+//! [`executor::RunState`] so steady-state replays allocate nothing. Two
+//! entry points matter downstream: [`run_dag`] executes a whole task DAG
+//! (the full re-factorization path of
+//! [`crate::session::SolverSession::refactorize`]) and [`run_dag_subset`]
+//! executes a masked task subset with out-of-subset dependencies treated
+//! as already satisfied (the pruned incremental path of
+//! [`crate::session::SolverSession::refactorize_partial`]). The
+//! pre-executor spawn-per-call scheduler survives as
+//! [`run_dag_spawn`]/[`run_dag_subset_spawn`] — the measured baseline of
+//! `repro sched-bench`. `ARCHITECTURE.md` at the repository root places
+//! this module in the full pipeline and diagrams the executor.
 
 pub mod dag;
+pub mod executor;
 pub mod metrics;
 pub mod placement;
 pub mod simulate;
 pub mod workers;
 
 pub use dag::{Task, TaskDag};
+pub use executor::{Executor, ExecutorStats, RunState, Scheduler};
 pub use metrics::LoadReport;
 pub use placement::Placement;
 pub use simulate::{simulate, SimReport};
-pub use workers::{factorize_parallel, run_dag, run_dag_subset, RunReport};
+pub use workers::{
+    factorize_parallel, run_dag, run_dag_spawn, run_dag_subset, run_dag_subset_spawn, RunReport,
+};

@@ -1,9 +1,15 @@
-//! Threaded owner-computes executor: runs the task DAG on `P` worker
-//! threads (the simulated GPUs), dependency-counting with per-worker ready
-//! queues. Python is nowhere near this path — dense ops go to the
-//! [`crate::numeric::factor::DenseBackend`] (pure rust or PJRT artifacts).
+//! DAG execution entry points: the persistent work-stealing path
+//! ([`run_dag`]/[`run_dag_subset`], thin wrappers over
+//! [`Executor::run`](super::executor::Executor::run)) and the
+//! spawn-per-call baseline ([`run_dag_spawn`]/[`run_dag_subset_spawn`] —
+//! `P` fresh threads plus one global ready-queue lock per call, kept as
+//! the measured reference for `repro sched-bench` and as a second
+//! scheduler for differential testing). Python is nowhere near this path
+//! — dense ops go to the [`crate::numeric::factor::DenseBackend`] (pure
+//! rust or PJRT artifacts).
 
 use super::dag::TaskDag;
+use super::executor::{is_active, Executor, RunState};
 use super::placement::Placement;
 use crate::blocking::partition::BlockedMatrix;
 use crate::gpu_model::CostModel;
@@ -36,18 +42,10 @@ impl RunReport {
     }
 }
 
-struct Queues {
-    ready: Mutex<Vec<std::collections::VecDeque<u32>>>,
-    cv: Condvar,
-    done: AtomicUsize,
-    total: usize,
-    failed: Mutex<Option<FactorError>>,
-}
-
-/// Factorize `bm` on `num_workers` threads following the DAG.
+/// Factorize `bm` following the DAG on the process-wide shared
+/// [`Executor`] for `num_workers`.
 ///
-/// Returns the factors plus the measured run report. The DAG must have
-/// been built with a placement matching `num_workers`.
+/// Returns the factors plus the measured run report.
 pub fn factorize_parallel(
     bm: Arc<BlockedMatrix>,
     dag: &TaskDag,
@@ -56,31 +54,35 @@ pub fn factorize_parallel(
     num_workers: u32,
 ) -> Result<(Factors, RunReport), FactorError> {
     let nm = NumericMatrix::from_blocked(bm);
-    let report = run_dag(&nm, dag, policy, backend, num_workers)?;
+    let exec = Executor::shared(num_workers);
+    let mut state = RunState::new();
+    let report = run_dag(&nm, dag, policy, backend, &exec, &mut state)?;
     let n = report.total_tasks;
     Ok((Factors { numeric: nm, sparse_ops: n, dense_ops: 0 }, report))
 }
 
-/// Execute the task DAG over an **existing** [`NumericMatrix`] — the
-/// re-entrant core of [`factorize_parallel`].
+/// Execute the task DAG over an **existing** [`NumericMatrix`] on the
+/// persistent work-stealing `exec` pool — the re-entrant core of
+/// [`factorize_parallel`].
 ///
 /// This is the numeric-only path [`crate::session::SolverSession`] re-runs
-/// on every re-factorization: the blocked structure, the DAG and the
-/// per-block value storage are all preallocated by the plan/session; this
-/// function only schedules block kernels over them (the per-run dependency
-/// counters are the sole transient allocation).
+/// on every re-factorization: the blocked structure, the DAG, the
+/// per-block value storage **and** the scheduling counters (`state`) are
+/// all preallocated by the plan/session; a steady-state replay allocates
+/// nothing but one small job header.
 pub fn run_dag(
     nm: &NumericMatrix,
     dag: &TaskDag,
     policy: &KernelPolicy,
     backend: &(dyn DenseBackend + Sync),
-    num_workers: u32,
+    exec: &Executor,
+    state: &mut RunState,
 ) -> Result<RunReport, FactorError> {
-    run_dag_inner(nm, dag, None, policy, backend, num_workers)
+    exec.run(nm, dag, None, policy, backend, state)
 }
 
-/// Execute only the tasks with `in_subset[t] == true`, with the DAG's
-/// cross-task dependencies intact *within* the subset.
+/// Execute only the tasks with `in_subset[t] == true` on `exec`, with the
+/// DAG's cross-task dependencies intact *within* the subset.
 ///
 /// Dependency edges arriving from tasks **outside** the subset are treated
 /// as already satisfied: the caller guarantees those tasks' output blocks
@@ -99,25 +101,51 @@ pub fn run_dag_subset(
     in_subset: &[bool],
     policy: &KernelPolicy,
     backend: &(dyn DenseBackend + Sync),
+    exec: &Executor,
+    state: &mut RunState,
+) -> Result<RunReport, FactorError> {
+    exec.run(nm, dag, Some(in_subset), policy, backend, state)
+}
+
+/// As [`run_dag`], but on the spawn-per-call baseline scheduler: `P`
+/// fresh OS threads, one global ready-queue `Mutex` + `notify_all`
+/// broadcast, counters reallocated per call. This is the pre-executor
+/// behavior, kept so `repro sched-bench` can price exactly what the
+/// persistent pool saves — and so the differential harness can assert
+/// both schedulers produce bit-identical factors.
+pub fn run_dag_spawn(
+    nm: &NumericMatrix,
+    dag: &TaskDag,
+    policy: &KernelPolicy,
+    backend: &(dyn DenseBackend + Sync),
     num_workers: u32,
 ) -> Result<RunReport, FactorError> {
-    assert_eq!(
-        in_subset.len(),
-        dag.tasks.len(),
-        "subset mask must cover every DAG task"
-    );
-    run_dag_inner(nm, dag, Some(in_subset), policy, backend, num_workers)
+    run_dag_spawn_inner(nm, dag, None, policy, backend, num_workers)
 }
 
-/// Is task `t` active under the (optional) subset mask?
-fn is_active(subset: Option<&[bool]>, t: usize) -> bool {
-    match subset {
-        None => true,
-        Some(mask) => mask[t],
-    }
+/// Subset form of [`run_dag_spawn`] (same contract as
+/// [`run_dag_subset`]).
+pub fn run_dag_subset_spawn(
+    nm: &NumericMatrix,
+    dag: &TaskDag,
+    in_subset: &[bool],
+    policy: &KernelPolicy,
+    backend: &(dyn DenseBackend + Sync),
+    num_workers: u32,
+) -> Result<RunReport, FactorError> {
+    assert_eq!(in_subset.len(), dag.tasks.len(), "subset mask must cover every DAG task");
+    run_dag_spawn_inner(nm, dag, Some(in_subset), policy, backend, num_workers)
 }
 
-fn run_dag_inner(
+struct Queues {
+    ready: Mutex<Vec<std::collections::VecDeque<u32>>>,
+    cv: Condvar,
+    done: AtomicUsize,
+    total: usize,
+    failed: Mutex<Option<FactorError>>,
+}
+
+fn run_dag_spawn_inner(
     nm: &NumericMatrix,
     dag: &TaskDag,
     subset: Option<&[bool]>,
@@ -156,7 +184,7 @@ fn run_dag_inner(
         vec![std::collections::VecDeque::new(); p];
     for (t, task) in dag.tasks.iter().enumerate() {
         if is_active(subset, t) && deps[t].load(Ordering::Relaxed) == 0 {
-            initial[task.owner as usize].push_back(t as u32);
+            initial[task.owner as usize % p].push_back(t as u32);
         }
     }
     let q = Queues {
@@ -167,71 +195,79 @@ fn run_dag_inner(
         failed: Mutex::new(None),
     };
 
-    let busy: Vec<Mutex<f64>> = (0..p).map(|_| Mutex::new(0.0)).collect();
-    let counts: Vec<AtomicUsize> = (0..p).map(|_| AtomicUsize::new(0)).collect();
-
     let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for w in 0..p {
-            let nm = &nm;
-            let dag = &dag;
-            let q = &q;
-            let deps = &deps;
-            let busy = &busy;
-            let counts = &counts;
-            scope.spawn(move || {
-                let mut ws = Workspace::with_capacity(nm.max_dim);
-                let mut my_busy = 0.0f64;
-                loop {
-                    // fetch next task for this worker
-                    let task_id = {
-                        let mut ready = q.ready.lock().unwrap();
-                        loop {
-                            if q.done.load(Ordering::SeqCst) >= q.total
-                                || q.failed.lock().unwrap().is_some()
-                            {
-                                break None;
-                            }
-                            if let Some(t) = ready[w].pop_front() {
-                                break Some(t);
-                            }
-                            ready = q.cv.wait(ready).unwrap();
-                        }
-                    };
-                    let Some(t) = task_id else { break };
-                    let task = &dag.tasks[t as usize];
-                    let start = Instant::now();
-                    let res = nm.execute(task.op, policy, backend, &mut ws);
-                    my_busy += start.elapsed().as_secs_f64();
-                    counts[w].fetch_add(1, Ordering::Relaxed);
-                    if let Err(e) = res {
-                        *q.failed.lock().unwrap() = Some(e);
-                        q.cv.notify_all();
-                        break;
-                    }
-                    // release dependents (inactive tasks have no counter
-                    // to decrement and must never enqueue)
+    let (busy, tasks_done) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..p)
+            .map(|w| {
+                let nm = &nm;
+                let dag = &dag;
+                let q = &q;
+                let deps = &deps;
+                scope.spawn(move || {
+                    let mut ws = Workspace::with_capacity(nm.max_dim);
+                    let mut my_busy = 0.0f64;
+                    let mut my_done = 0usize;
+                    // dependent-release scratch, reused across tasks
                     let mut to_push: Vec<(usize, u32)> = Vec::new();
-                    for &o in &task.out {
-                        if is_active(subset, o as usize)
-                            && deps[o as usize].fetch_sub(1, Ordering::AcqRel) == 1
-                        {
-                            to_push.push((dag.tasks[o as usize].owner as usize, o));
+                    loop {
+                        // fetch next task for this worker
+                        let task_id = {
+                            let mut ready = q.ready.lock().unwrap();
+                            loop {
+                                if q.done.load(Ordering::SeqCst) >= q.total
+                                    || q.failed.lock().unwrap().is_some()
+                                {
+                                    break None;
+                                }
+                                if let Some(t) = ready[w].pop_front() {
+                                    break Some(t);
+                                }
+                                ready = q.cv.wait(ready).unwrap();
+                            }
+                        };
+                        let Some(t) = task_id else { break };
+                        let task = &dag.tasks[t as usize];
+                        let start = Instant::now();
+                        let res = nm.execute(task.op, policy, backend, &mut ws);
+                        my_busy += start.elapsed().as_secs_f64();
+                        my_done += 1;
+                        if let Err(e) = res {
+                            *q.failed.lock().unwrap() = Some(e);
+                            q.cv.notify_all();
+                            break;
+                        }
+                        // release dependents (inactive tasks have no
+                        // counter to decrement and must never enqueue)
+                        to_push.clear();
+                        for &o in &task.out {
+                            if is_active(subset, o as usize)
+                                && deps[o as usize].fetch_sub(1, Ordering::AcqRel) == 1
+                            {
+                                to_push.push((dag.tasks[o as usize].owner as usize % p, o));
+                            }
+                        }
+                        let finished = q.done.fetch_add(1, Ordering::SeqCst) + 1;
+                        if !to_push.is_empty() || finished >= q.total {
+                            let mut ready = q.ready.lock().unwrap();
+                            for &(ow, o) in to_push.iter() {
+                                ready[ow].push_back(o);
+                            }
+                            drop(ready);
+                            q.cv.notify_all();
                         }
                     }
-                    let finished = q.done.fetch_add(1, Ordering::SeqCst) + 1;
-                    if !to_push.is_empty() || finished >= q.total {
-                        let mut ready = q.ready.lock().unwrap();
-                        for (ow, o) in to_push {
-                            ready[ow].push_back(o);
-                        }
-                        drop(ready);
-                        q.cv.notify_all();
-                    }
-                }
-                *busy[w].lock().unwrap() = my_busy;
-            });
+                    (my_busy, my_done)
+                })
+            })
+            .collect();
+        let mut busy = Vec::with_capacity(p);
+        let mut tasks_done = Vec::with_capacity(p);
+        for handle in handles {
+            let (b, d) = handle.join().expect("spawned DAG worker panicked");
+            busy.push(b);
+            tasks_done.push(d);
         }
+        (busy, tasks_done)
     });
     let wall = t0.elapsed().as_secs_f64();
 
@@ -242,8 +278,8 @@ fn run_dag_inner(
 
     Ok(RunReport {
         wall_seconds: wall,
-        busy: busy.iter().map(|b| *b.lock().unwrap()).collect(),
-        tasks_done: counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+        busy,
+        tasks_done,
         total_tasks: n,
         workers: num_workers,
     })
@@ -308,7 +344,8 @@ mod tests {
 
     #[test]
     fn four_workers_correct() {
-        parallel_check(&gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() }), 40, 4);
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() });
+        parallel_check(&a, 40, 4);
     }
 
     #[test]
@@ -345,11 +382,14 @@ mod tests {
         let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(64, 12)));
         let policy = KernelPolicy::default();
         let dag = TaskDag::build(&bm, &policy, Placement::square(2), &CostModel::a100());
+        let exec = Executor::shared(2);
+        let mut state = RunState::new();
         let nm_full = NumericMatrix::from_blocked(bm.clone());
-        run_dag(&nm_full, &dag, &policy, &CpuDense, 2).unwrap();
+        run_dag(&nm_full, &dag, &policy, &CpuDense, &exec, &mut state).unwrap();
         let nm_sub = NumericMatrix::from_blocked(bm.clone());
         let mask = vec![true; dag.tasks.len()];
-        let rep = run_dag_subset(&nm_sub, &dag, &mask, &policy, &CpuDense, 2).unwrap();
+        let rep =
+            run_dag_subset(&nm_sub, &dag, &mask, &policy, &CpuDense, &exec, &mut state).unwrap();
         assert_eq!(rep.total_tasks, dag.tasks.len());
         assert_eq!(rep.tasks_done.iter().sum::<usize>(), dag.tasks.len());
         for id in 0..bm.blocks.len() {
@@ -373,11 +413,36 @@ mod tests {
         let before: Vec<Vec<f64>> =
             (0..bm.blocks.len()).map(|id| nm.block_values(id as u32)).collect();
         let mask = vec![false; dag.tasks.len()];
-        let rep = run_dag_subset(&nm, &dag, &mask, &policy, &CpuDense, 2).unwrap();
+        let exec = Executor::shared(2);
+        let mut state = RunState::new();
+        let rep = run_dag_subset(&nm, &dag, &mask, &policy, &CpuDense, &exec, &mut state).unwrap();
         assert_eq!(rep.total_tasks, 0);
         assert_eq!(rep.tasks_done.iter().sum::<usize>(), 0);
         for (id, b) in before.iter().enumerate() {
             assert_eq!(&nm.block_values(id as u32), b, "block {id} was touched");
+        }
+    }
+
+    #[test]
+    fn spawn_baseline_matches_executor_bitwise() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 250, ..Default::default() });
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
+        let bm = Arc::new(BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), 30)));
+        let policy = KernelPolicy::default();
+        let dag = TaskDag::build(&bm, &policy, Placement::square(3), &CostModel::a100());
+        let nm_spawn = NumericMatrix::from_blocked(bm.clone());
+        run_dag_spawn(&nm_spawn, &dag, &policy, &CpuDense, 3).unwrap();
+        let nm_exec = NumericMatrix::from_blocked(bm.clone());
+        let exec = Executor::shared(3);
+        let mut state = RunState::new();
+        run_dag(&nm_exec, &dag, &policy, &CpuDense, &exec, &mut state).unwrap();
+        for id in 0..bm.blocks.len() {
+            assert_eq!(
+                nm_spawn.block_values(id as u32),
+                nm_exec.block_values(id as u32),
+                "block {id} differs between spawn baseline and executor"
+            );
         }
     }
 

@@ -17,8 +17,12 @@
 //! * [`numeric`] — right-looking blocked LU numeric factorization with
 //!   sparse kernels (GETRF/GESSM/TSTRF/SSSSM) and a dense kernel path that
 //!   dispatches to AOT-compiled XLA/PJRT artifacts.
-//! * [`coordinator`] — dependency-DAG scheduler, multi-worker execution
-//!   (simulated multi-GPU), 2D block-cyclic placement, load-balance metrics.
+//! * [`coordinator`] — dependency-DAG scheduler, the persistent
+//!   work-stealing executor ([`coordinator::Executor`]: per-worker
+//!   deques, targeted wakeups, parking, reusable per-run
+//!   [`coordinator::RunState`] — shared process-wide per worker count),
+//!   2D block-cyclic placement, load-balance metrics, and the
+//!   spawn-per-call baseline scheduler kept for `repro sched-bench`.
 //! * [`gpu_model`] — A100 roofline cost model used to report modeled GPU
 //!   times alongside measured CPU wall-clock.
 //! * [`runtime`] — PJRT CPU client wrapper loading `artifacts/*.hlo.txt`.

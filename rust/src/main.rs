@@ -54,6 +54,7 @@ fn run() -> Result<()> {
             bench_harness::run(exp, std::path::Path::new(&out), scale)
         }
         "serve-bench" => cmd_serve_bench(&flags),
+        "sched-bench" => cmd_sched_bench(&flags),
         "artifacts-check" => cmd_artifacts_check(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -74,7 +75,15 @@ USAGE:
   repro serve-bench [--matrix SPEC] [--clients K] [--requests N] [--sessions S]
                     [--mix F,S,V] [--tenants M] [--plan-dir DIR] [--out FILE]
                     [--workers N] [--blocking B]
+  repro sched-bench [--replays N] [--worker-counts 1,2,4] [--out FILE]
   repro artifacts-check [--dir artifacts]
+
+SCHED-BENCH (the scheduler bench):
+  Refactorize-storm: many tiny full + partial re-factorizations of small
+  fixed-pattern matrices, run under the spawn-per-call baseline and the
+  persistent work-stealing executor. Per-storm throughput, the
+  persistent/spawn speedup, and the executor's steal/wakeup/park
+  counters are written to --out (default BENCH_sched.json).
 
 SERVE-BENCH (the serving-layer load generator):
   K closed-loop client threads drive a shared-plan session pool over a
@@ -470,6 +479,34 @@ fn tenant_matrices(count: usize) -> Vec<(String, Csc)> {
             }
         })
         .collect()
+}
+
+fn cmd_sched_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let replays: usize = flags.get("replays").map(|s| s.parse()).transpose()?.unwrap_or(40);
+    if replays < 2 {
+        bail!("--replays must be >= 2");
+    }
+    let worker_counts: Vec<u32> = match flags.get("worker-counts") {
+        Some(s) => s
+            .split(',')
+            .map(|p| p.trim().parse::<u32>())
+            .collect::<Result<_, _>>()
+            .context("--worker-counts N,N,... (positive integers)")?,
+        None => vec![1, 2, 4],
+    };
+    if worker_counts.is_empty() || worker_counts.contains(&0) {
+        bail!("--worker-counts needs at least one positive worker count");
+    }
+    let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_sched.json".into());
+    println!(
+        "refactorize-storm: {replays} replays/storm over worker counts {worker_counts:?} \
+         (spawn-per-call vs persistent executor)"
+    );
+    let report = bench_harness::sched::run(replays, &worker_counts);
+    report.print();
+    std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
+    println!("\nwrote {out}");
+    Ok(())
 }
 
 fn cmd_artifacts_check(flags: &HashMap<String, String>) -> Result<()> {

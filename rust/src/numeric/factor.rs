@@ -6,7 +6,7 @@ use super::dense;
 use super::kernels::{self, KernelError, Workspace};
 use super::{KernelKind, KernelPolicy};
 use crate::blocking::partition::{Block, BlockedMatrix};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// One block operation of Algorithm 1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -97,6 +97,11 @@ pub enum FactorError {
     OutOfPattern { row: usize, col: usize },
     /// A matrix whose dimension does not match the analyzed structure.
     DimensionMismatch { got: usize, want: usize },
+    /// A worker panicked while executing a block task — a bug, not a
+    /// numeric failure. The executor cancels the run and survives (see
+    /// [`crate::coordinator::Executor`]); callers observe an `Err`
+    /// instead of a hung pool.
+    TaskPanic,
 }
 
 impl std::fmt::Display for FactorError {
@@ -112,6 +117,9 @@ impl std::fmt::Display for FactorError {
             FactorError::DimensionMismatch { got, want } => {
                 write!(f, "matrix has dimension {got}, analyzed structure expects {want}")
             }
+            FactorError::TaskPanic => {
+                write!(f, "a worker panicked while executing a block task")
+            }
         }
     }
 }
@@ -122,6 +130,21 @@ impl From<KernelError> for FactorError {
     fn from(e: KernelError) -> Self {
         FactorError::Kernel(e)
     }
+}
+
+/// Acquire a block's values for reading, shrugging off lock poisoning: a
+/// kernel panic (caught by the executor and surfaced as
+/// [`FactorError::TaskPanic`]) leaves the block's `RwLock` poisoned, but
+/// the failed run is already discarded by the `Err` contract — a later
+/// successful refactorize overwrites every block — so poisoning carries
+/// no signal a later reader should die on.
+pub(crate) fn read_vals(lock: &RwLock<Vec<f64>>) -> RwLockReadGuard<'_, Vec<f64>> {
+    lock.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Writer counterpart of [`read_vals`].
+pub(crate) fn write_vals(lock: &RwLock<Vec<f64>>) -> RwLockWriteGuard<'_, Vec<f64>> {
+    lock.write().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl NumericMatrix {
@@ -165,14 +188,14 @@ impl NumericMatrix {
     /// and no storage is allocated or freed.
     pub fn zero_values(&mut self) {
         for v in &mut self.values {
-            v.get_mut().unwrap().fill(0.0);
+            v.get_mut().unwrap_or_else(PoisonError::into_inner).fill(0.0);
         }
     }
 
     /// Lock-free mutable access to one block's values (exclusive access
     /// to the whole numeric matrix guarantees soundness).
     pub fn values_mut(&mut self, id: u32) -> &mut [f64] {
-        self.values[id as usize].get_mut().unwrap()
+        self.values[id as usize].get_mut().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Zero one block's stored values — the block-granular reset used by
@@ -180,7 +203,7 @@ impl NumericMatrix {
     /// whose tasks re-execute and leaves every other block's factored
     /// values untouched.
     pub fn zero_block(&mut self, id: u32) {
-        self.values[id as usize].get_mut().unwrap().fill(0.0);
+        self.values[id as usize].get_mut().unwrap_or_else(PoisonError::into_inner).fill(0.0);
     }
 
     /// Execute one block operation with the given policy/backend.
@@ -200,7 +223,7 @@ impl NumericMatrix {
             BlockOp::Getrf { k } => {
                 let id = bm.block_id(k, k).ok_or(FactorError::MissingDiagonal(k))?;
                 let pat = bm.block(id);
-                let mut vals = self.values[id as usize].write().unwrap();
+                let mut vals = write_vals(&self.values[id as usize]);
                 match policy.choose(pat.density()) {
                     KernelKind::Sparse => kernels::getrf(pat, &mut vals, ws)?,
                     KernelKind::Dense => {
@@ -217,8 +240,8 @@ impl NumericMatrix {
                 let tid = bm.block_id(k, j).expect("GESSM target missing");
                 let dpat = bm.block(did);
                 let tpat = bm.block(tid);
-                let dvals = self.values[did as usize].read().unwrap();
-                let mut tvals = self.values[tid as usize].write().unwrap();
+                let dvals = read_vals(&self.values[did as usize]);
+                let mut tvals = write_vals(&self.values[tid as usize]);
                 match policy.choose(dpat.density().max(tpat.density())) {
                     KernelKind::Sparse => kernels::gessm(tpat, &mut tvals, dpat, &dvals, ws),
                     KernelKind::Dense => {
@@ -234,8 +257,8 @@ impl NumericMatrix {
                 let tid = bm.block_id(i, k).expect("TSTRF target missing");
                 let dpat = bm.block(did);
                 let tpat = bm.block(tid);
-                let dvals = self.values[did as usize].read().unwrap();
-                let mut tvals = self.values[tid as usize].write().unwrap();
+                let dvals = read_vals(&self.values[did as usize]);
+                let mut tvals = write_vals(&self.values[tid as usize]);
                 match policy.choose(dpat.density().max(tpat.density())) {
                     KernelKind::Sparse => kernels::tstrf(tpat, &mut tvals, dpat, &dvals, ws),
                     KernelKind::Dense => {
@@ -257,9 +280,9 @@ impl NumericMatrix {
                 let apat = bm.block(aid);
                 let bpat = bm.block(bid);
                 let cpat = bm.block(cid);
-                let avals = self.values[aid as usize].read().unwrap();
-                let bvals = self.values[bid as usize].read().unwrap();
-                let mut cvals = self.values[cid as usize].write().unwrap();
+                let avals = read_vals(&self.values[aid as usize]);
+                let bvals = read_vals(&self.values[bid as usize]);
+                let mut cvals = write_vals(&self.values[cid as usize]);
                 let dens = apat.density().max(bpat.density()).max(cpat.density());
                 match policy.choose(dens) {
                     KernelKind::Sparse => kernels::ssssm(
@@ -287,7 +310,7 @@ impl NumericMatrix {
 
     /// Snapshot values of a block (tests / assembly).
     pub fn block_values(&self, id: u32) -> Vec<f64> {
-        self.values[id as usize].read().unwrap().clone()
+        read_vals(&self.values[id as usize]).clone()
     }
 }
 
@@ -348,7 +371,7 @@ impl Factors {
         let positions = bm.blocking.positions();
         let mut coo = crate::sparse::Coo::with_capacity(n, n, bm.nnz());
         for (idx, blk) in bm.blocks.iter().enumerate() {
-            let vals = self.numeric.values[idx].read().unwrap();
+            let vals = read_vals(&self.numeric.values[idx]);
             let (rlo, clo) = (positions[blk.bi as usize], positions[blk.bj as usize]);
             for c in 0..blk.n_cols as usize {
                 for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {

@@ -1,7 +1,7 @@
 //! Blocked triangular solves: `L y = b` (forward) and `U x = y` (backward)
 //! over the factored `{L\U}` blocks — the final step of `Ax = b`.
 
-use super::factor::NumericMatrix;
+use super::factor::{read_vals, NumericMatrix};
 
 /// Solve `L U x = b` with the blocked factors (unit-lower L).
 pub fn solve(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
@@ -17,7 +17,7 @@ pub fn solve(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
         let (lo, hi) = (positions[k], positions[k + 1]);
         let did = bm.block_id(k, k).expect("diagonal block");
         let dpat = bm.block(did);
-        let dvals = nm.values[did as usize].read().unwrap();
+        let dvals = read_vals(&nm.values[did as usize]);
         // in-place unit-lower forward substitution within the diagonal block
         for c in 0..(hi - lo) {
             let alpha = x[lo + c];
@@ -40,7 +40,7 @@ pub fn solve(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
                 continue;
             }
             let rlo = positions[i];
-            let vals = nm.values[id as usize].read().unwrap();
+            let vals = read_vals(&nm.values[id as usize]);
             for c in 0..blk.n_cols as usize {
                 let alpha = x[lo + c];
                 if alpha == 0.0 {
@@ -58,7 +58,7 @@ pub fn solve(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
         let (lo, hi) = (positions[k], positions[k + 1]);
         let did = bm.block_id(k, k).expect("diagonal block");
         let dpat = bm.block(did);
-        let dvals = nm.values[did as usize].read().unwrap();
+        let dvals = read_vals(&nm.values[did as usize]);
         // backward substitution within the diagonal block
         for c in (0..(hi - lo)).rev() {
             let (s, e) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
@@ -82,7 +82,7 @@ pub fn solve(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
                 continue;
             }
             let rlo = positions[i];
-            let vals = nm.values[id as usize].read().unwrap();
+            let vals = read_vals(&nm.values[id as usize]);
             for c in 0..blk.n_cols as usize {
                 let xc = x[lo + c];
                 if xc == 0.0 {
@@ -130,7 +130,7 @@ pub fn solve_multi(nm: &NumericMatrix, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         let (lo, hi) = (positions[k], positions[k + 1]);
         let did = bm.block_id(k, k).expect("diagonal block");
         let dpat = bm.block(did);
-        let dvals = nm.values[did as usize].read().unwrap();
+        let dvals = read_vals(&nm.values[did as usize]);
         for c in 0..(hi - lo) {
             alpha.copy_from_slice(&x[(lo + c) * nrhs..(lo + c + 1) * nrhs]);
             if alpha.iter().all(|&a| a == 0.0) {
@@ -155,7 +155,7 @@ pub fn solve_multi(nm: &NumericMatrix, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
                 continue;
             }
             let rlo = positions[i];
-            let vals = nm.values[id as usize].read().unwrap();
+            let vals = read_vals(&nm.values[id as usize]);
             for c in 0..blk.n_cols as usize {
                 alpha.copy_from_slice(&x[(lo + c) * nrhs..(lo + c + 1) * nrhs]);
                 if alpha.iter().all(|&a| a == 0.0) {
@@ -177,7 +177,7 @@ pub fn solve_multi(nm: &NumericMatrix, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         let (lo, hi) = (positions[k], positions[k + 1]);
         let did = bm.block_id(k, k).expect("diagonal block");
         let dpat = bm.block(did);
-        let dvals = nm.values[did as usize].read().unwrap();
+        let dvals = read_vals(&nm.values[did as usize]);
         for c in (0..(hi - lo)).rev() {
             let (cs, ce) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
             let rows = &dpat.row_idx[cs..ce];
@@ -207,7 +207,7 @@ pub fn solve_multi(nm: &NumericMatrix, bs: &[Vec<f64>]) -> Vec<Vec<f64>> {
                 continue;
             }
             let rlo = positions[i];
-            let vals = nm.values[id as usize].read().unwrap();
+            let vals = read_vals(&nm.values[id as usize]);
             for c in 0..blk.n_cols as usize {
                 alpha.copy_from_slice(&x[(lo + c) * nrhs..(lo + c + 1) * nrhs]);
                 if alpha.iter().all(|&a| a == 0.0) {

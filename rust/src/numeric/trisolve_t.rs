@@ -3,7 +3,7 @@
 //! Needed for `Aᵀx = b` — adjoint solves in sensitivity analysis and
 //! transistor-level circuit simulation (the paper's application domain).
 
-use super::factor::NumericMatrix;
+use super::factor::{read_vals, NumericMatrix};
 
 /// Solve `Uᵀ Lᵀ x = b` with the blocked factors (unit-lower L).
 pub fn solve_transpose(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
@@ -23,7 +23,7 @@ pub fn solve_transpose(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
         // solve within diagonal block
         let did = bm.block_id(k, k).expect("diagonal block");
         let dpat = bm.block(did);
-        let dvals = nm.values[did as usize].read().unwrap();
+        let dvals = read_vals(&nm.values[did as usize]);
         for c in 0..dpat.n_cols as usize {
             let (s, _e) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
             let dpos = dpat.diag_pos[c] as usize;
@@ -43,7 +43,7 @@ pub fn solve_transpose(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
                 continue;
             }
             let clo = positions[j];
-            let vals = nm.values[id as usize].read().unwrap();
+            let vals = read_vals(&nm.values[id as usize]);
             for c in 0..blk.n_cols as usize {
                 let mut acc = 0.0;
                 for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {
@@ -68,7 +68,7 @@ pub fn solve_transpose(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
                 continue;
             }
             let rlo = positions[i];
-            let vals = nm.values[id as usize].read().unwrap();
+            let vals = read_vals(&nm.values[id as usize]);
             for c in 0..blk.n_cols as usize {
                 let mut acc = 0.0;
                 for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {
@@ -79,7 +79,7 @@ pub fn solve_transpose(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
         }
         // within diagonal block, columns descending
         let dpat = bm.block(did);
-        let dvals = nm.values[did as usize].read().unwrap();
+        let dvals = read_vals(&nm.values[did as usize]);
         for c in (0..dpat.n_cols as usize).rev() {
             let (s, e) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
             let dpos = dpat.diag_pos[c] as usize;

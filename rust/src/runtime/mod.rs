@@ -26,7 +26,7 @@ use crate::numeric::factor::DenseBackend;
 use crate::numeric::kernels::KernelError;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 enum Request {
     Run {
@@ -40,8 +40,14 @@ enum Request {
 
 /// Dense backend executing AOT artifacts on the PJRT CPU client, hosted on
 /// a service thread. `Send + Sync`; cheap to share across workers.
+///
+/// Submission is lock-free on the caller side: the mpsc sender is `Sync`
+/// (Rust ≥ 1.72), so a pool of executor workers dispatching dense ops
+/// sends directly on the shared channel instead of convoying on the old
+/// `Mutex<Sender>` — they serialize only where the hardware does, at the
+/// service thread itself.
 pub struct PjrtDense {
-    tx: Mutex<Sender<Request>>,
+    tx: Sender<Request>,
     sizes: Vec<usize>,
     num_artifacts: usize,
     executions: Arc<AtomicUsize>,
@@ -88,13 +94,7 @@ impl PjrtDense {
                 }
             })?;
         let (sizes, num_artifacts) = boot_rx.recv()??;
-        Ok(Self {
-            tx: Mutex::new(tx),
-            sizes,
-            num_artifacts,
-            executions,
-            handle: Some(handle),
-        })
+        Ok(Self { tx, sizes, num_artifacts, executions, handle: Some(handle) })
     }
 
     /// The tile size used for a requested dimension.
@@ -119,9 +119,10 @@ impl PjrtDense {
 
     fn call(&self, op: Op, size: usize, args: Vec<Vec<f64>>) -> anyhow::Result<Vec<f64>> {
         let (reply_tx, reply_rx) = channel();
+        // `mpsc::Sender` is `Sync` (Rust >= 1.72): concurrent submitters
+        // enqueue directly on the channel's lock-free queue — the old
+        // `Mutex<Sender>` convoy point is gone entirely
         self.tx
-            .lock()
-            .unwrap()
             .send(Request::Run { op, size, args, reply: reply_tx })
             .map_err(|_| anyhow::anyhow!("PJRT service thread gone"))?;
         reply_rx.recv()?
@@ -161,7 +162,7 @@ fn reg_has(reg: &ArtifactRegistry, size: usize) -> bool {
 
 impl Drop for PjrtDense {
     fn drop(&mut self) {
-        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        let _ = self.tx.send(Request::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }

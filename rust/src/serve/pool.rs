@@ -9,6 +9,12 @@
 //! partitioned-layout literature motivates. Checkout order is LIFO (the
 //! most recently returned session is handed out next), which keeps the
 //! hot session's storage warm in cache under bursty load.
+//!
+//! Pooled sessions also share one *process-wide* persistent
+//! [`crate::coordinator::Executor`] (per worker count): draining many
+//! pools/shards concurrently multiplexes their DAG runs over a single
+//! set of worker threads instead of paying a `P`-thread spawn per
+//! drained batch.
 
 use crate::session::{FactorPlan, SolverSession};
 use std::ops::{Deref, DerefMut};

@@ -7,10 +7,17 @@
 //! per-call block allocation** happen on this path — exactly the repeated
 //! Newton-step / transient-timestep workload of SPICE-style circuit
 //! simulation the paper targets.
+//!
+//! DAG runs execute on the persistent work-stealing
+//! [`crate::coordinator::Executor`] (shared process-wide per worker
+//! count) with a per-session reusable [`crate::coordinator::RunState`],
+//! so a steady-state replay spawns no threads and allocates nothing —
+//! the spawn-per-call baseline remains selectable via
+//! [`SolverSession::set_scheduler`] for benchmarking.
 
 use super::changeset::ChangeSet;
 use super::plan::FactorPlan;
-use crate::coordinator::{self, RunReport};
+use crate::coordinator::{self, Executor, RunReport, RunState, Scheduler};
 use crate::numeric::factor::{CpuDense, DenseBackend, FactorError, Factors, NumericMatrix};
 use crate::numeric::{trisolve, trisolve_t};
 use crate::sparse::Csc;
@@ -80,6 +87,17 @@ pub struct SolverSession<'b> {
     plan: Arc<FactorPlan>,
     numeric: NumericMatrix,
     backend: &'b (dyn DenseBackend + Sync),
+    /// Persistent work-stealing pool the DAG runs execute on — the
+    /// process-wide shared pool for the plan's worker count, so every
+    /// session (and serve shard) with the same setting reuses one set of
+    /// threads instead of spawning per call.
+    exec: Arc<Executor>,
+    /// Reusable per-run scheduling state (dependency counters, tallies),
+    /// preallocated to the plan's DAG so replays allocate nothing.
+    run_state: RunState,
+    /// Persistent executor by default; the spawn-per-call baseline is
+    /// selectable for benchmarking/differential testing.
+    sched: Scheduler,
     refactor_count: usize,
     factored: bool,
     /// A-values (CSC order) the current factors were computed from — the
@@ -114,7 +132,11 @@ impl<'b> SolverSession<'b> {
         let nnz_a = plan.nnz_a();
         let nblocks = plan.structure.blocks.len();
         let ntasks = plan.dag.tasks.len();
+        let workers = plan.options().workers;
         Self {
+            exec: Executor::shared(workers),
+            run_state: RunState::sized(ntasks, workers),
+            sched: Scheduler::Persistent,
             plan,
             numeric,
             backend,
@@ -129,6 +151,25 @@ impl<'b> SolverSession<'b> {
 
     pub fn plan(&self) -> &Arc<FactorPlan> {
         &self.plan
+    }
+
+    /// The persistent executor this session's DAG runs execute on
+    /// (shared process-wide among sessions with the same worker count).
+    pub fn executor(&self) -> &Arc<Executor> {
+        &self.exec
+    }
+
+    /// Switch between the persistent work-stealing executor (the
+    /// default) and the spawn-per-call baseline scheduler. Factors are
+    /// bit-identical either way — only scheduling overhead differs; the
+    /// toggle exists for `repro sched-bench` and differential tests.
+    pub fn set_scheduler(&mut self, sched: Scheduler) {
+        self.sched = sched;
+    }
+
+    /// The scheduler re-factorizations currently run on.
+    pub fn scheduler(&self) -> Scheduler {
+        self.sched
     }
 
     /// The blocked numeric storage holding the current factors.
@@ -166,14 +207,22 @@ impl<'b> SolverSession<'b> {
         let (_, scatter_seconds) = timed(|| self.plan.scatter_values(values, &mut self.numeric));
         self.current_values.copy_from_slice(values);
         let opts = self.plan.options();
-        let (run, numeric_seconds) = timed(|| {
-            coordinator::run_dag(
+        let (run, numeric_seconds) = timed(|| match self.sched {
+            Scheduler::Persistent => coordinator::run_dag(
+                &self.numeric,
+                &self.plan.dag,
+                &opts.kernels,
+                self.backend,
+                &self.exec,
+                &mut self.run_state,
+            ),
+            Scheduler::SpawnPerCall => coordinator::run_dag_spawn(
                 &self.numeric,
                 &self.plan.dag,
                 &opts.kernels,
                 self.backend,
                 opts.workers,
-            )
+            ),
         });
         let run = run?;
         self.factored = true;
@@ -327,15 +376,24 @@ impl<'b> SolverSession<'b> {
                 },
             });
         }
-        let (run, numeric_seconds) = timed(|| {
-            coordinator::run_dag_subset(
+        let (run, numeric_seconds) = timed(|| match self.sched {
+            Scheduler::Persistent => coordinator::run_dag_subset(
+                &self.numeric,
+                &plan.dag,
+                &self.in_subset,
+                &opts.kernels,
+                self.backend,
+                &self.exec,
+                &mut self.run_state,
+            ),
+            Scheduler::SpawnPerCall => coordinator::run_dag_subset_spawn(
                 &self.numeric,
                 &plan.dag,
                 &self.in_subset,
                 &opts.kernels,
                 self.backend,
                 opts.workers,
-            )
+            ),
         });
         let run = run?;
         self.factored = true;

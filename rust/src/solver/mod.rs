@@ -16,7 +16,7 @@
 //! [`crate::session`] docs).
 
 use crate::blocking::{BalanceReport, IrregularParams};
-use crate::coordinator;
+use crate::coordinator::{self, Executor, RunState};
 use crate::gpu_model::CostModel;
 use crate::numeric::factor::{CpuDense, DenseBackend, FactorError, Factors, NumericMatrix};
 use crate::numeric::KernelPolicy;
@@ -201,24 +201,30 @@ impl Factorization {
     }
 }
 
-/// The solver: configuration + dense backend.
+/// The solver: configuration + dense backend + a handle on the shared
+/// persistent executor (repeated `factorize` calls reuse one worker pool
+/// and one set of scheduling counters instead of spawning threads per
+/// call).
 pub struct Solver<'b> {
     opts: SolveOptions,
     backend: &'b (dyn DenseBackend + Sync),
+    exec: Arc<Executor>,
+    run_state: RunState,
 }
 
 impl Solver<'static> {
     /// Solver with the pure-rust dense backend.
     pub fn new(opts: SolveOptions) -> Self {
         static CPU: CpuDense = CpuDense;
-        Solver { opts, backend: &CPU }
+        Self::with_backend(opts, &CPU)
     }
 }
 
 impl<'b> Solver<'b> {
     /// Solver with a custom dense backend (e.g. [`crate::runtime::PjrtDense`]).
     pub fn with_backend(opts: SolveOptions, backend: &'b (dyn DenseBackend + Sync)) -> Self {
-        Solver { opts, backend }
+        let exec = Executor::shared(opts.workers);
+        Solver { opts, backend, exec, run_state: RunState::new() }
     }
 
     pub fn options(&self) -> &SolveOptions {
@@ -240,7 +246,14 @@ impl<'b> Solver<'b> {
         let plan = Arc::new(FactorPlan::build_for_oneshot(a, &self.opts));
         let nm = NumericMatrix::from_blocked(plan.structure.clone());
         let (run, numeric_seconds) = timed(|| {
-            coordinator::run_dag(&nm, &plan.dag, &self.opts.kernels, self.backend, self.opts.workers)
+            coordinator::run_dag(
+                &nm,
+                &plan.dag,
+                &self.opts.kernels,
+                self.backend,
+                &self.exec,
+                &mut self.run_state,
+            )
         });
         let run = run?;
         let report = report_from_plan(&plan, numeric_seconds, &run.busy);

@@ -391,3 +391,42 @@ fn scalar_shrinker_bisects_to_threshold() {
     assert_eq!(shrink::minimize_scalar(0, 100, |x| x >= 37), 37);
     assert_eq!(shrink::minimize_scalar(5, 5, |_| true), 5);
 }
+
+// ---- determinism under work stealing ----
+
+/// Stealing moves tasks between workers but never reorders the per-block
+/// update chains, so every executor size — and every repetition, with
+/// whatever steal schedule the OS produces — must reproduce
+/// `factorize_sequential` bit for bit. Runs each seeded matrix on 1-, 2-
+/// and 8-worker executors, several epochs each, under both the
+/// persistent work-stealing scheduler and the spawn-per-call baseline.
+#[test]
+fn determinism_under_stealing_matches_sequential_bitwise() {
+    use sparselu::coordinator::Scheduler;
+    use sparselu::numeric::factor::{factorize_sequential, CpuDense};
+
+    for seed in [3u64, 11, 27] {
+        let a = common::random_matrix_sized(seed, 140);
+        for workers in [1u32, 2, 8] {
+            let opts = SolveOptions::ours(workers);
+            let plan = Arc::new(FactorPlan::build(&a, &opts));
+            let seq =
+                factorize_sequential(plan.structure.clone(), &opts.kernels, &CpuDense).unwrap();
+            let mut session = SolverSession::from_plan(plan.clone());
+            for sched in [Scheduler::Persistent, Scheduler::SpawnPerCall] {
+                session.set_scheduler(sched);
+                for round in 0..3 {
+                    session.refactorize(&a.values).unwrap();
+                    for id in 0..plan.structure.blocks.len() {
+                        assert_eq!(
+                            session.numeric().block_values(id as u32),
+                            seq.numeric.block_values(id as u32),
+                            "block {id} differs from sequential \
+                             (seed={seed}, workers={workers}, {sched:?}, round={round})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

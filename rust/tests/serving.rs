@@ -258,8 +258,7 @@ fn step_request(step: &Step) -> Request {
     }
 }
 
-#[test]
-fn router_stress_every_tenant_bitwise_matches_its_oracle() {
+fn router_stress_with_workers(workers: u32) {
     const STEPS: usize = 28;
     const BURST: usize = 3;
 
@@ -270,7 +269,7 @@ fn router_stress_every_tenant_bitwise_matches_its_oracle() {
         (gen::banded_fem(200, &[1, 2, 3, 20, 21], 0.85, 0xFE3), 33),
         (gen::grid2d_laplacian(9, 13), 44),
     ];
-    let opts = SolveOptions::ours(1);
+    let opts = SolveOptions::ours(workers);
     let router = Router::new(
         opts.clone(),
         RouterConfig { max_shards: 4, plan_cache_capacity: 8, ..RouterConfig::default() },
@@ -325,6 +324,21 @@ fn router_stress_every_tenant_bitwise_matches_its_oracle() {
         assert!(stats.tasks_executed > 0);
     }
     assert_eq!(router.stats().evictions, 0, "no eviction under a fitting working set");
+}
+
+#[test]
+fn router_stress_every_tenant_bitwise_matches_its_oracle() {
+    router_stress_with_workers(1);
+}
+
+/// The same 4-tenant stress, but with 2-worker plans: every tenant's
+/// sessions (and the single-threaded oracles) now execute on the ONE
+/// process-wide shared work-stealing executor, so concurrent shard
+/// drains multiplex jobs over shared worker threads — and must still
+/// bit-match their per-pattern oracles.
+#[test]
+fn router_stress_bitwise_matches_over_shared_executor() {
+    router_stress_with_workers(2);
 }
 
 #[test]
