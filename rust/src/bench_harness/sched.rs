@@ -44,6 +44,11 @@ pub struct StormResult {
     pub steals: u64,
     pub wakeups: u64,
     pub parks: u64,
+    /// Pool shape from the [`crate::coordinator::ExecutorStats`]
+    /// snapshot after the storms: thread count and how many were idle
+    /// at snapshot time (the storm just ended, so normally all of them).
+    pub pool_workers: u32,
+    pub idle_workers: usize,
 }
 
 impl StormResult {
@@ -80,7 +85,8 @@ impl SchedReport {
                         "\"partial_spawn_rps\": {:.3}, \"partial_persistent_rps\": {:.3}, ",
                         "\"partial_speedup\": {:.3}, ",
                         "\"tasks_full\": {}, \"tasks_partial\": {}, ",
-                        "\"steals\": {}, \"wakeups\": {}, \"parks\": {}}}"
+                        "\"steals\": {}, \"wakeups\": {}, \"parks\": {}, ",
+                        "\"pool_workers\": {}, \"idle_workers\": {}}}"
                     ),
                     r.name,
                     r.n,
@@ -98,6 +104,8 @@ impl SchedReport {
                     r.steals,
                     r.wakeups,
                     r.parks,
+                    r.pool_workers,
+                    r.idle_workers,
                 )
             })
             .collect();
@@ -242,6 +250,8 @@ pub fn run(replays: usize, worker_counts: &[u32]) -> SchedReport {
                 steals: stats1.steals - stats0.steals,
                 wakeups: stats1.wakeups - stats0.wakeups,
                 parks: stats1.parks - stats0.parks,
+                pool_workers: stats1.workers,
+                idle_workers: stats1.idle_workers,
             });
         }
     }
@@ -261,10 +271,13 @@ mod tests {
             assert!(r.full_persistent_rps > 0.0);
             assert!(r.partial_persistent_rps > 0.0);
             assert!(r.tasks_partial <= r.tasks_full);
+            assert_eq!(r.pool_workers, r.workers, "stats snapshot reports the pool shape");
+            assert!(r.idle_workers <= r.pool_workers as usize);
         }
         let json = report.to_json();
         assert!(json.contains("\"bench\": \"sched\""));
         assert!(json.contains("refactorize-storm"));
         assert!(json.contains("\"steals\""));
+        assert!(json.contains("\"pool_workers\""));
     }
 }

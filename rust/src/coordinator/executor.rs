@@ -336,8 +336,11 @@ impl Shared {
     }
 }
 
-/// Cumulative scheduler-health counters of one [`Executor`] (reported by
-/// `repro sched-bench` into `BENCH_sched.json`).
+/// Scheduler-health snapshot of one [`Executor`]: monotone counters
+/// plus the pool's instantaneous shape. Taken lock-free by
+/// [`Executor::stats`] (a handful of `Relaxed`/`SeqCst` atomic loads),
+/// so it is cheap enough for a metrics refresher to call on every
+/// scrape and for `repro sched-bench` to delta around each storm.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ExecutorStats {
     /// DAG runs submitted.
@@ -348,6 +351,12 @@ pub struct ExecutorStats {
     pub wakeups: u64,
     /// Times a worker parked (went fully idle).
     pub parks: u64,
+    /// Worker threads in the pool (0 threads are spawned for a 1-worker
+    /// executor — runs execute inline — but `workers` still reads 1).
+    pub workers: u32,
+    /// Workers idle right now (registered in the idle set, parked or
+    /// about to park). `workers - idle_workers` is the busy gauge.
+    pub idle_workers: usize,
 }
 
 /// Persistent worker pool executing task DAGs. See the [module
@@ -421,14 +430,18 @@ impl Executor {
         self.workers
     }
 
-    /// Cumulative scheduler-health counters (monotonic; subtract two
-    /// snapshots for a per-interval reading).
+    /// Lock-free scheduler-health snapshot: the monotone counters
+    /// (subtract two snapshots for a per-interval reading) plus worker
+    /// count and the idle-worker gauge. Safe to call from any thread at
+    /// any rate — it takes no locks and never perturbs the pool.
     pub fn stats(&self) -> ExecutorStats {
         ExecutorStats {
             runs: self.shared.runs.load(Ordering::Relaxed),
             steals: self.shared.steals.load(Ordering::Relaxed),
             wakeups: self.shared.wakeups.load(Ordering::Relaxed),
             parks: self.shared.parks.load(Ordering::Relaxed),
+            workers: self.workers,
+            idle_workers: self.shared.idle_count.load(Ordering::SeqCst),
         }
     }
 
@@ -976,5 +989,24 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         assert!(exec.stats().parks >= 3, "idle workers should park");
+    }
+
+    #[test]
+    fn stats_snapshot_reports_pool_shape() {
+        let exec = Executor::new(4);
+        assert_eq!(exec.stats().workers, 4);
+        // wait for the idle gauge to converge to "everyone idle"
+        for _ in 0..500 {
+            if exec.stats().idle_workers == 4 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(exec.stats().idle_workers, 4, "idle pool: all workers in the idle set");
+        // the 1-worker inline executor has no threads and so no idlers
+        let inline = Executor::new(1);
+        let st = inline.stats();
+        assert_eq!(st.workers, 1);
+        assert_eq!(st.idle_workers, 0);
     }
 }

@@ -53,6 +53,14 @@
 //!   cold starts), and [`serve::loadgen`] (the closed-loop single-pool
 //!   and multi-tenant throughput / tail-latency benches behind `repro
 //!   serve-bench`).
+//! * [`obs`] — the observability spine: dependency-free metric
+//!   [`obs::Registry`] (atomic counters/gauges, fixed-bucket latency
+//!   histograms), Prometheus text exposition 0.0.4
+//!   ([`obs::Registry::render`] + strict [`obs::validate`] parser), a
+//!   minimal `GET /metrics` scrape endpoint ([`obs::MetricsServer`]),
+//!   and the SLO-driven [`obs::Autoscaler`] that resizes per-tenant
+//!   session pools / queue bounds and sheds
+//!   [`serve::Priority::Low`] traffic under saturation.
 //! * [`bench_harness`] — regenerates every table and figure of the paper.
 //!
 //! `ARCHITECTURE.md` at the repository root walks the whole pipeline —
@@ -149,6 +157,7 @@ pub mod blocking;
 pub mod numeric;
 pub mod coordinator;
 pub mod gpu_model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod session;

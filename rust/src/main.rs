@@ -14,6 +14,7 @@
 
 use anyhow::{bail, Context, Result};
 use sparselu::bench_harness::{self, SuiteScale};
+use sparselu::obs;
 use sparselu::ordering::OrderingMethod;
 use sparselu::runtime::PjrtDense;
 use sparselu::serve::{loadgen, persist, RouterConfig, ScenarioMix};
@@ -55,6 +56,7 @@ fn run() -> Result<()> {
         }
         "serve-bench" => cmd_serve_bench(&flags),
         "sched-bench" => cmd_sched_bench(&flags),
+        "metrics-dump" => cmd_metrics_dump(&flags),
         "artifacts-check" => cmd_artifacts_check(&flags),
         "help" | "--help" | "-h" => {
             print_help();
@@ -75,7 +77,9 @@ USAGE:
   repro serve-bench [--matrix SPEC] [--clients K] [--requests N] [--sessions S]
                     [--mix F,S,V] [--tenants M] [--plan-dir DIR] [--out FILE]
                     [--workers N] [--blocking B]
+                    [--metrics-addr HOST:PORT] [--metrics-out FILE] [--autoscale]
   repro sched-bench [--replays N] [--worker-counts 1,2,4] [--out FILE]
+  repro metrics-dump (--addr HOST:PORT | --file PATH) [--check]
   repro artifacts-check [--dir artifacts]
 
 SCHED-BENCH (the scheduler bench):
@@ -97,6 +101,21 @@ SERVE-BENCH (the serving-layer load generator):
   pattern fingerprint through serve::Router to per-tenant shards that
   drain concurrently — per-tenant throughput and p50/p99 land in the
   same JSON under "multi_tenant". --tenants 1 skips it.
+
+  With --metrics-addr a Prometheus-style scrape endpoint (GET /metrics,
+  text exposition 0.0.4, plus /healthz) serves the run's per-tenant
+  queue/latency/batch histograms, session-pool occupancy, plan-cache and
+  executor counters while the load runs; at the end the bench
+  self-scrapes, validates the exposition format, and writes the text to
+  --metrics-out (default BENCH_metrics.txt). --autoscale additionally
+  runs the SLO-driven controller during the multi-tenant phase (pool
+  resize + queue rebound + low-priority shedding).
+
+METRICS-DUMP (exposition inspection):
+  Fetch /metrics from a live endpoint (--addr) or read a scraped file
+  (--file), validate the exposition format strictly, and print the text
+  (--check prints only the family/series/sample summary). Exits nonzero
+  on any format violation.
 
 MATRIX SPEC:
   path/to/file.mtx             MatrixMarket file (SuiteSparse downloads work)
@@ -328,6 +347,19 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_serve.json".into());
     println!("matrix: {} n={} nnz={}", spec, a.n_rows(), a.nnz());
 
+    // a bench-scoped registry (not Registry::global) so the scrape shows
+    // exactly this run; served live while the load runs when requested
+    let registry = Arc::new(obs::Registry::new());
+    let metrics_server = match flags.get("metrics-addr") {
+        Some(addr) => {
+            let server = obs::MetricsServer::serve(addr, registry.clone())
+                .with_context(|| format!("binding metrics endpoint on {addr}"))?;
+            println!("metrics: http://{}/metrics", server.local_addr());
+            Some(server)
+        }
+        None => None,
+    };
+
     // plan acquisition — through the persistence layer when --plan-dir
     // is given, so repeat runs take the serving restart's warm path
     let plan = match flags.get("plan-dir") {
@@ -386,8 +418,10 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
             router: RouterConfig {
                 sessions_per_shard: 1,
                 plan_dir: flags.get("plan-dir").map(std::path::PathBuf::from),
+                registry: Some(registry.clone()),
                 ..RouterConfig::default()
             },
+            autoscale: flags.contains_key("autoscale").then(obs::SloPolicy::default),
         };
         println!(
             "multi-tenant: {clients} clients over {tenants} patterns ({})",
@@ -458,6 +492,49 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     };
     std::fs::write(&out, json).with_context(|| format!("writing {out}"))?;
     println!("\nwrote {out}");
+
+    if let Some(server) = &metrics_server {
+        let text = obs::scrape(server.local_addr(), "/metrics")
+            .context("self-scraping the metrics endpoint")?;
+        let summary = obs::validate(&text)
+            .map_err(|e| anyhow::anyhow!("metrics exposition invalid: {e}"))?;
+        let metrics_out =
+            flags.get("metrics-out").cloned().unwrap_or_else(|| "BENCH_metrics.txt".into());
+        std::fs::write(&metrics_out, &text).with_context(|| format!("writing {metrics_out}"))?;
+        println!(
+            "metrics: {} families, {} series, {} samples (exposition valid) -> {metrics_out}",
+            summary.families,
+            summary.series.len(),
+            summary.samples
+        );
+    }
+    Ok(())
+}
+
+fn cmd_metrics_dump(flags: &HashMap<String, String>) -> Result<()> {
+    let (text, source) = match (flags.get("addr"), flags.get("file")) {
+        (Some(addr), None) => (
+            obs::scrape(addr.as_str(), "/metrics").with_context(|| format!("scraping {addr}"))?,
+            addr.clone(),
+        ),
+        (None, Some(path)) => (
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?,
+            path.clone(),
+        ),
+        _ => bail!("metrics-dump needs exactly one of --addr HOST:PORT or --file PATH"),
+    };
+    let summary = obs::validate(&text)
+        .map_err(|e| anyhow::anyhow!("{source}: exposition format error: {e}"))?;
+    if flags.contains_key("check") {
+        println!(
+            "OK {source}: {} families, {} series, {} samples",
+            summary.families,
+            summary.series.len(),
+            summary.samples
+        );
+    } else {
+        print!("{text}");
+    }
     Ok(())
 }
 

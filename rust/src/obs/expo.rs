@@ -1,0 +1,505 @@
+//! Prometheus text exposition format 0.0.4: renderer and validator.
+//!
+//! [`render`] turns a registry snapshot into the `# HELP` / `# TYPE` /
+//! sample-line text a Prometheus server scrapes; [`validate`] is a
+//! strict parser of that format used three ways: by the golden
+//! format-conformance test, by `repro metrics-dump --check`, and by CI
+//! against the `BENCH_metrics.txt` artifact. Having the validator in
+//! the tree (instead of trusting the renderer) means a rendering
+//! regression fails a test with the offending line, not a scrape in
+//! production.
+
+use super::metrics::{FamilySnapshot, MetricKind, SampleValue};
+use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
+
+/// Escape a `# HELP` text: `\` and newline.
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: `\`, `"` and newline.
+fn escape_label_value(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Format a sample value / bucket bound the way Prometheus expects:
+/// `+Inf`, `-Inf`, `NaN`, else shortest `f64` display.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render `{k="v",...}`; `extra` appends a final pair (used for `le`).
+fn fmt_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v))).collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label_value(v)));
+    }
+    if parts.is_empty() { String::new() } else { format!("{{{}}}", parts.join(",")) }
+}
+
+/// Render families (as produced by
+/// [`crate::obs::Registry::snapshot`]) to exposition text.
+pub fn render(families: &[FamilySnapshot]) -> String {
+    let mut out = String::new();
+    for fam in families {
+        if fam.series.is_empty() {
+            continue;
+        }
+        let _ = writeln!(out, "# HELP {} {}", fam.name, escape_help(&fam.help));
+        let _ = writeln!(out, "# TYPE {} {}", fam.name, fam.kind.as_str());
+        for s in &fam.series {
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    let _ = writeln!(out, "{}{} {v}", fam.name, fmt_labels(&s.labels, None));
+                }
+                SampleValue::Gauge(v) => {
+                    let _ = writeln!(
+                        out,
+                        "{}{} {}",
+                        fam.name,
+                        fmt_labels(&s.labels, None),
+                        fmt_value(*v)
+                    );
+                }
+                SampleValue::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, bound) in h.bounds.iter().enumerate() {
+                        cum += h.counts[i];
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {cum}",
+                            fam.name,
+                            fmt_labels(&s.labels, Some(("le", &fmt_value(*bound))))
+                        );
+                    }
+                    cum += h.counts[h.bounds.len()];
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{} {cum}",
+                        fam.name,
+                        fmt_labels(&s.labels, Some(("le", "+Inf")))
+                    );
+                    let _ = writeln!(
+                        out,
+                        "{}_sum{} {}",
+                        fam.name,
+                        fmt_labels(&s.labels, None),
+                        fmt_value(h.sum)
+                    );
+                    let _ =
+                        writeln!(out, "{}_count{} {cum}", fam.name, fmt_labels(&s.labels, None));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// What [`validate`] found in a conforming exposition.
+#[derive(Clone, Debug)]
+pub struct ExpoSummary {
+    /// Number of metric families (`# TYPE` lines).
+    pub families: usize,
+    /// Total sample lines.
+    pub samples: usize,
+    /// Distinct series identities: one per `(family, label set)` —
+    /// histogram `_bucket`/`_sum`/`_count` lines collapse into one.
+    pub series: Vec<String>,
+}
+
+/// A parsed sample line.
+struct Sample {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+fn parse_value(s: &str) -> Result<f64, String> {
+    match s {
+        "+Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        _ => s.parse::<f64>().map_err(|_| format!("unparseable value {s:?}")),
+    }
+}
+
+fn valid_name(s: &str, label: bool) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || (!label && c == ':') => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || (!label && c == ':'))
+}
+
+/// Parse one sample line into name, labels and value.
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let err = |m: &str| format!("{m} in {line:?}");
+    let (name_part, rest) = match line.find('{') {
+        Some(b) => (&line[..b], &line[b..]),
+        None => {
+            let sp = line.find(' ').ok_or_else(|| err("missing value"))?;
+            (&line[..sp], &line[sp..])
+        }
+    };
+    if !valid_name(name_part, false) {
+        return Err(err("invalid metric name"));
+    }
+    let mut labels = Vec::new();
+    let value_str;
+    if let Some(rest) = rest.strip_prefix('{') {
+        // parse k="v" pairs, honoring escapes inside the quoted value
+        let mut chars = rest.char_indices().peekable();
+        let mut key_start = 0;
+        loop {
+            // key
+            let eq = loop {
+                match chars.next() {
+                    Some((i, '=')) => break i,
+                    Some((_, c)) if c.is_ascii_alphanumeric() || c == '_' => {}
+                    Some((i, '}')) if i == key_start => {
+                        // empty label set `{}` — only legal as the whole set
+                        if !labels.is_empty() {
+                            return Err(err("trailing comma before }"));
+                        }
+                        break usize::MAX;
+                    }
+                    _ => return Err(err("malformed label name")),
+                }
+            };
+            if eq == usize::MAX {
+                let after = &rest[key_start + 1..];
+                value_str = after.strip_prefix(' ').ok_or_else(|| err("missing value"))?;
+                break;
+            }
+            let key = &rest[key_start..eq];
+            if !valid_name(key, true) {
+                return Err(err("invalid label name"));
+            }
+            match chars.next() {
+                Some((_, '"')) => {}
+                _ => return Err(err("label value not quoted")),
+            }
+            let mut val = String::new();
+            loop {
+                match chars.next() {
+                    Some((_, '\\')) => match chars.next() {
+                        Some((_, '\\')) => val.push('\\'),
+                        Some((_, '"')) => val.push('"'),
+                        Some((_, 'n')) => val.push('\n'),
+                        _ => return Err(err("bad escape in label value")),
+                    },
+                    Some((_, '"')) => break,
+                    Some((_, c)) => val.push(c),
+                    None => return Err(err("unterminated label value")),
+                }
+            }
+            labels.push((key.to_string(), val));
+            match chars.next() {
+                Some((i, ',')) => key_start = i + 1,
+                Some((i, '}')) => {
+                    let after = &rest[i + 1..];
+                    value_str = after.strip_prefix(' ').ok_or_else(|| err("missing value"))?;
+                    break;
+                }
+                _ => return Err(err("expected , or } after label")),
+            }
+        }
+    } else {
+        value_str = rest.strip_prefix(' ').ok_or_else(|| err("missing value"))?;
+    }
+    let value_str = value_str.trim_end();
+    if value_str.contains(' ') {
+        // a timestamp would appear here; we neither emit nor accept one
+        return Err(err("unexpected timestamp or trailing tokens"));
+    }
+    let value = parse_value(value_str).map_err(|m| err(&m))?;
+    Ok(Sample { name: name_part.to_string(), labels, value })
+}
+
+fn series_id(family: &str, labels: &[(String, String)]) -> String {
+    let mut labels: Vec<&(String, String)> = labels.iter().collect();
+    labels.sort();
+    let parts: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v:?}")).collect();
+    format!("{family}{{{}}}", parts.join(","))
+}
+
+/// Validate exposition text, enforcing what our renderer (and a scrape
+/// consumer) rely on:
+///
+/// * every family has `# HELP` then `# TYPE` (in that order, once),
+///   followed by that family's samples, contiguously;
+/// * sample names match the family (histogram samples may append
+///   `_bucket`/`_sum`/`_count`);
+/// * label names and metric names are well-formed, label values
+///   unescape cleanly, values parse as `f64`;
+/// * no duplicate `(name, labels)` sample;
+/// * per histogram series: `le` bounds ascending with `+Inf` last,
+///   bucket counts cumulative (non-decreasing), `le="+Inf"` equals
+///   `_count`, and `_sum`/`_count` both present;
+/// * counter values are finite and non-negative.
+pub fn validate(text: &str) -> Result<ExpoSummary, String> {
+    let mut families = 0usize;
+    let mut samples = 0usize;
+    let mut seen_families: HashSet<String> = HashSet::new();
+    let mut seen_samples: HashSet<String> = HashSet::new();
+    let mut series: HashSet<String> = HashSet::new();
+
+    // current family state
+    let mut cur_name: Option<String> = None;
+    let mut cur_kind: Option<MetricKind> = None;
+    let mut cur_has_samples = false;
+    let mut pending_help: Option<String> = None;
+    // histogram bookkeeping for the *current* family:
+    // series-id → (bounds-with-counts, sum?, count?)
+    type HistState = (Vec<(f64, f64)>, Option<f64>, Option<f64>);
+    let mut hist: HashMap<String, HistState> = HashMap::new();
+
+    fn close_family(
+        name: &Option<String>,
+        kind: &Option<MetricKind>,
+        has_samples: bool,
+        hist: &mut HashMap<String, HistState>,
+    ) -> Result<(), String> {
+        if let Some(name) = name {
+            if !has_samples {
+                return Err(format!("family {name} has HELP/TYPE but no samples"));
+            }
+            if *kind == Some(MetricKind::Histogram) {
+                for (id, (buckets, sum, count)) in hist.iter() {
+                    if buckets.is_empty() {
+                        return Err(format!("histogram series {id} has no buckets"));
+                    }
+                    let mut prev_bound = f64::NEG_INFINITY;
+                    let mut prev_cum = -1.0;
+                    for (bound, cum) in buckets {
+                        if *bound <= prev_bound {
+                            return Err(format!("histogram {id}: le bounds not ascending"));
+                        }
+                        if *cum < prev_cum {
+                            return Err(format!("histogram {id}: bucket counts not cumulative"));
+                        }
+                        prev_bound = *bound;
+                        prev_cum = *cum;
+                    }
+                    let (last_bound, last_cum) = buckets[buckets.len() - 1];
+                    if last_bound != f64::INFINITY {
+                        return Err(format!("histogram {id}: missing le=\"+Inf\" bucket"));
+                    }
+                    let sum = sum.ok_or_else(|| format!("histogram {id}: missing _sum"))?;
+                    let count = count.ok_or_else(|| format!("histogram {id}: missing _count"))?;
+                    if count != last_cum {
+                        return Err(format!(
+                            "histogram {id}: _count {count} != +Inf bucket {last_cum}"
+                        ));
+                    }
+                    if !sum.is_finite() {
+                        return Err(format!("histogram {id}: non-finite _sum"));
+                    }
+                }
+            }
+        }
+        hist.clear();
+        Ok(())
+    }
+
+    for raw in text.lines() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            if let Some(orphan) = pending_help.take() {
+                return Err(format!("HELP for {orphan} not followed by its TYPE"));
+            }
+            close_family(&cur_name, &cur_kind, cur_has_samples, &mut hist)?;
+            cur_name = None;
+            cur_kind = None;
+            cur_has_samples = false;
+            let (name, _help) =
+                rest.split_once(' ').map(|(n, h)| (n, h)).unwrap_or((rest, ""));
+            if !valid_name(name, false) {
+                return Err(format!("invalid family name in {line:?}"));
+            }
+            if !seen_families.insert(name.to_string()) {
+                return Err(format!("family {name} declared twice"));
+            }
+            pending_help = Some(name.to_string());
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind_str) =
+                rest.split_once(' ').ok_or_else(|| format!("malformed TYPE line {line:?}"))?;
+            match pending_help.take() {
+                Some(h) if h == name => {}
+                _ => return Err(format!("TYPE for {name} not directly preceded by its HELP")),
+            }
+            let kind = match kind_str {
+                "counter" => MetricKind::Counter,
+                "gauge" => MetricKind::Gauge,
+                "histogram" => MetricKind::Histogram,
+                other => return Err(format!("unknown metric type {other:?}")),
+            };
+            cur_name = Some(name.to_string());
+            cur_kind = Some(kind);
+            families += 1;
+        } else if line.starts_with('#') {
+            return Err(format!("unexpected comment line {line:?}"));
+        } else {
+            let fam = cur_name
+                .as_deref()
+                .ok_or_else(|| format!("sample before any HELP/TYPE: {line:?}"))?;
+            let kind = cur_kind.unwrap();
+            let s = parse_sample(line)?;
+            samples += 1;
+            let id = series_id(&s.name, &s.labels);
+            if !seen_samples.insert(id) {
+                return Err(format!("duplicate sample {line:?}"));
+            }
+            match kind {
+                MetricKind::Counter | MetricKind::Gauge => {
+                    if s.name != fam {
+                        return Err(format!("sample {} under family {fam}", s.name));
+                    }
+                    if kind == MetricKind::Counter && !(s.value.is_finite() && s.value >= 0.0) {
+                        return Err(format!("counter {fam} has invalid value {}", s.value));
+                    }
+                    series.insert(series_id(fam, &s.labels));
+                }
+                MetricKind::Histogram => {
+                    let suffix = s
+                        .name
+                        .strip_prefix(fam)
+                        .ok_or_else(|| format!("sample {} under family {fam}", s.name))?;
+                    let mut base_labels = s.labels.clone();
+                    match suffix {
+                        "_bucket" => {
+                            let pos = base_labels
+                                .iter()
+                                .position(|(k, _)| k == "le")
+                                .ok_or_else(|| format!("_bucket without le: {line:?}"))?;
+                            let (_, le) = base_labels.remove(pos);
+                            let bound = parse_value(&le)
+                                .map_err(|m| format!("{m} in le of {line:?}"))?;
+                            let id = series_id(fam, &base_labels);
+                            hist.entry(id.clone()).or_default().0.push((bound, s.value));
+                            series.insert(id);
+                        }
+                        "_sum" => {
+                            let id = series_id(fam, &base_labels);
+                            let slot = hist.entry(id.clone()).or_default();
+                            if slot.1.replace(s.value).is_some() {
+                                return Err(format!("duplicate _sum for {id}"));
+                            }
+                            series.insert(id);
+                        }
+                        "_count" => {
+                            let id = series_id(fam, &base_labels);
+                            let slot = hist.entry(id.clone()).or_default();
+                            if slot.2.replace(s.value).is_some() {
+                                return Err(format!("duplicate _count for {id}"));
+                            }
+                            series.insert(id);
+                        }
+                        other => {
+                            return Err(format!(
+                                "histogram sample suffix {other:?} in {line:?}"
+                            ))
+                        }
+                    }
+                }
+            }
+            cur_has_samples = true;
+        }
+    }
+    if pending_help.is_some() {
+        return Err("HELP without a following TYPE at end of input".to_string());
+    }
+    close_family(&cur_name, &cur_kind, cur_has_samples, &mut hist)?;
+    let mut series: Vec<String> = series.into_iter().collect();
+    series.sort();
+    Ok(ExpoSummary { families, samples, series })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+
+    #[test]
+    fn renders_and_validates_roundtrip() {
+        let r = Registry::new();
+        r.counter("t_ops_total", "operations", &[("tenant", "a")]).add(3);
+        r.gauge("t_depth", "queue depth", &[]).set(2.0);
+        let h = r.histogram("t_wait_seconds", "wait", &[("tenant", "a")], &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = r.render();
+        let summary = validate(&text).expect("rendered output must validate");
+        assert_eq!(summary.families, 3);
+        // 1 counter + 1 gauge + (3 buckets + sum + count)
+        assert_eq!(summary.samples, 7);
+        assert_eq!(summary.series.len(), 3);
+    }
+
+    #[test]
+    fn label_escaping_roundtrips() {
+        let r = Registry::new();
+        let hairy = "a\\b\"c\nd";
+        r.counter("t_total", "t", &[("name", hairy)]).inc();
+        let text = r.render();
+        assert!(text.contains(r#"name="a\\b\"c\nd""#), "escaped form present: {text}");
+        let sample = text.lines().find(|l| !l.starts_with('#')).unwrap();
+        let parsed = parse_sample(sample).unwrap();
+        assert_eq!(parsed.labels[0].1, hairy, "unescape restores the original");
+        validate(&text).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_input() {
+        // TYPE before HELP
+        let bad = "# TYPE t_x counter\n# HELP t_x x\nt_x 1\n";
+        assert!(validate(bad).is_err());
+        // non-cumulative buckets
+        let bad = "# HELP t_h h\n# TYPE t_h histogram\n\
+                   t_h_bucket{le=\"1\"} 5\nt_h_bucket{le=\"+Inf\"} 3\n\
+                   t_h_sum 1\nt_h_count 3\n";
+        assert!(validate(bad).unwrap_err().contains("cumulative"));
+        // count mismatch
+        let bad = "# HELP t_h h\n# TYPE t_h histogram\n\
+                   t_h_bucket{le=\"1\"} 2\nt_h_bucket{le=\"+Inf\"} 3\n\
+                   t_h_sum 1\nt_h_count 4\n";
+        assert!(validate(bad).unwrap_err().contains("_count"));
+        // duplicate series
+        let bad = "# HELP t_x x\n# TYPE t_x counter\nt_x 1\nt_x 2\n";
+        assert!(validate(bad).unwrap_err().contains("duplicate"));
+        // sample under wrong family
+        let bad = "# HELP t_x x\n# TYPE t_x counter\nt_y 1\n";
+        assert!(validate(bad).is_err());
+        // negative counter
+        let bad = "# HELP t_x x\n# TYPE t_x counter\nt_x -1\n";
+        assert!(validate(bad).is_err());
+        // missing +Inf
+        let bad = "# HELP t_h h\n# TYPE t_h histogram\n\
+                   t_h_bucket{le=\"1\"} 2\nt_h_sum 1\nt_h_count 2\n";
+        assert!(validate(bad).unwrap_err().contains("+Inf"));
+    }
+
+    #[test]
+    fn empty_families_are_not_rendered() {
+        let r = Registry::new();
+        let text = r.render();
+        assert!(text.is_empty());
+        let s = validate(&text).unwrap();
+        assert_eq!(s.families, 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Minimal blocking HTTP scrape endpoint on `std::net::TcpListener`.
+//!
+//! Serves exactly two routes — `GET /metrics` (exposition text 0.0.4)
+//! and `GET /healthz` — one connection at a time on a background
+//! thread. Scrapes are rare (seconds apart) and small (tens of KB), so
+//! a single-threaded accept loop with short socket timeouts is the
+//! whole server; there is deliberately no HTTP library, keep-alive,
+//! TLS or routing table. [`scrape`] is the matching one-call client
+//! used by `repro metrics-dump --addr`, the serve-bench self-scrape
+//! and the integration tests.
+
+use super::Registry;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Content-Type for exposition format 0.0.4.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Handle to a running scrape endpoint; shuts the server down on drop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:9464"`, port 0 for ephemeral) and
+    /// serve `registry` until the handle is dropped.
+    pub fn serve(addr: &str, registry: Arc<Registry>) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("metrics-http".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        if let Ok(stream) = conn {
+                            // a broken scraper must not kill the server
+                            let _ = handle_connection(stream, &registry);
+                        }
+                    }
+                })
+                .expect("spawn metrics-http thread")
+        };
+        Ok(MetricsServer { addr: local, stop, thread: Some(thread) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    // read until end of request head; cap at 8 KB (we ignore bodies)
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&head);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, content_type, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/metrics" => ("200 OK", CONTENT_TYPE, registry.render()),
+            "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+            _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+        }
+    };
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// One-shot HTTP GET against a metrics endpoint; returns the response
+/// body, or an error carrying the status line for non-200 responses.
+pub fn scrape(addr: impl ToSocketAddrs, path: &str) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let request = format!("GET {path} HTTP/1.1\r\nHost: metrics\r\nConnection: close\r\n\r\n");
+    stream.write_all(request.as_bytes())?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    let (head, body) = response
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no header/body split"))?;
+    let status_line = head.lines().next().unwrap_or("");
+    if !status_line.contains(" 200 ") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("scrape failed: {status_line}"),
+        ));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_metrics_and_healthz() {
+        let registry = Arc::new(Registry::new());
+        registry.counter("t_total", "t", &[]).add(7);
+        let server = MetricsServer::serve("127.0.0.1:0", registry.clone()).unwrap();
+        let addr = server.local_addr();
+
+        let body = scrape(addr, "/metrics").unwrap();
+        assert!(body.contains("t_total 7"), "body: {body}");
+        crate::obs::expo::validate(&body).unwrap();
+
+        assert_eq!(scrape(addr, "/healthz").unwrap(), "ok\n");
+        assert!(scrape(addr, "/nope").is_err(), "404 surfaces as Err");
+
+        // live updates are visible on the next scrape
+        registry.counter("t_total", "t", &[]).inc();
+        let body = scrape(addr, "/metrics").unwrap();
+        assert!(body.contains("t_total 8"), "body: {body}");
+        drop(server); // shuts down cleanly without hanging the test
+    }
+}

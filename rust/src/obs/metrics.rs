@@ -1,0 +1,624 @@
+//! Dependency-free metrics core: atomic counters, gauges and
+//! fixed-bucket histograms behind a process-wide [`Registry`].
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`
+//! clones around atomics — instrumented code holds a handle and updates
+//! it lock-free on the hot path; the registry only takes its lock on
+//! registration (get-or-create) and at scrape time. All values are
+//! updated with `Relaxed` atomics: scrapes observe each series at some
+//! point in its monotone history (no torn reads, counters never go
+//! backwards), which is exactly the Prometheus contract — cross-series
+//! consistency within one scrape is not promised and not needed.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone counter. `f64`-free: rendered as an integer.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    fn new() -> Self {
+        Self { cell: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+
+    /// Mirror an externally maintained monotone total (e.g. an
+    /// [`crate::coordinator::ExecutorStats`] counter). `fetch_max` keeps
+    /// the series monotone even if several mirrors race.
+    pub fn mirror(&self, total: u64) {
+        self.cell.fetch_max(total, Ordering::Relaxed);
+    }
+}
+
+/// Instantaneous value; an `f64` stored as bits in an `AtomicU64`.
+#[derive(Clone)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Self { bits: Arc::new(AtomicU64::new(0f64.to_bits())) }
+    }
+
+    /// Set to `v`.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Add `d` (CAS loop; gauges are updated rarely).
+    pub fn add(&self, d: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Latency buckets (seconds) shared by all timing histograms: 50µs–5s,
+/// roughly ×2–×2.5 per step, matching Prometheus client defaults.
+pub const LATENCY_BUCKETS: [f64; 16] = [
+    5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25, 0.5, 1.0, 2.5,
+    5.0,
+];
+
+/// Batch-size buckets (requests per drained batch).
+pub const BATCH_BUCKETS: [f64; 7] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+
+/// Plan-build time buckets (seconds): symbolic + blocking can take a
+/// while on big patterns, so the range extends past the latency set.
+pub const BUILD_BUCKETS: [f64; 10] = [1e-3, 5e-3, 1e-2, 5e-2, 0.1, 0.5, 1.0, 5.0, 10.0, 60.0];
+
+struct HistogramCore {
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` per-bucket counts; the last is the implicit
+    /// `+Inf` bucket. `_count` is derived as the sum at snapshot time so
+    /// bucket/count consistency holds by construction under concurrency.
+    buckets: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram with Prometheus `le` (≤) bucket semantics.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistogramCore>,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one finite bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite and strictly ascending"
+        );
+        Self {
+            core: Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+            }),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        // first bucket whose upper bound is >= v (le semantics); past
+        // the last finite bound lands in the +Inf bucket.
+        let i = self.core.bounds.partition_point(|&b| b < v);
+        self.core.buckets[i].fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.core.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.core.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Record a duration in seconds.
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    /// Point-in-time copy of bounds, per-bucket counts and sum.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.core.bounds.clone(),
+            counts: self.core.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: f64::from_bits(self.core.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Owned copy of a histogram's state, used for rendering and for the
+/// autoscaler's between-ticks interval deltas.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Ascending finite upper bounds.
+    pub bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts, `bounds.len() + 1` entries;
+    /// the last is the `+Inf` bucket.
+    pub counts: Vec<u64>,
+    /// Sum of all observations.
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Total observation count.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Interpolated quantile over this snapshot
+    /// (see [`crate::util::stats::histogram_quantile`]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        crate::util::stats::histogram_quantile(&self.bounds, &self.counts, q)
+    }
+
+    /// Observations recorded since `earlier` (same bounds required).
+    /// Saturating per bucket, so a racy pair of snapshots can never
+    /// produce negative interval counts.
+    pub fn delta(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        assert_eq!(self.bounds, earlier.bounds, "snapshots from different histograms");
+        HistogramSnapshot {
+            bounds: self.bounds.clone(),
+            counts: self
+                .counts
+                .iter()
+                .zip(&earlier.counts)
+                .map(|(now, was)| now.saturating_sub(*was))
+                .collect(),
+            sum: (self.sum - earlier.sum).max(0.0),
+        }
+    }
+}
+
+/// Metric family kind, as rendered in `# TYPE`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone counter (`_total` naming convention).
+    Counter,
+    /// Instantaneous value.
+    Gauge,
+    /// Fixed-bucket histogram (`_bucket`/`_sum`/`_count` samples).
+    Histogram,
+}
+
+impl MetricKind {
+    /// Lowercase name used in the `# TYPE` line.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Series {
+    /// Sorted by key at registration, so label order never splits series.
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: MetricKind,
+    /// Bucket bounds shared by every series of a histogram family.
+    bounds: Vec<f64>,
+    series: Vec<Series>,
+}
+
+/// One sample value in a registry snapshot.
+#[derive(Clone, Debug)]
+pub enum SampleValue {
+    /// Counter total.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(f64),
+    /// Histogram state.
+    Histogram(HistogramSnapshot),
+}
+
+/// One labeled series in a registry snapshot.
+#[derive(Clone, Debug)]
+pub struct SeriesSnapshot {
+    /// Label pairs, sorted by key.
+    pub labels: Vec<(String, String)>,
+    /// The series' value at snapshot time.
+    pub value: SampleValue,
+}
+
+/// One metric family in a registry snapshot.
+#[derive(Clone, Debug)]
+pub struct FamilySnapshot {
+    /// Family name (`[a-zA-Z_:][a-zA-Z0-9_:]*`).
+    pub name: String,
+    /// `# HELP` text.
+    pub help: String,
+    /// `# TYPE`.
+    pub kind: MetricKind,
+    /// All series, sorted by labels for deterministic rendering.
+    pub series: Vec<SeriesSnapshot>,
+}
+
+/// Process-wide metric registry: get-or-create handles by
+/// `(name, labels)`, snapshot for rendering, and *refreshers* — named
+/// callbacks run before each snapshot to mirror externally maintained
+/// counters (e.g. executor steal/park totals) into registry series.
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+    refreshers: Mutex<Vec<(String, Box<dyn Fn() + Send + Sync>)>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let fams = self.families.lock().unwrap();
+        let series: usize = fams.iter().map(|fam| fam.series.len()).sum();
+        f.debug_struct("Registry")
+            .field("families", &fams.len())
+            .field("series", &series)
+            .finish()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+impl Registry {
+    /// Fresh empty registry (tests and scoped benches use their own;
+    /// production wiring defaults to [`Registry::global`]).
+    pub fn new() -> Self {
+        Self { families: Mutex::new(Vec::new()), refreshers: Mutex::new(Vec::new()) }
+    }
+
+    /// The process-wide registry.
+    pub fn global() -> Arc<Registry> {
+        static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(Registry::new())).clone()
+    }
+
+    /// Get or create the counter `name{labels}`. Panics if `name` is
+    /// already registered with a different kind — that is a programming
+    /// error, not a runtime condition.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.series(name, help, MetricKind::Counter, labels, &[]) {
+            Metric::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get or create the gauge `name{labels}`.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.series(name, help, MetricKind::Gauge, labels, &[]) {
+            Metric::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get or create the histogram `name{labels}` with the family's
+    /// bucket `bounds` (every series of one family shares them).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histogram {
+        match self.series(name, help, MetricKind::Histogram, labels, bounds) {
+            Metric::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    fn series(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Metric {
+        assert!(valid_metric_name(name), "invalid metric name {name:?}");
+        for (k, _) in labels {
+            assert!(valid_label_name(k), "invalid label name {k:?} on {name}");
+        }
+        let mut labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        labels.sort();
+        let mut fams = self.families.lock().unwrap();
+        let fam = match fams.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert!(
+                    f.kind == kind,
+                    "metric {name} registered as {:?}, requested as {kind:?}",
+                    f.kind
+                );
+                assert!(
+                    kind != MetricKind::Histogram || f.bounds == bounds,
+                    "histogram {name} registered with different bucket bounds"
+                );
+                f
+            }
+            None => {
+                fams.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    bounds: bounds.to_vec(),
+                    series: Vec::new(),
+                });
+                fams.last_mut().unwrap()
+            }
+        };
+        if let Some(s) = fam.series.iter().find(|s| s.labels == labels) {
+            return match &s.metric {
+                Metric::Counter(c) => Metric::Counter(c.clone()),
+                Metric::Gauge(g) => Metric::Gauge(g.clone()),
+                Metric::Histogram(h) => Metric::Histogram(h.clone()),
+            };
+        }
+        let metric = match kind {
+            MetricKind::Counter => Metric::Counter(Counter::new()),
+            MetricKind::Gauge => Metric::Gauge(Gauge::new()),
+            MetricKind::Histogram => Metric::Histogram(Histogram::new(bounds)),
+        };
+        let handle = match &metric {
+            Metric::Counter(c) => Metric::Counter(c.clone()),
+            Metric::Gauge(g) => Metric::Gauge(g.clone()),
+            Metric::Histogram(h) => Metric::Histogram(h.clone()),
+        };
+        fam.series.push(Series { labels, metric });
+        handle
+    }
+
+    /// Register (or replace, by `key`) a callback run before every
+    /// snapshot/render. Keyed so repeated wiring of the same source
+    /// (e.g. one router per test over the global registry) does not
+    /// accumulate duplicate callbacks.
+    pub fn register_refresher(&self, key: &str, f: impl Fn() + Send + Sync + 'static) {
+        let mut rs = self.refreshers.lock().unwrap();
+        if let Some(slot) = rs.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = Box::new(f);
+        } else {
+            rs.push((key.to_string(), Box::new(f)));
+        }
+    }
+
+    /// Run refreshers, then copy out every family sorted by name (and
+    /// every series sorted by labels) for deterministic rendering.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        {
+            // refreshers run *before* the families lock is taken: they
+            // are allowed to call get-or-create on this registry.
+            let rs = self.refreshers.lock().unwrap();
+            for (_, f) in rs.iter() {
+                f();
+            }
+        }
+        let fams = self.families.lock().unwrap();
+        let mut out: Vec<FamilySnapshot> = fams
+            .iter()
+            .map(|f| {
+                let mut series: Vec<SeriesSnapshot> = f
+                    .series
+                    .iter()
+                    .map(|s| SeriesSnapshot {
+                        labels: s.labels.clone(),
+                        value: match &s.metric {
+                            Metric::Counter(c) => SampleValue::Counter(c.get()),
+                            Metric::Gauge(g) => SampleValue::Gauge(g.get()),
+                            Metric::Histogram(h) => SampleValue::Histogram(h.snapshot()),
+                        },
+                    })
+                    .collect();
+                series.sort_by(|a, b| a.labels.cmp(&b.labels));
+                FamilySnapshot {
+                    name: f.name.clone(),
+                    help: f.help.clone(),
+                    kind: f.kind,
+                    series,
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Render the full registry in Prometheus text exposition format
+    /// 0.0.4 (see [`crate::obs::expo::render`]).
+    pub fn render(&self) -> String {
+        crate::obs::expo::render(&self.snapshot())
+    }
+
+    /// Number of distinct `(name, labels)` series currently registered.
+    pub fn series_count(&self) -> usize {
+        let fams = self.families.lock().unwrap();
+        fams.iter().map(|f| f.series.len()).sum()
+    }
+
+    /// Distinct label values seen for `label` across all families —
+    /// used by tests to e.g. enumerate tenants.
+    pub fn label_values(&self, label: &str) -> Vec<String> {
+        let fams = self.families.lock().unwrap();
+        let mut seen = HashSet::new();
+        for f in fams.iter() {
+            for s in &f.series {
+                if let Some((_, v)) = s.labels.iter().find(|(k, _)| k == label) {
+                    seen.insert(v.clone());
+                }
+            }
+        }
+        let mut out: Vec<String> = seen.into_iter().collect();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("t_ops_total", "ops", &[("k", "v")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // get-or-create returns the same underlying cell
+        let c2 = r.counter("t_ops_total", "ops", &[("k", "v")]);
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        // a different label set is a different series
+        let c3 = r.counter("t_ops_total", "ops", &[("k", "w")]);
+        assert_eq!(c3.get(), 0);
+        assert_eq!(r.series_count(), 2);
+
+        let g = r.gauge("t_depth", "depth", &[]);
+        g.set(3.5);
+        g.add(-1.0);
+        assert!((g.get() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_order_does_not_split_series() {
+        let r = Registry::new();
+        let a = r.counter("t_total", "t", &[("a", "1"), ("b", "2")]);
+        let b = r.counter("t_total", "t", &[("b", "2"), ("a", "1")]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+        assert_eq!(r.series_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("t_x", "x", &[]);
+        r.gauge("t_x", "x", &[]);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        let r = Registry::new();
+        let h = r.histogram("t_lat_seconds", "lat", &[], &[1.0, 2.0, 4.0]);
+        h.observe(0.5); // (0,1]
+        h.observe(1.0); // le="1" includes the bound itself
+        h.observe(1.5); // (1,2]
+        h.observe(4.0); // le="4"
+        h.observe(9.0); // +Inf
+        let s = h.snapshot();
+        assert_eq!(s.counts, vec![2, 1, 1, 1]);
+        assert_eq!(s.count(), 5);
+        assert!((s.sum - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_delta_is_interval() {
+        let r = Registry::new();
+        let h = r.histogram("t_lat_seconds", "lat", &[], &[1.0, 2.0]);
+        h.observe(0.5);
+        let early = h.snapshot();
+        h.observe(0.5);
+        h.observe(1.5);
+        let d = h.snapshot().delta(&early);
+        assert_eq!(d.counts, vec![1, 1, 0]);
+        assert_eq!(d.count(), 2);
+        assert!((d.sum - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counter_mirror_is_monotone() {
+        let r = Registry::new();
+        let c = r.counter("t_total", "t", &[]);
+        c.mirror(10);
+        c.mirror(7); // stale mirror cannot move the series backwards
+        assert_eq!(c.get(), 10);
+        c.mirror(12);
+        assert_eq!(c.get(), 12);
+    }
+
+    #[test]
+    fn refresher_runs_at_snapshot_and_replaces_by_key() {
+        let r = Arc::new(Registry::new());
+        let c = r.counter("t_total", "t", &[]);
+        let src = Arc::new(AtomicU64::new(3));
+        {
+            let (c, src) = (c.clone(), src.clone());
+            r.register_refresher("mirror", move || c.mirror(src.load(Ordering::Relaxed)));
+        }
+        r.snapshot();
+        assert_eq!(c.get(), 3);
+        src.store(8, Ordering::Relaxed);
+        // re-registering under the same key replaces, not appends
+        {
+            let (c, src) = (c.clone(), src.clone());
+            r.register_refresher("mirror", move || c.mirror(src.load(Ordering::Relaxed)));
+        }
+        r.snapshot();
+        assert_eq!(c.get(), 8);
+    }
+}

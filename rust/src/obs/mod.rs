@@ -1,0 +1,125 @@
+//! Observability: metrics spine, exposition endpoint, and the
+//! SLO-driven autoscaler.
+//!
+//! Dependency-free by design — the whole stack is `std` atomics, a
+//! `TcpListener`, and string formatting:
+//!
+//! * [`metrics`] — atomic [`Counter`]s/[`Gauge`]s and fixed-bucket
+//!   latency [`Histogram`]s behind a process-wide [`Registry`]
+//!   ([`Registry::global`]), with get-or-create labeled series.
+//! * [`expo`] — Prometheus text exposition format 0.0.4: a renderer
+//!   ([`Registry::render`]) and a strict [`validate`] parser used by
+//!   tests and `repro metrics-dump --check`.
+//! * [`http`] — a minimal blocking scrape endpoint
+//!   ([`MetricsServer`]: `GET /metrics` + `/healthz`) and the matching
+//!   one-call [`scrape`] client.
+//! * [`autoscale`] — the control loop that closes the observability
+//!   spine back onto the serve layer: per-tenant queue depth and p99
+//!   queue wait against an [`SloPolicy`], actuated through
+//!   [`Router::scale_tenant`] (pool resize, queue rebound, priority
+//!   load shedding).
+//!
+//! Metric naming follows Prometheus conventions: `sparselu_` prefix,
+//! `_total` counters, `_seconds` histograms, tenants labeled
+//! `tenant="<016x pattern key>"`. ARCHITECTURE.md's "Observability"
+//! section has the full series table.
+//!
+//! [`Router::scale_tenant`]: crate::serve::Router::scale_tenant
+
+pub mod autoscale;
+pub mod expo;
+pub mod http;
+pub mod metrics;
+
+pub use autoscale::{AutoscaleHandle, Autoscaler, ScaleDecision, SloPolicy};
+pub use expo::{validate, ExpoSummary};
+pub use http::{scrape, MetricsServer, CONTENT_TYPE};
+pub use metrics::{
+    Counter, FamilySnapshot, Gauge, Histogram, HistogramSnapshot, MetricKind, Registry,
+    SampleValue, SeriesSnapshot, BATCH_BUCKETS, BUILD_BUCKETS, LATENCY_BUCKETS,
+};
+
+use crate::coordinator::Executor;
+use std::sync::{Arc, Weak};
+
+/// Publish an executor's scheduler counters to `registry` as
+/// `sparselu_executor_*` series labeled by pool size.
+///
+/// The executor's own counters stay plain atomics on its hot paths; a
+/// keyed snapshot refresher mirrors them into the registry right before
+/// each scrape ([`Counter::mirror`], so stale refreshes never move a
+/// series backwards). Holding only a [`Weak`] keeps this registration
+/// from pinning the pool alive; re-registering the same pool size
+/// (e.g. a later router reviving the shared executor) replaces the
+/// refresher instead of stacking duplicates.
+pub fn register_executor(registry: &Arc<Registry>, executor: &Arc<Executor>) {
+    let workers = executor.workers();
+    let label = workers.to_string();
+    let labels: &[(&str, &str)] = &[("workers", label.as_str())];
+    let runs = registry.counter("sparselu_executor_runs_total", "DAG runs submitted.", labels);
+    let steals = registry.counter(
+        "sparselu_executor_steals_total",
+        "Tasks taken from another worker's deque tail.",
+        labels,
+    );
+    let wakeups = registry.counter(
+        "sparselu_executor_wakeups_total",
+        "Targeted unpark signals delivered to parked workers.",
+        labels,
+    );
+    let parks = registry.counter(
+        "sparselu_executor_parks_total",
+        "Times a worker went fully idle.",
+        labels,
+    );
+    let gauge_workers =
+        registry.gauge("sparselu_executor_workers", "Worker threads in the pool.", labels);
+    let parked = registry.gauge(
+        "sparselu_executor_parked",
+        "Workers idle right now (parked or about to park).",
+        labels,
+    );
+    gauge_workers.set(workers as f64);
+    let weak: Weak<Executor> = Arc::downgrade(executor);
+    registry.register_refresher(&format!("executor-{workers}"), move || {
+        if let Some(exec) = weak.upgrade() {
+            let stats = exec.stats();
+            runs.mirror(stats.runs);
+            steals.mirror(stats.steals);
+            wakeups.mirror(stats.wakeups);
+            parks.mirror(stats.parks);
+            parked.set(stats.idle_workers as f64);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executor_series_mirror_scheduler_stats() {
+        let registry = Arc::new(Registry::new());
+        let executor = Executor::shared(2);
+        register_executor(&registry, &executor);
+        // re-registering the same pool replaces, not duplicates
+        register_executor(&registry, &executor);
+
+        let text = registry.render();
+        expo::validate(&text).unwrap();
+        assert!(text.contains("sparselu_executor_workers{workers=\"2\"} 2"), "text: {text}");
+        let runs_line_count = text
+            .lines()
+            .filter(|l| l.starts_with("sparselu_executor_runs_total{"))
+            .count();
+        assert_eq!(runs_line_count, 1, "one series per pool size");
+
+        // the refresher mirrored live scheduler state at render time;
+        // the shared pool may have run more since (tests share it), so
+        // only the monotone lower bound is race-free to assert
+        let mirrored = registry
+            .counter("sparselu_executor_runs_total", "", &[("workers", "2")])
+            .get();
+        assert!(mirrored <= executor.stats().runs);
+    }
+}

@@ -53,6 +53,22 @@ pub enum RequestKind {
     Solve,
 }
 
+/// Admission priority class. Priority is **admission-only**: it decides
+/// whether a request gets into the queue when the shard is saturated
+/// (low class is rejected first, at the shedding watermark instead of
+/// the full capacity), never the order requests execute in. Admitted
+/// requests run in submission order regardless of class, so results for
+/// admitted requests are bit-identical with shedding on or off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    /// Interactive / SLO-bound traffic: admitted up to full capacity.
+    #[default]
+    High,
+    /// Best-effort traffic (bulk sweeps, speculative timesteps): shed
+    /// first when the autoscaler detects saturation.
+    Low,
+}
+
 /// Serving failure — returned to the client, never a process abort.
 ///
 /// `Clone` so one failed coalesced execution can be reported to every
@@ -157,6 +173,11 @@ pub struct ServeReport {
 /// batcher+session pairs against a [`crate::serve::SessionPool`].
 pub struct Batcher {
     capacity: usize,
+    /// Admission watermark for [`Priority::Low`] requests. Equal to
+    /// `capacity` when shedding is off; the autoscaler lowers it under
+    /// saturation so best-effort traffic is rejected before the queue
+    /// can fill against high-priority clients.
+    low_limit: usize,
     /// Stamps whose estimated run fraction exceeds this go down the full
     /// refactorize path instead of the pruned partial path.
     partial_threshold: f64,
@@ -168,11 +189,17 @@ pub struct Batcher {
 
 impl Batcher {
     /// Queue bounded at `capacity` requests, with the default routing
-    /// threshold (stamps re-running more than half the DAG go full) and
-    /// stamp coalescing enabled.
+    /// threshold (stamps re-running more than half the DAG go full),
+    /// stamp coalescing enabled and no priority shedding.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0, "Batcher needs capacity >= 1");
-        Self { capacity, partial_threshold: 0.5, coalesce_stamps: true, queue: VecDeque::new() }
+        Self {
+            capacity,
+            low_limit: capacity,
+            partial_threshold: 0.5,
+            coalesce_stamps: true,
+            queue: VecDeque::new(),
+        }
     }
 
     /// Override the partial-vs-full routing threshold (fraction of DAG
@@ -207,9 +234,52 @@ impl Batcher {
         self.capacity
     }
 
-    /// Enqueue a request, rejecting it when the queue is at capacity.
+    /// Current [`Priority::Low`] admission watermark (`== capacity()`
+    /// when shedding is off).
+    pub fn low_priority_limit(&self) -> usize {
+        self.low_limit
+    }
+
+    /// Re-bound the queue at runtime (autoscaler control knob). Already
+    /// queued requests are never dropped — a shrink below the current
+    /// length only stops *new* admissions until the queue drains down.
+    /// A shedding watermark above the new capacity is clamped to it.
+    pub fn set_capacity(&mut self, capacity: usize) {
+        assert!(capacity > 0, "Batcher needs capacity >= 1");
+        let was_off = self.low_limit == self.capacity;
+        self.capacity = capacity;
+        // "no shedding" tracks the capacity; an explicit watermark clamps
+        self.low_limit = if was_off { capacity } else { self.low_limit.min(capacity) };
+    }
+
+    /// Set the [`Priority::Low`] admission watermark (clamped to
+    /// capacity). `set_low_priority_limit(capacity())` turns shedding
+    /// off.
+    pub fn set_low_priority_limit(&mut self, limit: usize) {
+        self.low_limit = limit.min(self.capacity);
+    }
+
+    /// Enqueue a request at [`Priority::High`], rejecting it when the
+    /// queue is at capacity.
     pub fn submit(&mut self, request: Request) -> Result<(), ServeError> {
-        if self.queue.len() == self.capacity {
+        self.submit_with_priority(request, Priority::High)
+    }
+
+    /// Enqueue a request under an explicit priority class. High is
+    /// admitted up to `capacity`; low only while the queue is below the
+    /// shedding watermark. Both rejections are
+    /// [`ServeError::QueueFull`] — a shed client backs off exactly like
+    /// a client hitting a genuinely full queue.
+    pub fn submit_with_priority(
+        &mut self,
+        request: Request,
+        priority: Priority,
+    ) -> Result<(), ServeError> {
+        let limit = match priority {
+            Priority::High => self.capacity,
+            Priority::Low => self.low_limit,
+        };
+        if self.queue.len() >= limit {
             return Err(ServeError::QueueFull { capacity: self.capacity });
         }
         self.queue.push_back((request, Instant::now()));
@@ -583,6 +653,50 @@ mod tests {
         let outcomes = b.drain(&mut s);
         assert_eq!(outcomes.len(), 1);
         assert!(outcomes[0].as_ref().unwrap().solution.is_some());
+    }
+
+    #[test]
+    fn low_priority_is_shed_at_the_watermark_high_at_capacity() {
+        let mut b = Batcher::new(4);
+        let rhs = || Request::Solve { rhs: vec![1.0; 4] };
+        assert_eq!(b.low_priority_limit(), 4, "no shedding by default");
+        b.set_low_priority_limit(2);
+        b.submit_with_priority(rhs(), Priority::Low).unwrap();
+        b.submit_with_priority(rhs(), Priority::Low).unwrap();
+        // at the watermark: low is shed, high still admitted
+        assert!(matches!(
+            b.submit_with_priority(rhs(), Priority::Low),
+            Err(ServeError::QueueFull { capacity: 4 })
+        ));
+        b.submit_with_priority(rhs(), Priority::High).unwrap();
+        b.submit(rhs()).unwrap(); // plain submit is High
+        assert!(matches!(
+            b.submit(rhs()),
+            Err(ServeError::QueueFull { capacity: 4 })
+        ));
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn set_capacity_rebounds_without_dropping_queued_work() {
+        let a = gen::grid2d_laplacian(6, 6);
+        let mut s = session_for(&a);
+        s.refactorize(&a.values).unwrap();
+        let rhs = || Request::Solve { rhs: vec![1.0; 36] };
+        let mut b = Batcher::new(2);
+        b.submit(rhs()).unwrap();
+        b.submit(rhs()).unwrap();
+        b.set_capacity(1); // shrink below current length
+        assert_eq!(b.len(), 2, "queued requests survive the shrink");
+        assert!(matches!(b.submit(rhs()), Err(ServeError::QueueFull { capacity: 1 })));
+        assert_eq!(b.drain(&mut s).len(), 2, "both still execute");
+        b.submit(rhs()).unwrap();
+        assert!(b.submit(rhs()).is_err(), "new bound enforced after drain");
+        // growth admits more; the off-state watermark tracks capacity
+        b.set_capacity(3);
+        assert_eq!(b.low_priority_limit(), 3);
+        b.submit(rhs()).unwrap();
+        b.submit_with_priority(rhs(), Priority::Low).unwrap();
     }
 
     #[test]

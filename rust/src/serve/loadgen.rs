@@ -28,7 +28,7 @@ use super::router::{Router, RouterConfig, TenantId};
 use crate::session::{ChangeSet, FactorPlan, SolverSession};
 use crate::solver::SolveOptions;
 use crate::sparse::Csc;
-use crate::util::Prng;
+use crate::util::{Prng, Summary};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -121,18 +121,11 @@ impl LatencyStats {
         Self {
             count,
             mean_s,
-            p50_s: percentile(latencies, 0.50),
-            p99_s: percentile(latencies, 0.99),
+            p50_s: Summary::quantile(latencies, 0.50),
+            p99_s: Summary::quantile(latencies, 0.99),
             max_s: latencies[count - 1],
         }
     }
-}
-
-/// Nearest-rank percentile of an ascending-sorted slice.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    debug_assert!(!sorted.is_empty());
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// End-to-end result of one load-generator run.
@@ -347,6 +340,12 @@ pub struct MultiTenantConfig {
     /// Router sizing. `max_shards` is clamped up to the tenant count so
     /// no tenant is evicted mid-run.
     pub router: RouterConfig,
+    /// When set, run an [`crate::obs::Autoscaler`] with this policy on a
+    /// background thread for the duration of the load: session pools and
+    /// queue bounds resize live while the clients hammer the router.
+    /// Clients submit at [`super::batcher::Priority::High`], so shedding
+    /// never rejects the closed-loop load itself.
+    pub autoscale: Option<crate::obs::SloPolicy>,
 }
 
 impl Default for MultiTenantConfig {
@@ -358,6 +357,7 @@ impl Default for MultiTenantConfig {
             mix: ScenarioMix::default(),
             seed: 0x3E2A17,
             router: RouterConfig::default(),
+            autoscale: None,
         }
     }
 }
@@ -490,13 +490,17 @@ pub fn run_multi(
     let mut router_cfg = cfg.router.clone();
     router_cfg.max_shards = router_cfg.max_shards.max(m);
     router_cfg.plan_cache_capacity = router_cfg.plan_cache_capacity.max(router_cfg.max_shards);
-    let router = Router::new(opts.clone(), router_cfg);
+    let router = Arc::new(Router::new(opts.clone(), router_cfg));
     let ids: Vec<TenantId> = tenants
         .iter()
         .map(|(name, a)| {
             router.admit(a).unwrap_or_else(|e| panic!("admitting tenant {name}: {e}"))
         })
         .collect();
+    let autoscaler = cfg.autoscale.map(|policy| {
+        Arc::new(crate::obs::Autoscaler::new(router.clone(), policy))
+            .spawn(std::time::Duration::from_millis(20))
+    });
 
     let t0 = Instant::now();
     // (tenant index, outcome) per completed-or-errored request
@@ -580,6 +584,9 @@ pub fn run_multi(
         }
     });
     let wall_seconds = t0.elapsed().as_secs_f64();
+    if let Some(handle) = autoscaler {
+        handle.stop(); // joined: tenant stats below are post-final-tick
+    }
 
     let mut completed = vec![0usize; m];
     let mut errors = vec![0usize; m];

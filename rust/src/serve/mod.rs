@@ -27,6 +27,14 @@
 //!   clean [`ServeError::ShardFull`], and idle shards are evicted (and
 //!   later revived) following the [`crate::session::PlanCache`]'s LRU
 //!   order.
+//! Every layer publishes to a [`crate::obs::Registry`]
+//! ([`RouterConfig::registry`]): per-tenant queue/latency/batch series,
+//! pool occupancy, plan-cache and executor counters — scrapeable via
+//! [`crate::obs::MetricsServer`] and actuated on by the SLO-driven
+//! [`crate::obs::Autoscaler`] through [`Router::health`] /
+//! [`Router::scale_tenant`] (session-pool resize, queue rebound, and
+//! [`Priority::Low`] load shedding at admission).
+//!
 //! * [`loadgen`] — a closed-loop, K-client load generator over a
 //!   full/stamp/solve scenario mix — single-pool
 //!   ([`loadgen::run`]) and multi-tenant ([`loadgen::run_multi`], K
@@ -72,10 +80,10 @@ pub mod persist;
 pub mod pool;
 pub mod router;
 
-pub use batcher::{Batcher, Request, RequestKind, ServeError, ServeReport};
+pub use batcher::{Batcher, Priority, Request, RequestKind, ServeError, ServeReport};
 pub use loadgen::{
     LoadgenConfig, LoadgenReport, MultiTenantConfig, MultiTenantReport, ScenarioMix, TenantBench,
 };
 pub use persist::{load_plan, save_plan, save_plan_to_dir, PersistError, WarmReport};
-pub use pool::{PooledSession, PoolStats, SessionPool};
-pub use router::{Router, RouterConfig, RouterStats, TenantId, TenantStats};
+pub use pool::{PooledSession, PoolMetrics, PoolStats, SessionPool};
+pub use router::{Router, RouterConfig, RouterStats, TenantHealth, TenantId, TenantStats};

@@ -16,9 +16,12 @@
 //! set of worker threads instead of paying a `P`-thread spawn per
 //! drained batch.
 
+use crate::obs::{self, Counter, Gauge, Histogram, Registry};
 use crate::session::{FactorPlan, SolverSession};
 use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// Counters describing pool behavior under load.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +43,63 @@ struct PoolState {
     created: usize,
     checkouts: usize,
     waits: usize,
+}
+
+/// Registry handles a pool updates as it runs. Created per tenant by
+/// the router (labeled `tenant="…"`) or per pool by the load generator.
+pub struct PoolMetrics {
+    /// `sparselu_pool_checkout_wait_seconds` — time a checkout spent
+    /// acquiring a session (≈0 when one was idle or growable).
+    pub checkout_wait: Histogram,
+    /// `sparselu_pool_checkouts_total`.
+    pub checkouts: Counter,
+    /// `sparselu_pool_waits_total` — checkouts that had to block.
+    pub waits: Counter,
+    /// `sparselu_pool_sessions_created` — sessions materialized.
+    pub created: Gauge,
+    /// `sparselu_pool_sessions_in_use` — occupancy right now.
+    pub in_use: Gauge,
+    /// `sparselu_pool_sessions_target` — current cap (autoscaled).
+    pub target: Gauge,
+}
+
+impl PoolMetrics {
+    /// Get-or-create the pool series under `labels` in `registry`.
+    pub fn register(registry: &Registry, labels: &[(&str, &str)]) -> Self {
+        Self {
+            checkout_wait: registry.histogram(
+                "sparselu_pool_checkout_wait_seconds",
+                "Time a session checkout spent waiting to acquire a session",
+                labels,
+                &obs::LATENCY_BUCKETS,
+            ),
+            checkouts: registry.counter(
+                "sparselu_pool_checkouts_total",
+                "Successful session checkouts",
+                labels,
+            ),
+            waits: registry.counter(
+                "sparselu_pool_waits_total",
+                "Checkouts that blocked waiting for a checkin",
+                labels,
+            ),
+            created: registry.gauge(
+                "sparselu_pool_sessions_created",
+                "Sessions materialized by the pool (lazy growth)",
+                labels,
+            ),
+            in_use: registry.gauge(
+                "sparselu_pool_sessions_in_use",
+                "Sessions currently checked out",
+                labels,
+            ),
+            target: registry.gauge(
+                "sparselu_pool_sessions_target",
+                "Current session cap (resized by the autoscaler)",
+                labels,
+            ),
+        }
+    }
 }
 
 /// A bounded pool of [`SolverSession`]s over one shared plan.
@@ -71,9 +131,12 @@ struct PoolState {
 /// ```
 pub struct SessionPool {
     plan: Arc<FactorPlan>,
-    max_sessions: usize,
+    /// Atomic so the autoscaler can [`SessionPool::resize`] through a
+    /// shared reference while checkouts are in flight.
+    max_sessions: AtomicUsize,
     state: Mutex<PoolState>,
     cv: Condvar,
+    metrics: Option<PoolMetrics>,
 }
 
 impl SessionPool {
@@ -82,10 +145,24 @@ impl SessionPool {
         assert!(max_sessions > 0, "SessionPool needs max_sessions >= 1");
         Self {
             plan,
-            max_sessions,
+            max_sessions: AtomicUsize::new(max_sessions),
             state: Mutex::new(PoolState { idle: Vec::new(), created: 0, checkouts: 0, waits: 0 }),
             cv: Condvar::new(),
+            metrics: None,
         }
+    }
+
+    /// Like [`SessionPool::new`], publishing pool behavior to a metric
+    /// registry as it runs.
+    pub fn with_metrics(
+        plan: Arc<FactorPlan>,
+        max_sessions: usize,
+        metrics: PoolMetrics,
+    ) -> Self {
+        metrics.target.set(max_sessions as f64);
+        let mut pool = Self::new(plan, max_sessions);
+        pool.metrics = Some(metrics);
+        pool
     }
 
     /// The shared plan every pooled session factorizes against.
@@ -95,41 +172,79 @@ impl SessionPool {
 
     /// Upper bound on concurrently live sessions.
     pub fn max_sessions(&self) -> usize {
-        self.max_sessions
+        self.max_sessions.load(Ordering::Acquire)
+    }
+
+    /// Retarget the session cap at runtime (autoscaler control knob).
+    /// Growing wakes blocked checkouts so they can materialize new
+    /// sessions immediately; shrinking frees excess **idle** sessions
+    /// now and lets excess in-flight ones retire at checkin — a resize
+    /// never cancels or blocks on running work.
+    pub fn resize(&self, target: usize) {
+        assert!(target > 0, "SessionPool needs max_sessions >= 1");
+        let mut st = self.state.lock().unwrap();
+        self.max_sessions.store(target, Ordering::Release);
+        let mut retired = Vec::new();
+        while st.created > target {
+            match st.idle.pop() {
+                Some(s) => {
+                    st.created -= 1;
+                    retired.push(s);
+                }
+                None => break, // the rest retire at checkin
+            }
+        }
+        if let Some(m) = &self.metrics {
+            m.target.set(target as f64);
+            m.created.set(st.created as f64);
+            m.in_use.set((st.created - st.idle.len()) as f64);
+        }
+        drop(st);
+        drop(retired); // blocked-storage deallocation outside the lock
+        self.cv.notify_all();
     }
 
     /// Check a session out, blocking if the pool is exhausted. The
     /// returned guard derefs to the session and checks it back in (and
     /// wakes one waiter) on drop.
     pub fn checkout(&self) -> PooledSession<'_> {
+        let acquire_start = Instant::now();
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(s) = st.idle.pop() {
                 st.checkouts += 1;
+                self.note_checkout(&st, acquire_start);
                 return PooledSession { pool: self, session: Some(s) };
             }
-            if st.created < self.max_sessions {
+            if st.created < self.max_sessions() {
                 st.created += 1;
                 st.checkouts += 1;
+                self.note_checkout(&st, acquire_start);
                 drop(st); // allocate blocked storage outside the lock
                 let s = SolverSession::from_plan(self.plan.clone());
                 return PooledSession { pool: self, session: Some(s) };
             }
             st.waits += 1;
+            if let Some(m) = &self.metrics {
+                m.waits.inc();
+            }
             st = self.cv.wait(st).unwrap();
         }
     }
 
     /// Non-blocking checkout: `None` when the pool is exhausted.
     pub fn try_checkout(&self) -> Option<PooledSession<'_>> {
+        let acquire_start = Instant::now();
         let mut st = self.state.lock().unwrap();
         if let Some(s) = st.idle.pop() {
             st.checkouts += 1;
+            self.note_checkout(&st, acquire_start);
             return Some(PooledSession { pool: self, session: Some(s) });
         }
-        if st.created < self.max_sessions {
+        if st.created < self.max_sessions() {
             st.created += 1;
             st.checkouts += 1;
+            self.note_checkout(&st, acquire_start);
             drop(st);
             let s = SolverSession::from_plan(self.plan.clone());
             return Some(PooledSession { pool: self, session: Some(s) });
@@ -149,9 +264,29 @@ impl SessionPool {
         }
     }
 
+    /// Publish checkout-path metrics (called with the state lock held,
+    /// after the counters were bumped).
+    fn note_checkout(&self, st: &PoolState, acquire_start: Instant) {
+        if let Some(m) = &self.metrics {
+            m.checkouts.inc();
+            m.checkout_wait.observe(acquire_start.elapsed().as_secs_f64());
+            m.created.set(st.created as f64);
+            m.in_use.set((st.created - st.idle.len()) as f64);
+        }
+    }
+
     fn checkin(&self, session: SolverSession<'static>) {
         let mut st = self.state.lock().unwrap();
-        st.idle.push(session);
+        if st.created > self.max_sessions() {
+            // the pool shrank while this session was out: retire it
+            st.created -= 1;
+        } else {
+            st.idle.push(session);
+        }
+        if let Some(m) = &self.metrics {
+            m.created.set(st.created as f64);
+            m.in_use.set((st.created - st.idle.len()) as f64);
+        }
         drop(st);
         self.cv.notify_one();
     }
@@ -249,6 +384,75 @@ mod tests {
         // by the checkin, not by growth past the cap
         assert_eq!(pool.stats().created, 1);
         assert_eq!(pool.stats().checkouts, 2);
+    }
+
+    #[test]
+    fn resize_grows_the_cap_and_wakes_waiters() {
+        let (_, pool) = pool_for(1);
+        let held = pool.checkout();
+        assert!(pool.try_checkout().is_none(), "cap 1 exhausted");
+        std::thread::scope(|scope| {
+            let pool = &pool;
+            let waiter = scope.spawn(move || {
+                let _s = pool.checkout(); // blocks until the resize
+                pool.stats().created
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            pool.resize(2); // grow: the waiter materializes session #2
+            assert_eq!(waiter.join().unwrap(), 2);
+        });
+        drop(held);
+        assert_eq!(pool.max_sessions(), 2);
+    }
+
+    #[test]
+    fn shrink_retires_idle_now_and_in_flight_at_checkin() {
+        let (_, pool) = pool_for(4);
+        let a = pool.checkout();
+        let b = pool.checkout();
+        let c = pool.checkout();
+        drop(c); // one idle, two in flight
+        assert_eq!(pool.stats().created, 3);
+        pool.resize(1);
+        assert_eq!(pool.stats().created, 2, "the idle session retired immediately");
+        assert_eq!(pool.stats().in_use, 2);
+        drop(a); // created 2 > target 1: retired at checkin
+        assert_eq!(pool.stats().created, 1);
+        drop(b); // created 1 == target: kept
+        let st = pool.stats();
+        assert_eq!(st.created, 1);
+        assert_eq!(st.idle, 1);
+        // the survivor still serves
+        assert!(pool.checkout().plan().n() > 0);
+    }
+
+    #[test]
+    fn pool_metrics_track_occupancy_and_waits() {
+        use crate::obs::Registry;
+        let a = gen::grid2d_laplacian(8, 8);
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let registry = Registry::new();
+        let m = PoolMetrics::register(&registry, &[("tenant", "t0")]);
+        let pool = SessionPool::with_metrics(plan, 2, m);
+        let s1 = pool.checkout();
+        let s2 = pool.checkout();
+        let gauge = |name: &str| registry.gauge(name, "", &[("tenant", "t0")]).get();
+        assert_eq!(gauge("sparselu_pool_sessions_in_use"), 2.0);
+        assert_eq!(gauge("sparselu_pool_sessions_created"), 2.0);
+        assert_eq!(gauge("sparselu_pool_sessions_target"), 2.0);
+        drop(s1);
+        drop(s2);
+        assert_eq!(gauge("sparselu_pool_sessions_in_use"), 0.0);
+        let checkouts =
+            registry.counter("sparselu_pool_checkouts_total", "", &[("tenant", "t0")]);
+        assert_eq!(checkouts.get(), 2);
+        let wait_hist = registry.histogram(
+            "sparselu_pool_checkout_wait_seconds",
+            "",
+            &[("tenant", "t0")],
+            &crate::obs::LATENCY_BUCKETS,
+        );
+        assert_eq!(wait_hist.snapshot().count(), 2, "one wait observation per checkout");
     }
 
     #[test]

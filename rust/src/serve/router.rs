@@ -62,9 +62,11 @@
 //! }
 //! ```
 
-use super::batcher::{Batcher, Request, RequestKind, ServeError, ServeReport};
+use super::batcher::{Batcher, Priority, Request, RequestKind, ServeError, ServeReport};
 use super::persist;
-use super::pool::SessionPool;
+use super::pool::{PoolMetrics, SessionPool};
+use crate::coordinator::Executor;
+use crate::obs::{self, Counter, Gauge, Histogram, HistogramSnapshot, Registry};
 use crate::session::{FactorPlan, PlanCache};
 use crate::solver::SolveOptions;
 use crate::sparse::Csc;
@@ -72,6 +74,7 @@ use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Stable identity of one tenant: the [`PlanCache`] key of its sparsity
 /// pattern under the router's solve options. The id survives eviction —
@@ -105,6 +108,11 @@ pub struct RouterConfig {
     /// persist every freshly built plan into it (best-effort — IO
     /// failures degrade to cold builds, they never fail serving).
     pub plan_dir: Option<PathBuf>,
+    /// Metric registry the router (and everything under it: per-tenant
+    /// shards, session pools, the shared executor) publishes to.
+    /// `None` routes to the process-wide [`Registry::global`]; tests
+    /// and scoped benches pass their own for isolated scrapes.
+    pub registry: Option<Arc<Registry>>,
 }
 
 impl Default for RouterConfig {
@@ -117,6 +125,7 @@ impl Default for RouterConfig {
             partial_threshold: 0.5,
             coalesce_stamps: true,
             plan_dir: None,
+            registry: None,
         }
     }
 }
@@ -187,6 +196,226 @@ pub struct RouterStats {
     pub cache_misses: usize,
 }
 
+/// Point-in-time health of one live shard — what the
+/// [`crate::obs::autoscale`] control loop reads each tick.
+#[derive(Clone, Debug)]
+pub struct TenantHealth {
+    /// The shard's tenant.
+    pub tenant: TenantId,
+    /// Requests queued right now.
+    pub queue_depth: usize,
+    /// Current queue bound.
+    pub queue_capacity: usize,
+    /// Current [`Priority::Low`] admission watermark
+    /// (`== queue_capacity` when shedding is off).
+    pub low_priority_limit: usize,
+    /// Current session cap (the autoscaler's resize target).
+    pub sessions_target: usize,
+    /// Sessions materialized.
+    pub sessions_created: usize,
+    /// Sessions checked out right now.
+    pub sessions_in_use: usize,
+    /// Cumulative queue-wait histogram; delta two readings for the
+    /// interval distribution (see
+    /// [`HistogramSnapshot::delta`]).
+    pub queue_wait: HistogramSnapshot,
+}
+
+/// Registry handles for the router-level series, created once in
+/// [`Router::new`] and updated eagerly at each mutation point (no
+/// render-time callback — so there is no lock-order coupling between
+/// the registry and the router state).
+struct RouterMetrics {
+    shards_live: Gauge,
+    spin_ups: Counter,
+    evictions: Counter,
+    revivals: Counter,
+    plans_warmed: Counter,
+    cache_hits: Counter,
+    cache_misses: Counter,
+    plan_build: Histogram,
+}
+
+impl RouterMetrics {
+    fn register(registry: &Registry) -> Self {
+        Self {
+            shards_live: registry.gauge(
+                "sparselu_router_shards_live",
+                "Live shards (tenants with materialized serving state)",
+                &[],
+            ),
+            spin_ups: registry.counter(
+                "sparselu_router_spin_ups_total",
+                "Shards spun up (first admissions plus revivals)",
+                &[],
+            ),
+            evictions: registry.counter(
+                "sparselu_router_evictions_total",
+                "Idle shards evicted to make room",
+                &[],
+            ),
+            revivals: registry.counter(
+                "sparselu_router_revivals_total",
+                "Evicted tenants spun up again",
+                &[],
+            ),
+            plans_warmed: registry.counter(
+                "sparselu_plans_warmed_total",
+                "Plan files warm-loaded from the plan directory at startup",
+                &[],
+            ),
+            cache_hits: registry.counter(
+                "sparselu_plan_cache_hits_total",
+                "Plan-cache lookups served from memory",
+                &[],
+            ),
+            cache_misses: registry.counter(
+                "sparselu_plan_cache_misses_total",
+                "Plan-cache lookups that had to build (or disk-load) a plan",
+                &[],
+            ),
+            plan_build: registry.histogram(
+                "sparselu_plan_build_seconds",
+                "Wall time to resolve a plan on a cache miss (build or disk load)",
+                &[],
+                &obs::BUILD_BUCKETS,
+            ),
+        }
+    }
+
+    /// Mirror the plan cache's own hit/miss counters into the registry
+    /// (monotone mirror — see [`Counter::mirror`]).
+    fn mirror_cache(&self, cache: &PlanCache) {
+        self.cache_hits.mirror(cache.hits() as u64);
+        self.cache_misses.mirror(cache.misses() as u64);
+    }
+}
+
+/// Registry handles for one tenant's series, all labeled
+/// `tenant="<016x pattern key>"`. Created at shard spin-up;
+/// get-or-create semantics mean a revived shard keeps accumulating into
+/// the same series its previous incarnation used.
+struct ShardMetrics {
+    queue_depth: Gauge,
+    submitted: Counter,
+    rejected_full: Counter,
+    rejected_shed: Counter,
+    completed: Counter,
+    errored: Counter,
+    queue_wait: Histogram,
+    exec_time: Histogram,
+    batch_size: Histogram,
+    tasks_executed: Counter,
+    tasks_skipped: Counter,
+}
+
+impl ShardMetrics {
+    /// The `tenant` label value: the pattern key as fixed-width hex.
+    fn label_of(tenant: TenantId) -> String {
+        format!("{:016x}", tenant.0)
+    }
+
+    fn register(registry: &Registry, tenant: TenantId) -> Self {
+        let value = Self::label_of(tenant);
+        let labels: &[(&str, &str)] = &[("tenant", value.as_str())];
+        Self {
+            queue_depth: registry.gauge(
+                "sparselu_tenant_queue_depth",
+                "Requests queued on the tenant's shard right now",
+                labels,
+            ),
+            submitted: registry.counter(
+                "sparselu_tenant_submitted_total",
+                "Requests accepted into the shard queue",
+                labels,
+            ),
+            rejected_full: registry.counter(
+                "sparselu_tenant_rejected_total",
+                "Requests rejected at admission, by reason",
+                &[("tenant", value.as_str()), ("reason", "full")],
+            ),
+            rejected_shed: registry.counter(
+                "sparselu_tenant_rejected_total",
+                "Requests rejected at admission, by reason",
+                &[("tenant", value.as_str()), ("reason", "shed")],
+            ),
+            completed: registry.counter(
+                "sparselu_tenant_completed_total",
+                "Requests executed successfully",
+                labels,
+            ),
+            errored: registry.counter(
+                "sparselu_tenant_errored_total",
+                "Requests that executed but returned an error",
+                labels,
+            ),
+            queue_wait: registry.histogram(
+                "sparselu_tenant_queue_wait_seconds",
+                "Time a request sat queued before its batch started executing",
+                labels,
+                &obs::LATENCY_BUCKETS,
+            ),
+            exec_time: registry.histogram(
+                "sparselu_tenant_exec_seconds",
+                "Execution wall time per drained batch",
+                labels,
+                &obs::LATENCY_BUCKETS,
+            ),
+            batch_size: registry.histogram(
+                "sparselu_tenant_batch_size",
+                "Requests coalesced per executed batch",
+                labels,
+                &obs::BATCH_BUCKETS,
+            ),
+            tasks_executed: registry.counter(
+                "sparselu_tenant_tasks_executed_total",
+                "DAG tasks executed on the tenant's behalf",
+                labels,
+            ),
+            tasks_skipped: registry.counter(
+                "sparselu_tenant_tasks_skipped_total",
+                "DAG tasks skipped by reachability pruning on the tenant's behalf",
+                labels,
+            ),
+        }
+    }
+
+    /// Record one drain's outcomes. Per-request series (queue wait,
+    /// completion counters) get one observation per outcome; per-batch
+    /// series (batch size, exec time) get one observation per executed
+    /// batch — detected by walking the outcome list in batch-sized
+    /// strides, since a batch's reports are adjacent by construction of
+    /// [`Batcher::drain`].
+    fn absorb(&self, outcomes: &[Result<ServeReport, ServeError>]) {
+        let mut i = 0;
+        while i < outcomes.len() {
+            match &outcomes[i] {
+                Ok(leader) => {
+                    self.batch_size.observe(leader.batch_size as f64);
+                    self.exec_time.observe(leader.exec_seconds);
+                    let run = leader.batch_size.clamp(1, outcomes.len() - i);
+                    for outcome in &outcomes[i..i + run] {
+                        match outcome {
+                            Ok(rep) => {
+                                self.completed.inc();
+                                self.queue_wait.observe(rep.queue_seconds);
+                                self.tasks_executed.add(rep.tasks_executed as u64);
+                                self.tasks_skipped.add(rep.tasks_skipped as u64);
+                            }
+                            Err(_) => self.errored.inc(),
+                        }
+                    }
+                    i += run;
+                }
+                Err(_) => {
+                    self.errored.inc();
+                    i += 1;
+                }
+            }
+        }
+    }
+}
+
 /// One tenant's serving state: the immutable plan plus this pattern's
 /// mutable serving machinery. Everything mutable is behind its own lock,
 /// so shards never contend with each other.
@@ -196,6 +425,7 @@ struct Shard {
     pool: SessionPool,
     batcher: Mutex<Batcher>,
     stats: Mutex<TenantStats>,
+    metrics: ShardMetrics,
     /// Set (under the batcher lock, with the queue verified empty) when
     /// the shard is evicted. A submit that looked the shard up *before*
     /// the eviction but enqueues *after* would otherwise land its
@@ -219,9 +449,13 @@ impl Shard {
         // never blocks here
         let mut session = self.pool.checkout();
         let outcomes = batcher.drain(&mut session);
+        // the queue was fully consumed; submits racing this drain are
+        // still blocked on the batcher lock, so 0 is exact here
+        self.metrics.queue_depth.set(0.0);
         drop(session);
         drop(batcher);
         self.stats.lock().unwrap().absorb(&outcomes);
+        self.metrics.absorb(&outcomes);
         outcomes
     }
 }
@@ -246,6 +480,12 @@ pub struct Router {
     cfg: RouterConfig,
     opts: SolveOptions,
     state: Mutex<RouterState>,
+    registry: Arc<Registry>,
+    rm: RouterMetrics,
+    /// Pins the process-wide executor for this worker count so the
+    /// executor series registered in [`Router::new`] stay live (and the
+    /// pool's threads warm) for the router's whole lifetime.
+    executor: Arc<Executor>,
 }
 
 impl Router {
@@ -273,6 +513,14 @@ impl Router {
                 }
             }
         }
+        let registry = cfg.registry.clone().unwrap_or_else(Registry::global);
+        let rm = RouterMetrics::register(&registry);
+        rm.plans_warmed.add(plans_warmed as u64);
+        rm.mirror_cache(&cache);
+        // mirror the shared executor's scheduler-health counters into
+        // the registry on every scrape
+        let executor = Executor::shared(opts.workers);
+        obs::register_executor(&registry, &executor);
         Self {
             cfg,
             opts,
@@ -285,12 +533,25 @@ impl Router {
                 revivals: 0,
                 plans_warmed,
             }),
+            registry,
+            rm,
+            executor,
         }
     }
 
     /// Solve options every tenant is served under.
     pub fn options(&self) -> &SolveOptions {
         &self.opts
+    }
+
+    /// The registry this router publishes metrics to.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The shared executor serving this router's DAG runs.
+    pub fn executor(&self) -> &Arc<Executor> {
+        &self.executor
     }
 
     /// The tenant id `a`'s pattern routes to (no shard is created).
@@ -319,29 +580,43 @@ impl Router {
             self.evict_locked(&mut st)?;
         }
         let misses_before = st.cache.misses();
+        let build_start = Instant::now();
         let plan = st.cache.get_or_build(a, &self.opts);
         if st.cache.misses() > misses_before {
+            self.rm.plan_build.observe(build_start.elapsed().as_secs_f64());
             if let Some(dir) = &self.cfg.plan_dir {
                 if let Err(e) = persist::save_plan_to_dir(&plan, dir) {
                     eprintln!("router: persisting plan to {} failed: {e}", dir.display());
                 }
             }
         }
+        self.rm.mirror_cache(&st.cache);
         let batcher = Batcher::new(self.cfg.shard_queue)
             .with_partial_threshold(self.cfg.partial_threshold)
             .with_stamp_coalescing(self.cfg.coalesce_stamps);
+        let tenant_label = ShardMetrics::label_of(tenant);
+        let pool_metrics =
+            PoolMetrics::register(&self.registry, &[("tenant", tenant_label.as_str())]);
         let shard = Arc::new(Shard {
             tenant,
-            pool: SessionPool::new(plan.clone(), self.cfg.sessions_per_shard),
+            pool: SessionPool::with_metrics(
+                plan.clone(),
+                self.cfg.sessions_per_shard,
+                pool_metrics,
+            ),
             plan,
             batcher: Mutex::new(batcher),
             stats: Mutex::new(TenantStats::default()),
+            metrics: ShardMetrics::register(&self.registry, tenant),
             retired: AtomicBool::new(false),
         });
         st.shards.push(shard);
         st.spin_ups += 1;
+        self.rm.spin_ups.inc();
+        self.rm.shards_live.set(st.shards.len() as f64);
         if st.evicted.remove(&tenant.0) {
             st.revivals += 1;
+            self.rm.revivals.inc();
         }
         Ok(tenant)
     }
@@ -391,6 +666,9 @@ impl Router {
             let shard = st.shards.remove(pos);
             st.evicted.insert(shard.tenant.0);
             st.evictions += 1;
+            self.rm.evictions.inc();
+            self.rm.shards_live.set(st.shards.len() as f64);
+            shard.metrics.queue_depth.set(0.0);
             // the plan itself stays in the cache under its own LRU life
             // — revival is a cache hit until the cache too moves on
             return Ok(());
@@ -411,10 +689,25 @@ impl Router {
         Ok(shard)
     }
 
-    /// Enqueue a request on its tenant's shard. A full shard queue comes
-    /// back as [`ServeError::ShardFull`] — backpressure scoped to this
-    /// tenant alone.
+    /// Enqueue a request on its tenant's shard at [`Priority::High`]. A
+    /// full shard queue comes back as [`ServeError::ShardFull`] —
+    /// backpressure scoped to this tenant alone.
     pub fn submit(&self, tenant: TenantId, request: Request) -> Result<(), ServeError> {
+        self.submit_with_priority(tenant, request, Priority::High)
+    }
+
+    /// Enqueue a request under an explicit priority class.
+    /// [`Priority::Low`] traffic is admitted only below the shard's
+    /// shedding watermark (set by the autoscaler under saturation), so
+    /// best-effort load is turned away — as [`ServeError::ShardFull`],
+    /// same as a genuinely full queue — before it can crowd out
+    /// SLO-bound clients. Priority never reorders admitted requests.
+    pub fn submit_with_priority(
+        &self,
+        tenant: TenantId,
+        request: Request,
+        priority: Priority,
+    ) -> Result<(), ServeError> {
         let shard = self.shard_of(tenant)?;
         let mut batcher = shard.batcher.lock().unwrap();
         // the shard may have been evicted between the lookup above and
@@ -424,16 +717,26 @@ impl Router {
         if shard.retired.load(Ordering::Acquire) {
             return Err(ServeError::UnknownTenant { tenant: tenant.0 });
         }
-        let result = batcher.submit(request);
+        let result = batcher.submit_with_priority(request, priority);
+        // a low-priority rejection with the queue not actually full is a
+        // shed, not a capacity rejection — label it as such
+        let was_shed = result.is_err() && batcher.len() < batcher.capacity();
+        shard.metrics.queue_depth.set(batcher.len() as f64);
         drop(batcher);
         let mut stats = shard.stats.lock().unwrap();
         match result {
             Ok(()) => {
                 stats.submitted += 1;
+                shard.metrics.submitted.inc();
                 Ok(())
             }
             Err(ServeError::QueueFull { capacity }) => {
                 stats.rejected += 1;
+                if was_shed {
+                    shard.metrics.rejected_shed.inc();
+                } else {
+                    shard.metrics.rejected_full.inc();
+                }
                 Err(ServeError::ShardFull { tenant: tenant.0, capacity })
             }
             // Batcher::submit only rejects on a full queue today; pass
@@ -530,6 +833,59 @@ impl Router {
     /// Live tenants, least-recently-touched first.
     pub fn tenants(&self) -> Vec<TenantId> {
         self.state.lock().unwrap().shards.iter().map(|s| s.tenant).collect()
+    }
+
+    /// Point-in-time health of every live shard, for the autoscaler (or
+    /// any other control plane). Read-only: does not touch LRU recency.
+    pub fn health(&self) -> Vec<TenantHealth> {
+        let shards: Vec<Arc<Shard>> = self.state.lock().unwrap().shards.clone();
+        shards
+            .iter()
+            .map(|shard| {
+                let (queue_depth, queue_capacity, low_priority_limit) = {
+                    let b = shard.batcher.lock().unwrap();
+                    (b.len(), b.capacity(), b.low_priority_limit())
+                };
+                let pool = shard.pool.stats();
+                TenantHealth {
+                    tenant: shard.tenant,
+                    queue_depth,
+                    queue_capacity,
+                    low_priority_limit,
+                    sessions_target: shard.pool.max_sessions(),
+                    sessions_created: pool.created,
+                    sessions_in_use: pool.in_use,
+                    queue_wait: shard.metrics.queue_wait.snapshot(),
+                }
+            })
+            .collect()
+    }
+
+    /// Retarget one shard's serving capacity: session-pool cap, queue
+    /// bound and low-priority shedding watermark (see
+    /// [`Batcher::set_low_priority_limit`];
+    /// `low_priority_limit == queue_capacity` turns shedding off). The
+    /// autoscaler's only write path into the router. Queued and
+    /// in-flight requests are never dropped by a resize.
+    pub fn scale_tenant(
+        &self,
+        tenant: TenantId,
+        sessions: usize,
+        queue_capacity: usize,
+        low_priority_limit: usize,
+    ) -> Result<(), ServeError> {
+        let shard = {
+            let st = self.state.lock().unwrap();
+            let Some(shard) = st.shards.iter().find(|s| s.tenant == tenant) else {
+                return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+            };
+            shard.clone()
+        };
+        shard.pool.resize(sessions);
+        let mut batcher = shard.batcher.lock().unwrap();
+        batcher.set_capacity(queue_capacity);
+        batcher.set_low_priority_limit(low_priority_limit);
+        Ok(())
     }
 
     /// Router-level counters.
@@ -662,6 +1018,73 @@ mod tests {
         // draining any shard makes room again
         router.drain_tenant(ta).unwrap();
         assert!(router.admit(&c).is_ok());
+    }
+
+    #[test]
+    fn scale_tenant_resizes_and_sheds_low_priority_first() {
+        let registry = Arc::new(Registry::new());
+        let router = Router::new(
+            SolveOptions::ours(1),
+            RouterConfig {
+                max_shards: 2,
+                plan_cache_capacity: 4,
+                shard_queue: 8,
+                registry: Some(registry.clone()),
+                ..RouterConfig::default()
+            },
+        );
+        let a = gen::grid2d_laplacian(6, 6);
+        let t = router.admit(&a).unwrap();
+        router.scale_tenant(t, 2, 8, 4).unwrap();
+        let rhs = vec![1.0; 36];
+        // low fills to the watermark, then sheds (reported as ShardFull)
+        for _ in 0..4 {
+            router
+                .submit_with_priority(t, Request::Solve { rhs: rhs.clone() }, Priority::Low)
+                .unwrap();
+        }
+        assert!(matches!(
+            router.submit_with_priority(t, Request::Solve { rhs: rhs.clone() }, Priority::Low),
+            Err(ServeError::ShardFull { capacity: 8, .. })
+        ));
+        // high still fills to true capacity, then rejects as full
+        for _ in 0..4 {
+            router.submit(t, Request::Solve { rhs: rhs.clone() }).unwrap();
+        }
+        assert!(matches!(
+            router.submit(t, Request::Solve { rhs }),
+            Err(ServeError::ShardFull { capacity: 8, .. })
+        ));
+        let health = router.health();
+        assert_eq!(health.len(), 1);
+        assert_eq!(health[0].queue_depth, 8);
+        assert_eq!(health[0].queue_capacity, 8);
+        assert_eq!(health[0].low_priority_limit, 4);
+        assert_eq!(health[0].sessions_target, 2);
+        // the two rejection reasons are distinguishable in the registry
+        let label = ShardMetrics::label_of(t);
+        let by_reason = |reason: &str| {
+            registry
+                .counter(
+                    "sparselu_tenant_rejected_total",
+                    "",
+                    &[("tenant", label.as_str()), ("reason", reason)],
+                )
+                .get()
+        };
+        assert_eq!(by_reason("shed"), 1);
+        assert_eq!(by_reason("full"), 1);
+        assert_eq!(
+            registry
+                .counter("sparselu_tenant_submitted_total", "", &[("tenant", label.as_str())])
+                .get(),
+            8
+        );
+        // scaling an unknown tenant is a clean error
+        assert!(matches!(
+            router.scale_tenant(TenantId(0xdead), 1, 1, 1),
+            Err(ServeError::UnknownTenant { .. })
+        ));
     }
 
     #[test]

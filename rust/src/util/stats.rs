@@ -39,6 +39,57 @@ impl Summary {
     pub fn imbalance(&self) -> f64 {
         if self.mean == 0.0 { 1.0 } else { self.max / self.mean }
     }
+
+    /// Exact nearest-rank quantile of an **ascending-sorted** sample.
+    ///
+    /// `q` is clamped to `[0, 1]`; an empty sample yields 0.0. This is
+    /// the one definition of p50/p99 shared by the load generator, the
+    /// bench harness and the autoscaler, so reported latencies are
+    /// comparable across all three.
+    pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+        sorted[rank.min(sorted.len()) - 1]
+    }
+}
+
+/// Quantile estimate from a fixed-bucket histogram, Prometheus
+/// `histogram_quantile` style: find the bucket holding the nearest-rank
+/// observation and interpolate linearly inside it.
+///
+/// `bounds` are the ascending finite upper bounds; `counts` are the
+/// **per-bucket** (non-cumulative) observation counts and must have
+/// `bounds.len() + 1` entries, the last being the implicit `+Inf`
+/// bucket. Observations landing in the `+Inf` bucket are reported as the
+/// largest finite bound (the histogram cannot resolve beyond it). An
+/// empty histogram yields 0.0.
+pub fn histogram_quantile(bounds: &[f64], counts: &[u64], q: f64) -> f64 {
+    assert_eq!(counts.len(), bounds.len() + 1, "counts must include the +Inf bucket");
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = ((q * total as f64).ceil() as u64).max(1);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        let prev = cum;
+        cum += c;
+        if cum >= rank {
+            if i == bounds.len() {
+                // +Inf bucket: unresolvable past the last finite bound.
+                return bounds.last().copied().unwrap_or(0.0);
+            }
+            let lower = if i == 0 { 0.0 } else { bounds[i - 1] };
+            let upper = bounds[i];
+            let within = (rank - prev) as f64 / c.max(1) as f64;
+            return lower + (upper - lower) * within;
+        }
+    }
+    bounds.last().copied().unwrap_or(0.0)
 }
 
 /// Geometric mean of strictly positive values (paper reports GEOMEAN rows).
@@ -90,5 +141,40 @@ mod tests {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(Summary::quantile(&xs, 0.50), 50.0);
+        assert_eq!(Summary::quantile(&xs, 0.99), 99.0);
+        assert_eq!(Summary::quantile(&xs, 1.0), 100.0);
+        assert_eq!(Summary::quantile(&xs, 0.0), 1.0);
+        assert_eq!(Summary::quantile(&[], 0.5), 0.0);
+        assert_eq!(Summary::quantile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates_within_bucket() {
+        let bounds = [1.0, 2.0, 4.0];
+        // 10 obs in (1,2], none elsewhere: p50 is the 5th of 10 → halfway.
+        let counts = [0, 10, 0, 0];
+        let p50 = histogram_quantile(&bounds, &counts, 0.5);
+        assert!((p50 - 1.5).abs() < 1e-12, "got {p50}");
+        // all mass past the last bound reports the last finite bound
+        assert_eq!(histogram_quantile(&bounds, &[0, 0, 0, 5], 0.5), 4.0);
+        // empty histogram
+        assert_eq!(histogram_quantile(&bounds, &[0, 0, 0, 0], 0.99), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantile_spans_buckets() {
+        let bounds = [1.0, 2.0];
+        // 5 in (0,1], 5 in (1,2]: p99 → rank 10 → top of second bucket.
+        let v = histogram_quantile(&bounds, &[5, 5, 0], 0.99);
+        assert!((v - 2.0).abs() < 1e-12, "got {v}");
+        // p50 → rank 5 → top of first bucket
+        let v = histogram_quantile(&bounds, &[5, 5, 0], 0.5);
+        assert!((v - 1.0).abs() < 1e-12, "got {v}");
     }
 }

@@ -1,0 +1,350 @@
+//! Integration tests of the observability spine: golden exposition
+//! format conformance, concurrent scrape-under-load (monotone counters,
+//! no torn histograms), priority shedding order, autoscaled serving
+//! bit-matching an unscaled oracle, and the acceptance scrape — a
+//! 4-tenant run whose `/metrics` endpoint exposes the full series set.
+
+use sparselu::obs::{self, Autoscaler, MetricsServer, Registry, SloPolicy};
+use sparselu::serve::{
+    loadgen, MultiTenantConfig, Priority, Request, Router, RouterConfig, ScenarioMix, ServeError,
+};
+use sparselu::session::{ChangeSet, FactorPlan, SolverSession};
+use sparselu::solver::SolveOptions;
+use sparselu::sparse::{gen, Csc};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// exposition format
+// ---------------------------------------------------------------------
+
+/// Golden line-by-line render: HELP/TYPE ordering, label escaping,
+/// cumulative `le` buckets with `_sum`/`_count`, family sort order.
+#[test]
+fn golden_exposition_format() {
+    let r = Registry::new();
+    r.gauge("demo_depth", "Current queue depth.", &[]).set(2.5);
+    // hairy label value: backslash, quote and newline all need escapes
+    r.counter("demo_requests_total", "Requests, by tenant.", &[("tenant", "a\"b\\c\nd")]).add(3);
+    let h = r.histogram("demo_wait_seconds", "Queue wait.", &[("tenant", "t1")], &[0.25, 1.0]);
+    h.observe(0.25); // le="0.25" is inclusive
+    h.observe(0.5);
+    h.observe(4.0); // +Inf bucket
+    let text = r.render();
+    let expected = concat!(
+        "# HELP demo_depth Current queue depth.\n",
+        "# TYPE demo_depth gauge\n",
+        "demo_depth 2.5\n",
+        "# HELP demo_requests_total Requests, by tenant.\n",
+        "# TYPE demo_requests_total counter\n",
+        r#"demo_requests_total{tenant="a\"b\\c\nd"} 3"#,
+        "\n",
+        "# HELP demo_wait_seconds Queue wait.\n",
+        "# TYPE demo_wait_seconds histogram\n",
+        "demo_wait_seconds_bucket{tenant=\"t1\",le=\"0.25\"} 1\n",
+        "demo_wait_seconds_bucket{tenant=\"t1\",le=\"1\"} 2\n",
+        "demo_wait_seconds_bucket{tenant=\"t1\",le=\"+Inf\"} 3\n",
+        "demo_wait_seconds_sum{tenant=\"t1\"} 4.75\n",
+        "demo_wait_seconds_count{tenant=\"t1\"} 3\n",
+    );
+    assert_eq!(text, expected);
+    let summary = obs::validate(&text).expect("golden text validates");
+    assert_eq!(summary.families, 3);
+    assert_eq!(summary.samples, 7);
+    assert_eq!(summary.series.len(), 3);
+}
+
+/// 8 writer threads hammer counters and a histogram while a scraper
+/// loops over HTTP: every scrape must validate (cumulative buckets,
+/// `_count` == `+Inf` — i.e. no torn histogram reads) and every
+/// counter series must be monotone across scrapes.
+#[test]
+fn concurrent_scrapes_are_valid_and_monotone() {
+    let registry = Arc::new(Registry::new());
+    let server = MetricsServer::serve("127.0.0.1:0", registry.clone()).unwrap();
+    let addr = server.local_addr();
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        for w in 0..8 {
+            let registry = registry.clone();
+            let stop = stop.clone();
+            scope.spawn(move || {
+                let label = format!("w{w}");
+                let c = registry.counter(
+                    "stress_ops_total",
+                    "Writer operations.",
+                    &[("writer", label.as_str())],
+                );
+                let h = registry.histogram(
+                    "stress_wait_seconds",
+                    "Synthetic wait.",
+                    &[("writer", label.as_str())],
+                    &obs::LATENCY_BUCKETS,
+                );
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    c.inc();
+                    h.observe((i % 100) as f64 * 1e-4);
+                    i += 1;
+                }
+            });
+        }
+        let mut prev: HashMap<String, u64> = HashMap::new();
+        for _ in 0..20 {
+            let text = obs::scrape(addr, "/metrics").unwrap();
+            obs::validate(&text).unwrap_or_else(|e| panic!("scrape invalid: {e}\n--\n{text}"));
+            for line in text.lines().filter(|l| l.starts_with("stress_ops_total{")) {
+                let (series, value) = line.rsplit_once(' ').unwrap();
+                let value: u64 = value.parse().unwrap();
+                if let Some(&was) = prev.get(series) {
+                    assert!(value >= was, "counter went backwards: {series} {was} -> {value}");
+                }
+                prev.insert(series.to_string(), value);
+            }
+        }
+        assert_eq!(prev.len(), 8, "every writer's series appeared");
+        assert!(prev.values().all(|&v| v > 0));
+        stop.store(true, Ordering::Relaxed);
+    });
+}
+
+// ---------------------------------------------------------------------
+// priority shedding
+// ---------------------------------------------------------------------
+
+/// With shedding on, low-priority admission stops at the watermark while
+/// high-priority traffic still fills the queue to true capacity.
+#[test]
+fn shedding_rejects_low_priority_before_high() {
+    let a = gen::grid2d_laplacian(7, 7);
+    let router = Router::new(
+        SolveOptions::ours(1),
+        RouterConfig {
+            shard_queue: 6,
+            registry: Some(Arc::new(Registry::new())),
+            ..RouterConfig::default()
+        },
+    );
+    let t = router.admit(&a).unwrap();
+    router.scale_tenant(t, 1, 6, 3).unwrap();
+    let rhs = vec![1.0; a.n_rows()];
+    for _ in 0..3 {
+        router.submit_with_priority(t, Request::Solve { rhs: rhs.clone() }, Priority::Low).unwrap();
+    }
+    assert!(
+        matches!(
+            router.submit_with_priority(t, Request::Solve { rhs: rhs.clone() }, Priority::Low),
+            Err(ServeError::ShardFull { .. })
+        ),
+        "low is shed at the watermark"
+    );
+    for _ in 0..3 {
+        router.submit(t, Request::Solve { rhs: rhs.clone() }).unwrap();
+    }
+    assert!(
+        matches!(
+            router.submit(t, Request::Solve { rhs }),
+            Err(ServeError::ShardFull { .. })
+        ),
+        "high is only rejected at true capacity"
+    );
+    let health = &router.health()[0];
+    assert_eq!(health.queue_depth, 6);
+    assert_eq!(health.low_priority_limit, 3);
+}
+
+// ---------------------------------------------------------------------
+// autoscaled serving vs unscaled oracle
+// ---------------------------------------------------------------------
+
+enum Step {
+    Full(Vec<f64>),
+    Stamp(ChangeSet),
+    Solve(Vec<f64>),
+}
+
+fn script_for(a: &Csc, seed: u64, len: usize) -> Vec<Step> {
+    let mut rng = sparselu::util::Prng::new(seed);
+    let n = a.n_rows();
+    let mut steps = vec![Step::Full(a.values.clone())];
+    for _ in 1..len {
+        steps.push(match rng.below(10) {
+            0..=1 => Step::Full(
+                a.values.iter().map(|v| v * (1.0 + 0.02 * rng.signed_unit())).collect(),
+            ),
+            2..=5 => {
+                let d = rng.below(n);
+                let k = a.value_index(d, d).expect("full diagonal");
+                let nv = a.values[k] * (1.0 + 0.03 * (0.5 + 0.5 * rng.f64()));
+                Step::Stamp(ChangeSet::from_value_indices([(k, nv)]))
+            }
+            _ => Step::Solve((0..n).map(|_| rng.signed_unit()).collect()),
+        });
+    }
+    steps
+}
+
+fn oracle_solutions(plan: &Arc<FactorPlan>, steps: &[Step]) -> Vec<Vec<f64>> {
+    let mut session = SolverSession::from_plan(plan.clone());
+    let mut solutions = Vec::new();
+    for step in steps {
+        match step {
+            Step::Full(values) => {
+                session.refactorize(values).unwrap();
+            }
+            Step::Stamp(cs) => {
+                session.refactorize_partial(cs).unwrap();
+            }
+            Step::Solve(rhs) => solutions.push(session.solve(rhs)),
+        }
+    }
+    solutions
+}
+
+fn step_request(step: &Step) -> Request {
+    match step {
+        Step::Full(values) => Request::Refactorize { values: values.clone() },
+        Step::Stamp(cs) => Request::Stamp { changes: cs.clone() },
+        Step::Solve(rhs) => Request::Solve { rhs: rhs.clone() },
+    }
+}
+
+/// The acceptance bar for the control loop: while the autoscaler
+/// resizes pools and queue bounds live (ticking between bursts), every
+/// admitted request's result must be bit-identical to a single-session
+/// replay with no scaling at all — shedding and resizing are
+/// admission-side only and never change execution.
+#[test]
+fn autoscaled_serving_is_bit_identical_to_the_unscaled_oracle() {
+    let a = gen::grid2d_laplacian(10, 10);
+    let registry = Arc::new(Registry::new());
+    let router = Arc::new(Router::new(
+        SolveOptions::ours(1),
+        RouterConfig {
+            shard_queue: 8,
+            registry: Some(registry.clone()),
+            ..RouterConfig::default()
+        },
+    ));
+    let tenant = router.admit(&a).unwrap();
+    let policy = SloPolicy {
+        // pin the SLO far out so the trace (queue depth) drives scaling
+        // deterministically regardless of machine speed
+        p99_queue_wait_slo_s: 10.0,
+        min_sessions: 1,
+        max_sessions: 4,
+        min_queue: 4,
+        max_queue: 32,
+        ..SloPolicy::default()
+    };
+    let scaler = Autoscaler::new(router.clone(), policy);
+
+    let steps = script_for(&a, 77, 40);
+    let expected = oracle_solutions(&router.plan_of(tenant).unwrap(), &steps);
+
+    let mut solutions: Vec<Vec<f64>> = Vec::new();
+    let mut collect = |outcomes: Vec<Result<sparselu::serve::ServeReport, ServeError>>| {
+        for outcome in outcomes {
+            if let Some(x) = outcome.expect("scripted request failed").solution {
+                solutions.push(x);
+            }
+        }
+    };
+    for chunk in steps.chunks(5) {
+        for step in chunk {
+            // closed loop: if a (possibly shrunken) queue is full, drain
+            // and retry — nothing is ever dropped
+            loop {
+                match router.submit(tenant, step_request(step)) {
+                    Ok(()) => break,
+                    Err(ServeError::ShardFull { .. }) => {
+                        collect(router.drain_tenant(tenant).unwrap())
+                    }
+                    Err(e) => panic!("unexpected submit failure: {e}"),
+                }
+            }
+        }
+        scaler.tick(); // the control loop runs mid-load, resizing live
+        collect(router.drain_tenant(tenant).unwrap());
+    }
+    assert_eq!(solutions, expected, "autoscaled serving changed admitted results");
+    assert!(
+        registry.counter("sparselu_autoscale_ticks_total", "", &[]).get() >= 8,
+        "the controller actually ran during the load"
+    );
+    let health = &router.health()[0];
+    assert!(health.sessions_target <= policy.max_sessions);
+    assert!(health.queue_capacity >= policy.min_queue && health.queue_capacity <= policy.max_queue);
+}
+
+// ---------------------------------------------------------------------
+// acceptance scrape: 4-tenant run, >= 20 distinct series
+// ---------------------------------------------------------------------
+
+#[test]
+fn four_tenant_run_exposes_the_full_series_set() {
+    let registry = Arc::new(Registry::new());
+    let mats: Vec<(String, Csc)> = vec![
+        (
+            "bbd-300".into(),
+            gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() }),
+        ),
+        ("grid-9x9".into(), gen::grid2d_laplacian(9, 9)),
+        ("fem-200".into(), gen::banded_fem(200, &[1, 2, 3, 20, 21], 0.85, 0xFE3)),
+        ("grid-8x10".into(), gen::grid2d_laplacian(8, 10)),
+    ];
+    let cfg = MultiTenantConfig {
+        clients: 4,
+        requests_per_client: 12,
+        burst: 3,
+        mix: ScenarioMix::default(),
+        seed: 0xC0FFEE,
+        router: RouterConfig {
+            sessions_per_shard: 1,
+            registry: Some(registry.clone()),
+            ..RouterConfig::default()
+        },
+        autoscale: Some(SloPolicy { p99_queue_wait_slo_s: 10.0, ..SloPolicy::default() }),
+    };
+    // 2-worker plans: the shared work-stealing executor is live, so its
+    // steal/park counters are registered and mirrored
+    let report = loadgen::run_multi(&mats, &SolveOptions::ours(2), &cfg);
+    assert_eq!(report.tenants, 4);
+    assert!(report.total_requests >= 4 * 12);
+
+    let server = MetricsServer::serve("127.0.0.1:0", registry.clone()).unwrap();
+    let text = obs::scrape(server.local_addr(), "/metrics").unwrap();
+    let summary =
+        obs::validate(&text).unwrap_or_else(|e| panic!("exposition invalid: {e}\n--\n{text}"));
+    assert!(
+        summary.series.len() >= 20,
+        "expected >= 20 distinct series, got {}:\n{}",
+        summary.series.len(),
+        summary.series.join("\n")
+    );
+    assert_eq!(registry.label_values("tenant").len(), 4, "one label value per tenant");
+    for needle in [
+        "sparselu_tenant_queue_wait_seconds_bucket{",
+        "sparselu_tenant_exec_seconds_bucket{",
+        "sparselu_tenant_batch_size_bucket{",
+        "sparselu_tenant_submitted_total{",
+        "sparselu_pool_checkout_wait_seconds_bucket{",
+        "sparselu_pool_sessions_target{",
+        "sparselu_plan_cache_misses_total",
+        "sparselu_router_shards_live",
+        "sparselu_executor_steals_total{workers=\"2\"}",
+        "sparselu_executor_parks_total{workers=\"2\"}",
+        "sparselu_executor_workers{workers=\"2\"} 2",
+        "sparselu_autoscale_ticks_total",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in scrape:\n{text}");
+    }
+    // per-tenant histograms saw real traffic
+    let completed: u64 = text
+        .lines()
+        .filter(|l| l.starts_with("sparselu_tenant_completed_total{"))
+        .map(|l| l.rsplit(' ').next().unwrap().parse::<u64>().unwrap())
+        .sum();
+    assert!(completed as usize >= 4 * 12, "completed counters cover the whole load");
+}
