@@ -60,7 +60,8 @@ fn main() {
     });
 
     // --- session path: one plan, numeric-only steps ---
-    let (plan, plan_seconds) = timed(|| Arc::new(FactorPlan::build(&a, &opts)));
+    let (plan, plan_seconds) =
+        timed(|| Arc::new(FactorPlan::build(&a, &opts).expect("plan build")));
     println!(
         "\nFactorPlan built once: {:.4}s (reorder {:.4}s, symbolic {:.4}s, \
          preprocess {:.4}s, scatter-map+sim {:.4}s)",

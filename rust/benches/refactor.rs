@@ -52,13 +52,13 @@ fn main() {
         });
 
         let plan_build = bench(&format!("{name} FactorPlan::build"), 8, || {
-            FactorPlan::build(a, &opts).report.nnz_ldu
+            FactorPlan::build(a, &opts).unwrap().report.nnz_ldu
         });
 
         // the plan for the warm path is constructed exactly ONCE, here,
         // outside the timed region — refactorize cannot rebuild it (the
         // session API has no path that does structure work)
-        let plan = Arc::new(FactorPlan::build(a, &opts));
+        let plan = Arc::new(FactorPlan::build(a, &opts).unwrap());
         let mut session = SolverSession::from_plan(plan.clone());
         let warm = bench(&format!("{name} warm refactorize"), 16, || {
             session.refactorize(&a.values).expect("refactorize").numeric_seconds
@@ -99,9 +99,9 @@ fn main() {
         );
 
         let mut cache = PlanCache::new(4);
-        let _ = cache.get_or_build(a, &opts); // warm the cache (1 miss)
+        let _ = cache.get_or_build(a, &opts).unwrap(); // warm the cache (1 miss)
         let cache_hit = bench(&format!("{name} PlanCache hit"), 32, || {
-            cache.get_or_build(a, &opts).report.nnz_ldu
+            cache.get_or_build(a, &opts).unwrap().report.nnz_ldu
         });
         assert_eq!(cache.misses(), 1, "warm cache must never rebuild the plan");
 

@@ -46,7 +46,7 @@ fn main() {
 
     for (name, a, mix) in &suite {
         println!("\n=== {name} (n={}, nnz={}) ===", a.n_rows(), a.nnz());
-        let plan = Arc::new(FactorPlan::build(a, &opts));
+        let plan = Arc::new(FactorPlan::build(a, &opts).unwrap());
         let cfg = LoadgenConfig {
             clients: 8,
             requests_per_client: 24,

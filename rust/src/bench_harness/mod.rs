@@ -11,6 +11,7 @@
 
 pub mod figures;
 pub mod matrices;
+pub mod plan;
 pub mod sched;
 pub mod sweeps;
 pub mod tables;

@@ -1,0 +1,218 @@
+//! Plan-construction bench: the **cold-start** scenario behind
+//! `repro plan-bench`.
+//!
+//! A serving shard's first request for an unseen pattern pays the full
+//! structure-only pipeline — ordering, symbolic fill, blocking + DAG,
+//! scatter map. This bench prices that spike twice per (matrix, worker
+//! count): once sequentially ([`FactorPlan::build`]) and once on the
+//! persistent executor ([`FactorPlan::build_on`]), asserting the two
+//! plans are structurally identical before trusting the timing. The
+//! per-phase laps come straight from the plan's own [`PlanReport`], so
+//! the breakdown matches what `repro analyze` prints. Results land in
+//! `BENCH_plan.json`.
+
+use crate::coordinator::Executor;
+use crate::session::{FactorPlan, PlanReport};
+use crate::solver::SolveOptions;
+use crate::sparse::gen;
+
+/// One (matrix, worker-count) build measurement (best-of-`replays`).
+pub struct PlanBenchResult {
+    pub name: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub nnz_ldu: usize,
+    pub workers: u32,
+    /// Best sequential wall-clock build, seconds.
+    pub seq_seconds: f64,
+    /// Best executor-parallel wall-clock build, seconds.
+    pub par_seconds: f64,
+    /// Per-phase laps from the best sequential build's [`PlanReport`].
+    pub seq_reorder: f64,
+    pub seq_symbolic: f64,
+    pub seq_preprocess: f64,
+    pub seq_extra: f64,
+    /// Per-phase laps from the best parallel build's [`PlanReport`].
+    pub par_reorder: f64,
+    pub par_symbolic: f64,
+    pub par_preprocess: f64,
+    pub par_extra: f64,
+}
+
+impl PlanBenchResult {
+    /// Sequential-over-parallel wall-clock ratio (>1 means the executor
+    /// built the plan faster).
+    pub fn speedup(&self) -> f64 {
+        self.seq_seconds / self.par_seconds.max(1e-12)
+    }
+}
+
+/// The whole plan-bench run.
+pub struct PlanBenchReport {
+    pub replays: usize,
+    pub results: Vec<PlanBenchResult>,
+}
+
+impl PlanBenchReport {
+    /// `BENCH_plan.json` payload.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .results
+            .iter()
+            .map(|r| {
+                format!(
+                    concat!(
+                        "    {{\"matrix\": \"{}\", \"n\": {}, \"nnz\": {}, ",
+                        "\"nnz_ldu\": {}, \"workers\": {}, ",
+                        "\"seq_seconds\": {:.6}, \"par_seconds\": {:.6}, ",
+                        "\"speedup\": {:.3}, ",
+                        "\"seq_reorder\": {:.6}, \"seq_symbolic\": {:.6}, ",
+                        "\"seq_preprocess\": {:.6}, \"seq_extra\": {:.6}, ",
+                        "\"par_reorder\": {:.6}, \"par_symbolic\": {:.6}, ",
+                        "\"par_preprocess\": {:.6}, \"par_extra\": {:.6}}}"
+                    ),
+                    r.name,
+                    r.n,
+                    r.nnz,
+                    r.nnz_ldu,
+                    r.workers,
+                    r.seq_seconds,
+                    r.par_seconds,
+                    r.speedup(),
+                    r.seq_reorder,
+                    r.seq_symbolic,
+                    r.seq_preprocess,
+                    r.seq_extra,
+                    r.par_reorder,
+                    r.par_symbolic,
+                    r.par_preprocess,
+                    r.par_extra,
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"bench\": \"plan\",\n  \"scenario\": \"plan-construction\",\n  \
+             \"replays\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            self.replays,
+            rows.join(",\n")
+        )
+    }
+
+    /// Human-readable table (shared by the CLI command and CI logs).
+    pub fn print(&self) {
+        println!("\n--- plan bench: plan-construction (best of {} builds) ---", self.replays);
+        for r in &self.results {
+            println!(
+                "{:22} w={} | seq {:8.4}s -> par {:8.4}s ({:.2}x) | par phases: reorder \
+                 {:.4}s, symbolic {:.4}s, blocking {:.4}s, scatter {:.4}s",
+                r.name,
+                r.workers,
+                r.seq_seconds,
+                r.par_seconds,
+                r.speedup(),
+                r.par_reorder,
+                r.par_symbolic,
+                r.par_preprocess,
+                r.par_extra,
+            );
+        }
+    }
+}
+
+/// Best-of-`replays` build via `f`, returning the fastest build's
+/// wall-clock seconds together with that build's plan.
+fn best_of(replays: usize, mut f: impl FnMut() -> FactorPlan) -> (f64, FactorPlan) {
+    let mut best_secs = f64::INFINITY;
+    let mut best_plan = None;
+    for _ in 0..replays {
+        let t0 = std::time::Instant::now();
+        let plan = f();
+        let secs = t0.elapsed().as_secs_f64();
+        if secs < best_secs {
+            best_secs = secs;
+            best_plan = Some(plan);
+        }
+    }
+    (best_secs, best_plan.expect("replays >= 1"))
+}
+
+/// Panic unless the two builds produced structurally identical plans —
+/// the timing comparison is meaningless otherwise.
+fn assert_same_plan(seq: &FactorPlan, par: &FactorPlan) {
+    assert_eq!(seq.fingerprint(), par.fingerprint(), "fingerprint diverged");
+    assert_eq!(
+        seq.structure.blocking.positions(),
+        par.structure.blocking.positions(),
+        "blocking diverged"
+    );
+    assert_eq!(seq.report.nnz_ldu, par.report.nnz_ldu, "symbolic fill diverged");
+    assert_eq!(seq.dag.tasks.len(), par.dag.tasks.len(), "task DAG diverged");
+    assert_eq!(seq.scatter_maps().0, par.scatter_maps().0, "scatter map diverged");
+}
+
+fn phases(r: &PlanReport) -> (f64, f64, f64, f64) {
+    (r.reorder_seconds, r.symbolic_seconds, r.preprocess_seconds, r.plan_extra_seconds)
+}
+
+/// Run the plan-construction suite: `replays` builds per timing (best
+/// taken), one measurement per (matrix, worker count).
+pub fn run(replays: usize, worker_counts: &[u32]) -> PlanBenchReport {
+    assert!(replays >= 1, "need at least 1 build per measurement");
+    let suite = [
+        ("grid2d-48x48", gen::grid2d_laplacian(48, 48)),
+        (
+            "circuit-bbd-3000",
+            gen::circuit_bbd(gen::CircuitParams { n: 3000, ..Default::default() }),
+        ),
+    ];
+    let mut results = Vec::new();
+    for (name, a) in &suite {
+        for &workers in worker_counts {
+            let opts = SolveOptions::ours(workers);
+            let (seq_seconds, seq) =
+                best_of(replays, || FactorPlan::build(a, &opts).expect("sequential build"));
+            let exec = Executor::shared(workers);
+            let (par_seconds, par) =
+                best_of(replays, || FactorPlan::build_on(a, &opts, &exec).expect("parallel build"));
+            assert_same_plan(&seq, &par);
+            let (seq_reorder, seq_symbolic, seq_preprocess, seq_extra) = phases(&seq.report);
+            let (par_reorder, par_symbolic, par_preprocess, par_extra) = phases(&par.report);
+            results.push(PlanBenchResult {
+                name: (*name).to_string(),
+                n: a.n_rows(),
+                nnz: a.nnz(),
+                nnz_ldu: seq.report.nnz_ldu,
+                workers,
+                seq_seconds,
+                par_seconds,
+                seq_reorder,
+                seq_symbolic,
+                seq_preprocess,
+                seq_extra,
+                par_reorder,
+                par_symbolic,
+                par_preprocess,
+                par_extra,
+            });
+        }
+    }
+    PlanBenchReport { replays, results }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke() {
+        let report = run(1, &[1, 2]);
+        assert_eq!(report.results.len(), 4);
+        for r in &report.results {
+            assert!(r.seq_seconds > 0.0 && r.par_seconds > 0.0);
+            assert!(r.nnz_ldu >= r.nnz);
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"bench\": \"plan\""));
+        assert!(json.contains("\"workers\": 2"));
+    }
+}

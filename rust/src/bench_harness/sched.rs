@@ -198,7 +198,7 @@ pub fn run(replays: usize, worker_counts: &[u32]) -> SchedReport {
     for (name, a) in &suite {
         for &workers in worker_counts {
             let opts = SolveOptions::ours(workers);
-            let plan = Arc::new(FactorPlan::build(a, &opts));
+            let plan = Arc::new(FactorPlan::build(a, &opts).unwrap());
             let tasks_full = plan.dag.tasks.len();
             let mut session = SolverSession::from_plan(plan.clone());
             session.refactorize(&a.values).expect("seed refactorize");

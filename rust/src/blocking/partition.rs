@@ -3,6 +3,8 @@
 //! engine operates on (PanguLU's "blocked sparse storage").
 
 use super::Blocking;
+use crate::coordinator::{par_chunks, Executor};
+use crate::numeric::factor::FactorError;
 use crate::sparse::Csc;
 use std::collections::HashMap;
 
@@ -109,23 +111,120 @@ pub struct BlockedMatrix {
     pub by_row: Vec<Vec<u32>>,
 }
 
+/// Per-block-row accumulator for one block-column stripe.
+struct Builder {
+    counts: Vec<u32>,
+    rows: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+/// Assemble every non-empty block of block-column stripe `bj`, in
+/// ascending `bi` order — the exact per-stripe body of the sequential
+/// partition pass, factored out so stripes can run concurrently (they
+/// touch disjoint columns of `ldu` and write disjoint outputs).
+fn build_stripe(
+    ldu: &Csc,
+    positions: &[usize],
+    row_block: &[u32],
+    bj: usize,
+) -> Result<Vec<Block>, FactorError> {
+    let nb = positions.len() - 1;
+    let (lo, hi) = (positions[bj], positions[bj + 1]);
+    let width = hi - lo;
+    let mut builders: Vec<Option<Builder>> = (0..nb).map(|_| None).collect();
+    let mut touched: Vec<usize> = Vec::new();
+    // gather entries of this stripe into per-block-row builders
+    for (c_local, j) in (lo..hi).enumerate() {
+        for (i, v) in ldu.col(j) {
+            let bi = row_block[i] as usize;
+            let b = builders[bi].get_or_insert_with(|| {
+                touched.push(bi);
+                Builder { counts: vec![0u32; width], rows: Vec::new(), vals: Vec::new() }
+            });
+            b.counts[c_local] += 1;
+            b.rows.push((i - positions[bi]) as u32);
+            b.vals.push(v);
+        }
+    }
+    // entries arrive per global column (columns are the outer loop), so
+    // per builder they are already grouped by ascending column
+    touched.sort_unstable();
+    let mut out = Vec::with_capacity(touched.len());
+    for &bi in &touched {
+        let b = builders[bi].take().unwrap();
+        let mut col_ptr = vec![0u32; width + 1];
+        for c in 0..width {
+            col_ptr[c + 1] = col_ptr[c] + b.counts[c];
+        }
+        // precompute diagonal offsets for diagonal blocks
+        let diag_pos = if bi == bj {
+            let mut dp = Vec::with_capacity(width);
+            for c in 0..width {
+                let rows = &b.rows[col_ptr[c] as usize..col_ptr[c + 1] as usize];
+                match rows.binary_search(&(c as u32)) {
+                    Ok(k) => dp.push(k as u32),
+                    // `lo + c` is the row index in the pattern handed to
+                    // the partitioner (post-permutation when called from
+                    // a plan build; FactorPlan's own diagonal scan
+                    // reports the pre-permutation index first)
+                    Err(_) => return Err(FactorError::StructurallySingular { row: lo + c }),
+                }
+            }
+            dp
+        } else {
+            Vec::new()
+        };
+        out.push(Block {
+            bi: bi as u32,
+            bj: bj as u32,
+            n_rows: (positions[bi + 1] - positions[bi]) as u32,
+            n_cols: width as u32,
+            col_ptr,
+            row_idx: b.rows,
+            values: b.vals,
+            diag_pos,
+        });
+    }
+    Ok(out)
+}
+
 impl BlockedMatrix {
     /// Partition `ldu` (the filled L+U pattern with values) by `blocking`.
+    ///
+    /// Sequential, panicking wrapper over [`Self::try_build_on`] for
+    /// callers that know their pattern has a full structural diagonal
+    /// (every in-repo generator guarantees one). Serving paths go through
+    /// `try_build_on` instead so a tenant-supplied singular pattern comes
+    /// back as an `Err`.
     pub fn build(ldu: &Csc, blocking: Blocking) -> Self {
+        match Self::try_build_on(ldu, blocking, None) {
+            Ok(bm) => bm,
+            Err(FactorError::StructurallySingular { row }) => {
+                panic!("diagonal entry missing in diagonal block (row {row})")
+            }
+            Err(e) => panic!("blocked partition failed: {e}"),
+        }
+    }
+
+    /// Partition `ldu` by `blocking`, assembling the block-column stripes
+    /// on `exec` when one is given (each stripe is independent once the
+    /// block boundaries are fixed — Kim et al.'s 2D partitioned-block
+    /// observation). The resulting block order, ids and adjacency are
+    /// bit-identical to the sequential pass at every worker count:
+    /// stripes write disjoint slots that are stitched in `bj` order.
+    ///
+    /// Returns [`FactorError::StructurallySingular`] (first affected
+    /// column in `ldu` row numbering) when a diagonal block is missing a
+    /// diagonal entry, instead of panicking the calling thread.
+    pub fn try_build_on(
+        ldu: &Csc,
+        blocking: Blocking,
+        exec: Option<&Executor>,
+    ) -> Result<Self, FactorError> {
         let n = ldu.n_cols();
         assert_eq!(blocking.n(), n);
         let nb = blocking.num_blocks();
         let positions = blocking.positions().to_vec();
-
-        struct Builder {
-            counts: Vec<u32>,
-            rows: Vec<u32>,
-            vals: Vec<f64>,
-        }
-
-        let mut blocks: Vec<Block> = Vec::new();
-        let mut builders: Vec<Option<Builder>> = (0..nb).map(|_| None).collect();
-        let mut touched: Vec<usize> = Vec::new();
 
         // row → block-row map, computed once (a binary search per entry
         // dominated this pass before — perf opt-3)
@@ -136,61 +235,18 @@ impl BlockedMatrix {
             }
         }
 
-        for bj in 0..nb {
-            let (lo, hi) = (positions[bj], positions[bj + 1]);
-            let width = hi - lo;
-            // gather entries of this stripe into per-block-row builders
-            for (c_local, j) in (lo..hi).enumerate() {
-                for (i, v) in ldu.col(j) {
-                    let bi = row_block[i] as usize;
-                    let b = builders[bi].get_or_insert_with(|| {
-                        touched.push(bi);
-                        Builder {
-                            counts: vec![0u32; width],
-                            rows: Vec::new(),
-                            vals: Vec::new(),
-                        }
-                    });
-                    b.counts[c_local] += 1;
-                    b.rows.push((i - positions[bi]) as u32);
-                    b.vals.push(v);
-                }
+        let mut stripes: Vec<Result<Vec<Block>, FactorError>> =
+            (0..nb).map(|_| Ok(Vec::new())).collect();
+        par_chunks(exec, &mut stripes, &|start, out| {
+            for (off, slot) in out.iter_mut().enumerate() {
+                *slot = build_stripe(ldu, &positions, &row_block, start + off);
             }
-            // wait — entries were appended in (column, row) order *per
-            // block*? They arrive per global column, so per builder they
-            // are grouped by column already (we iterate columns outer).
-            touched.sort_unstable();
-            for &bi in &touched {
-                let b = builders[bi].take().unwrap();
-                let mut col_ptr = vec![0u32; width + 1];
-                for c in 0..width {
-                    col_ptr[c + 1] = col_ptr[c] + b.counts[c];
-                }
-                // precompute diagonal offsets for diagonal blocks
-                let diag_pos = if bi == bj {
-                    (0..width)
-                        .map(|c| {
-                            let rows = &b.rows[col_ptr[c] as usize..col_ptr[c + 1] as usize];
-                            rows.binary_search(&(c as u32))
-                                .expect("diagonal entry missing in diagonal block")
-                                as u32
-                        })
-                        .collect()
-                } else {
-                    Vec::new()
-                };
-                blocks.push(Block {
-                    bi: bi as u32,
-                    bj: bj as u32,
-                    n_rows: (positions[bi + 1] - positions[bi]) as u32,
-                    n_cols: width as u32,
-                    col_ptr,
-                    row_idx: b.rows,
-                    values: b.vals,
-                    diag_pos,
-                });
-            }
-            touched.clear();
+        })?;
+        let mut blocks: Vec<Block> = Vec::new();
+        for stripe in stripes {
+            // first error in bj order wins — deterministic across
+            // worker counts (every stripe ran to completion regardless)
+            blocks.extend(stripe?);
         }
 
         let mut index = HashMap::with_capacity(blocks.len());
@@ -207,7 +263,7 @@ impl BlockedMatrix {
         for v in &mut by_row {
             v.sort_unstable_by_key(|&id| blocks[id as usize].bj);
         }
-        Self { blocking, blocks, index, by_col, by_row }
+        Ok(Self { blocking, blocks, index, by_col, by_row })
     }
 
     pub fn nb(&self) -> usize {
@@ -362,6 +418,46 @@ mod tests {
         // tridiagonal: only diagonal + sub/super-diagonal block couples
         assert!(bm.num_nonempty() <= 10 + 9 + 9);
         assert!(bm.num_nonempty() >= 10);
+    }
+
+    #[test]
+    fn parallel_partition_is_bit_identical_to_sequential() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 600, ..Default::default() });
+        let sym = symbolic::analyze(&a);
+        let ldu = sym.ldu_pattern(&a).unwrap();
+        let seq = BlockedMatrix::build(&ldu, regular_blocking(a.n_cols(), 48));
+        for workers in [2u32, 8] {
+            let exec = crate::coordinator::Executor::shared(workers);
+            let par =
+                BlockedMatrix::try_build_on(&ldu, regular_blocking(a.n_cols(), 48), Some(&exec))
+                    .unwrap();
+            assert_eq!(par.blocks.len(), seq.blocks.len(), "workers={workers}");
+            for (id, (p, s)) in par.blocks.iter().zip(&seq.blocks).enumerate() {
+                assert_eq!((p.bi, p.bj), (s.bi, s.bj), "block {id} coords (workers={workers})");
+                assert_eq!(p.col_ptr, s.col_ptr, "block {id} col_ptr");
+                assert_eq!(p.row_idx, s.row_idx, "block {id} row_idx");
+                assert_eq!(p.values, s.values, "block {id} values");
+                assert_eq!(p.diag_pos, s.diag_pos, "block {id} diag_pos");
+            }
+            assert_eq!(par.by_col, seq.by_col);
+            assert_eq!(par.by_row, seq.by_row);
+        }
+    }
+
+    #[test]
+    fn structurally_singular_pattern_returns_err_not_panic() {
+        // column 2 is populated but has no diagonal entry
+        let mut coo = crate::sparse::Coo::new(5, 5);
+        for i in 0..5 {
+            if i != 2 {
+                coo.push(i, i, 4.0);
+            }
+        }
+        coo.push(0, 2, 1.0);
+        coo.push(2, 3, 1.0);
+        let c = coo.to_csc();
+        let err = BlockedMatrix::try_build_on(&c, regular_blocking(5, 5), None).unwrap_err();
+        assert_eq!(err, FactorError::StructurallySingular { row: 2 });
     }
 
     #[test]

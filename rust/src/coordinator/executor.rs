@@ -209,36 +209,53 @@ struct JobStatus {
     failed: Option<FactorError>,
 }
 
-/// One in-flight DAG run: lifetime-erased borrows of the caller's data
-/// plus the job-scoped completion/cancellation protocol. Queue entries
-/// hold an `Arc<Job>`, so a stale entry left behind by a failed run keeps
-/// only this small header alive — never the borrowed data.
+/// What a job's queue entries execute: a DAG run (the numeric path) or a
+/// flat index-parallel loop (the plan-construction path). Both carry
+/// lifetime-erased borrows of the submitting call's data — the claim
+/// protocol on [`Job`] keeps every dereference inside the submitter's
+/// blocking window.
+enum Work {
+    /// One DAG run over a blocked numeric matrix.
+    Dag {
+        nm: *const NumericMatrix,
+        dag: *const TaskDag,
+        policy: *const KernelPolicy,
+        backend: *const (dyn DenseBackend + Sync),
+        subset: Option<*const [bool]>,
+        state: *const RunState,
+    },
+    /// `f(t)` for every task index `t` — no dependencies, no numeric
+    /// state; the closure owns all effects (writing disjoint output
+    /// slots, see [`Executor::for_each`]).
+    Each { f: *const (dyn Fn(usize) + Sync) },
+}
+
+/// One in-flight job: lifetime-erased borrows of the caller's data plus
+/// the job-scoped completion/cancellation protocol. Queue entries hold an
+/// `Arc<Job>`, so a stale entry left behind by a failed run keeps only
+/// this small header alive — never the borrowed data.
 struct Job {
-    nm: *const NumericMatrix,
-    dag: *const TaskDag,
-    policy: *const KernelPolicy,
-    backend: *const (dyn DenseBackend + Sync),
-    subset: Option<*const [bool]>,
-    state: *const RunState,
+    work: Work,
     total: usize,
     /// Tasks executed successfully.
     done: AtomicUsize,
     /// Claim word: [`CANCEL`] bit + count of workers currently executing
     /// a task of this job (i.e. currently allowed to dereference the raw
-    /// pointers above).
+    /// pointers in [`Work`]).
     claims: AtomicU64,
     status: Mutex<JobStatus>,
     cv: Condvar,
 }
 
-// SAFETY: the raw pointers borrow data owned by the `Executor::run` call
-// that created the job. `run` does not return until either every task has
-// executed (all queue entries consumed) or the job has been cancelled and
-// every in-flight claim released — and a worker only dereferences the
-// pointers inside a `begin()`/`end()` claim window, which `begin()`
-// refuses to open once the cancel bit is set. All mutable state behind
-// the pointers is atomics (`RunState`) or internally locked
-// (`NumericMatrix` block RwLocks).
+// SAFETY: the raw pointers in `Work` borrow data owned by the
+// `Executor::run` / `Executor::for_each` call that created the job.
+// Neither returns until either every task has executed (all queue entries
+// consumed) or the job has been cancelled and every in-flight claim
+// released — and a worker only dereferences the pointers inside a
+// `begin()`/`end()` claim window, which `begin()` refuses to open once
+// the cancel bit is set. All mutable state behind the `Dag` pointers is
+// atomics (`RunState`) or internally locked (`NumericMatrix` block
+// RwLocks); an `Each` closure is `Sync` and manages its own disjointness.
 unsafe impl Send for Job {}
 unsafe impl Sync for Job {}
 
@@ -262,6 +279,30 @@ impl Job {
         let prev = self.claims.fetch_sub(1, Ordering::AcqRel);
         if prev & CANCEL != 0 && prev & !CANCEL == 1 {
             let _guard = self.status.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    /// A task of this job failed: poison further claims first, then
+    /// signal the submitter. Queued siblings are purged by the waiting
+    /// submitter; in-flight ones drain through the claim count.
+    fn fail(&self, e: FactorError) {
+        self.claims.fetch_or(CANCEL, Ordering::AcqRel);
+        let mut st = self.status.lock().unwrap();
+        if st.failed.is_none() {
+            st.failed = Some(e);
+        }
+        st.done = true;
+        self.cv.notify_all();
+    }
+
+    /// A task of this job succeeded; signals the submitter when it was
+    /// the last one.
+    fn complete_one(&self) {
+        let finished = self.done.fetch_add(1, Ordering::SeqCst) + 1;
+        if finished >= self.total {
+            let mut st = self.status.lock().unwrap();
+            st.done = true;
             self.cv.notify_all();
         }
     }
@@ -343,7 +384,8 @@ impl Shared {
 /// scrape and for `repro sched-bench` to delta around each storm.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ExecutorStats {
-    /// DAG runs submitted.
+    /// Jobs submitted: DAG runs plus data-parallel [`Executor::for_each`]
+    /// jobs (plan-construction passes).
     pub runs: u64,
     /// Tasks taken from another worker's deque tail.
     pub steals: u64,
@@ -485,12 +527,14 @@ impl Executor {
         let t0 = Instant::now();
         let state_ref: &RunState = state;
         let job = Arc::new(Job {
-            nm: nm as *const NumericMatrix,
-            dag: dag as *const TaskDag,
-            policy: policy as *const KernelPolicy,
-            backend: backend as *const (dyn DenseBackend + Sync),
-            subset: subset.map(|s| s as *const [bool]),
-            state: state_ref as *const RunState,
+            work: Work::Dag {
+                nm: nm as *const NumericMatrix,
+                dag: dag as *const TaskDag,
+                policy: policy as *const KernelPolicy,
+                backend: backend as *const (dyn DenseBackend + Sync),
+                subset: subset.map(|s| s as *const [bool]),
+                state: state_ref as *const RunState,
+            },
             total,
             done: AtomicUsize::new(0),
             claims: AtomicU64::new(0),
@@ -511,31 +555,7 @@ impl Executor {
             }
             self.shared.unpark_for(w, state_ref.seeds[w].len());
         }
-        // block until the job completes or fails
-        let failed = {
-            let mut st = job.status.lock().unwrap();
-            while !st.done {
-                st = job.cv.wait(st).unwrap();
-            }
-            st.failed.take()
-        };
-        if let Some(e) = failed {
-            // cancel-and-drain: no new claim can begin, queued entries of
-            // this job are purged, and in-flight executions are waited
-            // out — so the borrows in `job` are dead before we return and
-            // the pool is immediately reusable for the next run
-            job.claims.fetch_or(CANCEL, Ordering::AcqRel);
-            self.purge(&job);
-            {
-                let mut st = job.status.lock().unwrap();
-                while job.claims.load(Ordering::Acquire) & !CANCEL != 0 {
-                    st = job.cv.wait(st).unwrap();
-                }
-            }
-            // entries the last in-flight tasks released after the first
-            // purge: cancelled, so pop-and-skip would also discard them,
-            // but dropping them now frees the job header immediately
-            self.purge(&job);
+        if let Some(e) = self.wait_job(&job) {
             return Err(e);
         }
         debug_assert_eq!(job.done.load(Ordering::SeqCst), total, "not all tasks executed");
@@ -601,10 +621,171 @@ impl Executor {
         })
     }
 
+    /// Block until `job` completes or fails; on failure, cancel-and-drain
+    /// before returning the error: no new claim can begin, queued entries
+    /// of the job are purged, and in-flight executions are waited out —
+    /// so the borrows in `job` are dead before this returns and the pool
+    /// is immediately reusable for the next job.
+    fn wait_job(&self, job: &Arc<Job>) -> Option<FactorError> {
+        let failed = {
+            let mut st = job.status.lock().unwrap();
+            while !st.done {
+                st = job.cv.wait(st).unwrap();
+            }
+            st.failed.take()
+        };
+        let e = failed?;
+        job.claims.fetch_or(CANCEL, Ordering::AcqRel);
+        self.purge(job);
+        {
+            let mut st = job.status.lock().unwrap();
+            while job.claims.load(Ordering::Acquire) & !CANCEL != 0 {
+                st = job.cv.wait(st).unwrap();
+            }
+        }
+        // entries the last in-flight tasks released after the first
+        // purge: cancelled, so pop-and-skip would also discard them, but
+        // dropping them now frees the job header immediately
+        self.purge(job);
+        Some(e)
+    }
+
+    /// Run `f(i)` for every `i < n` across the pool, blocking until all
+    /// invocations completed (or one panicked — surfaced as
+    /// [`FactorError::TaskPanic`] after the cancel-and-drain protocol).
+    ///
+    /// This is the data-parallel counterpart of [`Executor::run`], used
+    /// by plan construction ([`crate::session::FactorPlan`]): the indices
+    /// carry no dependencies, so they are dealt round-robin across the
+    /// worker deques up front and balanced by the normal stealing path.
+    /// `f` must confine its effects to per-index state (disjoint output
+    /// slots); data-level failures should be recorded in those slots and
+    /// resolved by the caller, keeping job failure reserved for panics.
+    ///
+    /// On a 1-worker pool the loop runs inline on the calling thread with
+    /// identical panic containment.
+    pub fn for_each(&self, n: usize, f: &(dyn Fn(usize) + Sync)) -> Result<(), FactorError> {
+        if n == 0 {
+            return Ok(());
+        }
+        let p = self.workers as usize;
+        if p == 1 {
+            for i in 0..n {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+                    .map_err(|_| FactorError::TaskPanic)?;
+            }
+            return Ok(());
+        }
+        self.shared.runs.fetch_add(1, Ordering::Relaxed);
+        let job = Arc::new(Job {
+            work: Work::Each { f: f as *const (dyn Fn(usize) + Sync) },
+            total: n,
+            done: AtomicUsize::new(0),
+            claims: AtomicU64::new(0),
+            status: Mutex::new(JobStatus { done: false, failed: None }),
+            cv: Condvar::new(),
+        });
+        for w in 0..p {
+            let mut pushed = 0usize;
+            {
+                let mut q = self.shared.queues[w].lock().unwrap();
+                let mut i = w;
+                while i < n {
+                    q.push_back((job.clone(), i as u32));
+                    pushed += 1;
+                    i += p;
+                }
+            }
+            self.shared.unpark_for(w, pushed);
+        }
+        match self.wait_job(&job) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Split `data` into at most `max_chunks` contiguous chunks and run
+    /// `f(start_index, chunk)` for each across the pool. The chunks are
+    /// disjoint `&mut` views, so each invocation owns its slice; chunk
+    /// boundaries depend only on `(data.len(), max_chunks)`, never on
+    /// scheduling — the foundation of the deterministic parallel
+    /// plan-construction passes.
+    pub fn for_each_slice_mut<T: Send>(
+        &self,
+        data: &mut [T],
+        max_chunks: usize,
+        f: &(dyn Fn(usize, &mut [T]) + Sync),
+    ) -> Result<(), FactorError> {
+        let len = data.len();
+        if len == 0 {
+            return Ok(());
+        }
+        let chunks = max_chunks.clamp(1, len);
+        let base = len / chunks;
+        let rem = len % chunks;
+        let bounds: Vec<(usize, usize)> =
+            (0..chunks).map(|c| (c * base + c.min(rem), base + usize::from(c < rem))).collect();
+        let ptr = SendPtr(data.as_mut_ptr());
+        self.for_each(chunks, &move |c| {
+            let (start, size) = bounds[c];
+            // SAFETY: chunk ranges are disjoint by construction and
+            // `for_each` does not return until every chunk ran or the
+            // job was cancelled and drained, so `data` outlives every
+            // dereference and no two chunks alias.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), size) };
+            f(start, chunk);
+        })
+    }
+
     /// Drop every queued entry of `job` from all deques.
     fn purge(&self, job: &Arc<Job>) {
         for q in &self.shared.queues {
             q.lock().unwrap().retain(|(j, _)| !Arc::ptr_eq(j, job));
+        }
+    }
+}
+
+/// A `*mut T` that crosses threads: used by
+/// [`Executor::for_each_slice_mut`] to hand each chunk closure its own
+/// disjoint window into one borrowed slice.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+// SAFETY: only ever dereferenced through disjoint ranges (see
+// `for_each_slice_mut`), so sharing the pointer across workers is no
+// more than sharing `&mut [T]` split into non-overlapping chunks.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Number of chunks a parallel plan-construction pass should split `len`
+/// slots into: a few chunks per worker for stealing slack, 1 when no
+/// multi-worker pool is available (the sequential path).
+pub(crate) fn par_chunk_count(exec: Option<&Executor>, len: usize) -> usize {
+    match exec {
+        Some(e) if e.workers() > 1 => (e.workers() as usize * 4).clamp(1, len.max(1)),
+        _ => 1,
+    }
+}
+
+/// Run `f(start_index, chunk)` over disjoint contiguous chunks of `data`
+/// — on `exec` when it has multiple workers, inline as one chunk
+/// otherwise. The sequential path runs the *same* closure over the whole
+/// slice, so parallel and sequential plan builds execute identical code
+/// per slot and differ only in chunking; each slot's value is a pure
+/// function of its index.
+pub(crate) fn par_chunks<T: Send>(
+    exec: Option<&Executor>,
+    data: &mut [T],
+    f: &(dyn Fn(usize, &mut [T]) + Sync),
+) -> Result<(), FactorError> {
+    match exec {
+        Some(e) if e.workers() > 1 && data.len() > 1 => {
+            e.for_each_slice_mut(data, par_chunk_count(exec, data.len()), f)
+        }
+        _ => {
+            if !data.is_empty() {
+                f(0, data);
+            }
+            Ok(())
         }
     }
 }
@@ -710,90 +891,94 @@ fn execute_task(
         // stale entry of a cancelled (failed) run — skip it
         return;
     }
-    // SAFETY: the claim window opened, so the owning `Executor::run` call
-    // is still blocked in its wait loop and every borrow behind these
-    // pointers is live (see the Send/Sync rationale on `Job`).
-    let nm = unsafe { &*job.nm };
-    let dag = unsafe { &*job.dag };
-    let policy = unsafe { &*job.policy };
-    let backend = unsafe { &*job.backend };
-    let state = unsafe { &*job.state };
-    let subset = job.subset.map(|s| unsafe { &*s });
+    match &job.work {
+        Work::Dag { nm, dag, policy, backend, subset, state } => {
+            // SAFETY: the claim window opened, so the owning
+            // `Executor::run` call is still blocked in its wait loop and
+            // every borrow behind these pointers is live (see the
+            // Send/Sync rationale on `Job`).
+            let nm = unsafe { &**nm };
+            let dag = unsafe { &**dag };
+            let policy = unsafe { &**policy };
+            let backend = unsafe { &**backend };
+            let state = unsafe { &**state };
+            let subset = subset.map(|s| unsafe { &*s });
 
-    let task = &dag.tasks[t as usize];
-    let started = Instant::now();
-    // a panicking kernel must not kill a pool worker: the thread is never
-    // respawned and the submitting `run` would hang forever waiting for a
-    // completion signal that cannot come. Catch the unwind, scrap the
-    // (possibly inconsistent) workspace, and route the failure through
-    // the normal cancel-and-drain error path instead.
-    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        nm.execute(task.op, policy, backend, ws)
-    }))
-    .unwrap_or_else(|_| {
-        *ws = Workspace::default();
-        Err(FactorError::TaskPanic)
-    });
-    let elapsed = started.elapsed().as_secs_f64();
-    // single-writer slots (only worker `w` touches index `w`), so a
-    // load/store pair is enough — no CAS, no per-worker Mutex<f64>
-    let busy = f64::from_bits(state.busy_bits[w].load(Ordering::Relaxed)) + elapsed;
-    state.busy_bits[w].store(busy.to_bits(), Ordering::Relaxed);
-    state.tally[w].fetch_add(1, Ordering::Relaxed);
+            let task = &dag.tasks[t as usize];
+            let started = Instant::now();
+            // a panicking kernel must not kill a pool worker: the thread
+            // is never respawned and the submitting `run` would hang
+            // forever waiting for a completion signal that cannot come.
+            // Catch the unwind, scrap the (possibly inconsistent)
+            // workspace, and route the failure through the normal
+            // cancel-and-drain error path instead.
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                nm.execute(task.op, policy, backend, ws)
+            }))
+            .unwrap_or_else(|_| {
+                *ws = Workspace::default();
+                Err(FactorError::TaskPanic)
+            });
+            let elapsed = started.elapsed().as_secs_f64();
+            // single-writer slots (only worker `w` touches index `w`), so
+            // a load/store pair is enough — no CAS, no per-worker
+            // Mutex<f64>
+            let busy = f64::from_bits(state.busy_bits[w].load(Ordering::Relaxed)) + elapsed;
+            state.busy_bits[w].store(busy.to_bits(), Ordering::Relaxed);
+            state.tally[w].fetch_add(1, Ordering::Relaxed);
 
-    match res {
-        Err(e) => {
-            // poison further claims first, then signal the caller; queued
-            // siblings are purged by `run`, in-flight ones drain through
-            // the claim count
-            job.claims.fetch_or(CANCEL, Ordering::AcqRel);
-            let mut st = job.status.lock().unwrap();
-            if st.failed.is_none() {
-                st.failed = Some(e);
-            }
-            st.done = true;
-            job.cv.notify_all();
-        }
-        Ok(()) => {
-            // release dependents: batch pushes per owner deque so each
-            // target lock is taken once, then wake at most one worker per
-            // deque pushed to
-            to_push.clear();
-            for &o in &task.out {
-                let o_us = o as usize;
-                if is_active(subset, o_us)
-                    && state.deps[o_us].fetch_sub(1, Ordering::AcqRel) == 1
-                {
-                    to_push.push((dag.tasks[o_us].owner as usize % p, o));
-                }
-            }
-            if !to_push.is_empty() {
-                to_push.sort_unstable_by_key(|&(owner, _)| owner);
-                let mut i = 0;
-                while i < to_push.len() {
-                    let owner = to_push[i].0;
-                    let mut end = i;
-                    {
-                        let mut q = shared.queues[owner].lock().unwrap();
-                        while end < to_push.len() && to_push[end].0 == owner {
-                            q.push_back((job.clone(), to_push[end].1));
-                            end += 1;
+            match res {
+                Err(e) => job.fail(e),
+                Ok(()) => {
+                    // release dependents: batch pushes per owner deque so
+                    // each target lock is taken once, then wake at most
+                    // one worker per deque pushed to
+                    to_push.clear();
+                    for &o in &task.out {
+                        let o_us = o as usize;
+                        if is_active(subset, o_us)
+                            && state.deps[o_us].fetch_sub(1, Ordering::AcqRel) == 1
+                        {
+                            to_push.push((dag.tasks[o_us].owner as usize % p, o));
                         }
                     }
-                    // one wakeup per pushed task, minus the one we keep
-                    // for ourselves when pushing to our own deque (we pop
-                    // it next iteration)
-                    let pushed = end - i;
-                    let helpers = if owner == w { pushed - 1 } else { pushed };
-                    shared.unpark_for(owner, helpers);
-                    i = end;
+                    if !to_push.is_empty() {
+                        to_push.sort_unstable_by_key(|&(owner, _)| owner);
+                        let mut i = 0;
+                        while i < to_push.len() {
+                            let owner = to_push[i].0;
+                            let mut end = i;
+                            {
+                                let mut q = shared.queues[owner].lock().unwrap();
+                                while end < to_push.len() && to_push[end].0 == owner {
+                                    q.push_back((job.clone(), to_push[end].1));
+                                    end += 1;
+                                }
+                            }
+                            // one wakeup per pushed task, minus the one
+                            // we keep for ourselves when pushing to our
+                            // own deque (we pop it next iteration)
+                            let pushed = end - i;
+                            let helpers = if owner == w { pushed - 1 } else { pushed };
+                            shared.unpark_for(owner, helpers);
+                            i = end;
+                        }
+                    }
+                    job.complete_one();
                 }
             }
-            let finished = job.done.fetch_add(1, Ordering::SeqCst) + 1;
-            if finished >= job.total {
-                let mut st = job.status.lock().unwrap();
-                st.done = true;
-                job.cv.notify_all();
+        }
+        Work::Each { f } => {
+            // SAFETY: same claim-window argument as above, for the
+            // `Executor::for_each` submitter.
+            let func = unsafe { &**f };
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                func(t as usize);
+            }))
+            .map_err(|_| FactorError::TaskPanic);
+            match res {
+                Err(e) => job.fail(e),
+                Ok(()) => job.complete_one(),
             }
         }
     }
@@ -989,6 +1174,61 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         assert!(exec.stats().parks >= 3, "idle workers should park");
+    }
+
+    #[test]
+    fn for_each_fills_every_slot_at_any_worker_count() {
+        for workers in [1u32, 2, 4, 8] {
+            let exec = Executor::new(workers);
+            let n = 1000usize;
+            let slots: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(usize::MAX)).collect();
+            exec.for_each(n, &|i| {
+                slots[i].store(i * i, Ordering::Relaxed);
+            })
+            .unwrap();
+            for (i, s) in slots.iter().enumerate() {
+                assert_eq!(s.load(Ordering::Relaxed), i * i, "slot {i} (workers={workers})");
+            }
+            // empty jobs are free no-ops
+            exec.for_each(0, &|_| panic!("must not run")).unwrap();
+        }
+    }
+
+    #[test]
+    fn for_each_slice_mut_chunks_are_disjoint_and_deterministic() {
+        for workers in [1u32, 2, 4] {
+            let exec = Executor::new(workers);
+            let mut data = vec![0u64; 257];
+            exec.for_each_slice_mut(&mut data, 7, &|start, chunk| {
+                for (off, v) in chunk.iter_mut().enumerate() {
+                    *v = (start + off) as u64 + 1;
+                }
+            })
+            .unwrap();
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as u64 + 1, "index {i} (workers={workers})");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_panic_surfaces_as_task_panic_and_pool_survives() {
+        for workers in [1u32, 4] {
+            let exec = Executor::new(workers);
+            let res = exec.for_each(64, &|i| {
+                if i == 37 {
+                    panic!("injected");
+                }
+            });
+            assert_eq!(res, Err(FactorError::TaskPanic), "workers={workers}");
+            // the same pool immediately serves the next job
+            let count = AtomicUsize::new(0);
+            exec.for_each(64, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+            assert_eq!(count.load(Ordering::Relaxed), 64);
+        }
     }
 
     #[test]

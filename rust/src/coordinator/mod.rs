@@ -36,6 +36,7 @@ pub mod simulate;
 pub mod workers;
 
 pub use dag::{Task, TaskDag};
+pub(crate) use executor::par_chunks;
 pub use executor::{Executor, ExecutorStats, RunState, Scheduler};
 pub use metrics::LoadReport;
 pub use placement::Placement;

@@ -103,7 +103,7 @@
 //!
 //! // one plan per sparsity pattern (or let a PlanCache manage them)
 //! let mut cache = PlanCache::new(8);
-//! let plan: Arc<FactorPlan> = cache.get_or_build(&a, &opts);
+//! let plan: Arc<FactorPlan> = cache.get_or_build(&a, &opts).unwrap();
 //!
 //! let mut session = SolverSession::from_plan(plan);
 //! for _newton_step in 0..100 {
@@ -135,7 +135,7 @@
 //! use std::sync::Arc;
 //!
 //! let a = gen::circuit_bbd(gen::CircuitParams::default());
-//! let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(4)));
+//! let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(4)).unwrap());
 //! let mut session = SolverSession::from_plan(plan);
 //! session.refactorize(&a.values).unwrap(); // full pass seeds the factors
 //!

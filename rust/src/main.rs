@@ -56,6 +56,7 @@ fn run() -> Result<()> {
         }
         "serve-bench" => cmd_serve_bench(&flags),
         "sched-bench" => cmd_sched_bench(&flags),
+        "plan-bench" => cmd_plan_bench(&flags),
         "metrics-dump" => cmd_metrics_dump(&flags),
         "artifacts-check" => cmd_artifacts_check(&flags),
         "help" | "--help" | "-h" => {
@@ -79,6 +80,7 @@ USAGE:
                     [--workers N] [--blocking B]
                     [--metrics-addr HOST:PORT] [--metrics-out FILE] [--autoscale]
   repro sched-bench [--replays N] [--worker-counts 1,2,4] [--out FILE]
+  repro plan-bench  [--replays N] [--worker-counts 2,8] [--out FILE]
   repro metrics-dump (--addr HOST:PORT | --file PATH) [--check]
   repro artifacts-check [--dir artifacts]
 
@@ -88,6 +90,13 @@ SCHED-BENCH (the scheduler bench):
   persistent work-stealing executor. Per-storm throughput, the
   persistent/spawn speedup, and the executor's steal/wakeup/park
   counters are written to --out (default BENCH_sched.json).
+
+PLAN-BENCH (the plan-construction bench):
+  Cold-start: build the full FactorPlan (ordering + symbolic + blocking
+  + DAG + scatter map) for each suite matrix, sequentially and on the
+  persistent executor, asserting both builds produce identical plans.
+  Best-of-N wall clock, the parallel/sequential speedup, and the
+  per-phase breakdown are written to --out (default BENCH_plan.json).
 
 SERVE-BENCH (the serving-layer load generator):
   K closed-loop client threads drive a shared-plan session pool over a
@@ -372,6 +381,7 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
                 eprintln!("warning: skipped plan file {}: {err}", path.display());
             }
             let (plan, acquire_seconds) = timed(|| cache.get_or_build(&a, &opts));
+            let plan = plan.map_err(|e| anyhow::anyhow!("{e}"))?;
             let how = if cache.misses() == 0 { "warm-loaded from disk" } else { "built cold" };
             println!(
                 "plan {how} in {acquire_seconds:.4}s ({} file(s) warmed from {})",
@@ -382,7 +392,8 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
             plan
         }
         None => {
-            let (plan, build_seconds) = timed(|| Arc::new(FactorPlan::build(&a, &opts)));
+            let (plan, build_seconds) = timed(|| FactorPlan::build(&a, &opts));
+            let plan = Arc::new(plan.map_err(|e| anyhow::anyhow!("{e}"))?);
             println!(
                 "plan built in {build_seconds:.4}s (pass --plan-dir DIR to persist/warm it)"
             );
@@ -580,6 +591,34 @@ fn cmd_sched_bench(flags: &HashMap<String, String>) -> Result<()> {
          (spawn-per-call vs persistent executor)"
     );
     let report = bench_harness::sched::run(replays, &worker_counts);
+    report.print();
+    std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
+    println!("\nwrote {out}");
+    Ok(())
+}
+
+fn cmd_plan_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let replays: usize = flags.get("replays").map(|s| s.parse()).transpose()?.unwrap_or(5);
+    if replays < 1 {
+        bail!("--replays must be >= 1");
+    }
+    let worker_counts: Vec<u32> = match flags.get("worker-counts") {
+        Some(s) => s
+            .split(',')
+            .map(|p| p.trim().parse::<u32>())
+            .collect::<Result<_, _>>()
+            .context("--worker-counts N,N,... (positive integers)")?,
+        None => vec![2, 8],
+    };
+    if worker_counts.is_empty() || worker_counts.contains(&0) {
+        bail!("--worker-counts needs at least one positive worker count");
+    }
+    let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_plan.json".into());
+    println!(
+        "plan-construction: best of {replays} builds over worker counts {worker_counts:?} \
+         (sequential vs persistent executor)"
+    );
+    let report = bench_harness::plan::run(replays, &worker_counts);
     report.print();
     std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
     println!("\nwrote {out}");

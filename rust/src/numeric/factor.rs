@@ -97,6 +97,12 @@ pub enum FactorError {
     OutOfPattern { row: usize, col: usize },
     /// A matrix whose dimension does not match the analyzed structure.
     DimensionMismatch { got: usize, want: usize },
+    /// The submitted pattern has a structurally zero diagonal entry at
+    /// `row` (original, pre-permutation index). Sparse LU without
+    /// numerical pivoting needs every `(i,i)` present in the pattern; a
+    /// tenant submitting such a matrix gets this error back instead of
+    /// panicking the plan-construction path (and with it, the shard).
+    StructurallySingular { row: usize },
     /// A worker panicked while executing a block task — a bug, not a
     /// numeric failure. The executor cancels the run and survives (see
     /// [`crate::coordinator::Executor`]); callers observe an `Err`
@@ -116,6 +122,13 @@ impl std::fmt::Display for FactorError {
             }
             FactorError::DimensionMismatch { got, want } => {
                 write!(f, "matrix has dimension {got}, analyzed structure expects {want}")
+            }
+            FactorError::StructurallySingular { row } => {
+                write!(
+                    f,
+                    "matrix is structurally singular: diagonal entry ({row},{row}) \
+                     is absent from the sparsity pattern"
+                )
             }
             FactorError::TaskPanic => {
                 write!(f, "a worker panicked while executing a block task")

@@ -98,6 +98,13 @@ pub enum ServeError {
     /// The factorization itself failed (zero pivot, out-of-pattern
     /// stamp, …).
     Factor(FactorError),
+    /// A stamp's coordinates no longer match the tenant's pattern — the
+    /// client's matrix has drifted. After `strikes` reaches the router's
+    /// drift-storm threshold a background plan build for the drifted
+    /// pattern starts and the client is transparently re-routed; until
+    /// then the request is rejected with this error so the client can
+    /// retry against the original tenant or resubmit the full matrix.
+    PatternDrift { tenant: u64, drifted: u64, strikes: usize },
 }
 
 impl std::fmt::Display for ServeError {
@@ -125,6 +132,13 @@ impl std::fmt::Display for ServeError {
                 write!(f, "stamp value index {index} out of range (pattern nnz = {nnz})")
             }
             ServeError::Factor(e) => write!(f, "factorization failed: {e}"),
+            ServeError::PatternDrift { tenant, drifted, strikes } => {
+                write!(
+                    f,
+                    "stamp pattern drifted from tenant {tenant:#018x} toward \
+                     {drifted:#018x} ({strikes} strikes)"
+                )
+            }
         }
     }
 }
@@ -284,6 +298,19 @@ impl Batcher {
         }
         self.queue.push_back((request, Instant::now()));
         Ok(())
+    }
+
+    /// Fail every queued request with a clone of `err`, in submission
+    /// order, consuming the queue. The router uses this when a shard's
+    /// plan build fails (e.g. a structurally singular pattern): the
+    /// clients get per-request errors and the shard — and the process —
+    /// survive.
+    pub fn fail_all(&mut self, err: &ServeError) -> Vec<Result<ServeReport, ServeError>> {
+        let mut outcomes = Vec::with_capacity(self.queue.len());
+        while self.queue.pop_front().is_some() {
+            outcomes.push(Err(err.clone()));
+        }
+        outcomes
     }
 
     /// Execute every queued request against `session`, in submission
@@ -465,7 +492,7 @@ mod tests {
     use std::sync::Arc;
 
     fn session_for(a: &crate::sparse::Csc) -> SolverSession<'static> {
-        SolverSession::from_plan(Arc::new(FactorPlan::build(a, &SolveOptions::ours(1))))
+        SolverSession::from_plan(Arc::new(FactorPlan::build(a, &SolveOptions::ours(1)).unwrap()))
     }
 
     #[test]

@@ -645,7 +645,7 @@ mod tests {
     #[test]
     fn loadgen_completes_every_request_and_reports_latencies() {
         let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
-        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
         let cfg = LoadgenConfig {
             clients: 4,
             requests_per_client: 6,

@@ -58,7 +58,7 @@
 //! let mut cache = PlanCache::new(8);
 //! let warm = cache.warm_from_dir(Path::new("plans")).unwrap();
 //! println!("{} plans warmed from disk", warm.loaded);
-//! let plan = cache.get_or_build(&a, &opts); // hit if persisted before
+//! let plan = cache.get_or_build(&a, &opts).unwrap(); // hit if persisted before
 //! persist::save_plan_to_dir(&plan, Path::new("plans")).unwrap();
 //!
 //! // share the plan across a session pool; batch one client's requests

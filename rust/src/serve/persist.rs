@@ -427,15 +427,23 @@ impl PlanCache {
     /// itself is an error.
     pub fn warm_from_dir(&mut self, dir: &Path) -> Result<WarmReport, PersistError> {
         let mut paths = Vec::new();
+        let mut skipped = Vec::new();
         for entry in std::fs::read_dir(dir)? {
-            let path = entry?.path();
+            // a single unreadable dirent must not abort the pass — count
+            // it as skipped and keep warming from the rest
+            let path = match entry {
+                Ok(entry) => entry.path(),
+                Err(e) => {
+                    skipped.push((dir.join("<unreadable dirent>"), PersistError::Io(e)));
+                    continue;
+                }
+            };
             if path.extension().and_then(|e| e.to_str()) == Some(PLAN_EXT) {
                 paths.push(path);
             }
         }
         paths.sort();
         let mut loaded = 0usize;
-        let mut skipped = Vec::new();
         for path in paths {
             match load_plan(&path) {
                 Ok(plan) => {
@@ -467,7 +475,7 @@ mod tests {
     fn round_trip_preserves_identity_and_key() {
         let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
         let opts = SolveOptions::ours(2);
-        let plan = FactorPlan::build(&a, &opts);
+        let plan = FactorPlan::build(&a, &opts).unwrap();
         let dir = tmp_dir("roundtrip");
         let path = save_plan_to_dir(&plan, &dir).unwrap();
         let loaded = load_plan(&path).unwrap();
@@ -490,7 +498,7 @@ mod tests {
     #[test]
     fn corrupted_and_truncated_files_are_rejected_cleanly() {
         let a = gen::grid2d_laplacian(7, 7);
-        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap();
         let dir = tmp_dir("corrupt");
         let path = save_plan_to_dir(&plan, &dir).unwrap();
         let good = std::fs::read(&path).unwrap();
@@ -548,8 +556,8 @@ mod tests {
         let opts = SolveOptions::ours(1);
         let a = gen::grid2d_laplacian(6, 6);
         let b = gen::grid2d_laplacian(6, 7);
-        let pa = FactorPlan::build(&a, &opts);
-        let pb = FactorPlan::build(&b, &opts);
+        let pa = FactorPlan::build(&a, &opts).unwrap();
+        let pb = FactorPlan::build(&b, &opts).unwrap();
         save_plan_to_dir(&pa, &dir).unwrap();
         save_plan_to_dir(&pb, &dir).unwrap();
         std::fs::write(dir.join("junk.sluplan"), b"not a plan at all").unwrap();
@@ -561,7 +569,7 @@ mod tests {
         assert_eq!(report.skipped.len(), 1, "only the junk .sluplan is skipped");
         assert_eq!(cache.len(), 2);
         // warmed entries serve get_or_build without a rebuild
-        let hit = cache.get_or_build(&a, &opts);
+        let hit = cache.get_or_build(&a, &opts).unwrap();
         assert_eq!(hit.fingerprint(), a.pattern_fingerprint());
         assert_eq!((cache.hits(), cache.misses()), (1, 0));
         std::fs::remove_dir_all(&dir).ok();
@@ -570,7 +578,9 @@ mod tests {
     #[test]
     fn one_shot_plans_refuse_to_serialize() {
         let a = gen::grid2d_laplacian(5, 5);
-        let plan = crate::session::FactorPlan::build_for_oneshot(&a, &SolveOptions::ours(1));
+        let plan =
+            crate::session::FactorPlan::build_for_oneshot(&a, &SolveOptions::ours(1), None)
+                .unwrap();
         let dir = tmp_dir("oneshot");
         let err = save_plan(&plan, &dir.join("x.sluplan")).unwrap_err();
         assert!(matches!(err, PersistError::Malformed(_)));

@@ -117,7 +117,7 @@ impl PoolMetrics {
 /// use std::sync::Arc;
 ///
 /// let a = gen::grid2d_laplacian(8, 8);
-/// let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+/// let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
 /// let pool = SessionPool::new(plan, 4); // lazy growth up to 4 sessions
 ///
 /// let mut session = pool.checkout();    // RAII guard; derefs to the session
@@ -329,7 +329,7 @@ mod tests {
 
     fn pool_for(max: usize) -> (crate::sparse::Csc, SessionPool) {
         let a = gen::grid2d_laplacian(8, 8);
-        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
         let pool = SessionPool::new(plan, max);
         (a, pool)
     }
@@ -430,7 +430,7 @@ mod tests {
     fn pool_metrics_track_occupancy_and_waits() {
         use crate::obs::Registry;
         let a = gen::grid2d_laplacian(8, 8);
-        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
         let registry = Registry::new();
         let m = PoolMetrics::register(&registry, &[("tenant", "t0")]);
         let pool = SessionPool::with_metrics(plan, 2, m);

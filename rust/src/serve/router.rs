@@ -66,14 +66,15 @@ use super::batcher::{Batcher, Priority, Request, RequestKind, ServeError, ServeR
 use super::persist;
 use super::pool::{PoolMetrics, SessionPool};
 use crate::coordinator::Executor;
+use crate::numeric::factor::FactorError;
 use crate::obs::{self, Counter, Gauge, Histogram, HistogramSnapshot, Registry};
-use crate::session::{FactorPlan, PlanCache};
+use crate::session::{ChangeSet, FactorPlan, PlanCache, SharedPlanCache};
 use crate::solver::SolveOptions;
 use crate::sparse::Csc;
 use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 /// Stable identity of one tenant: the [`PlanCache`] key of its sparsity
@@ -104,6 +105,12 @@ pub struct RouterConfig {
     /// Change-set batching across timesteps, forwarded to each shard's
     /// [`Batcher`].
     pub coalesce_stamps: bool,
+    /// Consecutive out-of-pattern stamps from one tenant before
+    /// [`Router::submit_stamp_coords`] treats the drift as a storm and
+    /// spins the drifted pattern up in the background
+    /// ([`Router::admit_background`]). Below the threshold each drifted
+    /// stamp is rejected with [`ServeError::PatternDrift`].
+    pub drift_storm_threshold: usize,
     /// When set: warm the plan cache from this directory at startup and
     /// persist every freshly built plan into it (best-effort — IO
     /// failures degrade to cold builds, they never fail serving).
@@ -124,6 +131,7 @@ impl Default for RouterConfig {
             sessions_per_shard: 1,
             partial_threshold: 0.5,
             coalesce_stamps: true,
+            drift_storm_threshold: 3,
             plan_dir: None,
             registry: None,
         }
@@ -191,6 +199,11 @@ pub struct RouterStats {
     pub revivals: usize,
     /// Plan files warm-loaded from `plan_dir` at startup.
     pub plans_warmed: usize,
+    /// Corrupt or unreadable plan files skipped during the warm pass.
+    pub plans_warm_skipped: usize,
+    /// Background plan builds kicked off by drift storms
+    /// ([`Router::admit_background`]).
+    pub speculative_builds: usize,
     /// Shared plan-cache counters.
     pub cache_hits: usize,
     pub cache_misses: usize,
@@ -231,6 +244,9 @@ struct RouterMetrics {
     evictions: Counter,
     revivals: Counter,
     plans_warmed: Counter,
+    warm_skipped: Counter,
+    speculative_builds: Counter,
+    pattern_drifts: Counter,
     cache_hits: Counter,
     cache_misses: Counter,
     plan_build: Histogram,
@@ -262,6 +278,21 @@ impl RouterMetrics {
             plans_warmed: registry.counter(
                 "sparselu_plans_warmed_total",
                 "Plan files warm-loaded from the plan directory at startup",
+                &[],
+            ),
+            warm_skipped: registry.counter(
+                "sparselu_plan_cache_warm_skipped_total",
+                "Corrupt or unreadable plan files skipped during cache warming",
+                &[],
+            ),
+            speculative_builds: registry.counter(
+                "sparselu_router_speculative_builds_total",
+                "Background plan builds started for drifted patterns",
+                &[],
+            ),
+            pattern_drifts: registry.counter(
+                "sparselu_router_pattern_drifts_total",
+                "Stamps whose coordinates no longer matched their tenant's pattern",
                 &[],
             ),
             cache_hits: registry.counter(
@@ -416,13 +447,34 @@ impl ShardMetrics {
     }
 }
 
+/// The plan-dependent half of a shard, materialized once the plan is
+/// resolved. Shards admitted through [`Router::admit`] are born with it;
+/// speculative shards ([`Router::admit_background`]) gain it when their
+/// background build lands.
+struct Serving {
+    plan: Arc<FactorPlan>,
+    pool: SessionPool,
+}
+
+/// Completion slot of one speculative background build: the builder
+/// thread publishes `Ok(())` (serving state installed) or the build
+/// error, and wakes anything blocked on the shard.
+struct PendingBuild {
+    result: Mutex<Option<Result<(), ServeError>>>,
+    ready: Condvar,
+}
+
 /// One tenant's serving state: the immutable plan plus this pattern's
 /// mutable serving machinery. Everything mutable is behind its own lock,
 /// so shards never contend with each other.
 struct Shard {
     tenant: TenantId,
-    plan: Arc<FactorPlan>,
-    pool: SessionPool,
+    /// Resolved plan + session pool. Empty only while a speculative
+    /// background build is still pending.
+    serving: OnceLock<Serving>,
+    /// Present only on speculatively admitted shards; resolved exactly
+    /// once by the background builder thread.
+    pending: Option<Arc<PendingBuild>>,
     batcher: Mutex<Batcher>,
     stats: Mutex<TenantStats>,
     metrics: ShardMetrics,
@@ -432,9 +484,32 @@ struct Shard {
     /// request on an orphaned queue nobody will ever drain; checking
     /// this flag under the same lock closes that window.
     retired: AtomicBool,
+    /// Consecutive out-of-pattern stamps seen by
+    /// [`Router::submit_stamp_coords`]; an in-pattern stamp resets it.
+    drift_strikes: AtomicUsize,
 }
 
 impl Shard {
+    /// The shard's serving state, blocking on a pending background build
+    /// if one is in flight. A failed build comes back as its
+    /// [`ServeError`] — the shard stays alive and every queued request
+    /// gets the error individually ([`Batcher::fail_all`]).
+    fn ensure_serving(&self) -> Result<&Serving, ServeError> {
+        if let Some(s) = self.serving.get() {
+            return Ok(s);
+        }
+        let pending =
+            self.pending.as_ref().expect("a shard without serving state has a pending build");
+        let mut result = pending.result.lock().unwrap();
+        while result.is_none() {
+            result = pending.ready.wait(result).unwrap();
+        }
+        match result.as_ref().expect("pending build published") {
+            Ok(()) => Ok(self.serving.get().expect("builder installed serving state")),
+            Err(e) => Err(e.clone()),
+        }
+    }
+
     /// Execute everything queued on this shard. The batcher lock is held
     /// for the duration, serializing drains *within* the tenant — which
     /// is exactly the per-tenant total order timestep streams need —
@@ -444,15 +519,22 @@ impl Shard {
         if batcher.is_empty() {
             return Vec::new();
         }
-        // LIFO checkout hands back the warm session holding this
-        // tenant's current factors; serialized drains mean the pool
-        // never blocks here
-        let mut session = self.pool.checkout();
-        let outcomes = batcher.drain(&mut session);
+        let outcomes = match self.ensure_serving() {
+            Ok(serving) => {
+                // LIFO checkout hands back the warm session holding this
+                // tenant's current factors; serialized drains mean the
+                // pool never blocks here
+                let mut session = serving.pool.checkout();
+                batcher.drain(&mut session)
+            }
+            // the plan build failed (e.g. a structurally singular
+            // pattern): every queued request gets the error, the shard
+            // and the process survive
+            Err(e) => batcher.fail_all(&e),
+        };
         // the queue was fully consumed; submits racing this drain are
         // still blocked on the batcher lock, so 0 is exact here
         self.metrics.queue_depth.set(0.0);
-        drop(session);
         drop(batcher);
         self.stats.lock().unwrap().absorb(&outcomes);
         self.metrics.absorb(&outcomes);
@@ -461,9 +543,9 @@ impl Shard {
 }
 
 struct RouterState {
-    cache: PlanCache,
     /// Live shards, least-recently-touched first (admission/submission
-    /// order — kept in lockstep with the cache via [`PlanCache::touch`]).
+    /// order — kept in lockstep with the plan cache via
+    /// [`PlanCache::touch`]).
     shards: Vec<Arc<Shard>>,
     /// Tenants that once had a shard and were evicted (for the revival
     /// counter).
@@ -472,6 +554,8 @@ struct RouterState {
     evictions: usize,
     revivals: usize,
     plans_warmed: usize,
+    plans_warm_skipped: usize,
+    speculative_builds: usize,
 }
 
 /// Multi-tenant serving front-end over pattern-keyed shards. See the
@@ -480,11 +564,17 @@ pub struct Router {
     cfg: RouterConfig,
     opts: SolveOptions,
     state: Mutex<RouterState>,
+    /// Shared build-deduplicating plan cache. Outside the state lock so
+    /// a plan build (potentially hundreds of milliseconds) never blocks
+    /// routing, draining, or admissions of other patterns. Lock order
+    /// where both are held: `state` before the cache's lock.
+    cache: Arc<SharedPlanCache>,
     registry: Arc<Registry>,
     rm: RouterMetrics,
     /// Pins the process-wide executor for this worker count so the
     /// executor series registered in [`Router::new`] stay live (and the
-    /// pool's threads warm) for the router's whole lifetime.
+    /// pool's threads warm) for the router's whole lifetime. Plan builds
+    /// run their parallel passes on it too.
     executor: Arc<Executor>,
 }
 
@@ -496,15 +586,18 @@ impl Router {
     pub fn new(opts: SolveOptions, cfg: RouterConfig) -> Self {
         assert!(cfg.max_shards > 0, "Router needs max_shards >= 1");
         assert!(cfg.plan_cache_capacity >= cfg.max_shards, "cache must cover the live shards");
-        let mut cache = PlanCache::new(cfg.plan_cache_capacity);
+        assert!(cfg.drift_storm_threshold > 0, "drift_storm_threshold must be >= 1");
+        let cache = Arc::new(SharedPlanCache::new(cfg.plan_cache_capacity));
         let mut plans_warmed = 0;
+        let mut plans_warm_skipped = 0;
         if let Some(dir) = &cfg.plan_dir {
             if let Err(e) = std::fs::create_dir_all(dir) {
                 eprintln!("router: cannot create plan dir {}: {e}", dir.display());
             } else {
-                match cache.warm_from_dir(dir) {
+                match cache.lock().warm_from_dir(dir) {
                     Ok(warm) => {
                         plans_warmed = warm.loaded;
+                        plans_warm_skipped = warm.skipped.len();
                         for (path, err) in &warm.skipped {
                             eprintln!("router: skipped plan file {}: {err}", path.display());
                         }
@@ -516,7 +609,8 @@ impl Router {
         let registry = cfg.registry.clone().unwrap_or_else(Registry::global);
         let rm = RouterMetrics::register(&registry);
         rm.plans_warmed.add(plans_warmed as u64);
-        rm.mirror_cache(&cache);
+        rm.warm_skipped.add(plans_warm_skipped as u64);
+        rm.mirror_cache(&cache.lock());
         // mirror the shared executor's scheduler-health counters into
         // the registry on every scrape
         let executor = Executor::shared(opts.workers);
@@ -525,14 +619,16 @@ impl Router {
             cfg,
             opts,
             state: Mutex::new(RouterState {
-                cache,
                 shards: Vec::new(),
                 evicted: HashSet::new(),
                 spin_ups: 0,
                 evictions: 0,
                 revivals: 0,
                 plans_warmed,
+                plans_warm_skipped,
+                speculative_builds: 0,
             }),
+            cache,
             registry,
             rm,
             executor,
@@ -569,20 +665,19 @@ impl Router {
     /// capacity and every live shard has queued or in-flight work.
     pub fn admit(&self, a: &Csc) -> Result<TenantId, ServeError> {
         let tenant = self.tenant_of(a);
-        let mut st = self.state.lock().unwrap();
-        if let Some(pos) = st.shards.iter().position(|s| s.tenant == tenant) {
-            let shard = st.shards.remove(pos);
-            st.shards.push(shard);
-            st.cache.touch(tenant.0);
+        if self.touch_live(tenant) {
             return Ok(tenant);
         }
-        if st.shards.len() == self.cfg.max_shards {
-            self.evict_locked(&mut st)?;
-        }
-        let misses_before = st.cache.misses();
+        // resolve the plan OUTSIDE the state lock: a cold build (the
+        // dominant admission cost) no longer stalls routing, draining or
+        // admissions of other patterns, and racers on the same unseen
+        // pattern share one build through the SharedPlanCache
         let build_start = Instant::now();
-        let plan = st.cache.get_or_build(a, &self.opts);
-        if st.cache.misses() > misses_before {
+        let (plan, built) = self
+            .cache
+            .get_or_build_traced(a, &self.opts, Some(&self.executor))
+            .map_err(ServeError::Factor)?;
+        if built {
             self.rm.plan_build.observe(build_start.elapsed().as_secs_f64());
             if let Some(dir) = &self.cfg.plan_dir {
                 if let Err(e) = persist::save_plan_to_dir(&plan, dir) {
@@ -590,26 +685,73 @@ impl Router {
                 }
             }
         }
-        self.rm.mirror_cache(&st.cache);
+        self.rm.mirror_cache(&self.cache.lock());
+        let shard = self.new_shard(tenant, Some(plan), None);
+        self.install_shard(tenant, shard)?;
+        Ok(tenant)
+    }
+
+    /// If a shard for `tenant` is live, refresh its recency (shard table
+    /// + plan cache) and report `true`.
+    fn touch_live(&self, tenant: TenantId) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if let Some(pos) = st.shards.iter().position(|s| s.tenant == tenant) {
+            let shard = st.shards.remove(pos);
+            st.shards.push(shard);
+            self.cache.lock().touch(tenant.0);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Assemble a shard. `plan` present ⇒ born serving; otherwise
+    /// `pending` must carry the background build that will finish it.
+    fn new_shard(
+        &self,
+        tenant: TenantId,
+        plan: Option<Arc<FactorPlan>>,
+        pending: Option<Arc<PendingBuild>>,
+    ) -> Arc<Shard> {
         let batcher = Batcher::new(self.cfg.shard_queue)
             .with_partial_threshold(self.cfg.partial_threshold)
             .with_stamp_coalescing(self.cfg.coalesce_stamps);
-        let tenant_label = ShardMetrics::label_of(tenant);
-        let pool_metrics =
-            PoolMetrics::register(&self.registry, &[("tenant", tenant_label.as_str())]);
-        let shard = Arc::new(Shard {
+        let serving = OnceLock::new();
+        if let Some(plan) = plan {
+            let tenant_label = ShardMetrics::label_of(tenant);
+            let pool_metrics =
+                PoolMetrics::register(&self.registry, &[("tenant", tenant_label.as_str())]);
+            let pool =
+                SessionPool::with_metrics(plan.clone(), self.cfg.sessions_per_shard, pool_metrics);
+            let _ = serving.set(Serving { plan, pool });
+        }
+        Arc::new(Shard {
             tenant,
-            pool: SessionPool::with_metrics(
-                plan.clone(),
-                self.cfg.sessions_per_shard,
-                pool_metrics,
-            ),
-            plan,
+            serving,
+            pending,
             batcher: Mutex::new(batcher),
             stats: Mutex::new(TenantStats::default()),
             metrics: ShardMetrics::register(&self.registry, tenant),
             retired: AtomicBool::new(false),
-        });
+            drift_strikes: AtomicUsize::new(0),
+        })
+    }
+
+    /// Install `shard` into the live table, evicting to make room if
+    /// needed. Returns `false` when a concurrent admission of the same
+    /// tenant won the race (its shard is live and freshly touched — the
+    /// plan `Arc` is shared either way, so nothing is lost).
+    fn install_shard(&self, tenant: TenantId, shard: Arc<Shard>) -> Result<bool, ServeError> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(pos) = st.shards.iter().position(|s| s.tenant == tenant) {
+            let existing = st.shards.remove(pos);
+            st.shards.push(existing);
+            self.cache.lock().touch(tenant.0);
+            return Ok(false);
+        }
+        if st.shards.len() == self.cfg.max_shards {
+            self.evict_locked(&mut st)?;
+        }
         st.shards.push(shard);
         st.spin_ups += 1;
         self.rm.spin_ups.inc();
@@ -618,7 +760,137 @@ impl Router {
             st.revivals += 1;
             self.rm.revivals.inc();
         }
+        Ok(true)
+    }
+
+    /// Admit a pattern **speculatively**: the shard (and its tenant id)
+    /// is live immediately and accepts submissions, while the plan
+    /// builds on a detached background thread — no caller ever blocks on
+    /// the build. The first drain (or [`Router::plan_of`] /
+    /// [`Shard`]-level access) after the build lands serves normally; if
+    /// the build fails, every queued request gets the error back
+    /// per-request and the shard survives.
+    ///
+    /// This is the router's answer to an out-of-pattern stamp storm
+    /// ([`Router::submit_stamp_coords`]): the drifted pattern is
+    /// re-admitted as its own tenant with no client-visible stall.
+    pub fn admit_background(&self, a: &Csc) -> Result<TenantId, ServeError> {
+        let tenant = self.tenant_of(a);
+        if self.touch_live(tenant) {
+            return Ok(tenant);
+        }
+        let pending = Arc::new(PendingBuild { result: Mutex::new(None), ready: Condvar::new() });
+        let shard = self.new_shard(tenant, None, Some(pending.clone()));
+        if !self.install_shard(tenant, shard.clone())? {
+            return Ok(tenant); // raced: an equivalent shard is already live
+        }
+        self.state.lock().unwrap().speculative_builds += 1;
+        self.rm.speculative_builds.inc();
+        let cache = self.cache.clone();
+        let executor = self.executor.clone();
+        let opts = self.opts.clone();
+        let registry = self.registry.clone();
+        let plan_dir = self.cfg.plan_dir.clone();
+        let sessions_per_shard = self.cfg.sessions_per_shard;
+        let plan_build = self.rm.plan_build.clone();
+        let matrix = a.clone();
+        let spawned = std::thread::Builder::new().name("lu-plan-build".into()).spawn(move || {
+            let start = Instant::now();
+            let published = match cache.get_or_build_traced(&matrix, &opts, Some(&executor)) {
+                Ok((plan, built)) => {
+                    if built {
+                        plan_build.observe(start.elapsed().as_secs_f64());
+                        if let Some(dir) = &plan_dir {
+                            if let Err(e) = persist::save_plan_to_dir(&plan, dir) {
+                                eprintln!(
+                                    "router: persisting plan to {} failed: {e}",
+                                    dir.display()
+                                );
+                            }
+                        }
+                    }
+                    let label = ShardMetrics::label_of(tenant);
+                    let pool_metrics =
+                        PoolMetrics::register(&registry, &[("tenant", label.as_str())]);
+                    let pool =
+                        SessionPool::with_metrics(plan.clone(), sessions_per_shard, pool_metrics);
+                    let _ = shard.serving.set(Serving { plan, pool });
+                    Ok(())
+                }
+                Err(e) => Err(ServeError::Factor(e)),
+            };
+            *pending.result.lock().unwrap() = Some(published);
+            pending.ready.notify_all();
+        });
+        if let Err(e) = spawned {
+            // thread spawn failed (resource exhaustion): resolve the
+            // pending slot so queued requests error instead of hanging
+            eprintln!("router: cannot spawn plan-build thread: {e}");
+            let pending = {
+                let st = self.state.lock().unwrap();
+                st.shards
+                    .iter()
+                    .find(|s| s.tenant == tenant)
+                    .and_then(|s| s.pending.clone())
+            };
+            if let Some(pending) = pending {
+                *pending.result.lock().unwrap() =
+                    Some(Err(ServeError::Factor(FactorError::TaskPanic)));
+                pending.ready.notify_all();
+            }
+        }
         Ok(tenant)
+    }
+
+    /// Submit a device stamp by **coordinates** against the matrix the
+    /// client currently holds, with pattern-drift detection. When
+    /// `current` still matches `tenant`'s pattern, this is an ordinary
+    /// [`Request::Stamp`] submission (and the drift strike count
+    /// resets). When it does not, the strike count grows: below
+    /// [`RouterConfig::drift_storm_threshold`] each drifted stamp is
+    /// rejected with [`ServeError::PatternDrift`]; at the threshold the
+    /// storm is real, the drifted pattern is spun up in the background
+    /// ([`Router::admit_background`]) and this request is transparently
+    /// re-routed to the new tenant as a full refactorize — the returned
+    /// tenant id tells the client where its traffic now lives.
+    pub fn submit_stamp_coords(
+        &self,
+        tenant: TenantId,
+        current: &Csc,
+        coords: &[(usize, usize, f64)],
+    ) -> Result<TenantId, ServeError> {
+        let actual = self.tenant_of(current);
+        if actual == tenant {
+            let shard = self.shard_of(tenant)?;
+            shard.drift_strikes.store(0, Ordering::Relaxed);
+            let changes = ChangeSet::from_coords(current, coords).map_err(ServeError::Factor)?;
+            self.submit(tenant, Request::Stamp { changes })?;
+            return Ok(tenant);
+        }
+        // the stamp's matrix no longer routes to `tenant`: count the
+        // strike against the shard the client *thinks* it is talking to
+        self.rm.pattern_drifts.inc();
+        let shard = self.shard_of(tenant)?;
+        let strikes = shard.drift_strikes.fetch_add(1, Ordering::Relaxed) + 1;
+        if strikes < self.cfg.drift_storm_threshold {
+            return Err(ServeError::PatternDrift { tenant: tenant.0, drifted: actual.0, strikes });
+        }
+        shard.drift_strikes.store(0, Ordering::Relaxed);
+        // storm confirmed: spin the drifted pattern up without blocking
+        // on its plan build, and ride this stamp in as the new tenant's
+        // seeding refactorize
+        let drifted = self.admit_background(current)?;
+        let mut values = current.values.clone();
+        for &(r, c, v) in coords {
+            match current.value_index(r, c) {
+                Some(k) => values[k] = v,
+                None => {
+                    return Err(ServeError::Factor(FactorError::OutOfPattern { row: r, col: c }))
+                }
+            }
+        }
+        self.submit(drifted, Request::Refactorize { values })?;
+        Ok(drifted)
     }
 
     /// Evict the least-recently-used **idle** shard (empty queue, no
@@ -626,9 +898,16 @@ impl Router {
     /// LRU order: a shard whose plan the cache already evicted ranks
     /// before everything still cached. Busy shards are never evicted.
     fn evict_locked(&self, st: &mut RouterState) -> Result<(), ServeError> {
-        let order = st.cache.keys_lru();
+        let order = self.cache.lock().keys_lru();
         let rank = |key: u64| -> i64 {
             order.iter().position(|&k| k == key).map_or(-1, |p| p as i64)
+        };
+        // a shard still waiting on its speculative background build has
+        // no pool yet and is never evictable (its queue will be served
+        // the moment the build lands)
+        let pool_idle = |shard: &Shard| match shard.serving.get() {
+            Some(s) => s.pool.stats().in_use == 0,
+            None => false,
         };
         // pass 1: rank the currently idle shards (try_lock: a held
         // batcher lock means a drain is in flight — that shard is busy)
@@ -641,7 +920,7 @@ impl Router {
                     Ok(b) => b.is_empty(),
                     Err(_) => false,
                 };
-                if queue_empty && shard.pool.stats().in_use == 0 {
+                if queue_empty && pool_idle(shard) {
                     Some((i, rank(shard.tenant.0)))
                 } else {
                     None
@@ -658,7 +937,7 @@ impl Router {
         for (pos, _) in candidates {
             let shard = &st.shards[pos];
             let guard = shard.batcher.lock().unwrap();
-            if !guard.is_empty() || shard.pool.stats().in_use != 0 {
+            if !guard.is_empty() || !pool_idle(shard) {
                 continue;
             }
             shard.retired.store(true, Ordering::Release);
@@ -685,7 +964,7 @@ impl Router {
         };
         let shard = st.shards.remove(pos);
         st.shards.push(shard.clone());
-        st.cache.touch(tenant.0);
+        self.cache.lock().touch(tenant.0);
         Ok(shard)
     }
 
@@ -810,13 +1089,18 @@ impl Router {
         Ok(shard.batcher.lock().unwrap().len())
     }
 
-    /// The plan a tenant's shard serves against.
+    /// The plan a tenant's shard serves against. Blocks until a pending
+    /// speculative build resolves; a failed build comes back as its
+    /// error.
     pub fn plan_of(&self, tenant: TenantId) -> Result<Arc<FactorPlan>, ServeError> {
-        let st = self.state.lock().unwrap();
-        let Some(shard) = st.shards.iter().find(|s| s.tenant == tenant) else {
-            return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+        let shard = {
+            let st = self.state.lock().unwrap();
+            let Some(shard) = st.shards.iter().find(|s| s.tenant == tenant) else {
+                return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+            };
+            shard.clone()
         };
-        Ok(shard.plan.clone())
+        Ok(shard.ensure_serving()?.plan.clone())
     }
 
     /// Cumulative metrics of one tenant (read-only: does not touch LRU
@@ -846,15 +1130,25 @@ impl Router {
                     let b = shard.batcher.lock().unwrap();
                     (b.len(), b.capacity(), b.low_priority_limit())
                 };
-                let pool = shard.pool.stats();
+                // a shard still waiting on its background build has no
+                // pool yet — report zero sessions rather than blocking
+                // the control loop on the build
+                let (sessions_target, sessions_created, sessions_in_use) =
+                    match shard.serving.get() {
+                        Some(s) => {
+                            let pool = s.pool.stats();
+                            (s.pool.max_sessions(), pool.created, pool.in_use)
+                        }
+                        None => (0, 0, 0),
+                    };
                 TenantHealth {
                     tenant: shard.tenant,
                     queue_depth,
                     queue_capacity,
                     low_priority_limit,
-                    sessions_target: shard.pool.max_sessions(),
-                    sessions_created: pool.created,
-                    sessions_in_use: pool.in_use,
+                    sessions_target,
+                    sessions_created,
+                    sessions_in_use,
                     queue_wait: shard.metrics.queue_wait.snapshot(),
                 }
             })
@@ -881,7 +1175,11 @@ impl Router {
             };
             shard.clone()
         };
-        shard.pool.resize(sessions);
+        // queue knobs always apply; the pool resize waits until the
+        // shard is actually serving (a pending build has no pool yet)
+        if let Some(s) = shard.serving.get() {
+            s.pool.resize(sessions);
+        }
         let mut batcher = shard.batcher.lock().unwrap();
         batcher.set_capacity(queue_capacity);
         batcher.set_low_priority_limit(low_priority_limit);
@@ -891,14 +1189,20 @@ impl Router {
     /// Router-level counters.
     pub fn stats(&self) -> RouterStats {
         let st = self.state.lock().unwrap();
+        let (cache_hits, cache_misses) = {
+            let cache = self.cache.lock();
+            (cache.hits(), cache.misses())
+        };
         RouterStats {
             shards_live: st.shards.len(),
             spin_ups: st.spin_ups,
             evictions: st.evictions,
             revivals: st.revivals,
             plans_warmed: st.plans_warmed,
-            cache_hits: st.cache.hits(),
-            cache_misses: st.cache.misses(),
+            plans_warm_skipped: st.plans_warm_skipped,
+            speculative_builds: st.speculative_builds,
+            cache_hits,
+            cache_misses,
         }
     }
 }
@@ -1109,5 +1413,104 @@ mod tests {
             Arc::ptr_eq(&plan_a, &router.plan_of(ta2).unwrap()),
             "the revived shard shares the original plan"
         );
+    }
+
+    /// A small pattern missing the diagonal entry at `row`.
+    fn singular_pattern(n: usize, row: usize) -> crate::sparse::Csc {
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            if i != row {
+                coo.push(i, i, 4.0);
+            }
+        }
+        coo.push(0, row, 1.0);
+        coo.push(row, (row + 1) % n, 1.0);
+        coo.to_csc()
+    }
+
+    #[test]
+    fn structurally_singular_admission_fails_cleanly_and_router_survives() {
+        let router = small_router(4, 8);
+        let good = gen::grid2d_laplacian(6, 6);
+        let tg = router.admit(&good).unwrap();
+        let bad = singular_pattern(5, 2);
+        let err = router.admit(&bad).unwrap_err();
+        assert!(matches!(
+            err,
+            ServeError::Factor(FactorError::StructurallySingular { row: 2 })
+        ));
+        assert_eq!(router.stats().shards_live, 1, "no shard for the bad pattern");
+        // the router keeps serving the good tenant
+        router.submit(tg, Request::Refactorize { values: good.values.clone() }).unwrap();
+        let outcomes = router.drain_tenant(tg).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].is_ok());
+    }
+
+    #[test]
+    fn drift_storm_spins_up_background_tenant_and_reroutes() {
+        let router = small_router(4, 8);
+        let a = gen::grid2d_laplacian(6, 6);
+        let ta = router.admit(&a).unwrap();
+        router.submit(ta, Request::Refactorize { values: a.values.clone() }).unwrap();
+        router.drain_tenant(ta).unwrap();
+        // an in-pattern stamp by coordinates routes normally
+        let same = router.submit_stamp_coords(ta, &a, &[(0, 0, 5.0)]).unwrap();
+        assert_eq!(same, ta);
+        assert!(router.drain_tenant(ta).unwrap()[0].is_ok());
+        // the client's matrix drifts: strikes below the threshold are
+        // rejected with the running count
+        let b = gen::grid2d_laplacian(6, 7);
+        let coords = [(0usize, 0usize, 9.0f64)];
+        for strike in 1..3 {
+            match router.submit_stamp_coords(ta, &b, &coords).unwrap_err() {
+                ServeError::PatternDrift { tenant, drifted, strikes } => {
+                    assert_eq!(tenant, ta.0);
+                    assert_eq!(drifted, router.tenant_of(&b).0);
+                    assert_eq!(strikes, strike);
+                }
+                other => panic!("expected PatternDrift, got {other}"),
+            }
+        }
+        // the third drifted stamp crosses the default threshold: the
+        // drifted pattern spins up in the background and the request is
+        // re-routed as the new tenant's seeding refactorize
+        let tb = router.submit_stamp_coords(ta, &b, &coords).unwrap();
+        assert_eq!(tb, router.tenant_of(&b));
+        assert_ne!(tb, ta);
+        assert_eq!(router.stats().speculative_builds, 1);
+        // draining the new tenant blocks on the background build
+        // internally, then serves — with the stamp folded in
+        let outcomes = router.drain_tenant(tb).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].is_ok());
+        let plan = router.plan_of(tb).unwrap();
+        assert_eq!(plan.fingerprint(), b.pattern_fingerprint());
+        // the original tenant still serves its own pattern
+        router.submit(ta, Request::Solve { rhs: vec![1.0; 36] }).unwrap();
+        assert!(router.drain_tenant(ta).unwrap()[0].is_ok());
+    }
+
+    #[test]
+    fn background_build_failure_fails_queued_requests_not_the_process() {
+        let router = small_router(4, 8);
+        let bad = singular_pattern(4, 1);
+        let t = router.admit_background(&bad).unwrap();
+        // submissions are accepted while the build is pending…
+        router.submit(t, Request::Refactorize { values: bad.values.clone() }).unwrap();
+        // …and fail per-request once the build resolves singular
+        let outcomes = router.drain_tenant(t).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(matches!(
+            outcomes[0],
+            Err(ServeError::Factor(FactorError::StructurallySingular { row: 1 }))
+        ));
+        // the shard and the router both survive
+        assert!(router.drain_tenant(t).unwrap().is_empty());
+        let good = gen::grid2d_laplacian(5, 5);
+        let tg = router.admit(&good).unwrap();
+        assert_ne!(t, tg);
+        router.submit(tg, Request::Refactorize { values: good.values.clone() }).unwrap();
+        assert!(router.drain_tenant(tg).unwrap()[0].is_ok());
     }
 }

@@ -6,11 +6,21 @@
 //! numeric re-factorizations. The cache makes plan reuse automatic: the
 //! first request for a pattern pays the full structure analysis, every
 //! later request gets the shared `Arc<FactorPlan>` back in O(capacity).
+//!
+//! [`SharedPlanCache`] wraps the LRU in a mutex **without** holding it
+//! across plan construction: concurrent requests for the same unseen
+//! fingerprint are deduplicated onto a single build (one leader builds,
+//! followers block on a condvar and receive the same `Arc`), while
+//! requests for other patterns proceed unhindered.
 
 use super::plan::FactorPlan;
+use crate::coordinator::Executor;
+use crate::numeric::factor::FactorError;
 use crate::solver::{BlockingPolicy, SolveOptions};
 use crate::sparse::Csc;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// Least-recently-used plan cache.
 pub struct PlanCache {
@@ -38,36 +48,66 @@ impl PlanCache {
         splitmix(a.pattern_fingerprint() ^ options_signature(opts))
     }
 
-    /// Fetch the plan for `(a, opts)`, building and inserting it on miss.
-    /// On hit the plan is additionally verified against `a` (shape + nnz
-    /// + fingerprint) so a hash collision can never hand back a plan for
-    /// a different pattern. The pattern is hashed once per call.
-    pub fn get_or_build(&mut self, a: &Csc, opts: &SolveOptions) -> Arc<FactorPlan> {
+    /// Hit-only half of [`Self::get_or_build`]: return the cached plan
+    /// for `(a, opts)` if present and verified against `a` (shape + nnz
+    /// + fingerprint, so a hash collision can never hand back a plan for
+    /// a different pattern), refreshing its recency. A collision evicts
+    /// the impostor and reports a miss; no miss counter is touched — the
+    /// caller decides whether a build follows.
+    pub fn lookup(&mut self, a: &Csc, opts: &SolveOptions) -> Option<Arc<FactorPlan>> {
         let fp = a.pattern_fingerprint();
         let key = splitmix(fp ^ options_signature(opts));
-        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
-            let p = &self.entries[pos].1;
-            if p.fingerprint() == fp
-                && p.n() == a.n_rows()
-                && p.n() == a.n_cols()
-                && p.nnz_a() == a.nnz()
-            {
-                self.hits += 1;
-                let entry = self.entries.remove(pos);
-                let plan = entry.1.clone();
-                self.entries.push(entry); // move to most-recent
-                return plan;
-            }
-            // fingerprint collision: evict the impostor and rebuild
-            self.entries.remove(pos);
+        let pos = self.entries.iter().position(|(k, _)| *k == key)?;
+        let p = &self.entries[pos].1;
+        if p.fingerprint() == fp
+            && p.n() == a.n_rows()
+            && p.n() == a.n_cols()
+            && p.nnz_a() == a.nnz()
+        {
+            self.hits += 1;
+            let entry = self.entries.remove(pos);
+            let plan = entry.1.clone();
+            self.entries.push(entry); // move to most-recent
+            return Some(plan);
+        }
+        // fingerprint collision: evict the impostor and rebuild
+        self.entries.remove(pos);
+        None
+    }
+
+    /// Fetch the plan for `(a, opts)`, building sequentially and
+    /// inserting it on miss. Structurally singular input surfaces as
+    /// [`FactorError::StructurallySingular`]; nothing is cached on error.
+    pub fn get_or_build(
+        &mut self,
+        a: &Csc,
+        opts: &SolveOptions,
+    ) -> Result<Arc<FactorPlan>, FactorError> {
+        self.get_or_build_on(a, opts, None)
+    }
+
+    /// As [`Self::get_or_build`], running the build's parallelizable
+    /// passes on `exec` when one is supplied.
+    pub fn get_or_build_on(
+        &mut self,
+        a: &Csc,
+        opts: &SolveOptions,
+        exec: Option<&Executor>,
+    ) -> Result<Arc<FactorPlan>, FactorError> {
+        if let Some(plan) = self.lookup(a, opts) {
+            return Ok(plan);
         }
         self.misses += 1;
-        let plan = Arc::new(FactorPlan::build(a, opts));
+        let built = match exec {
+            Some(e) => FactorPlan::build_on(a, opts, e)?,
+            None => FactorPlan::build(a, opts)?,
+        };
+        let plan = Arc::new(built);
         if self.entries.len() == self.capacity {
             self.entries.remove(0); // evict least-recent
         }
-        self.entries.push((key, plan.clone()));
-        plan
+        self.entries.push((PlanCache::key_for(a, opts), plan.clone()));
+        Ok(plan)
     }
 
     /// The cache key a (session) plan indexes under — the same key
@@ -145,10 +185,127 @@ impl PlanCache {
 
     /// Test-only: insert `plan` under an arbitrary `key`, bypassing
     /// [`Self::key_for`] — forges the hash collision the verification
-    /// path in [`Self::get_or_build`] exists to catch.
+    /// path in [`Self::lookup`] exists to catch.
     #[cfg(test)]
     fn insert_forged(&mut self, key: u64, plan: Arc<FactorPlan>) {
         self.entries.push((key, plan));
+    }
+}
+
+/// One in-flight plan build: the leader publishes into `result` and
+/// wakes followers through `ready`.
+struct BuildSlot {
+    result: Mutex<Option<Result<Arc<FactorPlan>, FactorError>>>,
+    ready: Condvar,
+}
+
+/// Thread-safe wrapper around [`PlanCache`] that deduplicates in-flight
+/// builds.
+///
+/// The LRU mutex is held only for lookups and insertions — never across
+/// plan construction. When several threads race on the same unseen
+/// `(pattern, options)` key, exactly one (the leader) runs the build;
+/// the rest block on the slot's condvar and receive the same
+/// `Arc<FactorPlan>`. Distinct keys build concurrently. Failed builds
+/// are handed to every waiter but never cached, so a transient racer
+/// storm on a bad matrix costs one build, not one per racer.
+pub struct SharedPlanCache {
+    inner: Mutex<PlanCache>,
+    inflight: Mutex<HashMap<u64, Arc<BuildSlot>>>,
+}
+
+impl SharedPlanCache {
+    /// Shared cache holding up to `capacity` plans.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(PlanCache::new(capacity)),
+            inflight: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Direct access to the underlying LRU (counters, `touch`,
+    /// `keys_lru`, warm inserts). Do not hold this guard across a build.
+    pub fn lock(&self) -> MutexGuard<'_, PlanCache> {
+        self.inner.lock().unwrap()
+    }
+
+    /// Fetch the plan for `(a, opts)`, building on miss — at most one
+    /// build per key runs at a time; concurrent requesters share it.
+    pub fn get_or_build(
+        &self,
+        a: &Csc,
+        opts: &SolveOptions,
+        exec: Option<&Executor>,
+    ) -> Result<Arc<FactorPlan>, FactorError> {
+        self.get_or_build_traced(a, opts, exec).map(|(plan, _)| plan)
+    }
+
+    /// As [`Self::get_or_build`], also reporting whether *this* call ran
+    /// the build (`true`) or got the plan from the cache or a concurrent
+    /// builder (`false`) — the router uses the flag to decide whether to
+    /// record a build latency sample and persist the fresh plan.
+    pub fn get_or_build_traced(
+        &self,
+        a: &Csc,
+        opts: &SolveOptions,
+        exec: Option<&Executor>,
+    ) -> Result<(Arc<FactorPlan>, bool), FactorError> {
+        let key = PlanCache::key_for(a, opts);
+        if let Some(plan) = self.lock().lookup(a, opts) {
+            return Ok((plan, false));
+        }
+        // miss: join an in-flight build for this key, or lead one
+        let (slot, leader) = {
+            let mut inflight = self.inflight.lock().unwrap();
+            match inflight.get(&key) {
+                Some(slot) => (slot.clone(), false),
+                None => {
+                    // a previous leader may have finished between our
+                    // miss and this lock; its cache insert
+                    // happens-before its slot removal, so a second
+                    // lookup settles the race without a rebuild
+                    if let Some(plan) = self.lock().lookup(a, opts) {
+                        return Ok((plan, false));
+                    }
+                    let slot = Arc::new(BuildSlot {
+                        result: Mutex::new(None),
+                        ready: Condvar::new(),
+                    });
+                    inflight.insert(key, slot.clone());
+                    (slot, true)
+                }
+            }
+        };
+        if !leader {
+            let mut result = slot.result.lock().unwrap();
+            while result.is_none() {
+                result = slot.ready.wait(result).unwrap();
+            }
+            let shared = result.as_ref().expect("slot published").clone();
+            if shared.is_ok() {
+                self.lock().hits += 1;
+            }
+            return shared.map(|plan| (plan, false));
+        }
+        // leader: build outside every lock; a panicking build must still
+        // release the followers, so it degrades to a TaskPanic error
+        let built = catch_unwind(AssertUnwindSafe(|| match exec {
+            Some(e) => FactorPlan::build_on(a, opts, e),
+            None => FactorPlan::build(a, opts),
+        }))
+        .unwrap_or(Err(FactorError::TaskPanic))
+        .map(Arc::new);
+        {
+            let mut cache = self.lock();
+            cache.misses += 1;
+            if let Ok(plan) = &built {
+                cache.insert(plan.clone());
+            }
+        }
+        *slot.result.lock().unwrap() = Some(built.clone());
+        slot.ready.notify_all();
+        self.inflight.lock().unwrap().remove(&key);
+        built.map(|plan| (plan, true))
     }
 }
 
@@ -213,8 +370,8 @@ mod tests {
     fn second_request_hits_and_shares_plan() {
         let a = gen::grid2d_laplacian(8, 8);
         let mut cache = PlanCache::new(4);
-        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1));
-        let p2 = cache.get_or_build(&a, &SolveOptions::ours(1));
+        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1)).unwrap();
+        let p2 = cache.get_or_build(&a, &SolveOptions::ours(1)).unwrap();
         assert!(Arc::ptr_eq(&p1, &p2), "hit must return the same plan");
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         assert_eq!(cache.len(), 1);
@@ -228,8 +385,8 @@ mod tests {
             *v *= 1.5;
         }
         let mut cache = PlanCache::new(4);
-        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1));
-        let p2 = cache.get_or_build(&b, &SolveOptions::ours(1));
+        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1)).unwrap();
+        let p2 = cache.get_or_build(&b, &SolveOptions::ours(1)).unwrap();
         assert!(Arc::ptr_eq(&p1, &p2));
         assert_eq!(cache.hits(), 1);
     }
@@ -238,9 +395,9 @@ mod tests {
     fn different_options_get_distinct_plans() {
         let a = gen::grid2d_laplacian(8, 8);
         let mut cache = PlanCache::new(4);
-        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1));
-        let p2 = cache.get_or_build(&a, &SolveOptions::pangulu(1));
-        let p3 = cache.get_or_build(&a, &SolveOptions::ours(2));
+        let p1 = cache.get_or_build(&a, &SolveOptions::ours(1)).unwrap();
+        let p2 = cache.get_or_build(&a, &SolveOptions::pangulu(1)).unwrap();
+        let p3 = cache.get_or_build(&a, &SolveOptions::ours(2)).unwrap();
         assert!(!Arc::ptr_eq(&p1, &p2));
         assert!(!Arc::ptr_eq(&p1, &p3));
         assert_eq!(cache.misses(), 3);
@@ -256,19 +413,19 @@ mod tests {
         let a = gen::grid2d_laplacian(6, 6);
         let b = gen::grid2d_laplacian(6, 7);
         let opts = SolveOptions::ours(1);
-        let impostor = Arc::new(FactorPlan::build(&a, &opts));
+        let impostor = Arc::new(FactorPlan::build(&a, &opts).unwrap());
         let mut cache = PlanCache::new(4);
         cache.insert_forged(PlanCache::key_for(&b, &opts), impostor.clone());
         assert_eq!(cache.len(), 1);
 
-        let got = cache.get_or_build(&b, &opts);
+        let got = cache.get_or_build(&b, &opts).unwrap();
         assert!(!Arc::ptr_eq(&got, &impostor), "collision must not serve the impostor");
         assert_eq!(got.fingerprint(), b.pattern_fingerprint());
         assert_eq!((cache.hits(), cache.misses()), (0, 1));
         assert_eq!(cache.len(), 1, "impostor evicted, genuine plan cached");
 
         // the genuine plan now hits normally
-        let again = cache.get_or_build(&b, &opts);
+        let again = cache.get_or_build(&b, &opts).unwrap();
         assert!(Arc::ptr_eq(&got, &again));
         assert_eq!(cache.hits(), 1);
     }
@@ -292,10 +449,10 @@ mod tests {
         assert_eq!(a.nnz(), b.nnz());
         assert_ne!(a.pattern_fingerprint(), b.pattern_fingerprint());
         let opts = SolveOptions::ours(1);
-        let impostor = Arc::new(FactorPlan::build(&a, &opts));
+        let impostor = Arc::new(FactorPlan::build(&a, &opts).unwrap());
         let mut cache = PlanCache::new(2);
         cache.insert_forged(PlanCache::key_for(&b, &opts), impostor.clone());
-        let got = cache.get_or_build(&b, &opts);
+        let got = cache.get_or_build(&b, &opts).unwrap();
         assert!(!Arc::ptr_eq(&got, &impostor));
         assert_eq!(got.fingerprint(), b.pattern_fingerprint());
         assert_eq!(cache.misses(), 1);
@@ -305,11 +462,11 @@ mod tests {
     fn inserted_plan_hits_without_rebuilding() {
         let a = gen::grid2d_laplacian(8, 8);
         let opts = SolveOptions::ours(1);
-        let plan = Arc::new(FactorPlan::build(&a, &opts));
+        let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
         let mut cache = PlanCache::new(2);
         cache.insert(plan.clone());
         assert_eq!(cache.len(), 1);
-        let got = cache.get_or_build(&a, &opts);
+        let got = cache.get_or_build(&a, &opts).unwrap();
         assert!(Arc::ptr_eq(&got, &plan), "warm insert must serve the same plan");
         assert_eq!((cache.hits(), cache.misses()), (1, 0));
         // re-inserting under the same key replaces rather than grows
@@ -326,7 +483,7 @@ mod tests {
         let keys: Vec<u64> = mats
             .iter()
             .map(|a| {
-                cache.get_or_build(a, &opts);
+                cache.get_or_build(a, &opts).unwrap();
                 PlanCache::key_for(a, &opts)
             })
             .collect();
@@ -336,7 +493,7 @@ mod tests {
         assert_eq!(cache.keys_lru(), vec![keys[1], keys[2], keys[0]]);
         assert!(!cache.touch(0xDEAD_BEEF), "unknown key untouched");
         // a touched entry survives the next eviction
-        cache.get_or_build(&gen::grid2d_laplacian(7, 8), &opts); // evicts keys[1]
+        cache.get_or_build(&gen::grid2d_laplacian(7, 8), &opts).unwrap(); // evicts keys[1]
         assert!(cache.keys_lru().contains(&keys[0]));
         assert!(!cache.keys_lru().contains(&keys[1]));
     }
@@ -350,14 +507,60 @@ mod tests {
         ];
         let opts = SolveOptions::ours(1);
         let mut cache = PlanCache::new(2);
-        cache.get_or_build(&mats[0], &opts);
-        cache.get_or_build(&mats[1], &opts);
-        cache.get_or_build(&mats[0], &opts); // refresh 0 → 1 is now LRU
-        cache.get_or_build(&mats[2], &opts); // evicts 1
+        cache.get_or_build(&mats[0], &opts).unwrap();
+        cache.get_or_build(&mats[1], &opts).unwrap();
+        cache.get_or_build(&mats[0], &opts).unwrap(); // refresh 0 → 1 is now LRU
+        cache.get_or_build(&mats[2], &opts).unwrap(); // evicts 1
         assert_eq!(cache.len(), 2);
-        cache.get_or_build(&mats[0], &opts); // still cached
+        cache.get_or_build(&mats[0], &opts).unwrap(); // still cached
         assert_eq!(cache.hits(), 2);
-        cache.get_or_build(&mats[1], &opts); // was evicted → miss
+        cache.get_or_build(&mats[1], &opts).unwrap(); // was evicted → miss
         assert_eq!(cache.misses(), 4);
+    }
+
+    #[test]
+    fn concurrent_misses_share_one_build() {
+        // N threads race on the same unseen fingerprint; exactly one
+        // build runs and every racer gets the same Arc back
+        let a = gen::grid2d_laplacian(12, 12);
+        let opts = SolveOptions::ours(1);
+        let cache = Arc::new(SharedPlanCache::new(4));
+        let n_threads = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(n_threads));
+        let plans: Vec<Arc<FactorPlan>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n_threads)
+                .map(|_| {
+                    let (cache, barrier, a, opts) = (&cache, &barrier, &a, &opts);
+                    s.spawn(move || {
+                        barrier.wait();
+                        cache.get_or_build(a, opts, None).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for p in &plans[1..] {
+            assert!(Arc::ptr_eq(&plans[0], p), "racers must share the leader's plan");
+        }
+        let inner = cache.lock();
+        assert_eq!(inner.misses(), 1, "the storm costs exactly one build");
+        assert_eq!(inner.hits() + 1, n_threads, "every follower counts as a hit");
+        assert_eq!(inner.len(), 1);
+    }
+
+    #[test]
+    fn shared_cache_singular_build_fails_every_racer_and_caches_nothing() {
+        let mut coo = crate::sparse::Coo::new(4, 4);
+        for i in 0..4 {
+            if i != 1 {
+                coo.push(i, i, 2.0);
+            }
+        }
+        coo.push(0, 1, 1.0);
+        let a = coo.to_csc();
+        let cache = SharedPlanCache::new(4);
+        let err = cache.get_or_build(&a, &SolveOptions::ours(1), None).unwrap_err();
+        assert_eq!(err, FactorError::StructurallySingular { row: 1 });
+        assert!(cache.lock().is_empty(), "failed builds are never cached");
     }
 }

@@ -45,7 +45,7 @@
 //! use std::sync::Arc;
 //!
 //! let a = gen::circuit_bbd(gen::CircuitParams::default());
-//! let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(4)));
+//! let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(4)).unwrap());
 //! let mut session = SolverSession::from_plan(plan);
 //! session.refactorize(&a.values).unwrap(); // full pass seeds the factors
 //! for _newton_step in 0..1000 {
@@ -69,7 +69,7 @@ pub mod plan;
 #[allow(clippy::module_inception)]
 pub mod session;
 
-pub use cache::PlanCache;
+pub use cache::{PlanCache, SharedPlanCache};
 pub use changeset::ChangeSet;
 pub use plan::{FactorPlan, PlanReport};
 pub use session::{PartialEstimate, RefactorReport, SolverSession};

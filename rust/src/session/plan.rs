@@ -12,8 +12,8 @@ use crate::blocking::{
     self, irregular_blocking, regular_blocking, BalanceReport, BlockedMatrix, Blocking,
     DiagFeature,
 };
-use crate::coordinator::{simulate, Placement, SimReport, TaskDag};
-use crate::numeric::factor::{BlockOp, NumericMatrix};
+use crate::coordinator::{par_chunks, simulate, Executor, Placement, SimReport, TaskDag};
+use crate::numeric::factor::{BlockOp, FactorError, NumericMatrix};
 use crate::ordering::{order, Permutation};
 use crate::solver::{BlockingPolicy, SolveOptions};
 use crate::sparse::Csc;
@@ -105,34 +105,55 @@ pub(crate) struct ReachIndex {
 }
 
 impl ReachIndex {
-    fn build(bm: &BlockedMatrix, dag: &TaskDag, scatter_block: &[u32]) -> Self {
+    /// Build the index, resolving each task's target/source blocks on
+    /// `exec` when one is given. The per-task lookups are pure functions
+    /// of the (immutable) DAG and blocked structure, so they run
+    /// chunk-parallel into per-task slots; the grouping passes that
+    /// follow are cheap sequential reductions in task order — the result
+    /// is bit-identical at every worker count. The only possible `Err`
+    /// is [`FactorError::TaskPanic`] out of the pool.
+    fn build_on(
+        bm: &BlockedMatrix,
+        dag: &TaskDag,
+        scatter_block: &[u32],
+        exec: Option<&Executor>,
+    ) -> Result<Self, FactorError> {
         let nblocks = bm.blocks.len();
+        // per task: target block + up to two source blocks (block-
+        // granular read → write edges of the op)
+        let mut touches: Vec<(u32, Option<u32>, Option<u32>)> =
+            vec![(0, None, None); dag.tasks.len()];
+        par_chunks(exec, &mut touches, &|start, chunk| {
+            for (off, slot) in chunk.iter_mut().enumerate() {
+                let task = &dag.tasks[start + off];
+                let (ti, tj) = task.op.target();
+                let tgt = bm.block_id(ti, tj).expect("task target block exists");
+                let edge = |bi: usize, bj: usize| {
+                    let s = bm.block_id(bi, bj).expect("task source block exists");
+                    (s != tgt).then_some(s)
+                };
+                let (s1, s2) = match task.op {
+                    BlockOp::Getrf { .. } => (None, None),
+                    BlockOp::Gessm { k, .. } | BlockOp::Tstrf { k, .. } => (edge(k, k), None),
+                    BlockOp::Ssssm { i, j, k } => (edge(i, k), edge(k, j)),
+                };
+                *slot = (tgt, s1, s2);
+            }
+        })?;
         let mut tasks_by_target: Vec<Vec<u32>> = vec![Vec::new(); nblocks];
         let mut block_out: Vec<Vec<u32>> = vec![Vec::new(); nblocks];
-        for (tid, task) in dag.tasks.iter().enumerate() {
-            let (ti, tj) = task.op.target();
-            let tgt = bm.block_id(ti, tj).expect("task target block exists");
+        for (tid, &(tgt, s1, s2)) in touches.iter().enumerate() {
             tasks_by_target[tgt as usize].push(tid as u32);
-            // block-granular read → write edges of this op
-            let mut src_edge = |bi: usize, bj: usize| {
-                let s = bm.block_id(bi, bj).expect("task source block exists");
-                if s != tgt {
-                    block_out[s as usize].push(tgt);
-                }
-            };
-            match task.op {
-                BlockOp::Getrf { .. } => {}
-                BlockOp::Gessm { k, .. } | BlockOp::Tstrf { k, .. } => src_edge(k, k),
-                BlockOp::Ssssm { i, j, k } => {
-                    src_edge(i, k);
-                    src_edge(k, j);
-                }
+            for s in [s1, s2].into_iter().flatten() {
+                block_out[s as usize].push(tgt);
             }
         }
-        for outs in &mut block_out {
-            outs.sort_unstable();
-            outs.dedup();
-        }
+        par_chunks(exec, &mut block_out, &|_, chunk| {
+            for outs in chunk.iter_mut() {
+                outs.sort_unstable();
+                outs.dedup();
+            }
+        })?;
         // group the scatter map by destination block (counting sort)
         let mut scatter_ptr = vec![0u32; nblocks + 1];
         for &b in scatter_block {
@@ -148,7 +169,7 @@ impl ReachIndex {
             next[b as usize] += 1;
             scatter_a[p] = k as u32;
         }
-        Self { tasks_by_target, block_out, scatter_ptr, scatter_a }
+        Ok(Self { tasks_by_target, block_out, scatter_ptr, scatter_a })
     }
 
     /// DAG task ids writing block `b`.
@@ -189,31 +210,69 @@ pub(crate) struct PlanParts {
 impl FactorPlan {
     /// Run the structure-only pipeline on `a` under `opts`, including
     /// the value scatter map that powers re-factorization.
-    pub fn build(a: &Csc, opts: &SolveOptions) -> Self {
-        Self::build_inner(a, opts, true)
+    ///
+    /// Returns [`FactorError::StructurallySingular`] when `a`'s pattern
+    /// lacks a diagonal entry — client input a serving path must reject,
+    /// not panic on. [`Self::build_on`] is the same pipeline with its
+    /// parallelizable passes run on an [`Executor`].
+    pub fn build(a: &Csc, opts: &SolveOptions) -> Result<Self, FactorError> {
+        Self::build_inner(a, opts, true, None)
+    }
+
+    /// As [`Self::build`], running the parallelizable passes (symbolic
+    /// reach sets, per-stripe block assembly, scatter-map and
+    /// reachability-index construction) on `exec`. The result is
+    /// bit-identical to the sequential [`Self::build`] — same ordering,
+    /// same block boundaries, same task DAG, same scatter map — at every
+    /// worker count; only the build latency changes.
+    pub fn build_on(a: &Csc, opts: &SolveOptions, exec: &Executor) -> Result<Self, FactorError> {
+        Self::build_inner(a, opts, true, Some(exec))
     }
 
     /// Plan without the scatter map — for the one-shot
     /// [`crate::solver::Solver::factorize`] path, which seeds numeric
     /// storage directly from the blocked pattern and never re-scatters.
     /// Such a plan cannot back a session (`scatter_values` rejects it).
-    pub(crate) fn build_for_oneshot(a: &Csc, opts: &SolveOptions) -> Self {
-        Self::build_inner(a, opts, false)
+    pub(crate) fn build_for_oneshot(
+        a: &Csc,
+        opts: &SolveOptions,
+        exec: Option<&Executor>,
+    ) -> Result<Self, FactorError> {
+        Self::build_inner(a, opts, false, exec)
     }
 
-    fn build_inner(a: &Csc, opts: &SolveOptions, with_scatter: bool) -> Self {
+    fn build_inner(
+        a: &Csc,
+        opts: &SolveOptions,
+        with_scatter: bool,
+        exec: Option<&Executor>,
+    ) -> Result<Self, FactorError> {
         assert_eq!(a.n_rows(), a.n_cols(), "square systems only");
+        // reject structurally singular patterns up front: LU without
+        // numerical pivoting needs every diagonal entry structurally
+        // present. Scanning `a` itself (rather than letting the
+        // partitioner trip over the permuted pattern) reports the
+        // client's own row index — a symmetric permutation maps
+        // diagonals to diagonals, so this scan catches exactly the
+        // patterns the downstream diagonal checks would.
+        for j in 0..a.n_cols() {
+            if a.col_rows(j).binary_search(&j).is_err() {
+                return Err(FactorError::StructurallySingular { row: j });
+            }
+        }
         let mut sw = Stopwatch::new();
 
-        // phase 1: reorder
+        // phase 1: reorder (sequential — the ordering heuristics are
+        // inherently order-dependent and cheap relative to the rest)
         let perm = order(a, opts.ordering);
         let pa = a.permute_sym(perm.as_slice());
         let reorder_seconds = sw.lap("reorder");
 
-        // phase 2: symbolic — infallible here: the pattern was analyzed
-        // from `pa` itself, so pattern(pa) ⊆ symbolic pattern by
-        // construction (the Err arm exists for mismatched-matrix callers)
-        let sym = symbolic::analyze(&pa);
+        // phase 2: symbolic — cannot fail on its own input: the pattern
+        // was analyzed from `pa` itself, so pattern(pa) ⊆ symbolic
+        // pattern by construction (the Err arm of `ldu_pattern` exists
+        // for mismatched-matrix callers)
+        let sym = symbolic::analyze_on(&pa, exec)?;
         let ldu = sym
             .ldu_pattern(&pa)
             .expect("pattern(A) is contained in its own symbolic pattern");
@@ -222,7 +281,7 @@ impl FactorPlan {
         // phase 3a: blocking + DAG (the §5.4 preprocessing lap, same
         // boundary as the pre-session Solver so tables stay comparable)
         let blocking = blocking_for(opts, &ldu);
-        let structure = Arc::new(BlockedMatrix::build(&ldu, blocking));
+        let structure = Arc::new(BlockedMatrix::try_build_on(&ldu, blocking, exec)?);
         let balance = BalanceReport::of(&structure);
         let placement = Placement::square(opts.workers);
         let dag = TaskDag::build(&structure, &opts.kernels, placement, &opts.model);
@@ -232,12 +291,12 @@ impl FactorPlan {
         // incremental-refactorization reachability index
         let sim = simulate(&dag, opts.workers, &opts.model);
         let (scatter_block, scatter_off) = if with_scatter {
-            build_scatter(a, &perm, &structure)
+            build_scatter_on(a, &perm, &structure, exec)?
         } else {
             (Vec::new(), Vec::new())
         };
         let reach = if with_scatter {
-            Some(ReachIndex::build(&structure, &dag, &scatter_block))
+            Some(ReachIndex::build_on(&structure, &dag, &scatter_block, exec)?)
         } else {
             None
         };
@@ -253,7 +312,7 @@ impl FactorPlan {
             preprocess_seconds,
             plan_extra_seconds,
         };
-        Self {
+        Ok(Self {
             opts: opts.clone(),
             iperm: perm.inverse(),
             perm,
@@ -268,7 +327,7 @@ impl FactorPlan {
             scatter_off,
             reach,
             report,
-        }
+        })
     }
 
     /// Reassemble a session plan from persisted parts (the serde hook of
@@ -297,7 +356,10 @@ impl FactorPlan {
         } = parts;
         let mut sw = Stopwatch::new();
         let nnz_ldu = ldu.nnz();
-        let structure = Arc::new(BlockedMatrix::build(&ldu, blocking));
+        let structure = Arc::new(
+            BlockedMatrix::try_build_on(&ldu, blocking, None)
+                .map_err(|e| format!("persisted pattern rejected: {e}"))?,
+        );
         let nblocks = structure.blocks.len() as u32;
         for (&b, &off) in scatter_block.iter().zip(&scatter_off) {
             if b >= nblocks {
@@ -315,7 +377,10 @@ impl FactorPlan {
         let dag = TaskDag::build(&structure, &opts.kernels, placement, &opts.model);
         let preprocess_seconds = sw.lap("preprocess");
         let sim = simulate(&dag, opts.workers, &opts.model);
-        let reach = Some(ReachIndex::build(&structure, &dag, &scatter_block));
+        let reach = Some(
+            ReachIndex::build_on(&structure, &dag, &scatter_block, None)
+                .map_err(|e| e.to_string())?,
+        );
         let plan_extra_seconds = sw.lap("plan_extra");
         let report = PlanReport {
             n: perm.len(),
@@ -343,8 +408,11 @@ impl FactorPlan {
         })
     }
 
-    /// The precomputed `(block, offset)` scatter maps (persistence hook).
-    pub(crate) fn scatter_maps(&self) -> (&[u32], &[u32]) {
+    /// The precomputed `(block, offset)` scatter maps: for A-nonzero `k`
+    /// (CSC order), the destination block id and offset within that
+    /// block's value array. Used by the persistence layer and by the
+    /// differential tests asserting parallel ≡ sequential builds.
+    pub fn scatter_maps(&self) -> (&[u32], &[u32]) {
         (&self.scatter_block, &self.scatter_off)
     }
 
@@ -451,11 +519,24 @@ pub(crate) fn blocking_for(opts: &SolveOptions, ldu: &Csc) -> Blocking {
 
 /// Map every A-nonzero to its (block, value-offset) destination once; the
 /// numeric path then re-scatters values with plain stores.
-fn build_scatter(a: &Csc, perm: &Permutation, bm: &BlockedMatrix) -> (Vec<u32>, Vec<u32>) {
+///
+/// The per-entry lookups (permutation, block-id hash probe, binary search
+/// in the block column) run chunk-parallel on `exec` when one is given:
+/// entry `k`'s destination is a pure function of `k`, the matrix and the
+/// immutable blocked structure, so each chunk fills its own disjoint
+/// window of the output and the map is bit-identical at every worker
+/// count. The cheap entry enumeration stays sequential. The only
+/// possible `Err` is [`FactorError::TaskPanic`] out of the pool.
+fn build_scatter_on(
+    a: &Csc,
+    perm: &Permutation,
+    bm: &BlockedMatrix,
+    exec: Option<&Executor>,
+) -> Result<(Vec<u32>, Vec<u32>), FactorError> {
     let n = a.n_cols();
     let positions = bm.blocking.positions();
     let nb = bm.nb();
-    // row → block-row map (same trick as BlockedMatrix::build)
+    // row → block-row map (same trick as BlockedMatrix::try_build_on)
     let mut row_block = vec![0u32; n];
     for bi in 0..nb {
         for r in positions[bi]..positions[bi + 1] {
@@ -463,13 +544,21 @@ fn build_scatter(a: &Csc, perm: &Permutation, bm: &BlockedMatrix) -> (Vec<u32>, 
         }
     }
     let p = perm.as_slice();
-    let mut scatter_block = Vec::with_capacity(a.nnz());
-    let mut scatter_off = Vec::with_capacity(a.nnz());
+    // enumerate (row, col) of every nonzero in CSC order — O(nnz), cheap
+    let mut entries: Vec<(u32, u32)> = Vec::with_capacity(a.nnz());
     for j in 0..n {
-        let pj = p[j];
-        let bj = row_block[pj] as usize;
-        let c_local = pj - positions[bj];
         for &i in a.col_rows(j) {
+            entries.push((i as u32, j as u32));
+        }
+    }
+    let mut out: Vec<(u32, u32)> = vec![(0, 0); entries.len()];
+    par_chunks(exec, &mut out, &|start, chunk| {
+        for (off, slot) in chunk.iter_mut().enumerate() {
+            let (i, j) = entries[start + off];
+            let (i, j) = (i as usize, j as usize);
+            let pj = p[j];
+            let bj = row_block[pj] as usize;
+            let c_local = pj - positions[bj];
             let pi = p[i];
             let bi = row_block[pi] as usize;
             let id = bm
@@ -481,11 +570,12 @@ fn build_scatter(a: &Csc, perm: &Permutation, bm: &BlockedMatrix) -> (Vec<u32>, 
                 .col_rows(c_local)
                 .binary_search(&r_local)
                 .expect("A entry missing from block pattern");
-            scatter_block.push(id);
-            scatter_off.push(blk.col_ptr[c_local] + t as u32);
+            *slot = (id, blk.col_ptr[c_local] + t as u32);
         }
-    }
-    (scatter_block, scatter_off)
+    })?;
+    let scatter_block = out.iter().map(|&(b, _)| b).collect();
+    let scatter_off = out.iter().map(|&(_, o)| o).collect();
+    Ok((scatter_block, scatter_off))
 }
 
 #[cfg(test)]
@@ -496,7 +586,7 @@ mod tests {
     #[test]
     fn plan_matches_only_same_pattern() {
         let a = gen::grid2d_laplacian(8, 8);
-        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap();
         assert!(plan.matches(&a));
         assert_eq!(plan.n(), 64);
         assert_eq!(plan.nnz_a(), a.nnz());
@@ -516,7 +606,7 @@ mod tests {
         // scattering A's own values must reproduce exactly the blocked
         // values the partitioner stored at build time
         let a = gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() });
-        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap();
         let mut nm = NumericMatrix::from_blocked(plan.structure.clone());
         // wreck the storage first so the test can't pass vacuously
         for i in 0..plan.structure.blocks.len() {
@@ -532,7 +622,7 @@ mod tests {
     #[test]
     fn reach_index_partitions_scatter_and_targets() {
         let a = gen::circuit_bbd(gen::CircuitParams { n: 250, ..Default::default() });
-        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap();
         let reach = plan.reach();
         let nblocks = plan.structure.blocks.len();
         // every A-nonzero appears in exactly one block's scatter group,
@@ -562,7 +652,7 @@ mod tests {
     #[test]
     fn last_diagonal_block_has_no_downstream() {
         let a = gen::grid2d_laplacian(9, 9);
-        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap();
         let nb = plan.structure.nb();
         let last = plan.structure.block_id(nb - 1, nb - 1).unwrap();
         assert!(
@@ -574,7 +664,7 @@ mod tests {
     #[test]
     fn rescatter_blocks_reproduces_full_scatter() {
         let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
-        let plan = FactorPlan::build(&a, &SolveOptions::ours(1));
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap();
         let mut full = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
         plan.scatter_values(&a.values, &mut full);
         let mut blockwise = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
@@ -596,7 +686,7 @@ mod tests {
     #[test]
     fn plan_report_totals() {
         let a = gen::grid2d_laplacian(10, 10);
-        let plan = FactorPlan::build(&a, &SolveOptions::ours(2));
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(2)).unwrap();
         let r = &plan.report;
         assert!(r.total_seconds() >= r.preprocess_seconds);
         assert_eq!(r.nnz_a, a.nnz());
@@ -604,5 +694,46 @@ mod tests {
         assert!(r.flops > 0.0);
         assert!(!plan.dag.tasks.is_empty());
         assert_eq!(plan.sim.utilization.len(), 2);
+    }
+
+    #[test]
+    fn parallel_build_matches_sequential_scatter_and_reach() {
+        // the differential harness (tests/plan_build.rs) compares the
+        // public surface; the scatter map and reachability index are
+        // private, so their bitwise equality is asserted here
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 400, ..Default::default() });
+        let opts = SolveOptions::ours(4);
+        let seq = FactorPlan::build(&a, &opts).unwrap();
+        for workers in [2u32, 8] {
+            let exec = crate::coordinator::Executor::shared(workers);
+            let par = FactorPlan::build_on(&a, &opts, &exec).unwrap();
+            assert_eq!(par.scatter_maps().0, seq.scatter_maps().0, "workers={workers}");
+            assert_eq!(par.scatter_maps().1, seq.scatter_maps().1, "workers={workers}");
+            let (sr, pr) = (seq.reach(), par.reach());
+            assert_eq!(pr.tasks_by_target, sr.tasks_by_target, "workers={workers}");
+            assert_eq!(pr.block_out, sr.block_out, "workers={workers}");
+            assert_eq!(pr.scatter_ptr, sr.scatter_ptr, "workers={workers}");
+            assert_eq!(pr.scatter_a, sr.scatter_a, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn structurally_singular_input_is_an_error_not_a_panic() {
+        // column 2 is populated but has no diagonal entry
+        let mut coo = crate::sparse::Coo::new(5, 5);
+        for i in 0..5 {
+            if i != 2 {
+                coo.push(i, i, 4.0);
+            }
+        }
+        coo.push(0, 2, 1.0);
+        coo.push(2, 3, 1.0);
+        let a = coo.to_csc();
+        let err = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap_err();
+        assert_eq!(err, FactorError::StructurallySingular { row: 2 });
+        // the parallel path reports the identical error
+        let exec = crate::coordinator::Executor::shared(2);
+        let err = FactorPlan::build_on(&a, &SolveOptions::ours(2), &exec).unwrap_err();
+        assert_eq!(err, FactorError::StructurallySingular { row: 2 });
     }
 }

@@ -272,7 +272,7 @@ impl<'b> SolverSession<'b> {
     /// use std::sync::Arc;
     ///
     /// let a = gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() });
-    /// let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)));
+    /// let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)).unwrap());
     /// let mut session = SolverSession::from_plan(plan);
     /// session.refactorize(&a.values)?;                    // full pass seeds factors
     ///
@@ -540,7 +540,7 @@ mod tests {
     use crate::sparse::{gen, residual};
 
     fn session_for(a: &Csc, opts: SolveOptions) -> SolverSession<'static> {
-        SolverSession::from_plan(Arc::new(FactorPlan::build(a, &opts)))
+        SolverSession::from_plan(Arc::new(FactorPlan::build(a, &opts).unwrap()))
     }
 
     #[test]
@@ -631,7 +631,7 @@ mod tests {
     #[test]
     fn full_change_set_matches_full_refactorize_bitwise() {
         let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
-        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)));
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)).unwrap());
         let mut partial = SolverSession::from_plan(plan.clone());
         partial.refactorize(&a.values).unwrap();
         let new_values: Vec<f64> = a.values.iter().map(|v| v * 1.125).collect();
@@ -654,7 +654,7 @@ mod tests {
     #[test]
     fn single_entry_change_prunes_and_matches() {
         let a = gen::grid2d_laplacian(10, 10);
-        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
         let mut partial = SolverSession::from_plan(plan.clone());
         partial.refactorize(&a.values).unwrap();
         // bump one diagonal entry

@@ -243,7 +243,7 @@ impl<'b> Solver<'b> {
     /// [`crate::session::SolverSession`] instead.
     pub fn factorize(&mut self, a: &Csc) -> Result<Factorization, FactorError> {
         assert_eq!(a.n_rows(), a.n_cols(), "square systems only");
-        let plan = Arc::new(FactorPlan::build_for_oneshot(a, &self.opts));
+        let plan = Arc::new(FactorPlan::build_for_oneshot(a, &self.opts, Some(&self.exec))?);
         let nm = NumericMatrix::from_blocked(plan.structure.clone());
         let (run, numeric_seconds) = timed(|| {
             coordinator::run_dag(

@@ -3,6 +3,7 @@
 //! `nnz(L+U)` and FLOPs for every benchmark matrix).
 
 use super::etree::{self, NONE};
+use crate::coordinator::{par_chunks, Executor};
 use crate::numeric::factor::FactorError;
 use crate::sparse::Csc;
 
@@ -132,39 +133,77 @@ impl Symbolic {
 /// `i` is the union of etree paths from each `k` (with `M[i,k] ≠ 0`,
 /// `k < i`) up toward `i`.
 pub fn analyze(a: &Csc) -> Symbolic {
-    assert_eq!(a.n_rows(), a.n_cols(), "symbolic analysis needs square A");
-    let m = a.plus_transpose_pattern();
-    analyze_symmetric(&m)
+    match analyze_on(a, None) {
+        Ok(sym) => sym,
+        Err(_) => unreachable!("sequential symbolic analysis cannot fail"),
+    }
 }
 
 /// As [`analyze`] but the input is already a symmetric pattern.
 pub fn analyze_symmetric(m: &Csc) -> Symbolic {
+    match analyze_symmetric_on(m, None) {
+        Ok(sym) => sym,
+        Err(_) => unreachable!("sequential symbolic analysis cannot fail"),
+    }
+}
+
+/// As [`analyze`], computing the per-row reach sets on `exec` when one is
+/// given. The elimination tree is built sequentially (it is a cheap
+/// O(nnz·α) pass and every row's traversal depends on it), then the rows'
+/// etree climbs run independently — each row's pattern is a pure function
+/// of the fixed tree and that row's adjacency (the GSoFa observation), so
+/// the result is bit-identical at every worker count.
+///
+/// The only possible `Err` is [`FactorError::TaskPanic`] out of the pool;
+/// the analysis itself cannot fail.
+pub fn analyze_on(a: &Csc, exec: Option<&Executor>) -> Result<Symbolic, FactorError> {
+    assert_eq!(a.n_rows(), a.n_cols(), "symbolic analysis needs square A");
+    let m = a.plus_transpose_pattern();
+    analyze_symmetric_on(&m, exec)
+}
+
+/// As [`analyze_symmetric`], with the per-row reach sets computed on
+/// `exec` when one is given (see [`analyze_on`]).
+pub fn analyze_symmetric_on(m: &Csc, exec: Option<&Executor>) -> Result<Symbolic, FactorError> {
     let n = m.n_cols();
     let parent = etree::etree(m);
-    let mut row_pats: Vec<Vec<usize>> = Vec::with_capacity(n);
-    let mut mark = vec![usize::MAX; n];
-    let mut col_counts = vec![1usize; n]; // diagonal
-    for i in 0..n {
-        mark[i] = i;
-        let mut pat = Vec::new();
-        // entries k < i of row i == entries k < i of column i (symmetry)
-        for &k in m.col_rows(i) {
-            if k >= i {
-                break; // columns are sorted ascending
+    let mut row_pats: Vec<Vec<usize>> = vec![Vec::new(); n];
+    par_chunks(exec, &mut row_pats, &|start, pats| {
+        // per-chunk mark scratch: the sequential pass reused one `mark`
+        // across rows purely as an optimization — per-row semantics are
+        // identical since `mark[t] == i` is only ever tested against the
+        // current row index
+        let mut mark = vec![usize::MAX; n];
+        for (off, pat) in pats.iter_mut().enumerate() {
+            let i = start + off;
+            mark[i] = i;
+            // entries k < i of row i == entries k < i of column i
+            // (symmetry)
+            for &k in m.col_rows(i) {
+                if k >= i {
+                    break; // columns are sorted ascending
+                }
+                let mut t = k;
+                while mark[t] != i {
+                    mark[t] = i;
+                    pat.push(t);
+                    t = parent[t];
+                    debug_assert_ne!(t, NONE, "etree path must reach row {i}");
+                }
             }
-            let mut t = k;
-            while mark[t] != i {
-                mark[t] = i;
-                pat.push(t);
-                col_counts[t] += 1;
-                t = parent[t];
-                debug_assert_ne!(t, NONE, "etree path must reach row {i}");
-            }
+            pat.sort_unstable();
         }
-        pat.sort_unstable();
-        row_pats.push(pat);
+    })?;
+    // column counts are a cheap sequential reduction over the row
+    // patterns (the sequential pass incremented them inline; summing
+    // afterwards counts exactly the same memberships)
+    let mut col_counts = vec![1usize; n]; // diagonal
+    for pat in &row_pats {
+        for &k in pat {
+            col_counts[k] += 1;
+        }
     }
-    Symbolic { n, parent, row_pats, col_counts }
+    Ok(Symbolic { n, parent, row_pats, col_counts })
 }
 
 #[cfg(test)]
@@ -304,6 +343,25 @@ mod tests {
             sym.ldu_pattern(&c),
             Err(FactorError::DimensionMismatch { got: 7, want: 6 })
         ));
+    }
+
+    #[test]
+    fn parallel_analysis_is_bit_identical_to_sequential() {
+        let mats = [
+            gen::grid2d_laplacian(16, 16),
+            gen::circuit_bbd(gen::CircuitParams { n: 500, ..Default::default() }),
+            gen::directed_graph(200, 4, 7),
+        ];
+        for a in &mats {
+            let seq = analyze(a);
+            for workers in [2u32, 8] {
+                let exec = crate::coordinator::Executor::shared(workers);
+                let par = analyze_on(a, Some(&exec)).unwrap();
+                assert_eq!(par.parent, seq.parent, "workers={workers}");
+                assert_eq!(par.row_pats, seq.row_pats, "workers={workers}");
+                assert_eq!(par.col_counts, seq.col_counts, "workers={workers}");
+            }
+        }
     }
 
     #[test]

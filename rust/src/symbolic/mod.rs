@@ -13,7 +13,7 @@ pub mod etree;
 pub mod fill;
 
 pub use etree::{etree, postorder};
-pub use fill::{analyze, Symbolic};
+pub use fill::{analyze, analyze_on, Symbolic};
 
 #[cfg(test)]
 mod tests {

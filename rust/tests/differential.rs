@@ -37,7 +37,7 @@ fn change_indices(seed: u64, a: &Csc, kind: u64) -> Vec<usize> {
             // all entries landing in the block of one randomly-chosen
             // entry (the external mirror of the plan's scatter map)
             let opts = SolveOptions::ours(1 + (seed % 4) as u32);
-            let plan = FactorPlan::build(a, &opts);
+            let plan = FactorPlan::build(a, &opts).unwrap();
             let coords = common::value_coords(a);
             let target = common::block_of_entry(&plan, coords[rng.below(nnz)]);
             (0..nnz)
@@ -70,7 +70,7 @@ fn check_case(seed: u64, n: usize, indices: &[usize]) -> Result<(), String> {
     let nnz = a.nnz();
     let workers = 1 + (seed % 4) as u32;
     let opts = SolveOptions::ours(workers);
-    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
 
     let mut partial = SolverSession::from_plan(plan.clone());
     partial
@@ -176,7 +176,7 @@ fn leaf_block_change_prunes_tasks_and_matches_cold_factorize() {
         blocking: BlockingPolicy::Regular(25), // 16 blocks of 25
         ..SolveOptions::ours(1)
     };
-    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
     let nb = plan.structure.nb();
     assert!(nb >= 16, "need a >=16-block grid, got {nb}");
 
@@ -232,7 +232,7 @@ fn root_block_change_cascades_and_matches_full() {
         blocking: BlockingPolicy::Regular(16),
         ..SolveOptions::ours(2)
     };
-    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
     let p = plan.permutation().as_slice();
     let positions = plan.structure.blocking.positions();
     let first_hi = positions[1];
@@ -272,7 +272,7 @@ fn root_block_change_cascades_and_matches_full() {
 fn accumulated_partial_steps_track_full_refactorize() {
     let a = common::random_matrix_sized(77, 90);
     let opts = SolveOptions::ours(2);
-    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
     let mut inc = SolverSession::from_plan(plan.clone());
     inc.refactorize(&a.values).unwrap();
     let mut values = a.values.clone();
@@ -327,7 +327,7 @@ fn solve_transpose_matches_dense_oracle() {
         }
 
         // session path: SolverSession::solve_transpose over the same factors
-        let plan = Arc::new(FactorPlan::build(a, &SolveOptions::ours(2)));
+        let plan = Arc::new(FactorPlan::build(a, &SolveOptions::ours(2)).unwrap());
         let mut s = SolverSession::from_plan(plan);
         s.refactorize(&a.values).unwrap();
         let got2 = s.solve_transpose(&b);
@@ -343,7 +343,7 @@ fn solve_transpose_matches_dense_oracle() {
 #[test]
 fn solve_transpose_after_partial_refactorize_matches_dense_oracle() {
     let a = common::random_matrix_sized(21, 50);
-    let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+    let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
     let mut s = SolverSession::from_plan(plan);
     s.refactorize(&a.values).unwrap();
     let k = a.value_index(10, 10).expect("diagonal entry");
@@ -409,7 +409,7 @@ fn determinism_under_stealing_matches_sequential_bitwise() {
         let a = common::random_matrix_sized(seed, 140);
         for workers in [1u32, 2, 8] {
             let opts = SolveOptions::ours(workers);
-            let plan = Arc::new(FactorPlan::build(&a, &opts));
+            let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
             let seq =
                 factorize_sequential(plan.structure.clone(), &opts.kernels, &CpuDense).unwrap();
             let mut session = SolverSession::from_plan(plan.clone());

@@ -26,7 +26,7 @@ fn prop_refactorize_matches_cold_factorize_bitwise() {
         // session: plan from the original pattern, refactorize with the
         // values of a *different* matrix instance (same pattern)
         let a2 = perturbed(&a, seed ^ 0xFACE);
-        let plan = Arc::new(FactorPlan::build(&a, &opts));
+        let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
         let mut session = SolverSession::from_plan(plan);
         session
             .refactorize_matrix(&a2)
@@ -55,7 +55,7 @@ fn prop_refactorize_residual_equivalent_across_steps() {
     for seed in 0..6 {
         let a = random_matrix(seed);
         let n = a.n_rows();
-        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)));
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(2)).unwrap());
         let mut session = SolverSession::from_plan(plan);
         for step in 0..5u64 {
             let astep = perturbed(&a, seed * 31 + step);
@@ -74,7 +74,7 @@ fn prop_solve_many_matches_repeated_single_solves() {
     for seed in 0..SEEDS {
         let a = random_matrix(seed);
         let n = a.n_rows();
-        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
         let mut session = SolverSession::from_plan(plan);
         session.refactorize_matrix(&a).unwrap();
         let mut rng = Prng::new(seed ^ 0x51);
@@ -104,7 +104,7 @@ fn plan_cache_serves_newton_sweep_with_one_build() {
     let mut plans = Vec::new();
     for step in 0..10u64 {
         let astep = perturbed(&a, step);
-        plans.push(cache.get_or_build(&astep, &opts));
+        plans.push(cache.get_or_build(&astep, &opts).unwrap());
     }
     assert_eq!(cache.misses(), 1, "one structure analysis for the whole sweep");
     assert_eq!(cache.hits(), 9);

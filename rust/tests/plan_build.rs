@@ -1,0 +1,146 @@
+//! Differential tests for executor-parallel plan construction: for every
+//! suite matrix and worker count, [`FactorPlan::build_on`] must produce a
+//! plan **bit-identical** to the sequential [`FactorPlan::build`] — same
+//! permutation, symbolic fill, blocking, per-block storage, task DAG and
+//! scatter map — and the two plans must re-factorize to bitwise-equal
+//! factors. Plus the structurally-singular regression: a matrix with a
+//! structurally empty diagonal entry must surface
+//! [`FactorError::StructurallySingular`] as a clean `Err` on every
+//! serving path (direct build, plan cache, router admission), never a
+//! panic.
+
+use sparselu::coordinator::Executor;
+use sparselu::numeric::FactorError;
+use sparselu::serve::{Router, RouterConfig, ServeError};
+use sparselu::session::{FactorPlan, PlanCache, SolverSession};
+use sparselu::solver::SolveOptions;
+use sparselu::sparse::{gen, Coo, Csc};
+use std::sync::Arc;
+
+fn suite() -> Vec<(&'static str, Csc)> {
+    vec![
+        ("grid2d-16x16", gen::grid2d_laplacian(16, 16)),
+        (
+            "circuit-bbd-600",
+            gen::circuit_bbd(gen::CircuitParams { n: 600, ..Default::default() }),
+        ),
+        ("tridiagonal-300", gen::tridiagonal(300)),
+        ("arrow-up-200", gen::arrow_up(200)),
+        ("banded-fem-300", gen::banded_fem(300, &[1, 7, 19], 0.6, 7)),
+    ]
+}
+
+/// Field-by-field structural equality of two plans built from the same
+/// (matrix, options) pair.
+fn assert_plans_identical(seq: &FactorPlan, par: &FactorPlan, tag: &str) {
+    assert_eq!(seq.permutation().as_slice(), par.permutation().as_slice(), "{tag}: perm");
+    assert_eq!(
+        seq.inverse_permutation().as_slice(),
+        par.inverse_permutation().as_slice(),
+        "{tag}: iperm"
+    );
+    assert_eq!(seq.fingerprint(), par.fingerprint(), "{tag}: fingerprint");
+    assert_eq!(seq.report.nnz_ldu, par.report.nnz_ldu, "{tag}: nnz_ldu");
+    assert_eq!(
+        seq.structure.blocking.positions(),
+        par.structure.blocking.positions(),
+        "{tag}: blocking positions"
+    );
+    assert_eq!(seq.structure.blocks.len(), par.structure.blocks.len(), "{tag}: block count");
+    for (id, (sb, pb)) in seq.structure.blocks.iter().zip(&par.structure.blocks).enumerate() {
+        assert_eq!((sb.bi, sb.bj), (pb.bi, pb.bj), "{tag}: block {id} coords");
+        assert_eq!((sb.n_rows, sb.n_cols), (pb.n_rows, pb.n_cols), "{tag}: block {id} dims");
+        assert_eq!(sb.col_ptr, pb.col_ptr, "{tag}: block {id} col_ptr");
+        assert_eq!(sb.row_idx, pb.row_idx, "{tag}: block {id} row_idx");
+        assert_eq!(sb.values, pb.values, "{tag}: block {id} values");
+    }
+    assert_eq!(seq.structure.by_col, par.structure.by_col, "{tag}: by_col");
+    assert_eq!(seq.structure.by_row, par.structure.by_row, "{tag}: by_row");
+    assert_eq!(seq.dag.tasks.len(), par.dag.tasks.len(), "{tag}: task count");
+    for (i, (st, pt)) in seq.dag.tasks.iter().zip(&par.dag.tasks).enumerate() {
+        assert_eq!(st.op, pt.op, "{tag}: task {i} op");
+        assert_eq!(st.owner, pt.owner, "{tag}: task {i} owner");
+        assert_eq!(st.deps, pt.deps, "{tag}: task {i} deps");
+        assert_eq!(st.out, pt.out, "{tag}: task {i} out-edges");
+        assert_eq!(st.level, pt.level, "{tag}: task {i} level");
+        assert_eq!(st.cost.to_bits(), pt.cost.to_bits(), "{tag}: task {i} cost");
+        assert_eq!(st.flops.to_bits(), pt.flops.to_bits(), "{tag}: task {i} flops");
+    }
+    assert_eq!(seq.scatter_maps().0, par.scatter_maps().0, "{tag}: scatter blocks");
+    assert_eq!(seq.scatter_maps().1, par.scatter_maps().1, "{tag}: scatter offsets");
+}
+
+#[test]
+fn parallel_build_is_bit_identical_to_sequential() {
+    for (name, a) in &suite() {
+        for workers in [1u32, 2, 8] {
+            let tag = format!("{name} w={workers}");
+            let opts = SolveOptions::ours(workers);
+            let seq = FactorPlan::build(a, &opts).unwrap();
+            let exec = Executor::shared(workers);
+            let par = FactorPlan::build_on(a, &opts, &exec).unwrap();
+            assert_plans_identical(&seq, &par, &tag);
+
+            // and the two plans drive bitwise-identical numerics
+            let mut s1 = SolverSession::from_plan(Arc::new(seq));
+            let mut s2 = SolverSession::from_plan(Arc::new(par));
+            s1.refactorize(&a.values).unwrap();
+            s2.refactorize(&a.values).unwrap();
+            for id in 0..s1.plan().structure.blocks.len() {
+                assert_eq!(
+                    s1.numeric().block_values(id as u32),
+                    s2.numeric().block_values(id as u32),
+                    "{tag}: factor block {id} diverges"
+                );
+            }
+            let b: Vec<f64> = (0..a.n_rows()).map(|i| ((i * 5) % 9) as f64 - 4.0).collect();
+            assert_eq!(s1.solve(&b), s2.solve(&b), "{tag}: solve diverges");
+        }
+    }
+}
+
+/// `n`×`n` pattern with a structural zero at diagonal `row` (plus some
+/// off-diagonal coupling so the matrix is not block-trivial).
+fn singular_matrix(n: usize, row: usize) -> Csc {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        if i != row {
+            coo.push(i, i, 4.0);
+        }
+    }
+    coo.push(0, row, 1.0);
+    coo.push(row, (row + 1) % n, 1.0);
+    coo.to_csc()
+}
+
+#[test]
+fn structurally_singular_errors_on_every_serving_path() {
+    let a = singular_matrix(6, 3);
+    let opts = SolveOptions::ours(2);
+
+    // direct build, sequential and parallel
+    let err = FactorPlan::build(&a, &opts).unwrap_err();
+    assert_eq!(err, FactorError::StructurallySingular { row: 3 });
+    let exec = Executor::shared(2);
+    let err = FactorPlan::build_on(&a, &opts, &exec).unwrap_err();
+    assert_eq!(err, FactorError::StructurallySingular { row: 3 });
+
+    // plan cache: the error propagates and nothing is cached
+    let mut cache = PlanCache::new(4);
+    let err = cache.get_or_build(&a, &opts).unwrap_err();
+    assert_eq!(err, FactorError::StructurallySingular { row: 3 });
+    assert_eq!(cache.len(), 0);
+
+    // router admission: a per-request error, and the router survives to
+    // serve a well-posed pattern afterwards
+    let router = Router::new(opts, RouterConfig::default());
+    match router.admit(&a) {
+        Err(ServeError::Factor(FactorError::StructurallySingular { row })) => {
+            assert_eq!(row, 3);
+        }
+        other => panic!("expected StructurallySingular from admit, got {other:?}"),
+    }
+    let good = gen::grid2d_laplacian(8, 8);
+    let tenant = router.admit(&good).unwrap();
+    assert!(router.drain_tenant(tenant).unwrap().is_empty());
+}

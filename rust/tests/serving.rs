@@ -39,7 +39,7 @@ fn pool_and_cache_stress_bitwise_matches_single_thread_oracle() {
 
     let a = gen::circuit_bbd(gen::CircuitParams { n: 260, ..Default::default() });
     let opts = SolveOptions::ours(2);
-    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
 
     // ground truth, computed serially: the bitwise factors and one solve
     // per scenario
@@ -73,7 +73,7 @@ fn pool_and_cache_stress_bitwise_matches_single_thread_oracle() {
                     let oracle = &oracles[(t * 13 + i * 7) % SCENARIOS];
                     // hammer the shared cache: every lookup must hit and
                     // hand back the one shared plan
-                    let cached = cache.lock().unwrap().get_or_build(a, opts);
+                    let cached = cache.lock().unwrap().get_or_build(a, opts).unwrap();
                     assert!(Arc::ptr_eq(&cached, plan), "cache served a different plan");
 
                     let mut session = pool.checkout();
@@ -118,7 +118,7 @@ fn pool_and_cache_stress_bitwise_matches_single_thread_oracle() {
 fn persisted_plan_reproduces_bitwise_identical_factors() {
     let a = gen::circuit_bbd(gen::CircuitParams { n: 220, ..Default::default() });
     let opts = SolveOptions::ours(1);
-    let plan = Arc::new(FactorPlan::build(&a, &opts));
+    let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
     let dir = tmp_dir("roundtrip");
     let path = persist::save_plan_to_dir(&plan, &dir).unwrap();
     let loaded = persist::load_plan(&path).unwrap();
@@ -158,7 +158,7 @@ fn persisted_plan_reproduces_bitwise_identical_factors() {
 #[test]
 fn batched_serving_through_the_pool_matches_a_direct_session() {
     let a = gen::grid2d_laplacian(9, 9);
-    let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)));
+    let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
     let pool = SessionPool::new(plan.clone(), 2);
 
     let k = a.value_index(40, 40).unwrap();
