@@ -15,6 +15,7 @@ pub mod plan;
 pub mod sched;
 pub mod sweeps;
 pub mod tables;
+pub mod trace;
 
 pub use matrices::{paper_suite, SuiteMatrix, SuiteScale};
 

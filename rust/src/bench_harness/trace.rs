@@ -1,0 +1,336 @@
+//! Trace bench: the measured critical-path / balance scenario behind
+//! `repro trace-bench`.
+//!
+//! For each (matrix, worker count, blocking) combination the bench runs
+//! traced re-factorizations through a [`crate::session::SolverSession`]
+//! and distills the recording ([`crate::obs::trace`]) into the numbers
+//! the paper's balance claim is about:
+//!
+//! * **scheduling efficiency** — measured critical path over achieved
+//!   makespan ([`trace::analyze_run`]), plus the top-k straggler tasks;
+//! * **per-level balance** — nonzeros and measured seconds per target
+//!   block per DAG level ([`trace::level_balance`]), with the worst
+//!   within-level and the across-level max/mean imbalance factors,
+//!   reported for the paper's irregular blocking (`ours`) next to the
+//!   regular/PanguLU-style baseline on the same matrix.
+//!
+//! Results land in `BENCH_trace.json`; the last scenario's raw recording
+//! is exported as a Chrome-trace sample so CI always uploads one
+//! Perfetto-loadable artifact. The bench asserts its own sanity gate
+//! inline: `critical path <= makespan <= total task seconds` (up to a
+//! small timing slack), so a CI run that completes has already validated
+//! the profiler's invariants.
+
+use crate::obs::trace;
+use crate::session::{FactorPlan, SolverSession};
+use crate::solver::SolveOptions;
+use crate::sparse::gen;
+use std::sync::Arc;
+
+/// One traced (matrix, workers, blocking) measurement.
+pub struct TraceScenario {
+    /// Matrix name.
+    pub name: String,
+    /// `"irregular"` (the paper's `ours`) or `"regular"` (PanguLU-style
+    /// regular blocking).
+    pub blocking: String,
+    /// Matrix order.
+    pub n: usize,
+    /// Input nonzeros.
+    pub nnz: usize,
+    /// Pool size the DAG ran on.
+    pub workers: u32,
+    /// DAG tasks executed by the analyzed run.
+    pub tasks: usize,
+    /// DAG levels with at least one recorded task.
+    pub levels: usize,
+    /// Measured schedule quality of the analyzed run.
+    pub analysis: trace::RunAnalysis,
+    /// Per-level balance rows, ascending level.
+    pub per_level: Vec<trace::LevelBalance>,
+    /// Worst within-level `nnz_max / nnz_mean` across levels.
+    pub worst_nnz_imbalance: f64,
+    /// Worst within-level `seconds_max / seconds_mean` across levels.
+    pub worst_time_imbalance: f64,
+    /// Across-level max/mean of per-level nonzero totals.
+    pub nnz_imbalance_across: f64,
+    /// Across-level max/mean of per-level measured seconds.
+    pub time_imbalance_across: f64,
+    /// Ring-overflow losses over the scenario's recording window.
+    pub dropped_events: u64,
+}
+
+/// The whole trace-bench run.
+pub struct TraceReport {
+    /// Traced replays per scenario (the last one is analyzed).
+    pub replays: usize,
+    /// All scenario measurements.
+    pub results: Vec<TraceScenario>,
+    /// Chrome-trace JSON of the last scenario's recording — the sample
+    /// artifact `repro trace-bench --trace-out` writes.
+    pub sample_trace: String,
+}
+
+impl TraceReport {
+    /// `BENCH_trace.json` payload.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .results
+            .iter()
+            .map(|r| {
+                let stragglers: Vec<String> = r
+                    .analysis
+                    .stragglers
+                    .iter()
+                    .map(|s| {
+                        format!(
+                            concat!(
+                                "        {{\"task\": {}, \"op\": \"{}\", ",
+                                "\"bi\": {}, \"bj\": {}, \"level\": {}, ",
+                                "\"worker\": {}, \"seconds\": {:.9}}}"
+                            ),
+                            s.task, s.op, s.target.0, s.target.1, s.level, s.worker, s.seconds,
+                        )
+                    })
+                    .collect();
+                let levels: Vec<String> = r
+                    .per_level
+                    .iter()
+                    .map(|l| {
+                        format!(
+                            concat!(
+                                "        {{\"level\": {}, \"tasks\": {}, \"blocks\": {}, ",
+                                "\"nnz_total\": {}, \"nnz_max\": {}, \"nnz_mean\": {:.3}, ",
+                                "\"nnz_imbalance\": {:.4}, ",
+                                "\"seconds_total\": {:.9}, \"seconds_max\": {:.9}, ",
+                                "\"time_imbalance\": {:.4}}}"
+                            ),
+                            l.level,
+                            l.tasks,
+                            l.blocks,
+                            l.nnz_total,
+                            l.nnz_max,
+                            l.nnz_mean,
+                            l.nnz_imbalance,
+                            l.seconds_total,
+                            l.seconds_max,
+                            l.time_imbalance,
+                        )
+                    })
+                    .collect();
+                format!(
+                    concat!(
+                        "    {{\"matrix\": \"{}\", \"blocking\": \"{}\", ",
+                        "\"n\": {}, \"nnz\": {}, \"workers\": {}, ",
+                        "\"tasks\": {}, \"levels\": {}, ",
+                        "\"makespan_seconds\": {:.9}, ",
+                        "\"critical_path_seconds\": {:.9}, ",
+                        "\"total_task_seconds\": {:.9}, ",
+                        "\"scheduling_efficiency\": {:.4}, ",
+                        "\"worst_nnz_imbalance\": {:.4}, ",
+                        "\"worst_time_imbalance\": {:.4}, ",
+                        "\"nnz_imbalance_across\": {:.4}, ",
+                        "\"time_imbalance_across\": {:.4}, ",
+                        "\"dropped_events\": {},\n",
+                        "      \"stragglers\": [\n{}\n      ],\n",
+                        "      \"per_level\": [\n{}\n      ]}}"
+                    ),
+                    r.name,
+                    r.blocking,
+                    r.n,
+                    r.nnz,
+                    r.workers,
+                    r.tasks,
+                    r.levels,
+                    r.analysis.makespan_seconds,
+                    r.analysis.critical_path_seconds,
+                    r.analysis.total_task_seconds,
+                    r.analysis.scheduling_efficiency,
+                    r.worst_nnz_imbalance,
+                    r.worst_time_imbalance,
+                    r.nnz_imbalance_across,
+                    r.time_imbalance_across,
+                    r.dropped_events,
+                    stragglers.join(",\n"),
+                    levels.join(",\n"),
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"bench\": \"trace\",\n  \"scenario\": \"traced-refactorize\",\n  \
+             \"replays\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+            self.replays,
+            rows.join(",\n")
+        )
+    }
+
+    /// Human-readable table (shared by the CLI command and
+    /// `--trace-summary`-style inspection).
+    pub fn print(&self) {
+        println!("\n--- trace bench: traced-refactorize ({} replays/scenario) ---", self.replays);
+        for r in &self.results {
+            println!(
+                "{:14} {:9} w={} | {:4} tasks / {:2} levels | eff {:.2} (crit {:.3}ms / span \
+                 {:.3}ms) | within nnz {:.2}x time {:.2}x | across nnz {:.2}x time {:.2}x",
+                r.name,
+                r.blocking,
+                r.workers,
+                r.tasks,
+                r.levels,
+                r.analysis.scheduling_efficiency,
+                r.analysis.critical_path_seconds * 1e3,
+                r.analysis.makespan_seconds * 1e3,
+                r.worst_nnz_imbalance,
+                r.worst_time_imbalance,
+                r.nnz_imbalance_across,
+                r.time_imbalance_across,
+            );
+            if let Some(s) = r.analysis.stragglers.first() {
+                println!(
+                    "{:14} {:9}     | top straggler: {}({},{}) level {} worker {} {:.3}ms",
+                    "",
+                    "",
+                    s.op,
+                    s.target.0,
+                    s.target.1,
+                    s.level,
+                    s.worker,
+                    s.seconds * 1e3,
+                );
+            }
+        }
+    }
+}
+
+/// Run the traced-refactorize suite: `replays` traced full replays per
+/// scenario (the last replay's run is analyzed), one scenario per
+/// (matrix, worker count, blocking). Restores the tracing switch to its
+/// prior state before returning.
+pub fn run(replays: usize, worker_counts: &[u32]) -> TraceReport {
+    assert!(replays >= 1, "need at least 1 replay per scenario");
+    let suite = [
+        ("tiny-bbd", gen::circuit_bbd(gen::CircuitParams { n: 400, ..Default::default() })),
+        ("small-grid2d", gen::grid2d_laplacian(24, 24)),
+    ];
+    let was_on = trace::enabled();
+    trace::set_enabled(true);
+    let mut results = Vec::new();
+    let mut sample_trace = String::new();
+    for (name, a) in &suite {
+        for &workers in worker_counts {
+            for (blocking, opts) in [
+                ("irregular", SolveOptions::ours(workers)),
+                ("regular", SolveOptions::pangulu(workers)),
+            ] {
+                let plan = Arc::new(FactorPlan::build(a, &opts).expect("plan build"));
+                let mut session = SolverSession::from_plan(plan.clone());
+                session.refactorize(&a.values).expect("warmup refactorize");
+
+                // fresh recording window + a scenario-unique trace id, so
+                // the analysis below cannot pick up another run's events
+                trace::clear();
+                let tid = trace::next_trace_id();
+                session.set_trace_id(tid);
+                for _ in 0..replays {
+                    session.refactorize(&a.values).expect("traced refactorize");
+                }
+
+                let snap = trace::snapshot();
+                let events = snap.all_events();
+                // each replay is one DAG run; analyze the last (highest
+                // run id) — with `replays` runs in the rings, any
+                // overflow evicts older runs first, never the newest
+                let run_id = events
+                    .iter()
+                    .filter(|e| e.kind == trace::EventKind::Task && e.trace_id == tid)
+                    .map(|e| e.run_id)
+                    .max()
+                    .expect("traced refactorize recorded task events");
+                let analysis = trace::analyze_run(&plan.dag, &events, run_id, 5)
+                    .expect("analysis of a recorded run");
+                let per_level = trace::level_balance(&plan.structure, &events, run_id);
+                let (nnz_across, time_across) = trace::imbalance_across(&per_level);
+
+                // the profiler's own invariants, gated in-bench so a CI
+                // run that completes has verified them: the measured
+                // critical chain can never exceed the achieved makespan,
+                // and one run's makespan can never exceed the summed task
+                // time by more than scheduling gaps (slack covers timer
+                // jitter and the inline path's inter-task bookkeeping)
+                let slack = 0.05 * analysis.makespan_seconds + 1e-3;
+                assert!(
+                    analysis.critical_path_seconds <= analysis.makespan_seconds + slack,
+                    "critical path {} > makespan {} ({name}/{blocking}, w={workers})",
+                    analysis.critical_path_seconds,
+                    analysis.makespan_seconds,
+                );
+                assert!(
+                    analysis.makespan_seconds <= analysis.total_task_seconds + slack,
+                    "makespan {} > total task seconds {} ({name}/{blocking}, w={workers})",
+                    analysis.makespan_seconds,
+                    analysis.total_task_seconds,
+                );
+
+                sample_trace = trace::chrome_trace_of(&snap);
+                results.push(TraceScenario {
+                    name: name.to_string(),
+                    blocking: blocking.to_string(),
+                    n: a.n_rows(),
+                    nnz: a.nnz(),
+                    workers,
+                    tasks: analysis.tasks,
+                    levels: per_level.len(),
+                    worst_nnz_imbalance: per_level
+                        .iter()
+                        .map(|l| l.nnz_imbalance)
+                        .fold(1.0f64, f64::max),
+                    worst_time_imbalance: per_level
+                        .iter()
+                        .map(|l| l.time_imbalance)
+                        .fold(1.0f64, f64::max),
+                    nnz_imbalance_across: nnz_across,
+                    time_imbalance_across: time_across,
+                    dropped_events: snap.dropped_events,
+                    analysis,
+                    per_level,
+                });
+            }
+        }
+    }
+    trace::set_enabled(was_on);
+    TraceReport { replays, results, sample_trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_bench_runs_and_reports_all_scenarios() {
+        let report = run(2, &[1, 2]);
+        assert_eq!(report.results.len(), 8, "2 matrices x 2 worker counts x 2 blockings");
+        for r in &report.results {
+            assert!(r.tasks > 0, "{}/{}", r.name, r.blocking);
+            assert!(r.levels > 0);
+            assert_eq!(r.tasks, r.analysis.tasks);
+            assert!(r.analysis.scheduling_efficiency > 0.0);
+            assert!(r.analysis.critical_path_seconds <= r.analysis.makespan_seconds + 1e-3);
+            assert!(r.worst_nnz_imbalance >= 1.0);
+            assert!(r.worst_time_imbalance >= 1.0);
+            assert!(r.nnz_imbalance_across >= 1.0);
+            // the level rows cover every analyzed task exactly once
+            assert_eq!(r.per_level.iter().map(|l| l.tasks).sum::<usize>(), r.tasks);
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"bench\": \"trace\""));
+        assert!(json.contains("\"scheduling_efficiency\""));
+        assert!(json.contains("\"per_level\""));
+        assert!(json.contains("\"blocking\": \"irregular\""));
+        assert!(json.contains("\"blocking\": \"regular\""));
+        trace::parse_json(&json).expect("BENCH_trace.json parses");
+        // the sample artifact is valid Chrome-trace JSON with events
+        let sample = trace::parse_json(&report.sample_trace).expect("sample trace parses");
+        let events = sample.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+    }
+}

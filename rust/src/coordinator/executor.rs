@@ -56,9 +56,10 @@
 
 use super::dag::TaskDag;
 use super::workers::RunReport;
-use crate::numeric::factor::{DenseBackend, FactorError, NumericMatrix};
+use crate::numeric::factor::{BlockOp, DenseBackend, FactorError, NumericMatrix};
 use crate::numeric::kernels::Workspace;
 use crate::numeric::KernelPolicy;
+use crate::obs::trace;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
@@ -237,6 +238,10 @@ enum Work {
 struct Job {
     work: Work,
     total: usize,
+    /// `(run_id, trace_id)` stamped at submission by
+    /// [`trace::begin_run`] — `(0, 0)` when tracing was off, which is
+    /// also the per-task recording gate (a plain field read, no atomic).
+    trace: (u64, u64),
     /// Tasks executed successfully.
     done: AtomicUsize,
     /// Claim word: [`CANCEL`] bit + count of workers currently executing
@@ -520,8 +525,11 @@ impl Executor {
                 workers: self.workers,
             });
         }
+        // one AtomicBool load when tracing is off; a run id + the
+        // submitting thread's trace id when it is on
+        let trace_ids = trace::begin_run();
         if p == 1 {
-            return self.run_inline(nm, dag, subset, policy, backend, state);
+            return self.run_inline(nm, dag, subset, policy, backend, state, trace_ids);
         }
 
         let t0 = Instant::now();
@@ -536,6 +544,7 @@ impl Executor {
                 state: state_ref as *const RunState,
             },
             total,
+            trace: trace_ids,
             done: AtomicUsize::new(0),
             claims: AtomicU64::new(0),
             status: Mutex::new(JobStatus { done: false, failed: None }),
@@ -559,6 +568,11 @@ impl Executor {
             return Err(e);
         }
         debug_assert_eq!(job.done.load(Ordering::SeqCst), total, "not all tasks executed");
+        if trace_ids.0 != 0 {
+            // run span on the submitting thread's lane: the flow-arrow
+            // source every task event of this run links back to
+            trace::record_run(trace_ids.0, trace_ids.1, total as u32, t0, Instant::now());
+        }
         Ok(RunReport {
             wall_seconds: t0.elapsed().as_secs_f64(),
             busy: state_ref
@@ -576,6 +590,7 @@ impl Executor {
     /// reusing `state.deps` as the ready-propagation counters and
     /// `state.seeds[0]` as the work stack. No queues, no locks, no
     /// wakeups — the cheapest possible replay of a tiny pruned DAG.
+    #[allow(clippy::too_many_arguments)] // private tail of `run`
     fn run_inline(
         &self,
         nm: &NumericMatrix,
@@ -584,6 +599,7 @@ impl Executor {
         policy: &KernelPolicy,
         backend: &(dyn DenseBackend + Sync),
         state: &mut RunState,
+        trace_ids: (u64, u64),
     ) -> Result<RunReport, FactorError> {
         let t0 = Instant::now();
         let mut ws = Workspace::with_capacity(nm.max_dim);
@@ -599,8 +615,23 @@ impl Executor {
                 nm.execute(task.op, policy, backend, &mut ws)
             }))
             .unwrap_or(Err(FactorError::TaskPanic))?;
-            busy += started.elapsed().as_secs_f64();
+            let ended = Instant::now();
+            busy += (ended - started).as_secs_f64();
             executed += 1;
+            if trace_ids.0 != 0 {
+                trace::record_task(trace::TaskSpan {
+                    run_id: trace_ids.0,
+                    trace_id: trace_ids.1,
+                    task: t,
+                    op: op_name(task.op),
+                    target: task.op.target(),
+                    level: task.level,
+                    worker: 0,
+                    stolen_from: -1,
+                    start: started,
+                    end: ended,
+                });
+            }
             for &o in &task.out {
                 let o_us = o as usize;
                 if is_active(subset, o_us) {
@@ -611,6 +642,9 @@ impl Executor {
                     }
                 }
             }
+        }
+        if trace_ids.0 != 0 {
+            trace::record_run(trace_ids.0, trace_ids.1, executed as u32, t0, Instant::now());
         }
         Ok(RunReport {
             wall_seconds: t0.elapsed().as_secs_f64(),
@@ -680,6 +714,7 @@ impl Executor {
         let job = Arc::new(Job {
             work: Work::Each { f: f as *const (dyn Fn(usize) + Sync) },
             total: n,
+            trace: (0, 0),
             done: AtomicUsize::new(0),
             claims: AtomicU64::new(0),
             status: Mutex::new(JobStatus { done: false, failed: None }),
@@ -815,8 +850,8 @@ fn worker_loop(shared: &Shared, w: usize) {
             return;
         }
         // 1) own deque (oldest first), else steal from another's tail
-        if let Some((job, t)) = rescan(shared, w, p) {
-            execute_task(shared, w, p, &job, t, &mut ws, &mut to_push);
+        if let Some(((job, t), from)) = rescan(shared, w, p) {
+            execute_task(shared, w, p, &job, t, from, &mut ws, &mut to_push);
             continue;
         }
         // 2) go idle: register first, rescan second (a submitter that
@@ -828,9 +863,9 @@ fn worker_loop(shared: &Shared, w: usize) {
             idle.push(w);
             shared.idle_count.fetch_add(1, Ordering::SeqCst);
         }
-        if let Some((job, t)) = rescan(shared, w, p) {
+        if let Some(((job, t), from)) = rescan(shared, w, p) {
             deregister(shared, w);
-            execute_task(shared, w, p, &job, t, &mut ws, &mut to_push);
+            execute_task(shared, w, p, &job, t, from, &mut ws, &mut to_push);
             continue;
         }
         shared.parks.fetch_add(1, Ordering::Relaxed);
@@ -859,8 +894,10 @@ fn deregister(shared: &Shared, w: usize) {
     }
 }
 
-/// One pass over every deque (own front, others' tails).
-fn rescan(shared: &Shared, w: usize, p: usize) -> Option<Entry> {
+/// One pass over every deque (own front, others' tails). Returns the
+/// entry plus the deque it came from, so a stolen task can be
+/// attributed to its victim in the trace.
+fn rescan(shared: &Shared, w: usize, p: usize) -> Option<(Entry, usize)> {
     for i in 0..p {
         let v = (w + i) % p;
         let entry = if v == w {
@@ -872,18 +909,30 @@ fn rescan(shared: &Shared, w: usize, p: usize) -> Option<Entry> {
             if v != w {
                 shared.steals.fetch_add(1, Ordering::Relaxed);
             }
-            return Some(entry);
+            return Some((entry, v));
         }
     }
     None
 }
 
+/// Trace label of a kernel op.
+fn op_name(op: BlockOp) -> &'static str {
+    match op {
+        BlockOp::Getrf { .. } => "getrf",
+        BlockOp::Gessm { .. } => "gessm",
+        BlockOp::Tstrf { .. } => "tstrf",
+        BlockOp::Ssssm { .. } => "ssssm",
+    }
+}
+
+#[allow(clippy::too_many_arguments)] // private worker-loop tail
 fn execute_task(
     shared: &Shared,
     w: usize,
     p: usize,
     job: &Arc<Job>,
     t: u32,
+    from: usize,
     ws: &mut Workspace,
     to_push: &mut Vec<(usize, u32)>,
 ) {
@@ -919,7 +968,24 @@ fn execute_task(
                 *ws = Workspace::default();
                 Err(FactorError::TaskPanic)
             });
-            let elapsed = started.elapsed().as_secs_f64();
+            let ended = Instant::now();
+            let elapsed = (ended - started).as_secs_f64();
+            if job.trace.0 != 0 {
+                // one ring write, only for jobs submitted with tracing
+                // on; the untraced hot path pays a plain field read
+                trace::record_task(trace::TaskSpan {
+                    run_id: job.trace.0,
+                    trace_id: job.trace.1,
+                    task: t,
+                    op: op_name(task.op),
+                    target: task.op.target(),
+                    level: task.level,
+                    worker: w as u32,
+                    stolen_from: if from == w { -1 } else { from as i32 },
+                    start: started,
+                    end: ended,
+                });
+            }
             // single-writer slots (only worker `w` touches index `w`), so
             // a load/store pair is enough — no CAS, no per-worker
             // Mutex<f64>

@@ -18,7 +18,7 @@ use sparselu::obs;
 use sparselu::ordering::OrderingMethod;
 use sparselu::runtime::PjrtDense;
 use sparselu::serve::{loadgen, persist, RouterConfig, ScenarioMix};
-use sparselu::session::{FactorPlan, PlanCache};
+use sparselu::session::{FactorPlan, PlanCache, SolverSession};
 use sparselu::solver::{SolveOptions, Solver};
 use sparselu::sparse::{gen, io, residual, Csc};
 use sparselu::util::timer::timed;
@@ -57,6 +57,8 @@ fn run() -> Result<()> {
         "serve-bench" => cmd_serve_bench(&flags),
         "sched-bench" => cmd_sched_bench(&flags),
         "plan-bench" => cmd_plan_bench(&flags),
+        "trace" => cmd_trace(&flags),
+        "trace-bench" => cmd_trace_bench(&flags),
         "metrics-dump" => cmd_metrics_dump(&flags),
         "artifacts-check" => cmd_artifacts_check(&flags),
         "help" | "--help" | "-h" => {
@@ -81,7 +83,9 @@ USAGE:
                     [--metrics-addr HOST:PORT] [--metrics-out FILE] [--autoscale]
   repro sched-bench [--replays N] [--worker-counts 1,2,4] [--out FILE]
   repro plan-bench  [--replays N] [--worker-counts 2,8] [--out FILE]
-  repro metrics-dump (--addr HOST:PORT | --file PATH) [--check]
+  repro trace       [--matrix SPEC] [--workers N] [--blocking B] [--replays N] [--out FILE]
+  repro trace-bench [--replays N] [--worker-counts 1,4] [--out FILE] [--trace-out FILE]
+  repro metrics-dump (--addr HOST:PORT | --file PATH | --trace-summary FILE) [--check]
   repro artifacts-check [--dir artifacts]
 
 SCHED-BENCH (the scheduler bench):
@@ -120,11 +124,31 @@ SERVE-BENCH (the serving-layer load generator):
   runs the SLO-driven controller during the multi-tenant phase (pool
   resize + queue rebound + low-priority shedding).
 
+TRACE (task-level tracing):
+  Record every executed DAG task (kernel kind, target block, level,
+  worker, steal attribution) of a few traced re-factorizations and write
+  Chrome-trace JSON to --out (default trace.json), loadable in Perfetto
+  or chrome://tracing. A serving process exposes the same export live on
+  GET /trace next to /metrics. Tracing is always compiled in; when off
+  the executor pays one atomic load per run.
+
+TRACE-BENCH (the profiler bench):
+  Traced re-factorizations of the small suite under both the paper's
+  irregular blocking (`ours`) and the regular/PanguLU-style baseline:
+  measured critical path vs achieved makespan (scheduling efficiency),
+  top straggler tasks, and per-level nonzero/time imbalance — the
+  paper's balance claim, measured instead of modeled. Results go to
+  --out (default BENCH_trace.json); the last scenario's raw recording to
+  --trace-out (default BENCH_trace.sample.trace.json). The bench gates
+  its own sanity inline: critical path <= makespan <= summed task time.
+
 METRICS-DUMP (exposition inspection):
   Fetch /metrics from a live endpoint (--addr) or read a scraped file
   (--file), validate the exposition format strictly, and print the text
   (--check prints only the family/series/sample summary). Exits nonzero
-  on any format violation.
+  on any format violation. With --trace-summary FILE instead, read a
+  BENCH_trace.json and print scheduling efficiency, the top stragglers
+  and the per-level imbalance of every scenario.
 
 MATRIX SPEC:
   path/to/file.mtx             MatrixMarket file (SuiteSparse downloads work)
@@ -523,6 +547,9 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_metrics_dump(flags: &HashMap<String, String>) -> Result<()> {
+    if let Some(path) = flags.get("trace-summary") {
+        return cmd_trace_summary(path);
+    }
     let (text, source) = match (flags.get("addr"), flags.get("file")) {
         (Some(addr), None) => (
             obs::scrape(addr.as_str(), "/metrics").with_context(|| format!("scraping {addr}"))?,
@@ -545,6 +572,72 @@ fn cmd_metrics_dump(flags: &HashMap<String, String>) -> Result<()> {
         );
     } else {
         print!("{text}");
+    }
+    Ok(())
+}
+
+/// `repro metrics-dump --trace-summary`: read a `BENCH_trace.json`
+/// written by `repro trace-bench` and print the profiler's digest —
+/// scheduling efficiency, top stragglers and per-level imbalance.
+fn cmd_trace_summary(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = obs::trace::parse_json(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: invalid JSON: {e}"))?;
+    let results = doc
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .context("no `results` array — is this a BENCH_trace.json?")?;
+    fn num(v: &obs::trace::Json, k: &str) -> f64 {
+        v.get(k).and_then(|x| x.as_f64()).unwrap_or(f64::NAN)
+    }
+    fn text_of<'a>(v: &'a obs::trace::Json, k: &str) -> &'a str {
+        v.get(k).and_then(|x| x.as_str()).unwrap_or("?")
+    }
+    println!("--- trace summary: {path} ({} scenarios) ---", results.len());
+    for r in results {
+        println!(
+            "\n{} {} w={} | {} tasks / {} levels | efficiency {:.2} (critical {:.3}ms / \
+             makespan {:.3}ms) | across-level imbalance nnz {:.2}x time {:.2}x",
+            text_of(r, "matrix"),
+            text_of(r, "blocking"),
+            num(r, "workers"),
+            num(r, "tasks"),
+            num(r, "levels"),
+            num(r, "scheduling_efficiency"),
+            num(r, "critical_path_seconds") * 1e3,
+            num(r, "makespan_seconds") * 1e3,
+            num(r, "nnz_imbalance_across"),
+            num(r, "time_imbalance_across"),
+        );
+        if let Some(stragglers) = r.get("stragglers").and_then(|s| s.as_arr()) {
+            println!("  top stragglers:");
+            for s in stragglers.iter().take(5) {
+                println!(
+                    "    {}({},{}) level {} worker {} {:.3}ms",
+                    text_of(s, "op"),
+                    num(s, "bi"),
+                    num(s, "bj"),
+                    num(s, "level"),
+                    num(s, "worker"),
+                    num(s, "seconds") * 1e3,
+                );
+            }
+        }
+        if let Some(levels) = r.get("per_level").and_then(|l| l.as_arr()) {
+            println!("  per-level balance:");
+            for l in levels {
+                println!(
+                    "    level {:3}: {:4} blocks | nnz {:8} (imbalance {:.2}x) | {:.3}ms \
+                     (imbalance {:.2}x)",
+                    num(l, "level"),
+                    num(l, "blocks"),
+                    num(l, "nnz_total"),
+                    num(l, "nnz_imbalance"),
+                    num(l, "seconds_total") * 1e3,
+                    num(l, "time_imbalance"),
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -622,6 +715,99 @@ fn cmd_plan_bench(flags: &HashMap<String, String>) -> Result<()> {
     report.print();
     std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
     println!("\nwrote {out}");
+    Ok(())
+}
+
+fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
+    let spec = flags.get("matrix").cloned().unwrap_or_else(|| "gen:grid2d=40x40".into());
+    let a = load_matrix(&spec)?;
+    let opts = options_from_flags(flags)?;
+    let replays: usize = flags.get("replays").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    if replays < 1 {
+        bail!("--replays must be >= 1");
+    }
+    let out = flags.get("out").cloned().unwrap_or_else(|| "trace.json".into());
+    println!("matrix: {} n={} nnz={}", spec, a.n_rows(), a.nnz());
+
+    obs::trace::set_enabled(true);
+    let plan = Arc::new(FactorPlan::build(&a, &opts).map_err(|e| anyhow::anyhow!("{e}"))?);
+    let mut session = SolverSession::from_plan(plan.clone());
+    let tid = obs::trace::next_trace_id();
+    session.set_trace_id(tid);
+    for _ in 0..replays {
+        session.refactorize(&a.values).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    obs::trace::set_enabled(false);
+
+    let snap = obs::trace::snapshot();
+    let events = snap.all_events();
+    let run_id = events
+        .iter()
+        .filter(|e| e.kind == obs::trace::EventKind::Task && e.trace_id == tid)
+        .map(|e| e.run_id)
+        .max()
+        .context("no task events recorded")?;
+    if let Some(an) = obs::trace::analyze_run(&plan.dag, &events, run_id, 5) {
+        println!(
+            "last run: {} tasks, makespan {:.3}ms, critical path {:.3}ms, efficiency {:.2}",
+            an.tasks,
+            an.makespan_seconds * 1e3,
+            an.critical_path_seconds * 1e3,
+            an.scheduling_efficiency
+        );
+        for s in &an.stragglers {
+            println!(
+                "  straggler: {}({},{}) level {} worker {} {:.3}ms",
+                s.op,
+                s.target.0,
+                s.target.1,
+                s.level,
+                s.worker,
+                s.seconds * 1e3
+            );
+        }
+    }
+    std::fs::write(&out, obs::trace::chrome_trace_of(&snap))
+        .with_context(|| format!("writing {out}"))?;
+    println!(
+        "wrote {out} ({} lanes, {} dropped events) — load it in Perfetto or chrome://tracing",
+        snap.lanes.len(),
+        snap.dropped_events
+    );
+    Ok(())
+}
+
+fn cmd_trace_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let replays: usize = flags.get("replays").map(|s| s.parse()).transpose()?.unwrap_or(5);
+    if replays < 1 {
+        bail!("--replays must be >= 1");
+    }
+    let worker_counts: Vec<u32> = match flags.get("worker-counts") {
+        Some(s) => s
+            .split(',')
+            .map(|p| p.trim().parse::<u32>())
+            .collect::<Result<_, _>>()
+            .context("--worker-counts N,N,... (positive integers)")?,
+        None => vec![1, 4],
+    };
+    if worker_counts.is_empty() || worker_counts.contains(&0) {
+        bail!("--worker-counts needs at least one positive worker count");
+    }
+    let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_trace.json".into());
+    let trace_out = flags
+        .get("trace-out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_trace.sample.trace.json".into());
+    println!(
+        "traced-refactorize: {replays} replays/scenario over worker counts {worker_counts:?} \
+         (irregular vs regular blocking)"
+    );
+    let report = bench_harness::trace::run(replays, &worker_counts);
+    report.print();
+    std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
+    std::fs::write(&trace_out, &report.sample_trace)
+        .with_context(|| format!("writing {trace_out}"))?;
+    println!("\nwrote {out} and {trace_out}");
     Ok(())
 }
 

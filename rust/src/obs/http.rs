@@ -1,7 +1,9 @@
 //! Minimal blocking HTTP scrape endpoint on `std::net::TcpListener`.
 //!
-//! Serves exactly two routes — `GET /metrics` (exposition text 0.0.4)
-//! and `GET /healthz` — one connection at a time on a background
+//! Serves three routes — `GET /metrics` (exposition text 0.0.4),
+//! `GET /trace` (Chrome-trace JSON of the current
+//! [`crate::obs::trace`] recording) and `GET /healthz` — one
+//! connection at a time on a background
 //! thread. Scrapes are rare (seconds apart) and small (tens of KB), so
 //! a single-threaded accept loop with short socket timeouts is the
 //! whole server; there is deliberately no HTTP library, keep-alive,
@@ -95,6 +97,9 @@ fn handle_connection(mut stream: TcpStream, registry: &Registry) -> std::io::Res
     } else {
         match path {
             "/metrics" => ("200 OK", CONTENT_TYPE, registry.render()),
+            // whatever the process-wide trace collector currently holds
+            // (empty traceEvents when tracing was never enabled)
+            "/trace" => ("200 OK", "application/json", crate::obs::trace::chrome_trace_json()),
             "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
             _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
         }
@@ -147,6 +152,12 @@ mod tests {
 
         assert_eq!(scrape(addr, "/healthz").unwrap(), "ok\n");
         assert!(scrape(addr, "/nope").is_err(), "404 surfaces as Err");
+
+        // /trace always serves valid Chrome-trace JSON (possibly with
+        // zero task events when tracing is off)
+        let trace_body = scrape(addr, "/trace").unwrap();
+        let parsed = crate::obs::trace::parse_json(&trace_body).unwrap();
+        assert!(parsed.get("traceEvents").is_some());
 
         // live updates are visible on the next scrape
         registry.counter("t_total", "t", &[]).inc();

@@ -18,6 +18,12 @@
 //!   queue wait against an [`SloPolicy`], actuated through
 //!   [`Router::scale_tenant`] (pool resize, queue rebound, priority
 //!   load shedding).
+//! * [`trace`] — task-level tracing of the persistent executor:
+//!   per-thread lock-free ring buffers, `trace_id` request correlation,
+//!   Chrome-trace/Perfetto export (`GET /trace`, `repro trace`),
+//!   measured critical-path analysis and the per-level balance report
+//!   behind `repro trace-bench`. Always compiled; the trace-off cost is
+//!   one atomic load per DAG run.
 //!
 //! Metric naming follows Prometheus conventions: `sparselu_` prefix,
 //! `_total` counters, `_seconds` histograms, tenants labeled
@@ -30,6 +36,7 @@ pub mod autoscale;
 pub mod expo;
 pub mod http;
 pub mod metrics;
+pub mod trace;
 
 pub use autoscale::{AutoscaleHandle, Autoscaler, ScaleDecision, SloPolicy};
 pub use expo::{validate, ExpoSummary};

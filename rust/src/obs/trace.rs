@@ -1,0 +1,1168 @@
+//! Task-level tracing: see every block, every level, every request.
+//!
+//! The metrics spine ([`crate::obs::metrics`]) exports aggregates —
+//! counters and latency histograms — but no *causality*: when a serve
+//! p99 spikes, nothing says which request, which DAG level or which
+//! straggler block was responsible. This module records one event per
+//! executed DAG task (task id, kernel kind, target block, level, worker,
+//! stolen-from worker, monotonic start/end) plus one span per DAG run,
+//! and turns the recording into three artifacts:
+//!
+//! 1. **Chrome-trace/Perfetto JSON** ([`chrome_trace_json`], served on
+//!    `GET /trace` and written by `repro trace --out`): one lane per
+//!    recording thread (pool workers are the `lu-exec-{w}` lanes), flow
+//!    arrows from each run span to its tasks.
+//! 2. **Critical-path analysis** ([`analyze_run`]): the longest
+//!    dependency chain through the *measured* task durations vs the
+//!    achieved makespan — scheduling efficiency and top-k stragglers.
+//! 3. **Per-level balance** ([`level_balance`]): nonzeros and measured
+//!    seconds per target block per DAG level, with max/mean imbalance
+//!    within each level and across levels — the measurement behind the
+//!    paper's claim that irregular blocking "adequately balances the
+//!    nonzeros of blocks both within the same level and across levels".
+//!
+//! ## Cost model
+//!
+//! Tracing is always compiled and **cheap when off**: the only cost on
+//! the trace-off path is one `Relaxed` load of an `AtomicBool` per DAG
+//! run submission (per-task recording is gated on the run id stamped
+//! into the job header, a plain field read). When on, an event is one
+//! write into a per-thread single-writer ring buffer — no lock, no
+//! allocation, no syscall; overflow overwrites the oldest events and is
+//! surfaced as [`TraceSnapshot::dropped_events`], never as a
+//! reallocation.
+//!
+//! Recording never changes *what* is computed: the executor's schedule
+//! is untouched and factors stay bit-identical with tracing on or off
+//! (asserted by `rust/tests/tracing.rs`).
+//!
+//! ## Correlation
+//!
+//! A `trace_id` spans the serve stack: the [`crate::serve::Batcher`]
+//! allocates one per drained batch ([`next_trace_id`]), installs it on
+//! the session, and stamps it on every [`crate::serve::ServeReport`];
+//! the session publishes it thread-locally ([`set_current_trace_id`])
+//! so the executor can stamp it into every task event of the runs that
+//! batch triggered. Logs, metrics and trace events of one request
+//! therefore share an id.
+
+use crate::blocking::BlockedMatrix;
+use crate::coordinator::TaskDag;
+use std::cell::{Cell, RefCell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events each per-thread ring holds before overwriting the oldest.
+/// Power of two so the ring index is a mask, not a division.
+pub const RING_CAPACITY: usize = 1 << 13;
+
+/// Global on/off switch. A static (not part of the collector) so the
+/// trace-off check never touches the `OnceLock`.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing on? One `Relaxed` atomic load — the entire cost of the
+/// trace-off path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on or off. Runs already in flight keep recording (their
+/// job headers carry a run id); new runs observe the switch at submit.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// What one [`TraceEvent`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// One executed DAG task (a kernel invocation).
+    Task,
+    /// One whole DAG run, submit to completion, on the submitting
+    /// thread's lane (`task` holds the active task count).
+    Run,
+}
+
+/// One recorded event. `Copy` and fixed-size so ring slots never
+/// allocate; timestamps are nanoseconds since the collector's epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Task span or run span.
+    pub kind: EventKind,
+    /// Run this event belongs to (unique per traced DAG run, never 0).
+    pub run_id: u64,
+    /// Request-correlation id threaded from the serve stack (0 when the
+    /// run was not triggered by a traced request).
+    pub trace_id: u64,
+    /// DAG task index (for [`EventKind::Run`]: active task count).
+    pub task: u32,
+    /// Kernel kind: `"getrf"`, `"gessm"`, `"tstrf"`, `"ssssm"` (for
+    /// [`EventKind::Run`]: `"run"`).
+    pub op: &'static str,
+    /// Target block row of the op.
+    pub bi: u32,
+    /// Target block column of the op.
+    pub bj: u32,
+    /// DAG level (longest-path depth) of the task.
+    pub level: u32,
+    /// Worker that executed the task (0 on the inline 1-worker path).
+    pub worker: u32,
+    /// Deque the entry was stolen from, or -1 when the worker popped its
+    /// own deque (and for run spans).
+    pub stolen_from: i32,
+    /// Start, nanoseconds since the collector epoch.
+    pub start_ns: u64,
+    /// End, nanoseconds since the collector epoch.
+    pub end_ns: u64,
+}
+
+impl TraceEvent {
+    const ZERO: TraceEvent = TraceEvent {
+        kind: EventKind::Task,
+        run_id: 0,
+        trace_id: 0,
+        task: 0,
+        op: "",
+        bi: 0,
+        bj: 0,
+        level: 0,
+        worker: 0,
+        stolen_from: -1,
+        start_ns: 0,
+        end_ns: 0,
+    };
+
+    /// Event duration in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.end_ns.saturating_sub(self.start_ns) as f64 * 1e-9
+    }
+}
+
+/// Fixed-capacity single-writer ring. The owning thread is the only
+/// writer; `head` counts events ever written and is published with
+/// `Release` so a reader's `Acquire` load sees fully written slots for
+/// everything strictly before it.
+struct Ring {
+    slots: Box<[UnsafeCell<TraceEvent>]>,
+    head: AtomicU64,
+}
+
+// SAFETY: one designated writer thread mutates the slots; readers copy
+// slot windows and then discard any prefix the re-read head proves may
+// have been overwritten during the copy (see `Ring::read`).
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn with_capacity(cap: usize) -> Self {
+        assert!(cap.is_power_of_two(), "ring capacity must be a power of two");
+        let slots: Vec<UnsafeCell<TraceEvent>> =
+            (0..cap).map(|_| UnsafeCell::new(TraceEvent::ZERO)).collect();
+        Self { slots: slots.into_boxed_slice(), head: AtomicU64::new(0) }
+    }
+
+    /// Append one event, overwriting the oldest when full. Writer-side
+    /// only: one slot write + one `Release` store, no allocation ever.
+    fn push(&self, ev: TraceEvent) {
+        let h = self.head.load(Ordering::Relaxed);
+        let idx = (h as usize) & (self.slots.len() - 1);
+        // SAFETY: single writer (this ring is reached through a
+        // thread-local handle), so no concurrent `push` exists; readers
+        // tolerate the overwrite via the head re-read in `read`.
+        unsafe {
+            *self.slots[idx].get() = ev;
+        }
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy out the currently retained window, oldest first, plus the
+    /// count of events dropped by overwriting. Safe against a concurrent
+    /// writer: the window is copied, then `head` is re-read and any
+    /// prefix the writer may have overwritten meanwhile is discarded.
+    fn read(&self) -> (Vec<TraceEvent>, u64) {
+        let cap = self.slots.len() as u64;
+        let head0 = self.head.load(Ordering::Acquire);
+        let avail = head0.min(cap);
+        let start = head0 - avail;
+        let mut out = Vec::with_capacity(avail as usize);
+        for seq in start..head0 {
+            let idx = (seq as usize) & (self.slots.len() - 1);
+            // SAFETY: the slot may be concurrently overwritten; the copy
+            // is a plain memcpy of POD and the re-read below discards
+            // every slot the writer could have touched.
+            out.push(unsafe { *self.slots[idx].get() });
+        }
+        let head1 = self.head.load(Ordering::Acquire);
+        let valid_from = head1.saturating_sub(cap);
+        let skip = (valid_from.saturating_sub(start) as usize).min(out.len());
+        out.drain(..skip);
+        (out, head1.saturating_sub(cap))
+    }
+
+    fn clear(&self) {
+        self.head.store(0, Ordering::Release);
+    }
+}
+
+/// One recording lane: a ring plus the owning thread's name.
+struct Lane {
+    name: String,
+    ring: Ring,
+}
+
+struct Collector {
+    /// Common time base for every lane's timestamps.
+    epoch: Instant,
+    /// Lane registry; index = lane id. Locked only on first use per
+    /// thread and at snapshot time, never on the event hot path.
+    lanes: Mutex<Vec<Arc<Lane>>>,
+    next_run: AtomicU64,
+    next_trace: AtomicU64,
+}
+
+fn collector() -> &'static Collector {
+    static COLLECTOR: OnceLock<Collector> = OnceLock::new();
+    COLLECTOR.get_or_init(|| Collector {
+        epoch: Instant::now(),
+        lanes: Mutex::new(Vec::new()),
+        next_run: AtomicU64::new(0),
+        next_trace: AtomicU64::new(0),
+    })
+}
+
+thread_local! {
+    /// This thread's lane (id + ring handle), registered on first event.
+    static LANE: RefCell<Option<(u32, Arc<Lane>)>> = const { RefCell::new(None) };
+    /// Request-correlation id the next submitted run inherits.
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Run `f` on this thread's ring, registering a lane on first use.
+fn with_ring(f: impl FnOnce(u32, &Ring)) {
+    LANE.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let c = collector();
+            let mut lanes = c.lanes.lock().unwrap();
+            let id = lanes.len() as u32;
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{id}"));
+            let lane = Arc::new(Lane { name, ring: Ring::with_capacity(RING_CAPACITY) });
+            lanes.push(lane.clone());
+            *slot = Some((id, lane));
+        }
+        let (id, lane) = slot.as_ref().unwrap();
+        f(*id, &lane.ring);
+    });
+}
+
+fn rel_ns(t: Instant) -> u64 {
+    t.saturating_duration_since(collector().epoch).as_nanos() as u64
+}
+
+/// Fresh request-correlation id (monotone, never 0).
+pub fn next_trace_id() -> u64 {
+    collector().next_trace.fetch_add(1, Ordering::Relaxed) + 1
+}
+
+/// Publish the trace id the next DAG run submitted from this thread
+/// should carry (what [`crate::session::SolverSession`] installs before
+/// executing its DAG).
+pub fn set_current_trace_id(id: u64) {
+    CURRENT_TRACE.with(|c| c.set(id));
+}
+
+/// The trace id currently published on this thread (0 when none).
+pub fn current_trace_id() -> u64 {
+    CURRENT_TRACE.with(|c| c.get())
+}
+
+/// Called by the executor at run submission: when tracing is on, mint a
+/// run id and capture the submitting thread's trace id; when off, return
+/// `(0, 0)` — the per-task recording sites gate on `run_id != 0`.
+pub fn begin_run() -> (u64, u64) {
+    if !enabled() {
+        return (0, 0);
+    }
+    (collector().next_run.fetch_add(1, Ordering::Relaxed) + 1, current_trace_id())
+}
+
+/// One executed task, as reported by the executor.
+pub struct TaskSpan {
+    /// Run id minted by [`begin_run`].
+    pub run_id: u64,
+    /// Trace id captured by [`begin_run`].
+    pub trace_id: u64,
+    /// DAG task index.
+    pub task: u32,
+    /// Kernel kind name.
+    pub op: &'static str,
+    /// Target block coordinates.
+    pub target: (usize, usize),
+    /// DAG level of the task.
+    pub level: u32,
+    /// Executing worker.
+    pub worker: u32,
+    /// Deque the entry came from when stolen, -1 otherwise.
+    pub stolen_from: i32,
+    /// Kernel start.
+    pub start: Instant,
+    /// Kernel end.
+    pub end: Instant,
+}
+
+/// Record one executed task on the calling thread's lane.
+pub fn record_task(span: TaskSpan) {
+    let ev = TraceEvent {
+        kind: EventKind::Task,
+        run_id: span.run_id,
+        trace_id: span.trace_id,
+        task: span.task,
+        op: span.op,
+        bi: span.target.0 as u32,
+        bj: span.target.1 as u32,
+        level: span.level,
+        worker: span.worker,
+        stolen_from: span.stolen_from,
+        start_ns: rel_ns(span.start),
+        end_ns: rel_ns(span.end),
+    };
+    with_ring(|_, ring| ring.push(ev));
+}
+
+/// Record a whole DAG run span on the calling (submitting) thread's
+/// lane — the source anchor of the request→tasks flow arrows.
+pub fn record_run(run_id: u64, trace_id: u64, tasks: u32, start: Instant, end: Instant) {
+    let ev = TraceEvent {
+        kind: EventKind::Run,
+        run_id,
+        trace_id,
+        task: tasks,
+        op: "run",
+        bi: 0,
+        bj: 0,
+        level: 0,
+        worker: 0,
+        stolen_from: -1,
+        start_ns: rel_ns(start),
+        end_ns: rel_ns(end),
+    };
+    with_ring(|_, ring| ring.push(ev));
+}
+
+/// Reset every lane's ring (bench/test scenario isolation). Call only
+/// while no traced run is in flight — a concurrent writer would race the
+/// reset benignly (its events land at the ring start) but the snapshot
+/// would mix epochs.
+pub fn clear() {
+    let lanes = collector().lanes.lock().unwrap();
+    for lane in lanes.iter() {
+        lane.ring.clear();
+    }
+}
+
+/// One lane's retained events, oldest first.
+pub struct LaneSnapshot {
+    /// Lane id (Chrome-trace `tid`).
+    pub lane: u32,
+    /// Owning thread's name at registration.
+    pub name: String,
+    /// Retained events in recording order (chronological per lane).
+    pub events: Vec<TraceEvent>,
+}
+
+/// Point-in-time copy of every lane.
+pub struct TraceSnapshot {
+    /// All lanes, by lane id.
+    pub lanes: Vec<LaneSnapshot>,
+    /// Events lost to ring overwrites across all lanes since the last
+    /// [`clear`].
+    pub dropped_events: u64,
+}
+
+impl TraceSnapshot {
+    /// All retained events across lanes, in lane order.
+    pub fn all_events(&self) -> Vec<TraceEvent> {
+        self.lanes.iter().flat_map(|l| l.events.iter().copied()).collect()
+    }
+}
+
+/// Copy out every lane's retained events. Cheap relative to a run (one
+/// lock + memcpy per lane) and safe while recording continues.
+pub fn snapshot() -> TraceSnapshot {
+    let lanes = collector().lanes.lock().unwrap();
+    let mut out = Vec::with_capacity(lanes.len());
+    let mut dropped = 0u64;
+    for (id, lane) in lanes.iter().enumerate() {
+        let (events, lost) = lane.ring.read();
+        dropped += lost;
+        out.push(LaneSnapshot { lane: id as u32, name: lane.name.clone(), events });
+    }
+    TraceSnapshot { lanes: out, dropped_events: dropped }
+}
+
+// --------------------------------------------------------------------
+// Chrome-trace / Perfetto export
+// --------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// Render `snap` in Chrome-trace JSON (the `traceEvents` array format
+/// Perfetto and `chrome://tracing` load): one `tid` lane per recording
+/// thread, `"X"` complete events for tasks and run spans, `"s"`/`"f"`
+/// flow arrows linking each run span to its tasks, and thread-name
+/// metadata so pool workers show up as `lu-exec-{w}`.
+pub fn chrome_trace_of(snap: &TraceSnapshot) -> String {
+    let mut evs: Vec<String> = Vec::new();
+    evs.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"sparselu\"}}"
+            .to_string(),
+    );
+    for lane in &snap.lanes {
+        evs.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            lane.lane,
+            json_escape(&lane.name)
+        ));
+        for e in &lane.events {
+            let dur = us(e.end_ns.saturating_sub(e.start_ns));
+            match e.kind {
+                EventKind::Run => {
+                    evs.push(format!(
+                        "{{\"name\":\"run #{}\",\"cat\":\"run\",\"ph\":\"X\",\
+                         \"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{},\
+                         \"args\":{{\"run\":{},\"trace\":{},\"tasks\":{}}}}}",
+                        e.run_id,
+                        us(e.start_ns),
+                        dur,
+                        lane.lane,
+                        e.run_id,
+                        e.trace_id,
+                        e.task
+                    ));
+                    // flow source: arrows fan out from the run span to
+                    // every task event carrying the same run id
+                    evs.push(format!(
+                        "{{\"name\":\"run\",\"cat\":\"flow\",\"ph\":\"s\",\"id\":{},\
+                         \"ts\":{:.3},\"pid\":1,\"tid\":{}}}",
+                        e.run_id,
+                        us(e.start_ns),
+                        lane.lane
+                    ));
+                }
+                EventKind::Task => {
+                    evs.push(format!(
+                        "{{\"name\":\"{}({},{})\",\"cat\":\"task\",\"ph\":\"X\",\
+                         \"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{},\
+                         \"args\":{{\"task\":{},\"level\":{},\"run\":{},\"trace\":{},\
+                         \"worker\":{},\"stolen_from\":{}}}}}",
+                        e.op,
+                        e.bi,
+                        e.bj,
+                        us(e.start_ns),
+                        dur,
+                        lane.lane,
+                        e.task,
+                        e.level,
+                        e.run_id,
+                        e.trace_id,
+                        e.worker,
+                        e.stolen_from
+                    ));
+                    evs.push(format!(
+                        "{{\"name\":\"run\",\"cat\":\"flow\",\"ph\":\"f\",\"bp\":\"e\",\
+                         \"id\":{},\"ts\":{:.3},\"pid\":1,\"tid\":{}}}",
+                        e.run_id,
+                        us(e.start_ns),
+                        lane.lane
+                    ));
+                }
+            }
+        }
+    }
+    format!(
+        "{{\"displayTimeUnit\":\"ms\",\"otherData\":{{\"dropped_events\":{}}},\
+         \"traceEvents\":[\n{}\n]}}\n",
+        snap.dropped_events,
+        evs.join(",\n")
+    )
+}
+
+/// [`chrome_trace_of`] over a fresh [`snapshot`] — what `GET /trace`
+/// and `repro trace` serve.
+pub fn chrome_trace_json() -> String {
+    chrome_trace_of(&snapshot())
+}
+
+// --------------------------------------------------------------------
+// Critical-path analysis
+// --------------------------------------------------------------------
+
+/// One of the top-k longest-running tasks of a run.
+#[derive(Clone, Debug)]
+pub struct Straggler {
+    /// DAG task index.
+    pub task: u32,
+    /// Kernel kind.
+    pub op: &'static str,
+    /// Target block coordinates.
+    pub target: (u32, u32),
+    /// DAG level.
+    pub level: u32,
+    /// Executing worker.
+    pub worker: u32,
+    /// Measured seconds.
+    pub seconds: f64,
+}
+
+/// Measured schedule quality of one recorded DAG run.
+#[derive(Clone, Debug)]
+pub struct RunAnalysis {
+    /// The analyzed run.
+    pub run_id: u64,
+    /// Its request-correlation id.
+    pub trace_id: u64,
+    /// Task events found for the run.
+    pub tasks: usize,
+    /// Achieved makespan: last task end minus first task start.
+    pub makespan_seconds: f64,
+    /// Longest dependency chain through the *measured* durations — the
+    /// floor any schedule of this run's timings could reach. (Distinct
+    /// from [`TaskDag::critical_path`], which prices the modeled costs.)
+    pub critical_path_seconds: f64,
+    /// Sum of all measured task durations (total work).
+    pub total_task_seconds: f64,
+    /// `critical_path / makespan` — 1.0 means the schedule was as tight
+    /// as the critical chain allows, lower means workers idled.
+    pub scheduling_efficiency: f64,
+    /// Longest-running tasks, descending.
+    pub stragglers: Vec<Straggler>,
+}
+
+/// Walk the recorded timings of run `run_id` against the DAG's edges:
+/// longest measured dependency chain, achieved makespan, scheduling
+/// efficiency and the `top_k` stragglers. Returns `None` when the run
+/// has no task events in `events`.
+pub fn analyze_run(
+    dag: &TaskDag,
+    events: &[TraceEvent],
+    run_id: u64,
+    top_k: usize,
+) -> Option<RunAnalysis> {
+    let tasks: Vec<&TraceEvent> = events
+        .iter()
+        .filter(|e| e.kind == EventKind::Task && e.run_id == run_id)
+        .collect();
+    if tasks.is_empty() {
+        return None;
+    }
+    let trace_id = tasks[0].trace_id;
+    let min_start = tasks.iter().map(|e| e.start_ns).min().unwrap();
+    let max_end = tasks.iter().map(|e| e.end_ns).max().unwrap();
+    let makespan = (max_end - min_start) as f64 * 1e-9;
+
+    let n = dag.tasks.len();
+    let mut dur = vec![0.0f64; n];
+    let mut present = vec![false; n];
+    let mut total = 0.0f64;
+    for e in &tasks {
+        let t = e.task as usize;
+        if t < n {
+            dur[t] = e.seconds();
+            present[t] = true;
+            total += dur[t];
+        }
+    }
+    // finish[t] = dur[t] + max over present predecessors finish[p];
+    // every DAG edge goes to a strictly deeper level, so processing
+    // tasks by ascending level is a topological order
+    let mut order: Vec<u32> = (0..n as u32).filter(|&t| present[t as usize]).collect();
+    order.sort_by_key(|&t| dag.tasks[t as usize].level);
+    let mut finish = dur.clone();
+    let mut critical = 0.0f64;
+    for &t in &order {
+        let ft = finish[t as usize];
+        critical = critical.max(ft);
+        for &o in &dag.tasks[t as usize].out {
+            let o = o as usize;
+            if present[o] && ft + dur[o] > finish[o] {
+                finish[o] = ft + dur[o];
+            }
+        }
+    }
+
+    let mut ranked: Vec<&TraceEvent> = tasks.clone();
+    ranked.sort_by(|a, b| b.seconds().total_cmp(&a.seconds()));
+    let stragglers = ranked
+        .iter()
+        .take(top_k)
+        .map(|e| Straggler {
+            task: e.task,
+            op: e.op,
+            target: (e.bi, e.bj),
+            level: e.level,
+            worker: e.worker,
+            seconds: e.seconds(),
+        })
+        .collect();
+
+    Some(RunAnalysis {
+        run_id,
+        trace_id,
+        tasks: tasks.len(),
+        makespan_seconds: makespan,
+        critical_path_seconds: critical,
+        total_task_seconds: total,
+        scheduling_efficiency: if makespan > 0.0 { critical / makespan } else { 1.0 },
+        stragglers,
+    })
+}
+
+// --------------------------------------------------------------------
+// Per-level balance
+// --------------------------------------------------------------------
+
+/// Nonzero and measured-time balance of one DAG level: per *target
+/// block* within the level, max/mean is the imbalance factor (1.0 =
+/// perfectly balanced).
+#[derive(Clone, Debug)]
+pub struct LevelBalance {
+    /// DAG level.
+    pub level: u32,
+    /// Task events recorded at this level.
+    pub tasks: usize,
+    /// Distinct target blocks at this level.
+    pub blocks: usize,
+    /// Largest target-block nonzero count.
+    pub nnz_max: u64,
+    /// Mean target-block nonzero count.
+    pub nnz_mean: f64,
+    /// Total nonzeros across the level's target blocks.
+    pub nnz_total: u64,
+    /// Largest per-block measured seconds (tasks summed per block).
+    pub seconds_max: f64,
+    /// Mean per-block measured seconds.
+    pub seconds_mean: f64,
+    /// Total measured seconds of the level.
+    pub seconds_total: f64,
+    /// `nnz_max / nnz_mean` within the level.
+    pub nnz_imbalance: f64,
+    /// `seconds_max / seconds_mean` within the level.
+    pub time_imbalance: f64,
+}
+
+/// Group run `run_id`'s task events by DAG level and measure the paper's
+/// balance claim: per level, the nonzeros of the distinct target blocks
+/// and the measured seconds aggregated per target block, each with its
+/// max/mean imbalance. Levels are returned ascending.
+pub fn level_balance(bm: &BlockedMatrix, events: &[TraceEvent], run_id: u64) -> Vec<LevelBalance> {
+    use std::collections::BTreeMap;
+    // level -> target block (bi,bj) -> (nnz, seconds)
+    let mut levels: BTreeMap<u32, BTreeMap<(u32, u32), (u64, f64, usize)>> = BTreeMap::new();
+    for e in events {
+        if e.kind != EventKind::Task || e.run_id != run_id {
+            continue;
+        }
+        let nnz = bm
+            .block_id(e.bi as usize, e.bj as usize)
+            .map(|id| bm.block(id).nnz() as u64)
+            .unwrap_or(0);
+        let slot = levels
+            .entry(e.level)
+            .or_default()
+            .entry((e.bi, e.bj))
+            .or_insert((nnz, 0.0, 0));
+        slot.1 += e.seconds();
+        slot.2 += 1;
+    }
+    levels
+        .into_iter()
+        .map(|(level, blocks)| {
+            let nblocks = blocks.len();
+            let tasks: usize = blocks.values().map(|&(_, _, t)| t).sum();
+            let nnz_total: u64 = blocks.values().map(|&(z, _, _)| z).sum();
+            let nnz_max: u64 = blocks.values().map(|&(z, _, _)| z).max().unwrap_or(0);
+            let seconds_total: f64 = blocks.values().map(|&(_, s, _)| s).sum();
+            let seconds_max: f64 = blocks.values().map(|&(_, s, _)| s).fold(0.0f64, f64::max);
+            let nnz_mean = nnz_total as f64 / nblocks.max(1) as f64;
+            let seconds_mean = seconds_total / nblocks.max(1) as f64;
+            LevelBalance {
+                level,
+                tasks,
+                blocks: nblocks,
+                nnz_max,
+                nnz_mean,
+                nnz_total,
+                seconds_max,
+                seconds_mean,
+                seconds_total,
+                nnz_imbalance: ratio(nnz_max as f64, nnz_mean),
+                time_imbalance: ratio(seconds_max, seconds_mean),
+            }
+        })
+        .collect()
+}
+
+fn ratio(max: f64, mean: f64) -> f64 {
+    if mean > 0.0 {
+        max / mean
+    } else {
+        1.0
+    }
+}
+
+/// Across-level imbalance `(nnz, seconds)`: max/mean over the per-level
+/// totals of `levels` — the complement of the within-level factors.
+pub fn imbalance_across(levels: &[LevelBalance]) -> (f64, f64) {
+    if levels.is_empty() {
+        return (1.0, 1.0);
+    }
+    let n = levels.len() as f64;
+    let nnz_mean = levels.iter().map(|l| l.nnz_total as f64).sum::<f64>() / n;
+    let nnz_max = levels.iter().map(|l| l.nnz_total as f64).fold(0.0f64, f64::max);
+    let sec_mean = levels.iter().map(|l| l.seconds_total).sum::<f64>() / n;
+    let sec_max = levels.iter().map(|l| l.seconds_total).fold(0.0f64, f64::max);
+    (ratio(nnz_max, nnz_mean), ratio(sec_max, sec_mean))
+}
+
+// --------------------------------------------------------------------
+// Minimal JSON reader (the crate writes JSON by hand and has no serde;
+// the golden trace tests and `repro metrics-dump --trace-summary` need
+// to read it back)
+// --------------------------------------------------------------------
+
+/// A parsed JSON value (objects keep insertion order).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any number (always read as `f64`).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object, as ordered key/value pairs.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object member by key.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// String value.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array elements.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Strict recursive-descent JSON parser: one value, trailing whitespace
+/// only. Errors carry a byte offset.
+pub fn parse_json(s: &str) -> Result<Json, String> {
+    let mut p = JsonParser { bytes: s.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing data at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            _ => Err(format!("unexpected byte {}", self.pos)),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            out.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'u' => {
+                            let code = self.hex4()?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.pos)),
+                    }
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar (input is a &str, so
+                    // boundaries are valid)
+                    let start = self.pos;
+                    let mut end = start + 1;
+                    while end < self.bytes.len() && (self.bytes[end] & 0xC0) == 0x80 {
+                        end += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[start..end]).unwrap());
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err("truncated \\u escape".to_string());
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| "bad \\u escape".to_string())?;
+        let code = u32::from_str_radix(s, 16).map_err(|_| "bad \\u escape".to_string())?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9') | Some(b'.') | Some(b'e') | Some(b'E'))
+            || (self.pos > start && matches!(self.peek(), Some(b'+') | Some(b'-')))
+        {
+            // '+'/'-' only directly after an exponent marker
+            if matches!(self.peek(), Some(b'+') | Some(b'-'))
+                && !matches!(self.bytes.get(self.pos - 1), Some(b'e') | Some(b'E'))
+            {
+                break;
+            }
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number {text:?} at byte {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(task: u32, level: u32, start_ns: u64, end_ns: u64) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::Task,
+            run_id: 77,
+            trace_id: 5,
+            task,
+            op: "ssssm",
+            bi: task,
+            bj: task,
+            level,
+            worker: 0,
+            stolen_from: -1,
+            start_ns,
+            end_ns,
+        }
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_counts_and_never_reallocates() {
+        let ring = Ring::with_capacity(8);
+        let base = ring.slots.as_ptr();
+        for i in 0..20u64 {
+            ring.push(ev(i as u32, 0, i * 10, i * 10 + 5));
+        }
+        // no reallocation on the hot path: the slot storage is the same
+        assert!(std::ptr::eq(base, ring.slots.as_ptr()));
+        let (events, dropped) = ring.read();
+        assert_eq!(events.len(), 8, "ring retains exactly its capacity");
+        assert_eq!(dropped, 12, "12 of 20 events were overwritten");
+        // the retained window is the newest 8, oldest first
+        let tasks: Vec<u32> = events.iter().map(|e| e.task).collect();
+        assert_eq!(tasks, (12..20).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn ring_read_before_wrap_returns_everything() {
+        let ring = Ring::with_capacity(8);
+        for i in 0..5u64 {
+            ring.push(ev(i as u32, 0, i, i + 1));
+        }
+        let (events, dropped) = ring.read();
+        assert_eq!(events.len(), 5);
+        assert_eq!(dropped, 0);
+        ring.clear();
+        let (events, dropped) = ring.read();
+        assert!(events.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn critical_path_on_a_hand_built_dag() {
+        use crate::coordinator::Task;
+        use crate::numeric::factor::BlockOp;
+        // diamond: 0 -> {1, 2} -> 3; durations 10, 30, 20, 40 (ns)
+        let mk = |out: Vec<u32>, level: u32| Task {
+            op: BlockOp::Getrf { k: 0 },
+            owner: 0,
+            deps: 0,
+            out,
+            cost: 0.0,
+            flops: 0.0,
+            out_bytes: 0.0,
+            level,
+        };
+        let dag = TaskDag {
+            tasks: vec![
+                mk(vec![1, 2], 0),
+                mk(vec![3], 1),
+                mk(vec![3], 1),
+                mk(vec![], 2),
+            ],
+            num_levels: 3,
+            total_flops: 0.0,
+            critical_path: 0.0,
+        };
+        // schedule: 0 on [0,10], 1 on [10,40], 2 on [10,30], 3 on [40,80]
+        let events = vec![
+            ev(0, 0, 0, 10),
+            ev(1, 1, 10, 40),
+            ev(2, 1, 10, 30),
+            ev(3, 2, 40, 80),
+        ];
+        let a = analyze_run(&dag, &events, 77, 2).unwrap();
+        assert_eq!(a.tasks, 4);
+        // longest chain 0 -> 1 -> 3 = 10 + 30 + 40 = 80 ns
+        assert!((a.critical_path_seconds - 80e-9).abs() < 1e-15);
+        assert!((a.makespan_seconds - 80e-9).abs() < 1e-15);
+        assert!((a.total_task_seconds - 100e-9).abs() < 1e-15);
+        assert!((a.scheduling_efficiency - 1.0).abs() < 1e-9);
+        assert!(a.critical_path_seconds <= a.makespan_seconds + 1e-15);
+        // stragglers descend: task 3 (40ns) then task 1 (30ns)
+        assert_eq!(a.stragglers.len(), 2);
+        assert_eq!(a.stragglers[0].task, 3);
+        assert_eq!(a.stragglers[1].task, 1);
+        // unknown run id -> no analysis
+        assert!(analyze_run(&dag, &events, 999, 2).is_none());
+    }
+
+    #[test]
+    fn json_parser_roundtrips_the_shapes_we_emit() {
+        let v = parse_json(
+            "{\"a\": [1, 2.5, -3e-2], \"s\": \"x\\\"y\\u0041\", \
+             \"t\": true, \"n\": null}",
+        )
+        .unwrap();
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[2].as_f64(), Some(-0.03));
+        assert_eq!(v.get("s").unwrap().as_str(), Some("x\"yA"));
+        assert_eq!(v.get("t"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("n"), Some(&Json::Null));
+        assert!(parse_json("{\"unterminated\": ").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("{} trailing").is_err());
+    }
+
+    #[test]
+    fn chrome_export_of_a_synthetic_snapshot_parses_and_is_monotone() {
+        let mut run = ev(3, 0, 0, 100);
+        run.kind = EventKind::Run;
+        let snap = TraceSnapshot {
+            lanes: vec![
+                LaneSnapshot { lane: 0, name: "main".into(), events: vec![run] },
+                LaneSnapshot {
+                    lane: 1,
+                    name: "lu-exec-1".into(),
+                    events: vec![ev(0, 0, 0, 40), ev(1, 1, 40, 90)],
+                },
+            ],
+            dropped_events: 0,
+        };
+        let text = chrome_trace_of(&snap);
+        let v = parse_json(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // per tid, "X" events must be monotone in ts
+        let mut last_ts: std::collections::HashMap<i64, f64> = std::collections::HashMap::new();
+        let mut slices = 0;
+        for e in evs {
+            if e.get("ph").unwrap().as_str() != Some("X") {
+                continue;
+            }
+            slices += 1;
+            let tid = e.get("tid").unwrap().as_f64().unwrap() as i64;
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            let dur = e.get("dur").unwrap().as_f64().unwrap();
+            assert!(dur >= 0.0);
+            if let Some(prev) = last_ts.insert(tid, ts) {
+                assert!(ts >= prev, "lane {tid} not monotone");
+            }
+        }
+        assert_eq!(slices, 3);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_thread_local_id_roundtrips() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(b > a);
+        set_current_trace_id(a);
+        assert_eq!(current_trace_id(), a);
+        set_current_trace_id(0);
+        assert_eq!(current_trace_id(), 0);
+    }
+}

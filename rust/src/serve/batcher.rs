@@ -178,6 +178,11 @@ pub struct ServeReport {
     pub went_partial: bool,
     /// Solve requests: the solution vector.
     pub solution: Option<Vec<f64>>,
+    /// [`crate::obs::trace`] correlation id of the batch this request
+    /// rode in: every task event the batch's DAG runs record carries the
+    /// same id, so a slow request can be matched to its exact tasks in a
+    /// `/trace` export. `0` when tracing was off at execution time.
+    pub trace_id: u64,
 }
 
 /// Bounded, coalescing request queue over one session.
@@ -328,6 +333,16 @@ impl Batcher {
     ) -> Vec<Result<ServeReport, ServeError>> {
         let mut outcomes = Vec::with_capacity(self.queue.len());
         while let Some((request, submitted)) = self.queue.pop_front() {
+            // one trace id per executed batch: every DAG task the batch
+            // runs records it, and every report that rode in the batch
+            // carries it (0 when tracing is off — no id is minted)
+            let trace_id = if crate::obs::trace::enabled() {
+                let id = crate::obs::trace::next_trace_id();
+                session.set_trace_id(id);
+                id
+            } else {
+                0
+            };
             match request {
                 Request::Solve { rhs } => {
                     let n = session.plan().n();
@@ -371,6 +386,7 @@ impl Batcher {
                             tasks_skipped: 0,
                             went_partial: false,
                             solution: Some(x),
+                            trace_id,
                         }));
                     }
                 }
@@ -395,6 +411,7 @@ impl Batcher {
                         tasks_skipped: rep.tasks_skipped,
                         went_partial: false,
                         solution: None,
+                        trace_id,
                     });
                     outcomes.push(outcome.map_err(ServeError::from));
                 }
@@ -465,6 +482,7 @@ impl Batcher {
                                     tasks_skipped: if leader { rep.tasks_skipped } else { 0 },
                                     went_partial: go_partial,
                                     solution: None,
+                                    trace_id,
                                 }));
                             }
                         }

@@ -68,7 +68,7 @@ use super::pool::{PoolMetrics, SessionPool};
 use crate::coordinator::Executor;
 use crate::numeric::factor::FactorError;
 use crate::obs::{self, Counter, Gauge, Histogram, HistogramSnapshot, Registry};
-use crate::session::{ChangeSet, FactorPlan, PlanCache, SharedPlanCache};
+use crate::session::{ChangeSet, FactorPlan, PlanCache, PlanReport, SharedPlanCache};
 use crate::solver::SolveOptions;
 use crate::sparse::Csc;
 use std::collections::HashSet;
@@ -249,7 +249,52 @@ struct RouterMetrics {
     pattern_drifts: Counter,
     cache_hits: Counter,
     cache_misses: Counter,
-    plan_build: Histogram,
+    plan_build: PlanBuildPhases,
+    plan_build_panics: Counter,
+}
+
+/// Phase-labeled `sparselu_plan_build_seconds` family: the wall time of
+/// a whole cache-miss resolution (`phase="total"`) plus the structure
+/// pipeline's own phase laps mirrored from [`PlanReport`] — the same
+/// decomposition `repro plan-bench` writes to `BENCH_plan.json`, live on
+/// every scrape.
+#[derive(Clone)]
+struct PlanBuildPhases {
+    total: Histogram,
+    ordering: Histogram,
+    symbolic: Histogram,
+    blocking: Histogram,
+    reach: Histogram,
+}
+
+impl PlanBuildPhases {
+    fn register(registry: &Registry) -> Self {
+        let phase = |name: &str| {
+            registry.histogram(
+                "sparselu_plan_build_seconds",
+                "Plan-build wall seconds by structure phase (total = whole cache-miss resolution)",
+                &[("phase", name)],
+                &obs::BUILD_BUCKETS,
+            )
+        };
+        Self {
+            total: phase("total"),
+            ordering: phase("ordering"),
+            symbolic: phase("symbolic"),
+            blocking: phase("blocking"),
+            reach: phase("reach"),
+        }
+    }
+
+    /// One build landed: record the whole-resolution wall time plus the
+    /// plan's phase laps (ordering / symbolic / blocking / reach).
+    fn observe(&self, wall_seconds: f64, report: &PlanReport) {
+        self.total.observe(wall_seconds);
+        self.ordering.observe(report.reorder_seconds);
+        self.symbolic.observe(report.symbolic_seconds);
+        self.blocking.observe(report.preprocess_seconds);
+        self.reach.observe(report.plan_extra_seconds);
+    }
 }
 
 impl RouterMetrics {
@@ -305,11 +350,11 @@ impl RouterMetrics {
                 "Plan-cache lookups that had to build (or disk-load) a plan",
                 &[],
             ),
-            plan_build: registry.histogram(
-                "sparselu_plan_build_seconds",
-                "Wall time to resolve a plan on a cache miss (build or disk load)",
+            plan_build: PlanBuildPhases::register(registry),
+            plan_build_panics: registry.counter(
+                "sparselu_plan_build_panics_total",
+                "Plan builds that panicked (degraded to per-request errors)",
                 &[],
-                &obs::BUILD_BUCKETS,
             ),
         }
     }
@@ -475,6 +520,9 @@ struct Shard {
     /// Present only on speculatively admitted shards; resolved exactly
     /// once by the background builder thread.
     pending: Option<Arc<PendingBuild>>,
+    /// The background builder thread, held so it can be reaped once its
+    /// result is published instead of being left permanently detached.
+    build_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     batcher: Mutex<Batcher>,
     stats: Mutex<TenantStats>,
     metrics: ShardMetrics,
@@ -496,6 +544,7 @@ impl Shard {
     /// gets the error individually ([`Batcher::fail_all`]).
     fn ensure_serving(&self) -> Result<&Serving, ServeError> {
         if let Some(s) = self.serving.get() {
+            self.reap_builder();
             return Ok(s);
         }
         let pending =
@@ -504,9 +553,26 @@ impl Shard {
         while result.is_none() {
             result = pending.ready.wait(result).unwrap();
         }
-        match result.as_ref().expect("pending build published") {
-            Ok(()) => Ok(self.serving.get().expect("builder installed serving state")),
+        let outcome = match result.as_ref().expect("pending build published") {
+            Ok(()) => Ok(()),
             Err(e) => Err(e.clone()),
+        };
+        drop(result);
+        // the builder publishes its result as its last act, so it is
+        // exiting (or gone) — join it rather than leaving it detached
+        self.reap_builder();
+        outcome.map(|()| self.serving.get().expect("builder installed serving state"))
+    }
+
+    /// Join the background builder thread if one ran and finished. Free
+    /// on ordinary shards (`pending` is `None`); on speculative shards
+    /// this is only called after the build's result is published, so the
+    /// join never blocks on plan construction.
+    fn reap_builder(&self) {
+        if self.pending.is_some() {
+            if let Some(handle) = self.build_thread.lock().unwrap().take() {
+                let _ = handle.join();
+            }
         }
     }
 
@@ -678,7 +744,7 @@ impl Router {
             .get_or_build_traced(a, &self.opts, Some(&self.executor))
             .map_err(ServeError::Factor)?;
         if built {
-            self.rm.plan_build.observe(build_start.elapsed().as_secs_f64());
+            self.rm.plan_build.observe(build_start.elapsed().as_secs_f64(), &plan.report);
             if let Some(dir) = &self.cfg.plan_dir {
                 if let Err(e) = persist::save_plan_to_dir(&plan, dir) {
                     eprintln!("router: persisting plan to {} failed: {e}", dir.display());
@@ -729,6 +795,7 @@ impl Router {
             tenant,
             serving,
             pending,
+            build_thread: Mutex::new(None),
             batcher: Mutex::new(batcher),
             stats: Mutex::new(TenantStats::default()),
             metrics: ShardMetrics::register(&self.registry, tenant),
@@ -793,47 +860,62 @@ impl Router {
         let plan_dir = self.cfg.plan_dir.clone();
         let sessions_per_shard = self.cfg.sessions_per_shard;
         let plan_build = self.rm.plan_build.clone();
+        let build_panics = self.rm.plan_build_panics.clone();
         let matrix = a.clone();
+        let builder_shard = shard.clone();
+        let pending_thread = pending.clone();
         let spawned = std::thread::Builder::new().name("lu-plan-build".into()).spawn(move || {
             let start = Instant::now();
-            let published = match cache.get_or_build_traced(&matrix, &opts, Some(&executor)) {
-                Ok((plan, built)) => {
-                    if built {
-                        plan_build.observe(start.elapsed().as_secs_f64());
-                        if let Some(dir) = &plan_dir {
-                            if let Err(e) = persist::save_plan_to_dir(&plan, dir) {
-                                eprintln!(
-                                    "router: persisting plan to {} failed: {e}",
-                                    dir.display()
-                                );
+            // the whole build-and-install sequence is unwind-guarded: a
+            // panic anywhere in it must still resolve `pending` — queued
+            // requests then fail per-request instead of hanging forever
+            // on a slot nobody will ever publish
+            let published = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                match cache.get_or_build_traced(&matrix, &opts, Some(&executor)) {
+                    Ok((plan, built)) => {
+                        if built {
+                            plan_build.observe(start.elapsed().as_secs_f64(), &plan.report);
+                            if let Some(dir) = &plan_dir {
+                                if let Err(e) = persist::save_plan_to_dir(&plan, dir) {
+                                    eprintln!(
+                                        "router: persisting plan to {} failed: {e}",
+                                        dir.display()
+                                    );
+                                }
                             }
                         }
+                        let label = ShardMetrics::label_of(tenant);
+                        let pool_metrics =
+                            PoolMetrics::register(&registry, &[("tenant", label.as_str())]);
+                        let pool = SessionPool::with_metrics(
+                            plan.clone(),
+                            sessions_per_shard,
+                            pool_metrics,
+                        );
+                        let _ = builder_shard.serving.set(Serving { plan, pool });
+                        Ok(())
                     }
-                    let label = ShardMetrics::label_of(tenant);
-                    let pool_metrics =
-                        PoolMetrics::register(&registry, &[("tenant", label.as_str())]);
-                    let pool =
-                        SessionPool::with_metrics(plan.clone(), sessions_per_shard, pool_metrics);
-                    let _ = shard.serving.set(Serving { plan, pool });
-                    Ok(())
+                    Err(e) => Err(ServeError::Factor(e)),
                 }
-                Err(e) => Err(ServeError::Factor(e)),
-            };
-            *pending.result.lock().unwrap() = Some(published);
-            pending.ready.notify_all();
+            }))
+            .unwrap_or_else(|_| Err(ServeError::Factor(FactorError::TaskPanic)));
+            // the plan cache converts a panic *inside the build itself*
+            // into TaskPanic before it reaches us; either origin is a
+            // plan-build panic
+            if matches!(published, Err(ServeError::Factor(FactorError::TaskPanic))) {
+                build_panics.inc();
+            }
+            *pending_thread.result.lock().unwrap() = Some(published);
+            pending_thread.ready.notify_all();
         });
-        if let Err(e) = spawned {
-            // thread spawn failed (resource exhaustion): resolve the
-            // pending slot so queued requests error instead of hanging
-            eprintln!("router: cannot spawn plan-build thread: {e}");
-            let pending = {
-                let st = self.state.lock().unwrap();
-                st.shards
-                    .iter()
-                    .find(|s| s.tenant == tenant)
-                    .and_then(|s| s.pending.clone())
-            };
-            if let Some(pending) = pending {
+        match spawned {
+            // hold the handle so the builder is reaped once it resolves
+            // (Shard::reap_builder), never left permanently detached
+            Ok(handle) => *shard.build_thread.lock().unwrap() = Some(handle),
+            Err(e) => {
+                // thread spawn failed (resource exhaustion): resolve the
+                // pending slot so queued requests error instead of hanging
+                eprintln!("router: cannot spawn plan-build thread: {e}");
                 *pending.result.lock().unwrap() =
                     Some(Err(ServeError::Factor(FactorError::TaskPanic)));
                 pending.ready.notify_all();
@@ -1489,6 +1571,79 @@ mod tests {
         // the original tenant still serves its own pattern
         router.submit(ta, Request::Solve { rhs: vec![1.0; 36] }).unwrap();
         assert!(router.drain_tenant(ta).unwrap()[0].is_ok());
+    }
+
+    #[test]
+    fn panicking_background_build_fails_requests_and_is_counted() {
+        let registry = Arc::new(Registry::new());
+        let router = Router::new(
+            SolveOptions::ours(1),
+            RouterConfig {
+                max_shards: 4,
+                plan_cache_capacity: 8,
+                shard_queue: 8,
+                registry: Some(registry.clone()),
+                ..RouterConfig::default()
+            },
+        );
+        // a non-square pattern trips the square-systems assert inside
+        // the plan pipeline: a genuine panic on the builder thread
+        let mut coo = crate::sparse::Coo::new(4, 5);
+        for i in 0..4 {
+            coo.push(i, i, 2.0);
+        }
+        coo.push(0, 4, 1.0);
+        let rect = coo.to_csc();
+        let t = router.admit_background(&rect).unwrap();
+        router.submit(t, Request::Refactorize { values: rect.values.clone() }).unwrap();
+        // the panic resolves the pending build: queued requests fail
+        // per-request instead of hanging on an unpublished slot
+        let outcomes = router.drain_tenant(t).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(matches!(outcomes[0], Err(ServeError::Factor(FactorError::TaskPanic))));
+        assert_eq!(
+            registry.counter("sparselu_plan_build_panics_total", "", &[]).get(),
+            1,
+            "the panic is visible on the scrape surface"
+        );
+        // the builder thread was reaped, not left detached
+        assert!(router.shard_of(t).unwrap().build_thread.lock().unwrap().is_none());
+        // the router keeps serving other tenants
+        let good = gen::grid2d_laplacian(5, 5);
+        let tg = router.admit(&good).unwrap();
+        router.submit(tg, Request::Refactorize { values: good.values.clone() }).unwrap();
+        assert!(router.drain_tenant(tg).unwrap()[0].is_ok());
+    }
+
+    #[test]
+    fn plan_build_metrics_break_down_by_phase() {
+        let registry = Arc::new(Registry::new());
+        let router = Router::new(
+            SolveOptions::ours(1),
+            RouterConfig {
+                max_shards: 2,
+                plan_cache_capacity: 4,
+                shard_queue: 4,
+                registry: Some(registry.clone()),
+                ..RouterConfig::default()
+            },
+        );
+        let a = gen::grid2d_laplacian(6, 6);
+        router.admit(&a).unwrap();
+        let count_of = |phase: &str| {
+            let labels = [("phase", phase)];
+            registry
+                .histogram("sparselu_plan_build_seconds", "", &labels, &obs::BUILD_BUCKETS)
+                .snapshot()
+                .count()
+        };
+        for phase in ["total", "ordering", "symbolic", "blocking", "reach"] {
+            assert_eq!(count_of(phase), 1, "one sample for phase {phase}");
+        }
+        obs::validate(&registry.render()).unwrap();
+        // a cache hit records no new build samples
+        router.admit(&a).unwrap();
+        assert_eq!(count_of("total"), 1);
     }
 
     #[test]

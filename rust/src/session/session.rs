@@ -111,6 +111,9 @@ pub struct SolverSession<'b> {
     /// BFS queue over block ids; after the closure completes it holds
     /// exactly the affected blocks.
     queue: Vec<u32>,
+    /// Request-correlation id the next DAG runs are stamped with when
+    /// tracing is on (see [`crate::obs::trace`]); 0 = uncorrelated.
+    trace_id: u64,
 }
 
 impl SolverSession<'static> {
@@ -146,6 +149,31 @@ impl<'b> SolverSession<'b> {
             affected: vec![false; nblocks],
             in_subset: vec![false; ntasks],
             queue: Vec::with_capacity(nblocks),
+            trace_id: 0,
+        }
+    }
+
+    /// Set the [`crate::obs::trace`] correlation id the session's next
+    /// DAG runs carry (the serving [`crate::serve::Batcher`] installs
+    /// one per drained batch). The id is published thread-locally right
+    /// before each run, so the executor stamps it into every task event
+    /// — events, logs and the [`crate::serve::ServeReport`] of one
+    /// request then share an id. A no-op while tracing is off.
+    pub fn set_trace_id(&mut self, id: u64) {
+        self.trace_id = id;
+    }
+
+    /// The correlation id currently installed on the session.
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    /// Publish this session's trace id on the calling thread for the
+    /// DAG run about to be submitted. Gated on the enable flag so the
+    /// tracing-off hot path pays one atomic load, no TLS write.
+    fn publish_trace_id(&self) {
+        if crate::obs::trace::enabled() {
+            crate::obs::trace::set_current_trace_id(self.trace_id);
         }
     }
 
@@ -207,6 +235,7 @@ impl<'b> SolverSession<'b> {
         let (_, scatter_seconds) = timed(|| self.plan.scatter_values(values, &mut self.numeric));
         self.current_values.copy_from_slice(values);
         let opts = self.plan.options();
+        self.publish_trace_id();
         let (run, numeric_seconds) = timed(|| match self.sched {
             Scheduler::Persistent => coordinator::run_dag(
                 &self.numeric,
@@ -376,6 +405,7 @@ impl<'b> SolverSession<'b> {
                 },
             });
         }
+        self.publish_trace_id();
         let (run, numeric_seconds) = timed(|| match self.sched {
             Scheduler::Persistent => coordinator::run_dag_subset(
                 &self.numeric,

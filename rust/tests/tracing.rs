@@ -1,0 +1,201 @@
+//! Integration tests for task-level tracing (`sparselu::obs::trace`):
+//!
+//! * the Chrome-trace export parses and is schema-valid (every event
+//!   carries `ph`/`pid`/`tid`, complete events have non-negative
+//!   durations and monotone per-lane timestamps, and the traced run's
+//!   task events are all present);
+//! * tracing is **observation only**: with tracing on, every DAG task is
+//!   recorded exactly once at any worker count and the factors stay
+//!   bit-identical to a tracing-off session on the same plan;
+//! * ring overflow drops the oldest events and surfaces the loss in
+//!   `dropped_events` instead of reallocating or erroring.
+//!
+//! The tracing switch is process-global, so the tests that toggle it
+//! serialize on one mutex (the test harness runs tests in parallel
+//! threads within this binary).
+
+use sparselu::obs::trace;
+use sparselu::session::{FactorPlan, SolverSession};
+use sparselu::solver::SolveOptions;
+use sparselu::sparse::gen;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+static ENABLE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests that toggle the global tracing switch; a panicked
+/// holder must not cascade into unrelated failures.
+fn lock() -> MutexGuard<'static, ()> {
+    ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn chrome_trace_export_parses_and_is_schema_valid() {
+    let _g = lock();
+    let a = gen::grid2d_laplacian(16, 16);
+    let opts = SolveOptions::ours(3);
+    let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
+
+    // drop recordings left by sibling tests: the inline 1-worker path
+    // records its run span (timestamped at run *start*) after its tasks,
+    // so a stale lane would trip the per-lane monotonicity check below
+    trace::clear();
+    trace::set_enabled(true);
+    let mut session = SolverSession::from_plan(plan.clone());
+    let tid = trace::next_trace_id();
+    session.set_trace_id(tid);
+    session.refactorize(&a.values).unwrap();
+    let snap = trace::snapshot();
+    trace::set_enabled(false);
+
+    let text = trace::chrome_trace_of(&snap);
+    let doc = trace::parse_json(&text).expect("export parses");
+    assert!(doc.get("displayTimeUnit").is_some());
+    let dropped = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(|d| d.as_f64())
+        .expect("dropped_events reported");
+    assert!(dropped >= 0.0);
+
+    let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!evs.is_empty());
+    let mut last_ts: HashMap<i64, f64> = HashMap::new();
+    let mut our_tasks = 0usize;
+    let mut our_runs = 0usize;
+    for e in evs {
+        let ph = e.get("ph").and_then(|p| p.as_str()).expect("every event has ph");
+        assert_eq!(e.get("pid").and_then(|p| p.as_f64()), Some(1.0));
+        let lane = e.get("tid").and_then(|t| t.as_f64()).expect("every event has tid") as i64;
+        match ph {
+            "X" => {
+                let ts = e.get("ts").and_then(|t| t.as_f64()).expect("complete event has ts");
+                let dur = e.get("dur").and_then(|d| d.as_f64()).expect("complete event has dur");
+                assert!(dur >= 0.0);
+                // each lane is one thread's ring: chronological order
+                if let Some(prev) = last_ts.insert(lane, ts) {
+                    assert!(ts >= prev, "lane {lane} timestamps not monotone");
+                }
+                let args = e.get("args").expect("slice has args");
+                let of_run = args.get("trace").and_then(|t| t.as_f64()) == Some(tid as f64);
+                match e.get("cat").and_then(|c| c.as_str()) {
+                    Some("task") if of_run => our_tasks += 1,
+                    Some("run") if of_run => our_runs += 1,
+                    Some("task") | Some("run") => {}
+                    other => panic!("unexpected slice category {other:?}"),
+                }
+            }
+            "M" => {
+                let name = e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str());
+                assert!(name.is_some(), "metadata event names its process/thread");
+            }
+            "s" | "f" => {
+                assert!(e.get("id").and_then(|i| i.as_f64()).is_some(), "flow event has id");
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert_eq!(our_tasks, plan.dag.tasks.len(), "every DAG task exported exactly once");
+    assert_eq!(our_runs, 1, "one run span for one refactorize");
+}
+
+#[test]
+fn tracing_records_every_task_and_never_changes_the_factors() {
+    let _g = lock();
+    let a = gen::circuit_bbd(gen::CircuitParams { n: 300, ..Default::default() });
+    for workers in [1u32, 2, 8] {
+        let opts = SolveOptions::ours(workers);
+        let plan = Arc::new(FactorPlan::build(&a, &opts).unwrap());
+        let nblocks = plan.structure.blocks.len();
+
+        // oracle: same plan, tracing off
+        trace::set_enabled(false);
+        let mut off = SolverSession::from_plan(plan.clone());
+        off.refactorize(&a.values).unwrap();
+        let oracle: Vec<Vec<f64>> =
+            (0..nblocks).map(|id| off.numeric().block_values(id as u32)).collect();
+
+        trace::set_enabled(true);
+        let mut on = SolverSession::from_plan(plan.clone());
+        let tid = trace::next_trace_id();
+        on.set_trace_id(tid);
+        on.refactorize(&a.values).unwrap();
+        let snap = trace::snapshot();
+        trace::set_enabled(false);
+
+        let events: Vec<trace::TraceEvent> = snap
+            .all_events()
+            .into_iter()
+            .filter(|e| e.trace_id == tid)
+            .collect();
+        let tasks: Vec<&trace::TraceEvent> =
+            events.iter().filter(|e| e.kind == trace::EventKind::Task).collect();
+        assert_eq!(
+            tasks.len(),
+            plan.dag.tasks.len(),
+            "every task recorded exactly once (workers={workers})"
+        );
+        let mut seen = vec![false; plan.dag.tasks.len()];
+        for e in &tasks {
+            assert!(!seen[e.task as usize], "task {} recorded twice", e.task);
+            seen[e.task as usize] = true;
+            assert!(e.worker < workers, "worker id in range");
+            assert!(e.end_ns >= e.start_ns);
+            if workers == 1 {
+                assert_eq!(e.stolen_from, -1, "inline path never steals");
+            }
+        }
+        let runs = events.iter().filter(|e| e.kind == trace::EventKind::Run).count();
+        assert_eq!(runs, 1, "one run span per refactorize (workers={workers})");
+
+        // observation only: bit-identical factors with tracing on
+        for (id, oracle_block) in oracle.iter().enumerate() {
+            assert_eq!(
+                &on.numeric().block_values(id as u32),
+                oracle_block,
+                "block {id} differs with tracing on (workers={workers})"
+            );
+        }
+    }
+}
+
+#[test]
+fn ring_overflow_drops_oldest_and_is_counted() {
+    let _g = lock();
+    // record_task writes to this thread's private lane unconditionally
+    // (the on/off gate lives at run submission), so the test owns every
+    // event it finds under its marker run id
+    let marker = 0x00DE_AD00_u64;
+    let total = trace::RING_CAPACITY + 123;
+    let t = Instant::now();
+    for i in 0..total {
+        trace::record_task(trace::TaskSpan {
+            run_id: marker,
+            trace_id: 0,
+            task: i as u32,
+            op: "ssssm",
+            target: (1, 2),
+            level: 0,
+            worker: 0,
+            stolen_from: -1,
+            start: t,
+            end: t,
+        });
+    }
+    let snap = trace::snapshot();
+    let lane = snap
+        .lanes
+        .iter()
+        .find(|l| l.events.iter().any(|e| e.run_id == marker))
+        .expect("this thread's lane was registered");
+    let ours: Vec<u32> =
+        lane.events.iter().filter(|e| e.run_id == marker).map(|e| e.task).collect();
+    // the ring retained exactly its capacity: the newest window, in order
+    assert_eq!(ours.len(), trace::RING_CAPACITY);
+    assert_eq!(ours[0] as usize, total - trace::RING_CAPACITY);
+    assert_eq!(*ours.last().unwrap() as usize, total - 1);
+    let expected: Vec<u32> = ((total - trace::RING_CAPACITY) as u32..total as u32).collect();
+    assert_eq!(ours, expected, "oldest dropped, newest retained in order");
+    assert!(snap.dropped_events >= 123, "overflow surfaced as dropped_events");
+}
