@@ -2,11 +2,15 @@
 //! the inputs to the perf pass (EXPERIMENTS.md §Perf L3).
 
 mod common;
+// Shared shape/density generators — same module the kernel differential
+// rig (tests/kernel_differential.rs) and proptests draw inputs from.
+#[path = "../tests/common/blocks.rs"]
+mod blocks;
 
 use common::{bench, section};
 use sparselu::blocking::{regular_blocking, BlockedMatrix};
-use sparselu::numeric::dense;
 use sparselu::numeric::kernels::{self, Workspace};
+use sparselu::numeric::{dense, tiled};
 use sparselu::sparse::gen;
 use sparselu::symbolic;
 use sparselu::util::Prng;
@@ -63,7 +67,7 @@ fn main() {
             let tgt_bj = bm.block(uid).bj as usize;
             if let Some(cid) = bm.block_id(tgt_bi, tgt_bj) {
                 let (cpat, apat, bpat) = (bm.block(cid), bm.block(lid), bm.block(uid));
-                let flops = kernels::cost::ssssm(apat, bpat);
+                let flops = kernels::flops::ssssm(apat, bpat, cpat);
                 let r = bench("sparse SSSSM (Schur update)", 400, || {
                     let mut v = cpat.values.clone();
                     kernels::ssssm(cpat, &mut v, apat, &apat.values, bpat, &bpat.values, &mut ws)
@@ -73,28 +77,39 @@ fn main() {
         }
     }
 
-    section("dense kernels (pure rust path)");
+    section("dense kernels: scalar oracle vs tiled fast path");
+    // The dense kernels are skip-free (no value-dependent branches), so
+    // timing at density 0.5 vs 1.0 should be indistinguishable — running
+    // both makes that visible in the output.
     for n in [64usize, 128, 256] {
-        let mut rng = Prng::new(n as u64);
-        let mut a: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
-        for i in 0..n {
-            a[i * n + i] = n as f64;
-        }
-        let r = bench(&format!("dense GETRF {n}x{n}"), 100, || {
-            let mut m = a.clone();
-            dense::getrf_in_place(&mut m, n).unwrap()
-        });
-        let flops = 2.0 / 3.0 * (n as f64).powi(3);
-        println!("  ~{:.0} Mflop/s", flops / r.median / 1e6);
+        for &d in &[0.5, 1.0] {
+            let a = blocks::dd_block(n, d, n as u64);
+            let r = bench(&format!("scalar GETRF {n}x{n} d={d}"), 100, || {
+                let mut m = a.clone();
+                dense::getrf_in_place(&mut m, n).unwrap()
+            });
+            let flops = kernels::flops::getrf_dense(n);
+            println!("  ~{:.0} Mflop/s", flops / r.median / 1e6);
+            let rt = bench(&format!("tiled  GETRF {n}x{n} d={d}"), 100, || {
+                let mut m = a.clone();
+                tiled::getrf_in_place(&mut m, n).unwrap()
+            });
+            println!("  ~{:.0} Mflop/s ({:.2}x)", flops / rt.median / 1e6, r.median / rt.median);
 
-        let b: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
-        let c: Vec<f64> = (0..n * n).map(|_| rng.signed_unit()).collect();
-        let r = bench(&format!("dense GEMM   {n}x{n}"), 100, || {
-            let mut m = c.clone();
-            dense::gemm_update(&mut m, &a, &b, n, n, n)
-        });
-        let flops = 2.0 * (n as f64).powi(3);
-        println!("  ~{:.0} Mflop/s", flops / r.median / 1e6);
+            let b = blocks::panel(n, n, d, n as u64 + 1);
+            let c = blocks::panel(n, n, 1.0, n as u64 + 2);
+            let r = bench(&format!("scalar GEMM  {n}x{n} d={d}"), 100, || {
+                let mut m = c.clone();
+                dense::gemm_update(&mut m, &a, &b, n, n, n)
+            });
+            let flops = kernels::flops::ssssm_dense(n, n, n);
+            println!("  ~{:.0} Mflop/s", flops / r.median / 1e6);
+            let rt = bench(&format!("tiled  GEMM  {n}x{n} d={d}"), 100, || {
+                let mut m = c.clone();
+                tiled::gemm_update(&mut m, &a, &b, n, n, n)
+            });
+            println!("  ~{:.0} Mflop/s ({:.2}x)", flops / rt.median / 1e6, r.median / rt.median);
+        }
     }
 
     // PJRT artifact path (L1 Pallas kernels through the xla runtime) —

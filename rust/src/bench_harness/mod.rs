@@ -10,6 +10,7 @@
 //! ```
 
 pub mod figures;
+pub mod kernels;
 pub mod matrices;
 pub mod plan;
 pub mod sched;

@@ -17,7 +17,7 @@
 use crate::blocking::partition::BlockedMatrix;
 use crate::gpu_model::{self, CostModel, OpClass};
 use crate::numeric::factor::BlockOp;
-use crate::numeric::kernels::cost;
+use crate::numeric::kernels::flops;
 use crate::numeric::{KernelKind, KernelPolicy};
 use crate::util::Summary;
 
@@ -254,10 +254,10 @@ fn op_cost(bm: &BlockedMatrix, op: BlockOp, policy: &KernelPolicy) -> (OpClass, 
         BlockOp::Getrf { k } => {
             let b = bm.block(bm.block_id(k, k).unwrap());
             match policy.choose(b.density()) {
-                KernelKind::Sparse => (OpClass::SparseFactor, cost::getrf(b), b.nnz() as f64),
+                KernelKind::Sparse => (OpClass::SparseFactor, flops::getrf(b), b.nnz() as f64),
                 KernelKind::Dense => {
                     let n = b.n_cols as f64;
-                    (OpClass::Dense, 2.0 / 3.0 * n * n * n, n * n)
+                    (OpClass::Dense, flops::getrf_dense(b.n_cols as usize), n * n)
                 }
             }
         }
@@ -267,12 +267,16 @@ fn op_cost(bm: &BlockedMatrix, op: BlockOp, policy: &KernelPolicy) -> (OpClass, 
             match policy.choose(d.density().max(t.density())) {
                 KernelKind::Sparse => (
                     OpClass::SparseFactor,
-                    cost::gessm(t, d),
+                    flops::gessm(t, d),
                     (d.nnz() + t.nnz()) as f64,
                 ),
                 KernelKind::Dense => {
                     let (m, n) = (d.n_rows as f64, t.n_cols as f64);
-                    (OpClass::Dense, m * m * n, m * n)
+                    (
+                        OpClass::Dense,
+                        flops::gessm_dense(d.n_rows as usize, t.n_cols as usize),
+                        m * n,
+                    )
                 }
             }
         }
@@ -282,31 +286,40 @@ fn op_cost(bm: &BlockedMatrix, op: BlockOp, policy: &KernelPolicy) -> (OpClass, 
             match policy.choose(d.density().max(t.density())) {
                 KernelKind::Sparse => (
                     OpClass::SparseFactor,
-                    cost::tstrf(t, d),
+                    flops::tstrf(t, d),
                     (d.nnz() + t.nnz()) as f64,
                 ),
                 KernelKind::Dense => {
                     let (m, n) = (t.n_rows as f64, d.n_cols as f64);
-                    (OpClass::Dense, m * n * n, m * n)
+                    (
+                        OpClass::Dense,
+                        flops::tstrf_dense(t.n_rows as usize, d.n_cols as usize),
+                        m * n,
+                    )
                 }
             }
         }
         BlockOp::Ssssm { i, j, k } => {
             let a = bm.block(bm.block_id(i, k).unwrap());
             let b = bm.block(bm.block_id(k, j).unwrap());
-            let c = bm
-                .block_id(i, j)
-                .map(|id| bm.block(id).density())
-                .unwrap_or(0.0);
-            match policy.choose(a.density().max(b.density()).max(c)) {
+            // no target block -> the op is a structural no-op
+            let Some(cid) = bm.block_id(i, j) else {
+                return (OpClass::SparseUpdate, 0.0, 0.0);
+            };
+            let c = bm.block(cid);
+            match policy.choose(a.density().max(b.density()).max(c.density())) {
                 KernelKind::Sparse => (
                     OpClass::SparseUpdate,
-                    cost::ssssm(a, b),
+                    flops::ssssm(a, b, c),
                     (a.nnz() + b.nnz()) as f64,
                 ),
                 KernelKind::Dense => {
-                    let (m, kk, n) = (a.n_rows as f64, a.n_cols as f64, b.n_cols as f64);
-                    (OpClass::Dense, 2.0 * m * kk * n, m * n)
+                    let (m, n) = (a.n_rows as f64, b.n_cols as f64);
+                    (
+                        OpClass::Dense,
+                        flops::ssssm_dense(a.n_rows as usize, a.n_cols as usize, b.n_cols as usize),
+                        m * n,
+                    )
                 }
             }
         }

@@ -14,6 +14,7 @@
 
 use anyhow::{bail, Context, Result};
 use sparselu::bench_harness::{self, SuiteScale};
+use sparselu::numeric::Precision;
 use sparselu::obs;
 use sparselu::ordering::OrderingMethod;
 use sparselu::runtime::PjrtDense;
@@ -55,6 +56,7 @@ fn run() -> Result<()> {
             bench_harness::run(exp, std::path::Path::new(&out), scale)
         }
         "serve-bench" => cmd_serve_bench(&flags),
+        "kernel-bench" => cmd_kernel_bench(&flags),
         "sched-bench" => cmd_sched_bench(&flags),
         "plan-bench" => cmd_plan_bench(&flags),
         "trace" => cmd_trace(&flags),
@@ -79,14 +81,24 @@ USAGE:
   repro bench   <EXPERIMENT|all> [--out DIR] [--scale small|medium]
   repro serve-bench [--matrix SPEC] [--clients K] [--requests N] [--sessions S]
                     [--mix F,S,V] [--tenants M] [--plan-dir DIR] [--out FILE]
-                    [--workers N] [--blocking B]
+                    [--workers N] [--blocking B] [--precision full|mixed]
                     [--metrics-addr HOST:PORT] [--metrics-out FILE] [--autoscale]
+  repro kernel-bench [--reps N] [--out FILE]
   repro sched-bench [--replays N] [--worker-counts 1,2,4] [--out FILE]
   repro plan-bench  [--replays N] [--worker-counts 2,8] [--out FILE]
   repro trace       [--matrix SPEC] [--workers N] [--blocking B] [--replays N] [--out FILE]
   repro trace-bench [--replays N] [--worker-counts 1,4] [--out FILE] [--trace-out FILE]
   repro metrics-dump (--addr HOST:PORT | --file PATH | --trace-summary FILE) [--check]
   repro artifacts-check [--dir artifacts]
+
+KERNEL-BENCH (the dense-kernel raw-speed bench):
+  Scalar oracle vs register-blocked tiled fast path, per kernel (GETRF /
+  TRSM-lower / TRSM-upper / GEMM) x block shape x fill density, best of
+  --reps calls (default 200). The bench asserts bitwise scalar==tiled
+  identity on every row before timing anything — a written
+  BENCH_kernels.json is itself the differential gate passing. Dense-
+  region rows (every dim >= 64, density >= 0.5) carry the headline
+  speedup; results go to --out (default BENCH_kernels.json).
 
 SCHED-BENCH (the scheduler bench):
   Refactorize-storm: many tiny full + partial re-factorizations of small
@@ -114,6 +126,12 @@ SERVE-BENCH (the serving-layer load generator):
   pattern fingerprint through serve::Router to per-tenant shards that
   drain concurrently — per-tenant throughput and p50/p99 land in the
   same JSON under "multi_tenant". --tenants 1 skips it.
+
+  --precision mixed stores factors in f32 (halving factor bandwidth in
+  the refactorize storm) and answers solve requests by f32 triangular
+  solves plus f64 iterative refinement to full accuracy; shards then
+  accept SolveMixed requests and reject plain solves. Default: full
+  (f64 factors, plain solves).
 
   With --metrics-addr a Prometheus-style scrape endpoint (GET /metrics,
   text exposition 0.0.4, plus /healthz) serves the run's per-tenant
@@ -377,6 +395,11 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
     if mix.full + mix.stamp + mix.solve == 0 {
         bail!("--mix needs at least one positive weight");
     }
+    let precision = match flags.get("precision").map(String::as_str) {
+        None | Some("full") => Precision::Full,
+        Some("mixed") => Precision::Mixed,
+        Some(other) => bail!("unknown --precision {other:?} (expected full or mixed)"),
+    };
     let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_serve.json".into());
     println!("matrix: {} n={} nnz={}", spec, a.n_rows(), a.nnz());
 
@@ -431,11 +454,15 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
         pool_sessions: sessions,
         mix,
         seed: 0x5E27E,
+        precision,
     };
     println!(
         "load: {clients} clients x {requests} requests, pool cap {sessions}, \
-         mix full:{} stamp:{} solve:{}",
-        mix.full, mix.stamp, mix.solve
+         mix full:{} stamp:{} solve:{}, precision {}",
+        mix.full,
+        mix.stamp,
+        mix.solve,
+        if precision == Precision::Mixed { "mixed (f32 + refinement)" } else { "full (f64)" }
     );
     let report = loadgen::run(&a, plan, &cfg);
 
@@ -454,6 +481,7 @@ fn cmd_serve_bench(flags: &HashMap<String, String>) -> Result<()> {
                 sessions_per_shard: 1,
                 plan_dir: flags.get("plan-dir").map(std::path::PathBuf::from),
                 registry: Some(registry.clone()),
+                precision,
                 ..RouterConfig::default()
             },
             autoscale: flags.contains_key("autoscale").then(obs::SloPolicy::default),
@@ -660,6 +688,23 @@ fn tenant_matrices(count: usize) -> Vec<(String, Csc)> {
             }
         })
         .collect()
+}
+
+fn cmd_kernel_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let reps: usize = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    if reps < 1 {
+        bail!("--reps must be >= 1");
+    }
+    let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_kernels.json".into());
+    println!(
+        "kernel raw-speed pass: scalar oracle vs tiled fast path, best of {reps} reps \
+         (bitwise identity asserted per row)"
+    );
+    let report = bench_harness::kernels::run(reps);
+    report.print();
+    std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
+    println!("\nwrote {out}");
+    Ok(())
 }
 
 fn cmd_sched_bench(flags: &HashMap<String, String>) -> Result<()> {

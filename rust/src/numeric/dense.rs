@@ -1,32 +1,48 @@
-//! Dense block kernels on column-major buffers.
+//! Dense block kernels on column-major buffers — the portable **scalar
+//! reference** implementation ([`super::KernelImpl::Scalar`]).
 //!
 //! Three roles: (1) CPU implementation of the dense path PanguLU would run
 //! through cuBLAS — selected by [`super::KernelPolicy`] for dense blocks;
-//! (2) correctness oracle for the sparse kernels; (3) the same operations
-//! the AOT Pallas/XLA artifacts implement, so [`crate::runtime`] can swap
-//! them in 1:1 (`getrf_in_place` ↔ `artifacts/getrf_*.hlo.txt`, …).
+//! (2) correctness oracle for both the sparse kernels and the tiled fast
+//! path ([`super::tiled`], checked bit-for-bit by
+//! `tests/kernel_differential.rs`); (3) the same operations the AOT
+//! Pallas/XLA artifacts implement, so [`crate::runtime`] can swap them in
+//! 1:1 (`getrf_in_place` ↔ `artifacts/getrf_*.hlo.txt`, …).
+//!
+//! **Skip-free contract.** These kernels deliberately contain no
+//! value-dependent `== 0` skip branches: every kernel executes the same
+//! fixed multiset of operations for a given shape, in a fixed order
+//! (ascending-`k` rank-1 updates, one subtract of one product at a time).
+//! That makes the scalar path (a) bit-identical to the tiled path, which
+//! executes the identical operation sequence per output element, and
+//! (b) an honest flop baseline for the bench harness (the closed-form
+//! counts in [`super::kernels::flops`] are exact). Zero-skipping belongs
+//! to the *sparse* kernels, where the pattern — not a runtime branch —
+//! encodes the zeros.
 
-use super::kernels::{KernelError, PIVOT_FLOOR};
+use super::kernels::KernelError;
+use super::real::Real;
 
 /// In-place no-pivot LU of a dense `n×n` column-major matrix: on return
 /// the buffer holds `{L\U}` with L's unit diagonal implicit.
-pub fn getrf_in_place(a: &mut [f64], n: usize) -> Result<(), KernelError> {
+pub fn getrf_in_place<T: Real>(a: &mut [T], n: usize) -> Result<(), KernelError> {
     debug_assert_eq!(a.len(), n * n);
     for k in 0..n {
         let pivot = a[k * n + k];
-        if pivot.abs() < PIVOT_FLOOR {
-            return Err(KernelError::ZeroPivot { block: (0, 0), local_col: k, value: pivot });
+        if pivot.abs() < T::PIVOT_FLOOR {
+            return Err(KernelError::ZeroPivot {
+                block: (0, 0),
+                local_col: k,
+                value: pivot.to_f64(),
+            });
         }
-        let inv = 1.0 / pivot;
+        let inv = T::ONE / pivot;
         for i in (k + 1)..n {
             a[k * n + i] *= inv;
         }
         // rank-1 update of the trailing submatrix
         for j in (k + 1)..n {
             let ukj = a[j * n + k];
-            if ukj == 0.0 {
-                continue;
-            }
             let (lcol, tcol) = {
                 let (lo, hi) = a.split_at_mut(j * n);
                 (&lo[k * n..k * n + n], &mut hi[..n])
@@ -41,16 +57,13 @@ pub fn getrf_in_place(a: &mut [f64], n: usize) -> Result<(), KernelError> {
 
 /// `B ← L⁻¹ B` with unit-lower `L` stored in `{L\U}` form (`lu`, `m×m`),
 /// `B` column-major `m×k`. The dense counterpart of GESSM.
-pub fn trsm_lower_unit(lu: &[f64], m: usize, b: &mut [f64], k: usize) {
+pub fn trsm_lower_unit<T: Real>(lu: &[T], m: usize, b: &mut [T], k: usize) {
     debug_assert_eq!(lu.len(), m * m);
     debug_assert_eq!(b.len(), m * k);
     for c in 0..k {
         let col = &mut b[c * m..(c + 1) * m];
         for r in 0..m {
             let alpha = col[r];
-            if alpha == 0.0 {
-                continue;
-            }
             for i in (r + 1)..m {
                 col[i] -= alpha * lu[r * m + i];
             }
@@ -60,16 +73,13 @@ pub fn trsm_lower_unit(lu: &[f64], m: usize, b: &mut [f64], k: usize) {
 
 /// `B ← B U⁻¹` with upper `U` stored in `{L\U}` form (`lu`, `k×k`),
 /// `B` column-major `m×k`. The dense counterpart of TSTRF.
-pub fn trsm_upper_right(lu: &[f64], k: usize, b: &mut [f64], m: usize) {
+pub fn trsm_upper_right<T: Real>(lu: &[T], k: usize, b: &mut [T], m: usize) {
     debug_assert_eq!(lu.len(), k * k);
     debug_assert_eq!(b.len(), m * k);
     for c in 0..k {
         // subtract contributions of previous columns
         for p in 0..c {
             let upc = lu[c * k + p];
-            if upc == 0.0 {
-                continue;
-            }
             let (prev, cur) = {
                 let (lo, hi) = b.split_at_mut(c * m);
                 (&lo[p * m..p * m + m], &mut hi[..m])
@@ -78,7 +88,7 @@ pub fn trsm_upper_right(lu: &[f64], k: usize, b: &mut [f64], m: usize) {
                 cur[i] -= prev[i] * upc;
             }
         }
-        let inv = 1.0 / lu[c * k + c];
+        let inv = T::ONE / lu[c * k + c];
         for i in 0..m {
             b[c * m + i] *= inv;
         }
@@ -87,7 +97,7 @@ pub fn trsm_upper_right(lu: &[f64], k: usize, b: &mut [f64], m: usize) {
 
 /// `C ← C − A·B`, all column-major: `A` is `m×k`, `B` is `k×n`, `C` is
 /// `m×n`. The dense counterpart of SSSSM (and the MXU hot-spot on TPU).
-pub fn gemm_update(c: &mut [f64], a: &[f64], b: &[f64], m: usize, k: usize, n: usize) {
+pub fn gemm_update<T: Real>(c: &mut [T], a: &[T], b: &[T], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -95,9 +105,6 @@ pub fn gemm_update(c: &mut [f64], a: &[f64], b: &[f64], m: usize, k: usize, n: u
         let ccol = &mut c[j * m..(j + 1) * m];
         for p in 0..k {
             let bpj = b[j * k + p];
-            if bpj == 0.0 {
-                continue;
-            }
             let acol = &a[p * m..(p + 1) * m];
             for i in 0..m {
                 ccol[i] -= acol[i] * bpj;
@@ -127,29 +134,13 @@ pub fn lu_multiply(lu: &[f64], n: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::gen;
     use crate::util::Prng;
-
-    fn random_dd(n: usize, seed: u64) -> Vec<f64> {
-        let mut rng = Prng::new(seed);
-        let mut a = vec![0.0; n * n];
-        for j in 0..n {
-            for i in 0..n {
-                if i != j {
-                    a[j * n + i] = rng.signed_unit();
-                }
-            }
-        }
-        for i in 0..n {
-            let row_sum: f64 = (0..n).filter(|&j| j != i).map(|j| a[j * n + i].abs()).sum();
-            a[i * n + i] = row_sum + 1.0;
-        }
-        a
-    }
 
     #[test]
     fn getrf_reconstructs_a() {
         let n = 17;
-        let a = random_dd(n, 1);
+        let a = gen::dense_dd(n, 1);
         let mut lu = a.clone();
         getrf_in_place(&mut lu, n).unwrap();
         let back = lu_multiply(&lu, n);
@@ -167,7 +158,7 @@ mod tests {
     #[test]
     fn trsm_lower_solves() {
         let n = 9;
-        let a = random_dd(n, 2);
+        let a = gen::dense_dd(n, 2);
         let mut lu = a.clone();
         getrf_in_place(&mut lu, n).unwrap();
         let mut rng = Prng::new(3);
@@ -193,11 +184,10 @@ mod tests {
     fn trsm_upper_right_solves() {
         let k = 8;
         let m = 5;
-        let a = random_dd(k, 4);
+        let a = gen::dense_dd(k, 4);
         let mut lu = a.clone();
         getrf_in_place(&mut lu, k).unwrap();
-        let mut rng = Prng::new(5);
-        let x: Vec<f64> = (0..m * k).map(|_| rng.signed_unit()).collect();
+        let x = gen::dense_uniform(m, k, 5);
         // b = X U  (b[i,c] = Σ_p x[i,p] u[p,c])
         let mut b = vec![0.0; m * k];
         for c in 0..k {
@@ -218,10 +208,9 @@ mod tests {
     #[test]
     fn gemm_update_matches_naive() {
         let (m, k, n) = (6, 4, 5);
-        let mut rng = Prng::new(6);
-        let a: Vec<f64> = (0..m * k).map(|_| rng.signed_unit()).collect();
-        let b: Vec<f64> = (0..k * n).map(|_| rng.signed_unit()).collect();
-        let c0: Vec<f64> = (0..m * n).map(|_| rng.signed_unit()).collect();
+        let a = gen::dense_uniform(m, k, 6);
+        let b = gen::dense_uniform(k, n, 7);
+        let c0 = gen::dense_uniform(m, n, 8);
         let mut c = c0.clone();
         gemm_update(&mut c, &a, &b, m, k, n);
         for j in 0..n {
@@ -240,7 +229,7 @@ mod tests {
         // 2x2 block dense LU via the four kernels == full dense LU
         let n = 12;
         let h = 7; // uneven split
-        let a = random_dd(n, 7);
+        let a = gen::dense_dd(n, 7);
         let mut full = a.clone();
         getrf_in_place(&mut full, n).unwrap();
 
@@ -280,5 +269,18 @@ mod tests {
         check(&a12, 0, h, h, n - h);
         check(&a21, h, 0, n - h, h);
         check(&a22, h, h, n - h, n - h);
+    }
+
+    #[test]
+    fn f32_instantiation_compiles_and_solves() {
+        let n = 10;
+        let a64 = gen::dense_dd(n, 9);
+        let mut lu32: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+        getrf_in_place(&mut lu32, n).unwrap();
+        let mut lu64 = a64.clone();
+        getrf_in_place(&mut lu64, n).unwrap();
+        for (g, w) in lu32.iter().zip(&lu64) {
+            assert!((*g as f64 - w).abs() < 1e-4 * w.abs().max(1.0));
+        }
     }
 }

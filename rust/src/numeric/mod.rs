@@ -12,26 +12,70 @@
 //!
 //! Each kernel has a **sparse** implementation ([`kernels`]) operating on
 //! the fixed fill pattern with a dense scatter workspace, and a **dense**
-//! implementation ([`dense`]) used when block density crosses the policy
-//! threshold (PanguLU's sparse/dense kernel selection) — on real hardware
-//! the dense path is the AOT-compiled Pallas/XLA artifact executed through
-//! [`crate::runtime`]; the pure-rust versions here are the CPU fallback and
-//! the correctness oracle.
+//! implementation used when block density crosses the policy threshold
+//! (PanguLU's sparse/dense kernel selection). The dense implementation
+//! itself comes in two flavors selected by [`KernelImpl`]: the portable
+//! scalar reference ([`dense`], the oracle) and the register-blocked,
+//! cache-tiled fast path ([`tiled`]) — order-preserving by construction,
+//! so both produce **bit-identical** f64 results (proved continuously by
+//! `tests/kernel_differential.rs`). On real hardware the dense path is
+//! the AOT-compiled Pallas/XLA artifact executed through
+//! [`crate::runtime`]; the pure-rust versions here are the CPU fallback
+//! and the correctness oracle.
+//!
+//! All kernels are generic over [`Real`] (`f64`/`f32`): the f32
+//! instantiation backs the opt-in mixed-precision replay mode
+//! ([`Precision::Mixed`] — f32 block factorization, f64 iterative
+//! refinement in [`trisolve`]).
 
 pub mod dense;
 pub mod factor;
 pub mod kernels;
+pub mod real;
+pub mod tiled;
 pub mod trisolve;
 pub mod trisolve_t;
 
 pub use factor::{factorize_sequential, FactorError, Factors, NumericMatrix};
 pub use kernels::Workspace;
+pub use real::Real;
 
 /// Which kernel implementation a block operation should use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelKind {
     Sparse,
     Dense,
+}
+
+/// Which *dense-path* implementation executes a dense block op.
+///
+/// Both produce bit-identical f64 results: the tiled kernels preserve the
+/// scalar kernels' per-element operation order exactly (ascending-`k`
+/// rank-1 updates, one subtract of one product at a time, scaling at the
+/// same sequence point) — the speedup comes from register/cache reuse,
+/// not from reassociation. The scalar path survives as the oracle the
+/// differential rig checks the fast path against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelImpl {
+    /// Portable scalar reference kernels ([`dense`]).
+    Scalar,
+    /// Register-blocked, cache-tiled microkernels ([`tiled`]) — the
+    /// default fast path.
+    #[default]
+    Tiled,
+}
+
+/// Numeric precision the block factorization runs in.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// f64 storage end to end (the default, bit-exactness-bearing path).
+    #[default]
+    Full,
+    /// f32 block factorization (half the factor-storage bandwidth — the
+    /// replay-storm saver) with f64 iterative refinement in the solves.
+    /// Opt-in via [`crate::session::SolverSession::set_precision`] or the
+    /// serve layer's precision routing.
+    Mixed,
 }
 
 /// Sparse-vs-dense kernel selection policy (PanguLU's kernel selection):
@@ -45,11 +89,18 @@ pub struct KernelPolicy {
     pub force_dense: bool,
     /// Route dense ops through the PJRT runtime artifacts when loaded.
     pub use_runtime: bool,
+    /// Scalar reference vs tiled fast path for the dense kernels.
+    pub imp: KernelImpl,
 }
 
 impl Default for KernelPolicy {
     fn default() -> Self {
-        Self { dense_threshold: 0.30, force_dense: false, use_runtime: false }
+        Self {
+            dense_threshold: 0.30,
+            force_dense: false,
+            use_runtime: false,
+            imp: KernelImpl::default(),
+        }
     }
 }
 
@@ -76,5 +127,11 @@ mod tests {
         assert_eq!(p.choose(0.95), KernelKind::Dense);
         let f = KernelPolicy { force_dense: true, ..Default::default() };
         assert_eq!(f.choose(0.0), KernelKind::Dense);
+    }
+
+    #[test]
+    fn tiled_is_the_default_dense_impl() {
+        assert_eq!(KernelPolicy::default().imp, KernelImpl::Tiled);
+        assert_eq!(Precision::default(), Precision::Full);
     }
 }

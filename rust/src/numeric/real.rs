@@ -1,0 +1,80 @@
+//! The scalar abstraction behind the mixed-precision kernels: every block
+//! kernel (sparse and dense, scalar and tiled) is generic over [`Real`],
+//! instantiated at `f64` (the default, bit-exactness-bearing path) and
+//! `f32` (the bandwidth-saving replay path behind
+//! [`crate::numeric::Precision::Mixed`]).
+//!
+//! The trait is deliberately tiny — constants, `abs`, and f64 conversion
+//! — so the kernel bodies read exactly like their former f64-only selves
+//! and the monomorphized f64 code is instruction-identical to what the
+//! hand-written kernels compiled to.
+
+use core::fmt::{Debug, Display};
+use core::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// IEEE-754 scalar the numeric kernels are generic over (`f64` / `f32`).
+pub trait Real:
+    Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Debug
+    + Display
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Pivot magnitude below which the no-pivot factorization aborts —
+    /// scaled to the type's range (`1e-300` for f64, `1e-30` for f32: an
+    /// f32 pivot below that is indistinguishable from a cancelled zero).
+    const PIVOT_FLOOR: Self;
+    fn abs(self) -> Self;
+    fn to_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+}
+
+impl Real for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const PIVOT_FLOOR: Self = 1e-300;
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+}
+
+impl Real for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const PIVOT_FLOOR: Self = 1e-30;
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+}

@@ -1,0 +1,405 @@
+//! Register-blocked, cache-tiled dense kernels — the
+//! [`super::KernelImpl::Tiled`] fast path.
+//!
+//! # The order-preservation contract
+//!
+//! Every kernel here executes, **per output element**, exactly the same
+//! sequence of IEEE-754 operations as its scalar counterpart in
+//! [`super::dense`]: rank-`k` contributions arrive in ascending `k`, one
+//! `x ← x − a·b` subtract of one product at a time, with pivot
+//! reciprocals/scales applied at the same sequence point. The speedup
+//! comes purely from *where* the intermediate values live (registers
+//! instead of a memory round-trip per update) and *which* elements are
+//! interleaved (a register tile of independent outputs instead of one
+//! column) — both invisible to IEEE semantics. rustc performs no
+//! floating-point contraction by default, so `acc - av*b` never fuses
+//! into an FMA the scalar path didn't execute. Consequence: Scalar and
+//! Tiled are **bit-identical**, for f64 and f32 alike — enforced by the
+//! unit tests below, `tests/kernel_differential.rs`, and the in-bench
+//! identity gate of `repro kernel-bench`.
+//!
+//! # Microkernel layout
+//!
+//! ```text
+//!            NR=4 columns of B/C
+//!           ┌────┬────┬────┬────┐          acc[t][r]: NR×MR accumulator
+//!   MR=8 ┌──┤ c₀ │ c₁ │ c₂ │ c₃ │          block held in registers for
+//!   rows │A │    │    │    │    │          the whole p-loop; each A
+//!        └──┴────┴────┴────┴────┘          column load is reused NR×.
+//!         ▲ p ascending (k-loop) — the order the scalar kernel uses
+//! ```
+//!
+//! `gemm_panel` is the one microkernel; the three level-3 solves
+//! (`trsm_lower_unit`, `trsm_upper_right`) and the blocked LU
+//! (`getrf_in_place`) reduce their off-panel work to it, packing the
+//! small operand into scratch when it would alias the output buffer.
+//! Panel width 32 keeps the active panel + accumulators inside L1/L2 for
+//! the block sizes the irregular blocking produces (§5.2 dense regions).
+
+use super::kernels::KernelError;
+use super::real::Real;
+
+/// Register tile height (rows of C per accumulator block).
+pub const MR: usize = 8;
+/// Register tile width (columns of C per accumulator block).
+pub const NR: usize = 4;
+/// Cache panel width for the blocked TRSM/LU drivers.
+pub const PANEL: usize = 32;
+
+/// `C ← C − A·B` on column-major sub-matrices with independent leading
+/// dimensions: `C` is `m×n` (ld `ldc`), `A` is `m×k` (ld `lda`), `B` is
+/// `k×n` (ld `ldb`). Per output element the `p`-loop ascends exactly like
+/// [`super::dense::gemm_update`]'s.
+pub fn gemm_panel<T: Real>(
+    c: &mut [T],
+    ldc: usize,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut j0 = 0;
+    // main column tiles: NR columns of C updated together
+    while j0 + NR <= n {
+        let bcol: [&[T]; NR] =
+            core::array::from_fn(|t| &b[(j0 + t) * ldb..(j0 + t) * ldb + k]);
+        let mut i0 = 0;
+        while i0 + MR <= m {
+            // load the MR×NR accumulator tile
+            let mut acc = [[T::ZERO; MR]; NR];
+            for t in 0..NR {
+                let cc = &c[(j0 + t) * ldc + i0..(j0 + t) * ldc + i0 + MR];
+                for r in 0..MR {
+                    acc[t][r] = cc[r];
+                }
+            }
+            for p in 0..k {
+                let av_s = &a[p * lda + i0..p * lda + i0 + MR];
+                let mut av = [T::ZERO; MR];
+                for r in 0..MR {
+                    av[r] = av_s[r];
+                }
+                for t in 0..NR {
+                    let bpj = bcol[t][p];
+                    for r in 0..MR {
+                        acc[t][r] = acc[t][r] - av[r] * bpj;
+                    }
+                }
+            }
+            for t in 0..NR {
+                let cc = &mut c[(j0 + t) * ldc + i0..(j0 + t) * ldc + i0 + MR];
+                for r in 0..MR {
+                    cc[r] = acc[t][r];
+                }
+            }
+            i0 += MR;
+        }
+        // row remainder of the full-width column tile: scalar register
+        // accumulation, p still ascending per element
+        for t in 0..NR {
+            let bc = bcol[t];
+            for i in i0..m {
+                let mut acc = c[(j0 + t) * ldc + i];
+                for p in 0..k {
+                    acc = acc - a[p * lda + i] * bc[p];
+                }
+                c[(j0 + t) * ldc + i] = acc;
+            }
+        }
+        j0 += NR;
+    }
+    // column remainder: one column at a time, p ascending per element
+    for j in j0..n {
+        let bc = &b[j * ldb..j * ldb + k];
+        for i in 0..m {
+            let mut acc = c[j * ldc + i];
+            for p in 0..k {
+                acc = acc - a[p * lda + i] * bc[p];
+            }
+            c[j * ldc + i] = acc;
+        }
+    }
+}
+
+/// `C ← C − A·B` on whole column-major buffers — drop-in (bit-identical)
+/// replacement for [`super::dense::gemm_update`].
+pub fn gemm_update<T: Real>(c: &mut [T], a: &[T], b: &[T], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    gemm_panel(c, m, a, m, b, k, m, k, n);
+}
+
+/// Blocked `B ← L⁻¹ B` (unit-lower `{L\U}` `lu`, `m×m`; `B` `m×k`) —
+/// bit-identical to [`super::dense::trsm_lower_unit`].
+///
+/// Row panels of width [`PANEL`]: the triangular part of each panel runs
+/// scalar (it is O(PANEL²·k) work), then everything below the panel is a
+/// rank-PANEL [`gemm_panel`] — with the solved panel rows packed into
+/// scratch, because B is both the gemm's right operand and its output.
+pub fn trsm_lower_unit<T: Real>(lu: &[T], m: usize, b: &mut [T], k: usize) {
+    debug_assert_eq!(lu.len(), m * m);
+    debug_assert_eq!(b.len(), m * k);
+    let mut pack: Vec<T> = Vec::new();
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + PANEL).min(m);
+        // triangular solve inside the panel (updates from rows < r0
+        // already applied by earlier panels' gemm)
+        for c in 0..k {
+            let col = &mut b[c * m..(c + 1) * m];
+            for r in r0..r1 {
+                let alpha = col[r];
+                for i in (r + 1)..r1 {
+                    col[i] -= alpha * lu[r * m + i];
+                }
+            }
+        }
+        if r1 < m {
+            let rb = r1 - r0;
+            // pack solved panel rows (gemm right operand) out of B
+            pack.clear();
+            pack.resize(rb * k, T::ZERO);
+            for c in 0..k {
+                for t in 0..rb {
+                    pack[c * rb + t] = b[c * m + r0 + t];
+                }
+            }
+            // rows below the panel: B[r1.., :] −= L[r1.., r0..r1]·pack
+            let a_sub = &lu[r0 * m + r1..];
+            let c_sub = &mut b[r1..];
+            gemm_panel(c_sub, m, a_sub, m, &pack, rb, m - r1, rb, k);
+        }
+        r0 = r1;
+    }
+}
+
+/// Blocked `B ← B U⁻¹` (upper `{L\U}` `lu`, `k×k`; `B` `m×k`) —
+/// bit-identical to [`super::dense::trsm_upper_right`].
+///
+/// Column panels of width [`PANEL`]: contributions of all columns before
+/// the panel arrive via one [`gemm_panel`] (`split_at_mut` separates the
+/// finished columns from the panel, U block read straight out of `lu`
+/// with `ldb = k`), then the intra-panel dependencies run scalar.
+pub fn trsm_upper_right<T: Real>(lu: &[T], k: usize, b: &mut [T], m: usize) {
+    debug_assert_eq!(lu.len(), k * k);
+    debug_assert_eq!(b.len(), m * k);
+    let mut c0 = 0;
+    while c0 < k {
+        let c1 = (c0 + PANEL).min(k);
+        if c0 > 0 {
+            // panel −= B[:, 0..c0] · U[0..c0, c0..c1]
+            let (prev, rest) = b.split_at_mut(c0 * m);
+            let c_sub = &mut rest[..(c1 - c0) * m];
+            let b_sub = &lu[c0 * k..];
+            gemm_panel(c_sub, m, prev, m, b_sub, k, m, c0, c1 - c0);
+        }
+        for c in c0..c1 {
+            for p in c0..c {
+                let upc = lu[c * k + p];
+                let (lo, hi) = b.split_at_mut(c * m);
+                let prev = &lo[p * m..p * m + m];
+                let cur = &mut hi[..m];
+                for i in 0..m {
+                    cur[i] -= prev[i] * upc;
+                }
+            }
+            let inv = T::ONE / lu[c * k + c];
+            for i in 0..m {
+                b[c * m + i] *= inv;
+            }
+        }
+        c0 = c1;
+    }
+}
+
+/// Blocked in-place no-pivot LU of a dense `n×n` column-major matrix —
+/// bit-identical to [`super::dense::getrf_in_place`], including which
+/// column a [`KernelError::ZeroPivot`] is reported for.
+///
+/// LAPACK-style right-looking panels of width [`PANEL`]:
+/// 1. factor the panel columns against each other (scalar rank-1s, full
+///    column height — pivots checked in ascending column order, exactly
+///    where the scalar kernel checks them);
+/// 2. finish the U rows of the trailing columns (scalar small-triangular
+///    solve against the panel's unit-lower part);
+/// 3. one rank-PANEL [`gemm_panel`] for the Schur complement, with the
+///    freshly-solved U panel packed to scratch (it lives in the same
+///    columns as the gemm output) and `split_at_mut` at the panel/
+///    trailing column boundary separating the L operand from the output.
+pub fn getrf_in_place<T: Real>(a: &mut [T], n: usize) -> Result<(), KernelError> {
+    debug_assert_eq!(a.len(), n * n);
+    let mut upack: Vec<T> = Vec::new();
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + PANEL).min(n);
+        // 1. panel factorization (columns k0..k1, rows k0..n)
+        for kk in k0..k1 {
+            let pivot = a[kk * n + kk];
+            if pivot.abs() < T::PIVOT_FLOOR {
+                return Err(KernelError::ZeroPivot {
+                    block: (0, 0),
+                    local_col: kk,
+                    value: pivot.to_f64(),
+                });
+            }
+            let inv = T::ONE / pivot;
+            for i in (kk + 1)..n {
+                a[kk * n + i] *= inv;
+            }
+            for j in (kk + 1)..k1 {
+                let ukj = a[j * n + kk];
+                let (lo, hi) = a.split_at_mut(j * n);
+                let lcol = &lo[kk * n..kk * n + n];
+                let tcol = &mut hi[..n];
+                for i in (kk + 1)..n {
+                    tcol[i] -= lcol[i] * ukj;
+                }
+            }
+        }
+        if k1 < n {
+            let nb = k1 - k0;
+            // 2. U rows of the trailing columns: unit-lower solve against
+            // the panel (rows r in k0..k1, ascending — the order the
+            // scalar rank-1 cascade applies them)
+            for j in k1..n {
+                for r in k0..k1 {
+                    let ujr = a[j * n + r];
+                    let (lo, hi) = a.split_at_mut(j * n);
+                    let lcol = &lo[r * n..r * n + n];
+                    let col = &mut hi[..n];
+                    for i in (r + 1)..k1 {
+                        col[i] -= lcol[i] * ujr;
+                    }
+                }
+            }
+            // 3. Schur complement of the trailing matrix
+            upack.clear();
+            upack.resize(nb * (n - k1), T::ZERO);
+            for jj in 0..(n - k1) {
+                for t in 0..nb {
+                    upack[jj * nb + t] = a[(k1 + jj) * n + k0 + t];
+                }
+            }
+            let (lo, hi) = a.split_at_mut(k1 * n);
+            let a_sub = &lo[k0 * n + k1..];
+            let c_sub = &mut hi[k1..];
+            gemm_panel(c_sub, n, a_sub, n, &upack, nb, n - k1, nb, n - k1);
+        }
+        k0 = k1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::dense;
+    use crate::sparse::gen;
+
+    /// Exercises edge tiles: below/above MR, NR, PANEL, and non-multiples.
+    const SIZES: &[usize] = &[1, 2, 3, 5, 8, 13, 17, 31, 32, 33, 64, 70];
+
+    fn assert_bits_eq(got: &[f64], want: &[f64], what: &str) {
+        assert_eq!(got.len(), want.len());
+        for (p, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "{what}: bit mismatch at {p}: {g:?} vs {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_bitwise_matches_scalar() {
+        for &m in SIZES {
+            for &(k, n) in &[(m, m), (7, 11), (1, 1), (33, 5)] {
+                let a = gen::dense_uniform(m, k, 100 + m as u64);
+                let b = gen::dense_uniform(k, n, 200 + m as u64);
+                let c0 = gen::dense_uniform(m, n, 300 + m as u64);
+                let mut c_t = c0.clone();
+                let mut c_s = c0;
+                gemm_update(&mut c_t, &a, &b, m, k, n);
+                dense::gemm_update(&mut c_s, &a, &b, m, k, n);
+                assert_bits_eq(&c_t, &c_s, &format!("gemm {m}x{k}x{n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn getrf_bitwise_matches_scalar() {
+        for &n in SIZES {
+            let a = gen::dense_dd(n, 40 + n as u64);
+            let mut lu_t = a.clone();
+            let mut lu_s = a;
+            getrf_in_place(&mut lu_t, n).unwrap();
+            dense::getrf_in_place(&mut lu_s, n).unwrap();
+            assert_bits_eq(&lu_t, &lu_s, &format!("getrf n={n}"));
+        }
+    }
+
+    #[test]
+    fn trsm_lower_bitwise_matches_scalar() {
+        for &m in SIZES {
+            let mut lu = gen::dense_dd(m, 50 + m as u64);
+            dense::getrf_in_place(&mut lu, m).unwrap();
+            for &k in &[1usize, 3, 16, 40] {
+                let b0 = gen::dense_uniform(m, k, 60 + (m * k) as u64);
+                let mut b_t = b0.clone();
+                let mut b_s = b0;
+                trsm_lower_unit(&lu, m, &mut b_t, k);
+                dense::trsm_lower_unit(&lu, m, &mut b_s, k);
+                assert_bits_eq(&b_t, &b_s, &format!("trsm_lower m={m} k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_upper_bitwise_matches_scalar() {
+        for &k in SIZES {
+            let mut lu = gen::dense_dd(k, 70 + k as u64);
+            dense::getrf_in_place(&mut lu, k).unwrap();
+            for &m in &[1usize, 5, 24, 40] {
+                let b0 = gen::dense_uniform(m, k, 80 + (m * k) as u64);
+                let mut b_t = b0.clone();
+                let mut b_s = b0;
+                trsm_upper_right(&lu, k, &mut b_t, m);
+                dense::trsm_upper_right(&lu, k, &mut b_s, m);
+                assert_bits_eq(&b_t, &b_s, &format!("trsm_upper m={m} k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn getrf_reports_same_pivot_failure_as_scalar() {
+        // singular leading 2x2 inside a larger matrix: both paths must
+        // fail at the same local column
+        let n = 40;
+        let mut a = gen::dense_dd(n, 90);
+        // force exact cancellation at column 1
+        for i in 0..n {
+            a[n + i] = a[i]; // col 1 := col 0
+        }
+        let mut a_t = a.clone();
+        let err_t = getrf_in_place(&mut a_t, n).unwrap_err();
+        let err_s = dense::getrf_in_place(&mut a, n).unwrap_err();
+        assert_eq!(err_t, err_s);
+    }
+
+    #[test]
+    fn f32_bitwise_matches_scalar_f32() {
+        let n = 48;
+        let a: Vec<f32> = gen::dense_dd(n, 91).iter().map(|&v| v as f32).collect();
+        let mut lu_t = a.clone();
+        let mut lu_s = a;
+        getrf_in_place(&mut lu_t, n).unwrap();
+        dense::getrf_in_place(&mut lu_s, n).unwrap();
+        for (g, w) in lu_t.iter().zip(&lu_s) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+}

@@ -97,6 +97,105 @@ pub fn solve(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Solve `L U x = b` against **single-precision** factors — the
+/// correction solve of mixed-precision iterative refinement.
+///
+/// `nm` must have been demoted with
+/// [`NumericMatrix::set_precision`]`(Mixed)` and factorized since; the
+/// f32 factor values are promoted to f64 at the point of use, so the
+/// substitution arithmetic itself runs in f64 (only the factors carry
+/// single-precision error). Traversal and entry-level operation order
+/// match [`solve`] exactly.
+pub fn solve_mixed(nm: &NumericMatrix, b: &[f64]) -> Vec<f64> {
+    let bm = &*nm.structure;
+    let n = bm.blocking.n();
+    assert_eq!(b.len(), n);
+    let store = nm.values32();
+    let positions = bm.blocking.positions();
+    let nb = bm.nb();
+    let mut x = b.to_vec();
+
+    // ---- forward: L y = b ----
+    for k in 0..nb {
+        let (lo, hi) = (positions[k], positions[k + 1]);
+        let did = bm.block_id(k, k).expect("diagonal block");
+        let dpat = bm.block(did);
+        let dvals = read_vals(&store[did as usize]);
+        for c in 0..(hi - lo) {
+            let alpha = x[lo + c];
+            if alpha == 0.0 {
+                continue;
+            }
+            let (s, e) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
+            let rows = &dpat.row_idx[s..e];
+            let dstart = dpat.diag_pos[c] as usize + 1;
+            for t in dstart..rows.len() {
+                x[lo + rows[t] as usize] -= alpha * dvals[s + t] as f64;
+            }
+        }
+        drop(dvals);
+        for &id in &bm.by_col[k] {
+            let blk = bm.block(id);
+            let i = blk.bi as usize;
+            if i <= k {
+                continue;
+            }
+            let rlo = positions[i];
+            let vals = read_vals(&store[id as usize]);
+            for c in 0..blk.n_cols as usize {
+                let alpha = x[lo + c];
+                if alpha == 0.0 {
+                    continue;
+                }
+                for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {
+                    x[rlo + blk.row_idx[t] as usize] -= alpha * vals[t] as f64;
+                }
+            }
+        }
+    }
+
+    // ---- backward: U x = y ----
+    for k in (0..nb).rev() {
+        let (lo, hi) = (positions[k], positions[k + 1]);
+        let did = bm.block_id(k, k).expect("diagonal block");
+        let dpat = bm.block(did);
+        let dvals = read_vals(&store[did as usize]);
+        for c in (0..(hi - lo)).rev() {
+            let (s, e) = (dpat.col_ptr[c] as usize, dpat.col_ptr[c + 1] as usize);
+            let rows = &dpat.row_idx[s..e];
+            let dpos = dpat.diag_pos[c] as usize;
+            let xc = x[lo + c] / dvals[s + dpos] as f64;
+            x[lo + c] = xc;
+            if xc == 0.0 {
+                continue;
+            }
+            for t in 0..dpos {
+                x[lo + rows[t] as usize] -= xc * dvals[s + t] as f64;
+            }
+        }
+        drop(dvals);
+        for &id in &bm.by_col[k] {
+            let blk = bm.block(id);
+            let i = blk.bi as usize;
+            if i >= k {
+                continue;
+            }
+            let rlo = positions[i];
+            let vals = read_vals(&store[id as usize]);
+            for c in 0..blk.n_cols as usize {
+                let xc = x[lo + c];
+                if xc == 0.0 {
+                    continue;
+                }
+                for t in blk.col_ptr[c] as usize..blk.col_ptr[c + 1] as usize {
+                    x[rlo + blk.row_idx[t] as usize] -= xc * vals[t] as f64;
+                }
+            }
+        }
+    }
+    x
+}
+
 /// Solve `L U X = B` for several right-hand sides in one blocked sweep.
 ///
 /// The factor blocks are traversed **once per block column** instead of

@@ -29,7 +29,8 @@
 //! [`refactorize_partial`]: crate::session::SolverSession::refactorize_partial
 
 use crate::numeric::factor::FactorError;
-use crate::session::{ChangeSet, SolverSession};
+use crate::numeric::Precision;
+use crate::session::{ChangeSet, RefineError, SolverSession};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -43,6 +44,12 @@ pub enum Request {
     Stamp { changes: ChangeSet },
     /// Solve `A x = b` against the current factors.
     Solve { rhs: Vec<f64> },
+    /// Solve `A x = b` on a [`Precision::Mixed`] shard: triangular replay
+    /// against the f32 factors plus f64 iterative refinement
+    /// ([`SolverSession::solve_refined`]). Valid only on batchers
+    /// configured with [`Batcher::with_precision`]`(Mixed)`; rejected
+    /// with [`ServeError::PrecisionMismatch`] elsewhere.
+    SolveMixed { rhs: Vec<f64> },
 }
 
 /// Request discriminant carried on reports.
@@ -51,6 +58,7 @@ pub enum RequestKind {
     Refactorize,
     Stamp,
     Solve,
+    SolveMixed,
 }
 
 /// Admission priority class. Priority is **admission-only**: it decides
@@ -98,6 +106,17 @@ pub enum ServeError {
     /// The factorization itself failed (zero pivot, out-of-pattern
     /// stamp, …).
     Factor(FactorError),
+    /// A solve request's precision mode does not match the serving
+    /// session's: a plain [`Request::Solve`] on a mixed-precision shard
+    /// (its f64 storage holds no current factors) or a
+    /// [`Request::SolveMixed`] on a full-precision shard (no f32 factors
+    /// exist). Routing is per-shard, so the client should resubmit to a
+    /// shard configured for the precision it wants.
+    PrecisionMismatch { request_needs: Precision, session_at: Precision },
+    /// Mixed-precision iterative refinement failed to converge — the
+    /// system is too ill-conditioned for f32 factors. The client should
+    /// retry the solve against a [`Precision::Full`] shard.
+    Refine(RefineError),
     /// A stamp's coordinates no longer match the tenant's pattern — the
     /// client's matrix has drifted. After `strikes` reaches the router's
     /// drift-storm threshold a background plan build for the drifted
@@ -132,6 +151,12 @@ impl std::fmt::Display for ServeError {
                 write!(f, "stamp value index {index} out of range (pattern nnz = {nnz})")
             }
             ServeError::Factor(e) => write!(f, "factorization failed: {e}"),
+            ServeError::PrecisionMismatch { request_needs, session_at } => write!(
+                f,
+                "request needs a {request_needs:?}-precision session, shard serves \
+                 {session_at:?}"
+            ),
+            ServeError::Refine(e) => write!(f, "{e}"),
             ServeError::PatternDrift { tenant, drifted, strikes } => {
                 write!(
                     f,
@@ -183,6 +208,10 @@ pub struct ServeReport {
     /// same id, so a slow request can be matched to its exact tasks in a
     /// `/trace` export. `0` when tracing was off at execution time.
     pub trace_id: u64,
+    /// [`Request::SolveMixed`] only: iterative-refinement corrections
+    /// applied to reach the accuracy target (0 = the raw mixed solve
+    /// already met it). `None` for every other request kind.
+    pub refine_iterations: Option<usize>,
 }
 
 /// Bounded, coalescing request queue over one session.
@@ -203,6 +232,11 @@ pub struct Batcher {
     /// Coalesce consecutive stamp requests into one merged change set
     /// (one dirty-block closure, one pruned replay) before executing.
     coalesce_stamps: bool,
+    /// Factorization precision this batcher's drains run sessions at.
+    /// [`Batcher::drain`] aligns the checked-out session to it before
+    /// executing anything, so every session of a shard's pool converges
+    /// to the shard's configured mode.
+    precision: Precision,
     queue: VecDeque<(Request, Instant)>,
 }
 
@@ -217,8 +251,26 @@ impl Batcher {
             low_limit: capacity,
             partial_threshold: 0.5,
             coalesce_stamps: true,
+            precision: Precision::Full,
             queue: VecDeque::new(),
         }
+    }
+
+    /// Serve at `precision`. Under [`Precision::Mixed`] every
+    /// refactorize/stamp runs the f32 kernels (half the value-memory
+    /// traffic on the bandwidth-bound replay path) and clients solve via
+    /// [`Request::SolveMixed`], which recovers full f64 accuracy by
+    /// iterative refinement. Plain [`Request::Solve`]s are rejected with
+    /// [`ServeError::PrecisionMismatch`] on a mixed batcher (there are
+    /// no f64 factors to solve against), and vice versa.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// The precision this batcher drains sessions at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Override the partial-vs-full routing threshold (fraction of DAG
@@ -331,6 +383,14 @@ impl Batcher {
         &mut self,
         session: &mut SolverSession<'_>,
     ) -> Vec<Result<ServeReport, ServeError>> {
+        // align the checked-out session to the shard's configured
+        // precision before executing anything. A flip invalidates the
+        // session's factors (the other precision's storage is stale), so
+        // the first request after a reconfiguration must be a
+        // Refactorize — solves and stamps before one get NotFactored.
+        if session.precision() != self.precision {
+            session.set_precision(self.precision);
+        }
         let mut outcomes = Vec::with_capacity(self.queue.len());
         while let Some((request, submitted)) = self.queue.pop_front() {
             // one trace id per executed batch: every DAG task the batch
@@ -346,6 +406,13 @@ impl Batcher {
             match request {
                 Request::Solve { rhs } => {
                     let n = session.plan().n();
+                    if self.precision != Precision::Full {
+                        outcomes.push(Err(ServeError::PrecisionMismatch {
+                            request_needs: Precision::Full,
+                            session_at: self.precision,
+                        }));
+                        continue;
+                    }
                     if !session.is_factored() {
                         outcomes.push(Err(ServeError::NotFactored));
                         continue;
@@ -387,8 +454,53 @@ impl Batcher {
                             went_partial: false,
                             solution: Some(x),
                             trace_id,
+                            refine_iterations: None,
                         }));
                     }
+                }
+                Request::SolveMixed { rhs } => {
+                    // no multi-RHS coalescing here: refinement is a
+                    // per-RHS fixed-point iteration (each right-hand side
+                    // converges in its own number of corrections), and
+                    // the per-solve residual SpMV dominates the shared
+                    // pattern-walk savings batching would buy
+                    if self.precision != Precision::Mixed {
+                        outcomes.push(Err(ServeError::PrecisionMismatch {
+                            request_needs: Precision::Mixed,
+                            session_at: self.precision,
+                        }));
+                        continue;
+                    }
+                    if !session.is_factored() {
+                        outcomes.push(Err(ServeError::NotFactored));
+                        continue;
+                    }
+                    let n = session.plan().n();
+                    if rhs.len() != n {
+                        outcomes.push(Err(ServeError::WrongValueCount {
+                            got: rhs.len(),
+                            want: n,
+                        }));
+                        continue;
+                    }
+                    let start = Instant::now();
+                    let result = session.solve_refined(&rhs);
+                    let exec_seconds = start.elapsed().as_secs_f64();
+                    let outcome = result
+                        .map(|refined| ServeReport {
+                            kind: RequestKind::SolveMixed,
+                            queue_seconds: start.duration_since(submitted).as_secs_f64(),
+                            exec_seconds,
+                            batch_size: 1,
+                            tasks_executed: 0,
+                            tasks_skipped: 0,
+                            went_partial: false,
+                            solution: Some(refined.x),
+                            trace_id,
+                            refine_iterations: Some(refined.iterations),
+                        })
+                        .map_err(ServeError::Refine);
+                    outcomes.push(outcome);
                 }
                 Request::Refactorize { values } => {
                     let want = session.plan().nnz_a();
@@ -412,6 +524,7 @@ impl Batcher {
                         went_partial: false,
                         solution: None,
                         trace_id,
+                        refine_iterations: None,
                     });
                     outcomes.push(outcome.map_err(ServeError::from));
                 }
@@ -483,6 +596,7 @@ impl Batcher {
                                     went_partial: go_partial,
                                     solution: None,
                                     trace_id,
+                                    refine_iterations: None,
                                 }));
                             }
                         }
@@ -742,6 +856,91 @@ mod tests {
         assert_eq!(b.low_priority_limit(), 3);
         b.submit(rhs()).unwrap();
         b.submit_with_priority(rhs(), Priority::Low).unwrap();
+    }
+
+    #[test]
+    fn mixed_batcher_serves_refined_solves_end_to_end() {
+        let a = gen::grid2d_laplacian(10, 10);
+        let mut s = session_for(&a);
+        let mut b = Batcher::new(8).with_precision(Precision::Mixed);
+        assert_eq!(b.precision(), Precision::Mixed);
+        let rhs: Vec<f64> = (0..100).map(|i| (i % 9) as f64 - 4.0).collect();
+        b.submit(Request::Refactorize { values: a.values.clone() }).unwrap();
+        b.submit(Request::SolveMixed { rhs: rhs.clone() }).unwrap();
+        let outcomes = b.drain(&mut s);
+        assert_eq!(outcomes.len(), 2);
+        assert_eq!(s.precision(), Precision::Mixed, "drain aligned the session");
+        assert!(outcomes[0].is_ok(), "refactorize seeds the f32 factors");
+        let solve = outcomes[1].as_ref().unwrap();
+        assert_eq!(solve.kind, RequestKind::SolveMixed);
+        assert_eq!(solve.batch_size, 1, "mixed solves never coalesce");
+        assert!(solve.refine_iterations.is_some());
+        let x = solve.solution.as_ref().unwrap();
+        assert!(
+            crate::sparse::residual(&a, x, &rhs) <= 1e-11,
+            "refined solution reaches full accuracy"
+        );
+    }
+
+    #[test]
+    fn precision_mismatch_is_rejected_both_ways() {
+        let a = gen::grid2d_laplacian(6, 6);
+        let rhs = vec![1.0; 36];
+        // plain solve on a mixed shard: no f64 factors to solve against
+        let mut s = session_for(&a);
+        let mut b = Batcher::new(4).with_precision(Precision::Mixed);
+        b.submit(Request::Refactorize { values: a.values.clone() }).unwrap();
+        b.submit(Request::Solve { rhs: rhs.clone() }).unwrap();
+        let outcomes = b.drain(&mut s);
+        assert!(outcomes[0].is_ok());
+        assert!(matches!(
+            outcomes[1],
+            Err(ServeError::PrecisionMismatch {
+                request_needs: Precision::Full,
+                session_at: Precision::Mixed,
+            })
+        ));
+        // mixed solve on a full shard: no f32 factors exist
+        let mut s = session_for(&a);
+        let mut b = Batcher::new(4);
+        b.submit(Request::Refactorize { values: a.values.clone() }).unwrap();
+        b.submit(Request::SolveMixed { rhs }).unwrap();
+        let outcomes = b.drain(&mut s);
+        assert!(outcomes[0].is_ok());
+        assert!(matches!(
+            outcomes[1],
+            Err(ServeError::PrecisionMismatch {
+                request_needs: Precision::Mixed,
+                session_at: Precision::Full,
+            })
+        ));
+    }
+
+    #[test]
+    fn refinement_divergence_surfaces_as_a_refine_error() {
+        // the ill-conditioned bidiagonal from the session tests: every
+        // pivot is exactly 1.0 in both precisions, so the only failure
+        // mode is the refinement fixed point diverging (κ·ε₃₂ ≫ 1) —
+        // which must come back as a per-request ServeError, not a panic
+        let n = 30;
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 1.0);
+            if i + 1 < n {
+                coo.push(i, i + 1, -2.1);
+            }
+        }
+        let a = coo.to_csc();
+        let mut s = session_for(&a);
+        let mut b = Batcher::new(4).with_precision(Precision::Mixed);
+        b.submit(Request::Refactorize { values: a.values.clone() }).unwrap();
+        b.submit(Request::SolveMixed { rhs: vec![1.0; n] }).unwrap();
+        let outcomes = b.drain(&mut s);
+        assert!(outcomes[0].is_ok(), "the f32 factorization itself succeeds");
+        assert!(matches!(
+            outcomes[1],
+            Err(ServeError::Refine(crate::session::RefineError::Diverged { .. }))
+        ));
     }
 
     #[test]

@@ -25,6 +25,7 @@
 use super::batcher::{Request, ServeError, ServeReport};
 use super::pool::SessionPool;
 use super::router::{Router, RouterConfig, TenantId};
+use crate::numeric::Precision;
 use crate::session::{ChangeSet, FactorPlan, SolverSession};
 use crate::solver::SolveOptions;
 use crate::sparse::Csc;
@@ -86,6 +87,12 @@ pub struct LoadgenConfig {
     pub mix: ScenarioMix,
     /// PRNG seed (per-client streams derive from it deterministically).
     pub seed: u64,
+    /// Factor-storage precision for the pooled sessions.
+    /// [`Precision::Mixed`] makes the solve scenario run f32-factor
+    /// triangular solves with f64 iterative refinement
+    /// ([`SolverSession::solve_refined`]); full and stamp scenarios
+    /// re-factorize into the f32 shadow storage.
+    pub precision: Precision,
 }
 
 impl Default for LoadgenConfig {
@@ -96,6 +103,7 @@ impl Default for LoadgenConfig {
             pool_sessions: 4,
             mix: ScenarioMix::default(),
             seed: 0x5E27E,
+            precision: Precision::Full,
         }
     }
 }
@@ -145,6 +153,16 @@ pub struct LoadgenReport {
     pub overall: LatencyStats,
     /// Per-scenario latency, keyed `full` / `stamp` / `solve`.
     pub per_scenario: Vec<(&'static str, LatencyStats)>,
+    /// Factor-storage precision the run was driven at.
+    pub precision: Precision,
+}
+
+/// JSON-schema name of a precision mode.
+fn precision_name(p: Precision) -> &'static str {
+    match p {
+        Precision::Full => "full",
+        Precision::Mixed => "mixed",
+    }
 }
 
 impl LoadgenReport {
@@ -168,6 +186,7 @@ impl LoadgenReport {
             concat!(
                 "{{\n",
                 "  \"bench\": \"serve\",\n",
+                "  \"precision\": \"{}\",\n",
                 "  \"matrix\": \"{}\", \"n\": {}, \"nnz\": {},\n",
                 "  \"clients\": {}, \"pool_sessions\": {}, ",
                 "\"sessions_created\": {},\n",
@@ -179,6 +198,7 @@ impl LoadgenReport {
                 "  \"scenarios\": [\n{}\n  ]\n",
                 "}}\n"
             ),
+            precision_name(self.precision),
             matrix_name,
             n,
             nnz,
@@ -235,6 +255,12 @@ pub fn run(a: &Csc, plan: Arc<FactorPlan>, cfg: &LoadgenConfig) -> LoadgenReport
                         let scenario = cfg.mix.pick(rng.below(mix_total as usize) as u32);
                         let start = Instant::now();
                         let mut session = pool.checkout();
+                        // pooled sessions start at Precision::Full; a mixed
+                        // run converts each on first touch (the flip drops
+                        // the factors, so ensure_factored re-seeds below)
+                        if session.precision() != cfg.precision {
+                            session.set_precision(cfg.precision);
+                        }
                         let (mut executed, mut skipped) = (0usize, 0usize);
                         match scenario {
                             Scenario::Full => {
@@ -269,8 +295,15 @@ pub fn run(a: &Csc, plan: Arc<FactorPlan>, cfg: &LoadgenConfig) -> LoadgenReport
                                 let (e0, s0) = ensure_factored(&mut session, a);
                                 let b: Vec<f64> =
                                     (0..n).map(|_| rng.signed_unit()).collect();
-                                let x = session.solve(&b);
-                                std::hint::black_box(&x);
+                                if cfg.precision == Precision::Mixed {
+                                    let refined = session
+                                        .solve_refined(&b)
+                                        .expect("refinement converges on suite matrices");
+                                    std::hint::black_box(&refined.x);
+                                } else {
+                                    let x = session.solve(&b);
+                                    std::hint::black_box(&x);
+                                }
                                 executed = e0;
                                 skipped = s0;
                             }
@@ -317,6 +350,7 @@ pub fn run(a: &Csc, plan: Arc<FactorPlan>, cfg: &LoadgenConfig) -> LoadgenReport
         tasks_skipped,
         overall: LatencyStats::of(&mut overall),
         per_scenario,
+        precision: cfg.precision,
     }
 }
 
@@ -400,6 +434,9 @@ pub struct MultiTenantReport {
     /// Latency over every completed request of every tenant.
     pub overall: LatencyStats,
     pub per_tenant: Vec<TenantBench>,
+    /// Factor-storage precision every shard served at
+    /// ([`RouterConfig::precision`]).
+    pub precision: Precision,
 }
 
 impl MultiTenantReport {
@@ -440,6 +477,7 @@ impl MultiTenantReport {
             concat!(
                 "{{\n",
                 "  \"bench\": \"serve-multi\",\n",
+                "  \"precision\": \"{}\",\n",
                 "  \"clients\": {}, \"tenants\": {}, ",
                 "\"total_requests\": {}, \"wall_seconds\": {:.6}, ",
                 "\"throughput_rps\": {:.3},\n",
@@ -451,6 +489,7 @@ impl MultiTenantReport {
                 "  \"per_tenant\": [\n{}\n  ]\n",
                 "}}\n"
             ),
+            precision_name(self.precision),
             self.clients,
             self.tenants,
             self.total_requests,
@@ -548,9 +587,18 @@ pub fn run_multi(
                                             changes: ChangeSet::from_value_indices([(k, nv)]),
                                         }
                                     }
-                                    Scenario::Solve => Request::Solve {
-                                        rhs: (0..n).map(|_| rng.signed_unit()).collect(),
-                                    },
+                                    Scenario::Solve => {
+                                        // route to the request kind the shard's
+                                        // precision accepts — a mismatch would be
+                                        // a hard ServeError::PrecisionMismatch
+                                        let rhs =
+                                            (0..n).map(|_| rng.signed_unit()).collect();
+                                        if cfg.router.precision == Precision::Mixed {
+                                            Request::SolveMixed { rhs }
+                                        } else {
+                                            Request::Solve { rhs }
+                                        }
+                                    }
                                 }
                             };
                             // closed loop with backpressure: a ShardFull
@@ -633,6 +681,7 @@ pub fn run_multi(
         router: router.stats(),
         overall: LatencyStats::of(&mut overall),
         per_tenant,
+        precision: cfg.router.precision,
     }
 }
 
@@ -703,6 +752,48 @@ mod tests {
         assert!(json.contains("\"tenant\": \"bbd-200\""));
         assert!(json.contains("\"tenant\": \"grid-9x9\""));
         assert!(json.contains("\"per_tenant\""));
+    }
+
+    #[test]
+    fn mixed_precision_loadgen_runs_refined_solves() {
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 200, ..Default::default() });
+        let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
+        let cfg = LoadgenConfig {
+            clients: 2,
+            requests_per_client: 6,
+            pool_sessions: 1,
+            precision: Precision::Mixed,
+            ..Default::default()
+        };
+        let report = run(&a, plan, &cfg);
+        assert_eq!(report.total_requests, 12);
+        assert_eq!(report.precision, Precision::Mixed);
+        let json = report.to_json("bbd-200", a.n_rows(), a.nnz());
+        assert!(json.contains("\"precision\": \"mixed\""));
+    }
+
+    #[test]
+    fn multi_tenant_loadgen_routes_mixed_solves() {
+        let tenants = vec![
+            ("bbd-200".to_string(), gen::circuit_bbd(gen::CircuitParams {
+                n: 200,
+                ..Default::default()
+            })),
+            ("grid-9x9".to_string(), gen::grid2d_laplacian(9, 9)),
+        ];
+        let cfg = MultiTenantConfig {
+            clients: 2,
+            requests_per_client: 8,
+            burst: 2,
+            mix: ScenarioMix { full: 1, stamp: 1, solve: 6 },
+            router: RouterConfig { precision: Precision::Mixed, ..RouterConfig::default() },
+            ..Default::default()
+        };
+        let report = run_multi(&tenants, &SolveOptions::ours(1), &cfg);
+        assert_eq!(report.total_requests, 16);
+        let errors: usize = report.per_tenant.iter().map(|t| t.errors).sum();
+        assert_eq!(errors, 0, "mixed solves converge and match the shard precision");
+        assert!(report.to_json().contains("\"precision\": \"mixed\""));
     }
 
     #[test]

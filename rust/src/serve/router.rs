@@ -67,6 +67,7 @@ use super::persist;
 use super::pool::{PoolMetrics, SessionPool};
 use crate::coordinator::Executor;
 use crate::numeric::factor::FactorError;
+use crate::numeric::Precision;
 use crate::obs::{self, Counter, Gauge, Histogram, HistogramSnapshot, Registry};
 use crate::session::{ChangeSet, FactorPlan, PlanCache, PlanReport, SharedPlanCache};
 use crate::solver::SolveOptions;
@@ -105,6 +106,13 @@ pub struct RouterConfig {
     /// Change-set batching across timesteps, forwarded to each shard's
     /// [`Batcher`].
     pub coalesce_stamps: bool,
+    /// Factorization precision every shard serves at, forwarded to each
+    /// shard's [`Batcher`]. Under [`Precision::Mixed`] refactorizes and
+    /// stamps run the f32 kernels and clients solve via
+    /// [`Request::SolveMixed`] (f64 accuracy recovered by iterative
+    /// refinement); plain solves are rejected with
+    /// [`ServeError::PrecisionMismatch`].
+    pub precision: Precision,
     /// Consecutive out-of-pattern stamps from one tenant before
     /// [`Router::submit_stamp_coords`] treats the drift as a storm and
     /// spins the drifted pattern up in the background
@@ -131,6 +139,7 @@ impl Default for RouterConfig {
             sessions_per_shard: 1,
             partial_threshold: 0.5,
             coalesce_stamps: true,
+            precision: Precision::Full,
             drift_storm_threshold: 3,
             plan_dir: None,
             registry: None,
@@ -152,8 +161,12 @@ pub struct TenantStats {
     pub errored: usize,
     /// Completed requests by kind.
     pub solves: usize,
+    pub mixed_solves: usize,
     pub stamps: usize,
     pub fulls: usize,
+    /// Summed refinement corrections across completed mixed solves
+    /// (`mixed_solves` divides this into a mean).
+    pub refine_iterations: usize,
     /// DAG tasks executed / skipped on this tenant's behalf (coalesced
     /// runs counted once — see [`ServeReport::tasks_executed`]).
     pub tasks_executed: usize,
@@ -171,9 +184,11 @@ impl TenantStats {
                     self.completed += 1;
                     match rep.kind {
                         RequestKind::Solve => self.solves += 1,
+                        RequestKind::SolveMixed => self.mixed_solves += 1,
                         RequestKind::Stamp => self.stamps += 1,
                         RequestKind::Refactorize => self.fulls += 1,
                     }
+                    self.refine_iterations += rep.refine_iterations.unwrap_or(0);
                     self.tasks_executed += rep.tasks_executed;
                     self.tasks_skipped += rep.tasks_skipped;
                     self.queue_seconds += rep.queue_seconds;
@@ -383,6 +398,7 @@ struct ShardMetrics {
     batch_size: Histogram,
     tasks_executed: Counter,
     tasks_skipped: Counter,
+    refine_iterations: Histogram,
 }
 
 impl ShardMetrics {
@@ -453,6 +469,12 @@ impl ShardMetrics {
                 "DAG tasks skipped by reachability pruning on the tenant's behalf",
                 labels,
             ),
+            refine_iterations: registry.histogram(
+                "sparselu_refine_iterations",
+                "Iterative-refinement corrections per mixed-precision solve",
+                labels,
+                &obs::BATCH_BUCKETS,
+            ),
         }
     }
 
@@ -477,6 +499,9 @@ impl ShardMetrics {
                                 self.queue_wait.observe(rep.queue_seconds);
                                 self.tasks_executed.add(rep.tasks_executed as u64);
                                 self.tasks_skipped.add(rep.tasks_skipped as u64);
+                                if let Some(iters) = rep.refine_iterations {
+                                    self.refine_iterations.observe(iters as f64);
+                                }
                             }
                             Err(_) => self.errored.inc(),
                         }
@@ -781,7 +806,8 @@ impl Router {
     ) -> Arc<Shard> {
         let batcher = Batcher::new(self.cfg.shard_queue)
             .with_partial_threshold(self.cfg.partial_threshold)
-            .with_stamp_coalescing(self.cfg.coalesce_stamps);
+            .with_stamp_coalescing(self.cfg.coalesce_stamps)
+            .with_precision(self.cfg.precision);
         let serving = OnceLock::new();
         if let Some(plan) = plan {
             let tenant_label = ShardMetrics::label_of(tenant);

@@ -72,4 +72,7 @@ pub mod session;
 pub use cache::{PlanCache, SharedPlanCache};
 pub use changeset::ChangeSet;
 pub use plan::{FactorPlan, PlanReport};
-pub use session::{PartialEstimate, RefactorReport, SolverSession};
+pub use session::{
+    PartialEstimate, RefactorReport, RefineError, RefinedSolve, SolverSession, REFINE_MAX_ITERS,
+    REFINE_TARGET,
+};

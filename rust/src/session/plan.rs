@@ -14,6 +14,7 @@ use crate::blocking::{
 };
 use crate::coordinator::{par_chunks, simulate, Executor, Placement, SimReport, TaskDag};
 use crate::numeric::factor::{BlockOp, FactorError, NumericMatrix};
+use crate::numeric::Precision;
 use crate::ordering::{order, Permutation};
 use crate::solver::{BlockingPolicy, SolveOptions};
 use crate::sparse::Csc;
@@ -457,6 +458,11 @@ impl FactorPlan {
     /// preallocated blocked storage: zero fill, then one store per
     /// nonzero through the precomputed map. No allocation, no symbolic
     /// work, no index search.
+    ///
+    /// Precision-aware: when `nm` has been demoted to
+    /// [`Precision::Mixed`], values are rounded to `f32` and scattered
+    /// into the single-precision shadow storage instead — that is the
+    /// storage the next factorization pass reads and overwrites.
     pub fn scatter_values(&self, values: &[f64], nm: &mut NumericMatrix) {
         assert_eq!(
             values.len(),
@@ -465,8 +471,21 @@ impl FactorPlan {
              (a plan built for one-shot use has no scatter map)"
         );
         nm.zero_values();
-        for ((&b, &off), &v) in self.scatter_block.iter().zip(&self.scatter_off).zip(values) {
-            nm.values_mut(b)[off as usize] = v;
+        match nm.precision {
+            Precision::Full => {
+                for ((&b, &off), &v) in
+                    self.scatter_block.iter().zip(&self.scatter_off).zip(values)
+                {
+                    nm.values_mut(b)[off as usize] = v;
+                }
+            }
+            Precision::Mixed => {
+                for ((&b, &off), &v) in
+                    self.scatter_block.iter().zip(&self.scatter_off).zip(values)
+                {
+                    nm.values32_mut(b)[off as usize] = v as f32;
+                }
+            }
         }
     }
 
@@ -491,10 +510,48 @@ impl FactorPlan {
     pub(crate) fn rescatter_block(&self, b: u32, values: &[f64], nm: &mut NumericMatrix) {
         let reach = self.reach();
         nm.zero_block(b);
-        let vals = nm.values_mut(b);
-        for &k in reach.a_indices_of(b) {
-            vals[self.scatter_off[k as usize] as usize] = values[k as usize];
+        match nm.precision {
+            Precision::Full => {
+                let vals = nm.values_mut(b);
+                for &k in reach.a_indices_of(b) {
+                    vals[self.scatter_off[k as usize] as usize] = values[k as usize];
+                }
+            }
+            Precision::Mixed => {
+                let vals = nm.values32_mut(b);
+                for &k in reach.a_indices_of(b) {
+                    vals[self.scatter_off[k as usize] as usize] = values[k as usize] as f32;
+                }
+            }
         }
+    }
+
+    /// Original-matrix coordinates of every A-nonzero, in the CSC order
+    /// of the value vectors clients hand to
+    /// [`crate::session::SolverSession::refactorize`]: entry `k` of the
+    /// result is the `(row, col)` of value `k` in the **unpermuted** `A`.
+    ///
+    /// Recovered purely from the scatter map and the blocked structure —
+    /// the plan never stores `A` itself. Used by iterative refinement to
+    /// compute f64 residuals `b − A·x` from the session's retained value
+    /// vector without the client re-supplying the pattern. O(nnz·log w)
+    /// with `w` the block width; call once and cache.
+    pub fn value_coords(&self) -> Vec<(u32, u32)> {
+        let positions = self.structure.blocking.positions();
+        let inv = self.iperm.as_slice();
+        let mut out = Vec::with_capacity(self.scatter_block.len());
+        for (&b, &off) in self.scatter_block.iter().zip(&self.scatter_off) {
+            let blk = self.structure.block(b);
+            let off = off as usize;
+            // local column: last col whose slice starts at or before `off`
+            let c = blk.col_ptr.partition_point(|&p| p as usize <= off) - 1;
+            let r = blk.row_idx[off] as usize;
+            // permuted coordinates, then back through new → old
+            let rp = positions[blk.bi as usize] + r;
+            let cp = positions[blk.bj as usize] + c;
+            out.push((inv[rp] as u32, inv[cp] as u32));
+        }
+        out
     }
 }
 
@@ -714,6 +771,68 @@ mod tests {
             assert_eq!(pr.block_out, sr.block_out, "workers={workers}");
             assert_eq!(pr.scatter_ptr, sr.scatter_ptr, "workers={workers}");
             assert_eq!(pr.scatter_a, sr.scatter_a, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn value_coords_recover_the_original_matrix() {
+        // SpMV assembled purely from (coords, values) must equal the
+        // sparse product — i.e. the coordinates recovered from the
+        // scatter map round-trip through permutation and blocking
+        let a = gen::circuit_bbd(gen::CircuitParams { n: 260, ..Default::default() });
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap();
+        let coords = plan.value_coords();
+        assert_eq!(coords.len(), a.nnz());
+        let n = a.n_cols();
+        let x: Vec<f64> = (0..n).map(|i| 0.5 + (i % 7) as f64).collect();
+        let mut y = vec![0.0; n];
+        for (&(r, c), &v) in coords.iter().zip(&a.values) {
+            y[r as usize] += v * x[c as usize];
+        }
+        let want = a.mul_vec(&x);
+        for i in 0..n {
+            assert!(
+                (y[i] - want[i]).abs() <= 1e-12 * want[i].abs().max(1.0),
+                "row {i}: {} vs {}",
+                y[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_scatter_targets_f32_storage() {
+        use crate::numeric::Precision;
+        let a = gen::grid2d_laplacian(9, 9);
+        let plan = FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap();
+        let mut nm = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
+        nm.set_precision(Precision::Mixed);
+        plan.scatter_values(&a.values, &mut nm);
+        // the f32 shadow holds the demoted values at the same offsets the
+        // f64 path would use
+        let mut full = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
+        full.set_precision(Precision::Full);
+        plan.scatter_values(&a.values, &mut full);
+        for id in 0..plan.structure.blocks.len() {
+            let lo = crate::numeric::factor::read_vals(&nm.values32()[id]);
+            let hi = full.block_values(id as u32);
+            assert_eq!(lo.len(), hi.len(), "block {id}");
+            for (g, w) in lo.iter().zip(hi.iter()) {
+                assert_eq!(*g, *w as f32, "block {id}");
+            }
+        }
+        // block-granular rescatter produces the same f32 storage
+        let mut bw = NumericMatrix::from_blocked_zeroed(plan.structure.clone());
+        bw.set_precision(Precision::Mixed);
+        for b in 0..plan.structure.blocks.len() {
+            plan.rescatter_block(b as u32, &a.values, &mut bw);
+        }
+        for id in 0..plan.structure.blocks.len() {
+            assert_eq!(
+                *crate::numeric::factor::read_vals(&bw.values32()[id]),
+                *crate::numeric::factor::read_vals(&nm.values32()[id]),
+                "block {id}"
+            );
         }
     }
 

@@ -350,6 +350,86 @@ pub fn dense_rows_cols(n: usize, dense_idx: &[usize], base_deg: usize, seed: u64
     finish_diag_dominant(n, &mut coo, 1.0)
 }
 
+/// Dense column-major diagonally-dominant `n×n` buffer — the shared seed
+/// for dense-kernel unit tests, the kernel differential rig, and the
+/// kernel bench harness (replaces the `random_dd` helpers that used to be
+/// duplicated in `numeric/dense.rs` tests).
+pub fn dense_dd(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    let mut a = vec![0.0; n * n];
+    for j in 0..n {
+        for i in 0..n {
+            if i != j {
+                a[j * n + i] = rng.signed_unit();
+            }
+        }
+    }
+    for i in 0..n {
+        let row_sum: f64 = (0..n).filter(|&j| j != i).map(|j| a[j * n + i].abs()).sum();
+        a[i * n + i] = row_sum + 1.0;
+    }
+    a
+}
+
+/// Dense column-major `m×n` buffer of uniform `[-1, 1)` values (panel
+/// operand generator for the TRSM/GEMM differential tests and benches).
+pub fn dense_uniform(m: usize, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    (0..m * n).map(|_| rng.signed_unit()).collect()
+}
+
+/// [`dense_dd`] with each off-diagonal entry kept with probability
+/// `density` (the rest stay structural zeros in the dense buffer). The
+/// diagonal is always present and re-dominates whatever survives, so the
+/// matrix is nonsingular at every density — the knob the kernel bench and
+/// differential rig turn to emulate sparse-fill vs dense-region blocks
+/// flowing into the dense kernels.
+pub fn dense_dd_density(n: usize, density: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    let mut a = vec![0.0; n * n];
+    for j in 0..n {
+        for i in 0..n {
+            if i != j && rng.f64() < density {
+                a[j * n + i] = rng.signed_unit();
+            }
+        }
+    }
+    for i in 0..n {
+        let row_sum: f64 = (0..n).filter(|&j| j != i).map(|j| a[j * n + i].abs()).sum();
+        a[i * n + i] = row_sum + 1.0;
+    }
+    a
+}
+
+/// [`dense_uniform`] with each entry kept with probability `density`
+/// (`density` = 0.0 gives the all-zero "empty pattern" panel the
+/// differential rig uses as a degenerate case).
+pub fn dense_uniform_density(m: usize, n: usize, density: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Prng::new(seed);
+    (0..m * n)
+        .map(|_| {
+            // consume the keep/value draws unconditionally so streams at
+            // different densities stay aligned per entry
+            let keep = rng.f64() < density;
+            let v = rng.signed_unit();
+            if keep {
+                v
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Fraction of nonzero entries in a dense buffer (the *achieved* density
+/// the bench records next to the requested one).
+pub fn buffer_density(buf: &[f64]) -> f64 {
+    if buf.is_empty() {
+        return 0.0;
+    }
+    buf.iter().filter(|v| **v != 0.0).count() as f64 / buf.len() as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,5 +591,29 @@ mod tests {
         let a = directed_graph(100, 3, 42);
         let b = directed_graph(100, 3, 42);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn density_generators_hit_their_targets() {
+        let n = 64;
+        for &d in &[0.0, 0.25, 0.5, 1.0] {
+            let a = dense_dd_density(n, d, 7);
+            // the diagonal is always present and dominant
+            for i in 0..n {
+                let off: f64 =
+                    (0..n).filter(|&j| j != i).map(|j| a[j * n + i].abs()).sum();
+                assert!(a[i * n + i] > off, "row {i} not dominant at density {d}");
+            }
+            let achieved = buffer_density(&a);
+            // n/(n*n) diagonal floor, Bernoulli noise on the rest
+            assert!(
+                (achieved - (d * (1.0 - 1.0 / n as f64) + 1.0 / n as f64)).abs() < 0.08,
+                "density {d}: achieved {achieved}"
+            );
+            let p = dense_uniform_density(48, 32, d, 9);
+            assert!((buffer_density(&p) - d).abs() < 0.08);
+        }
+        assert_eq!(dense_uniform_density(8, 8, 0.0, 1), vec![0.0; 64]);
+        assert!(buffer_density(&dense_dd_density(n, 1.0, 3)) > 0.99, "density 1 fills");
     }
 }

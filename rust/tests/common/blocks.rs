@@ -1,0 +1,83 @@
+//! Block-shape/density generators shared by the kernel differential rig
+//! (`tests/kernel_differential.rs`), the kernel micro-bench
+//! (`benches/kernels.rs`), and the property suite (`tests/proptests.rs`).
+//!
+//! The dense buffers come from the crate's seeded generators
+//! ([`gen::dense_dd_density`] / [`gen::dense_uniform_density`]) so every
+//! consumer draws from the same distribution; this module adds the shape
+//! suites (square / tall / wide / 1×1 / empty-pattern) and seeded random
+//! shape drawing for the property tests.
+#![allow(dead_code)]
+
+use sparselu::sparse::gen;
+use sparselu::util::Prng;
+
+/// GETRF sizes: 1×1 degenerate, sub-register-tile, exact register-tile
+/// multiples, off-multiples that exercise the tail paths, and
+/// dense-region sizes.
+pub const GETRF_SIZES: &[usize] = &[1, 2, 3, 5, 8, 13, 16, 31, 32, 33, 64, 96];
+
+/// Panel shapes `(rows, cols)` for the TRSM kernels: square, tall, wide,
+/// single-row/column degenerates.
+pub const PANEL_SHAPES: &[(usize, usize)] =
+    &[(1, 1), (1, 7), (7, 1), (8, 8), (5, 13), (13, 5), (32, 32), (48, 9), (9, 48), (64, 64)];
+
+/// GEMM shapes `(m, k, n)`: square, tall, wide, rank-1 (`k = 1`), thin
+/// inner dimension, and register-tile off-multiples.
+pub const GEMM_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (8, 8, 8),
+    (7, 3, 5),
+    (33, 17, 9),
+    (64, 1, 64),
+    (64, 64, 64),
+    (96, 32, 96),
+    (13, 64, 13),
+];
+
+/// Fill densities the rig sweeps: empty pattern (all structural zeros),
+/// sparse fill, the dense-kernel selection threshold region, full.
+pub const DENSITIES: &[f64] = &[0.0, 0.25, 0.5, 1.0];
+
+/// Diagonally-dominant `n×n` block at the given off-diagonal density
+/// (nonsingular at every density — the diagonal always dominates).
+pub fn dd_block(n: usize, density: f64, seed: u64) -> Vec<f64> {
+    gen::dense_dd_density(n, density, seed)
+}
+
+/// `m×n` panel at the given density (`0.0` gives the all-zero
+/// empty-pattern panel).
+pub fn panel(m: usize, n: usize, density: f64, seed: u64) -> Vec<f64> {
+    gen::dense_uniform_density(m, n, density, seed)
+}
+
+/// Achieved nonzero fraction of a buffer.
+pub fn density_of(buf: &[f64]) -> f64 {
+    gen::buffer_density(buf)
+}
+
+/// Seed-derived random GEMM shape + density for property tests: each
+/// dimension in `1..=max_dim`, density drawn from [`DENSITIES`].
+pub fn random_gemm_case(seed: u64, max_dim: usize) -> (usize, usize, usize, f64) {
+    let mut rng = Prng::new(seed);
+    let m = 1 + rng.below(max_dim);
+    let k = 1 + rng.below(max_dim);
+    let n = 1 + rng.below(max_dim);
+    let d = DENSITIES[rng.below(DENSITIES.len())];
+    (m, k, n, d)
+}
+
+/// Seed-derived random square size + density for GETRF property tests.
+pub fn random_getrf_case(seed: u64, max_dim: usize) -> (usize, f64) {
+    let mut rng = Prng::new(seed);
+    // never 0-density off-diagonals alone decide singularity — dd_block
+    // keeps the diagonal dominant at every density
+    (1 + rng.below(max_dim), DENSITIES[rng.below(DENSITIES.len())])
+}
+
+/// Bitwise equality of two f64 buffers — the differential rig's
+/// comparator (exact equality of bit patterns, not approximate closeness).
+pub fn bits_equal(a: &[f64], b: &[f64]) -> Option<usize> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).position(|(x, y)| x.to_bits() != y.to_bits())
+}

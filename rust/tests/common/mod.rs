@@ -8,6 +8,8 @@ use sparselu::session::FactorPlan;
 use sparselu::sparse::{Coo, Csc};
 use sparselu::util::Prng;
 
+pub mod blocks;
+
 /// Random diagonally-dominant sparse matrix with seed-derived size.
 pub fn random_matrix(seed: u64) -> Csc {
     let mut rng = Prng::new(seed);

@@ -1,0 +1,222 @@
+//! Kernel differential rig: proves the tiled fast path bit-identical to
+//! the scalar oracle.
+//!
+//! # The ordering contract
+//!
+//! The tiled kernels in `numeric::tiled` are pure *loop-order and data
+//! re-layouts* of the scalar reference kernels in `numeric::dense`: for
+//! every output element they execute the exact same sequence of IEEE-754
+//! operations (same multiplies, same adds, same order of accumulation)
+//! as the scalar kernel does for that element. Register blocking changes
+//! *which elements* are in flight together, never the per-element
+//! reduction order. Because IEEE-754 arithmetic is deterministic, that
+//! makes `Tiled` and `Scalar` outputs equal not just approximately but
+//! **bit for bit** — so this suite compares with `to_bits()`, and any
+//! regression that perturbs accumulation order (e.g. a horizontal-sum
+//! "optimization") fails loudly instead of slipping under an epsilon.
+//!
+//! The sweep covers square / tall / wide / 1×1 shapes, dense and sparse
+//! fills, and the empty pattern (density 0.0), in both f64 and f32, plus
+//! a whole-factorization differential through the public `Solver` API.
+//! Shared shape/density suites live in `tests/common/blocks.rs`.
+
+mod common;
+
+use common::blocks;
+use sparselu::numeric::{dense, tiled, KernelImpl};
+use sparselu::solver::{SolveOptions, Solver};
+use sparselu::util::Prng;
+
+/// Bitwise comparison with a diagnostic that names the kernel, shape,
+/// density, and first mismatching flat index.
+fn assert_bits(kernel: &str, shape: &str, density: f64, scalar: &[f64], tiled: &[f64]) {
+    if let Some(i) = blocks::bits_equal(scalar, tiled) {
+        panic!(
+            "{kernel} {shape} density {density}: tiled diverges from scalar at \
+             flat index {i} (scalar {:e} vs tiled {:e}) — the order-preservation \
+             contract is broken",
+            scalar[i], tiled[i]
+        );
+    }
+}
+
+/// A diagonally-dominant block factored in place by the *scalar* oracle —
+/// both TRSM paths are handed the same LU input, so any divergence is
+/// theirs alone.
+fn factored_block(n: usize, seed: u64) -> Vec<f64> {
+    let mut lu = blocks::dd_block(n, 1.0, seed);
+    dense::getrf_in_place(&mut lu, n).expect("diagonally dominant blocks factor");
+    lu
+}
+
+#[test]
+fn getrf_tiled_matches_scalar_bitwise() {
+    for (case, &n) in blocks::GETRF_SIZES.iter().enumerate() {
+        for &d in blocks::DENSITIES {
+            let a = blocks::dd_block(n, d, 0xD1F + case as u64);
+            let mut s = a.clone();
+            let mut t = a;
+            dense::getrf_in_place(&mut s, n).expect("scalar getrf on dd block");
+            tiled::getrf_in_place(&mut t, n).expect("tiled getrf on dd block");
+            assert_bits("getrf", &format!("{n}x{n}"), d, &s, &t);
+        }
+    }
+}
+
+#[test]
+fn trsm_lower_tiled_matches_scalar_bitwise() {
+    for (case, &(m, k)) in blocks::PANEL_SHAPES.iter().enumerate() {
+        let lu = factored_block(m, 0x10_0 + case as u64);
+        for &d in blocks::DENSITIES {
+            let b = blocks::panel(m, k, d, 0x20_0 + case as u64);
+            let mut s = b.clone();
+            let mut t = b;
+            dense::trsm_lower_unit(&lu, m, &mut s, k);
+            tiled::trsm_lower_unit(&lu, m, &mut t, k);
+            assert_bits("trsm_lower_unit", &format!("{m}x{k}"), d, &s, &t);
+        }
+    }
+}
+
+#[test]
+fn trsm_upper_tiled_matches_scalar_bitwise() {
+    for (case, &(m, k)) in blocks::PANEL_SHAPES.iter().enumerate() {
+        let lu = factored_block(k, 0x30_0 + case as u64);
+        for &d in blocks::DENSITIES {
+            let b = blocks::panel(m, k, d, 0x40_0 + case as u64);
+            let mut s = b.clone();
+            let mut t = b;
+            dense::trsm_upper_right(&lu, k, &mut s, m);
+            tiled::trsm_upper_right(&lu, k, &mut t, m);
+            assert_bits("trsm_upper_right", &format!("{m}x{k}"), d, &s, &t);
+        }
+    }
+}
+
+#[test]
+fn gemm_tiled_matches_scalar_bitwise() {
+    for (case, &(m, k, n)) in blocks::GEMM_SHAPES.iter().enumerate() {
+        for &d in blocks::DENSITIES {
+            let a = blocks::panel(m, k, d, 0x50_0 + case as u64);
+            let b = blocks::panel(k, n, d, 0x60_0 + case as u64);
+            let c = blocks::panel(m, n, 1.0, 0x70_0 + case as u64);
+            let mut s = c.clone();
+            let mut t = c;
+            dense::gemm_update(&mut s, &a, &b, m, k, n);
+            tiled::gemm_update(&mut t, &a, &b, m, k, n);
+            assert_bits("gemm_update", &format!("{m}x{k}x{n}"), d, &s, &t);
+        }
+    }
+}
+
+/// Empty-pattern inputs: an all-zero GEMM update must leave C untouched
+/// (bitwise, including signed zeros) on both paths, and an all-zero TRSM
+/// panel must stay all zero.
+#[test]
+fn empty_pattern_blocks_are_fixed_points() {
+    let (m, k, n) = (17, 9, 23);
+    let a = blocks::panel(m, k, 0.0, 1);
+    let b = blocks::panel(k, n, 0.0, 2);
+    let c = blocks::panel(m, n, 1.0, 3);
+    let mut s = c.clone();
+    let mut t = c.clone();
+    dense::gemm_update(&mut s, &a, &b, m, k, n);
+    tiled::gemm_update(&mut t, &a, &b, m, k, n);
+    assert_bits("gemm_update", "empty A,B", 0.0, &c, &s);
+    assert_bits("gemm_update", "empty A,B", 0.0, &c, &t);
+
+    let lu = factored_block(m, 4);
+    let mut zs = vec![0.0; m * k];
+    let mut zt = vec![0.0; m * k];
+    dense::trsm_lower_unit(&lu, m, &mut zs, k);
+    tiled::trsm_lower_unit(&lu, m, &mut zt, k);
+    assert!(zs.iter().all(|v| *v == 0.0), "scalar trsm invents values from a zero panel");
+    assert_bits("trsm_lower_unit", "empty panel", 0.0, &zs, &zt);
+}
+
+/// The contract is generic over the element type: instantiate the same
+/// differential at f32 (the mixed-precision replay path's storage type).
+#[test]
+fn f32_instantiation_matches_bitwise() {
+    for &n in &[1usize, 7, 32, 48] {
+        let a64 = blocks::dd_block(n, 0.5, 0xF32 + n as u64);
+        let a32: Vec<f32> = a64.iter().map(|v| *v as f32).collect();
+        let mut s = a32.clone();
+        let mut t = a32;
+        dense::getrf_in_place(&mut s, n).expect("scalar f32 getrf on dd block");
+        tiled::getrf_in_place(&mut t, n).expect("tiled f32 getrf on dd block");
+        for (i, (x, y)) in s.iter().zip(&t).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "f32 getrf {n}x{n}: tiled diverges from scalar at flat index {i}"
+            );
+        }
+
+        let (m, k) = (n, 2 * n + 1);
+        let b64 = blocks::panel(m, k, 0.5, 0xF33 + n as u64);
+        let b32: Vec<f32> = b64.iter().map(|v| *v as f32).collect();
+        let lu = s; // scalar-factored f32 LU feeds both TRSM paths
+        let mut ps = b32.clone();
+        let mut pt = b32;
+        dense::trsm_lower_unit(&lu, m, &mut ps, k);
+        tiled::trsm_lower_unit(&lu, m, &mut pt, k);
+        for (i, (x, y)) in ps.iter().zip(&pt).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "f32 trsm_lower_unit {m}x{k}: tiled diverges at flat index {i}"
+            );
+        }
+    }
+}
+
+/// Property-style sweep: many seed-derived random shapes and densities,
+/// shrunk only in the sense that the failure message pins the seed.
+#[test]
+fn random_shapes_match_bitwise() {
+    for seed in 0..40u64 {
+        let (m, k, n, d) = blocks::random_gemm_case(seed, 40);
+        let a = blocks::panel(m, k, d, seed ^ 0xA);
+        let b = blocks::panel(k, n, d, seed ^ 0xB);
+        let c = blocks::panel(m, n, 1.0, seed ^ 0xC);
+        let mut s = c.clone();
+        let mut t = c;
+        dense::gemm_update(&mut s, &a, &b, m, k, n);
+        tiled::gemm_update(&mut t, &a, &b, m, k, n);
+        assert_bits("gemm_update", &format!("seed {seed}: {m}x{k}x{n}"), d, &s, &t);
+
+        let (gn, gd) = blocks::random_getrf_case(seed, 48);
+        let g = blocks::dd_block(gn, gd, seed ^ 0xD);
+        let mut gs = g.clone();
+        let mut gt = g;
+        dense::getrf_in_place(&mut gs, gn).expect("scalar getrf on dd block");
+        tiled::getrf_in_place(&mut gt, gn).expect("tiled getrf on dd block");
+        assert_bits("getrf", &format!("seed {seed}: {gn}x{gn}"), gd, &gs, &gt);
+    }
+}
+
+/// Whole-pipeline differential: a full factorization + solve through the
+/// public `Solver` API under `KernelImpl::Scalar` vs `KernelImpl::Tiled`
+/// must produce bit-identical solutions — the per-kernel contract has to
+/// survive composition across the blocked elimination too.
+#[test]
+fn whole_factorization_is_bit_identical_across_impls() {
+    for seed in [11u64, 47, 101] {
+        let a = common::random_matrix(seed);
+        let n = a.n_rows();
+        let mut rng = Prng::new(seed ^ 0xB17);
+        let b: Vec<f64> = (0..n).map(|_| rng.signed_unit()).collect();
+
+        let solve_with = |imp: KernelImpl| {
+            let mut opts = SolveOptions::ours(1);
+            opts.kernels.imp = imp;
+            let mut solver = Solver::new(opts);
+            let f = solver.factorize(&a).expect("suite matrix factors");
+            f.solve(&b)
+        };
+        let xs = solve_with(KernelImpl::Scalar);
+        let xt = solve_with(KernelImpl::Tiled);
+        assert_bits("solver", &format!("seed {seed}: n {n}"), 1.0, &xs, &xt);
+    }
+}
