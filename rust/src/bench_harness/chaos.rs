@@ -1,0 +1,446 @@
+//! Chaos bench: serving availability, latency and recovery under
+//! deterministic fault injection — `repro chaos-bench`, results in
+//! `BENCH_chaos.json`.
+//!
+//! A 4-tenant [`Router`] serves a fixed refactorize + solve script
+//! while a seeded [`FaultPlan`] injects kernel panics, NaN/Inf
+//! poisoning, forced zero pivots and task stalls at increasing rates
+//! (see [`crate::fault`]). Three numbers summarize how well the
+//! containment machinery holds:
+//!
+//! * **availability** — completed requests / attempted requests per
+//!   sweep point. The `one-shot` point (exactly one injected panic,
+//!   one injected stall over the whole script) is the release gate:
+//!   [`run`] asserts its availability stays ≥
+//!   [`AVAILABILITY_GATE_PCT`], i.e. one real kernel panic costs at
+//!   most the batch it rode in, never the process;
+//! * **p50/p99 latency** — served-request latency per point, showing
+//!   what stalls and retries cost the survivors;
+//! * **recovery** — a NaN-poisoned refactorize trips the tenant
+//!   quarantine ([`crate::serve::TenantHealth::quarantined`]); the
+//!   bench measures wall time until the background pool rebuild
+//!   revives the tenant and a clean refactorize + solve round-trips,
+//!   then checks the post-recovery solution is **bit-identical** to a
+//!   fault-free oracle session on the same plan.
+//!
+//! The run's registry (fault counters, per-tenant quarantine/degraded
+//! series, router counters) is rendered into
+//! [`ChaosReport::metrics_text`] so CI can gate the exposition with
+//! `repro metrics-dump --file BENCH_chaos_metrics.txt --check`.
+
+use crate::fault::{self, FaultPlan};
+use crate::obs::Registry;
+use crate::serve::{Request, Router, RouterConfig, ServeError, TenantId};
+use crate::session::SolverSession;
+use crate::solver::SolveOptions;
+use crate::sparse::{gen, Csc};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Availability floor (percent) the `one-shot` sweep point must hold.
+pub const AVAILABILITY_GATE_PCT: f64 = 99.0;
+
+/// One fault-rate sweep point.
+pub struct PointResult {
+    pub label: &'static str,
+    /// Per-event rate of each erroring fault kind (0 for the one-shot
+    /// point, whose schedule is exact triggers instead).
+    pub fault_rate: f64,
+    /// Submit attempts (accepted or rejected).
+    pub requests: usize,
+    /// Requests that completed successfully.
+    pub completed: usize,
+    /// Requests that came back as a typed per-request error.
+    pub errored: usize,
+    /// Completed requests served degraded (partial→full retry etc.).
+    pub degraded: usize,
+    pub availability_pct: f64,
+    /// Server-side latency (queue + execution) of completed requests.
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Faults fired during the point that must surface as errors or
+    /// counted recoveries (panics + NaNs + zero pivots).
+    pub injected_erroring: u64,
+    /// Stalls fired (delay-only — they move latency, never errors).
+    pub injected_stalls: u64,
+}
+
+/// The quarantine-recovery measurement.
+pub struct RecoveryResult {
+    /// Quarantine trips observed across the run (from
+    /// [`crate::serve::TenantHealth`]).
+    pub quarantines: usize,
+    /// Background pool rebuilds that lifted a quarantine.
+    pub revivals: usize,
+    /// Wall seconds from the poisoned drain until a clean refactorize
+    /// + solve served end-to-end again.
+    pub recovery_seconds: f64,
+    /// Post-recovery solution is bitwise equal to a fault-free oracle
+    /// session on the same plan.
+    pub post_recovery_bit_identical: bool,
+}
+
+/// The whole chaos-bench run.
+pub struct ChaosReport {
+    pub tenants: usize,
+    pub rounds: usize,
+    pub solves_per_round: usize,
+    pub points: Vec<PointResult>,
+    pub recovery: RecoveryResult,
+    /// Rendered metrics exposition of the run's registry, for
+    /// `repro metrics-dump --file ... --check`.
+    pub metrics_text: String,
+}
+
+impl ChaosReport {
+    /// `BENCH_chaos.json` payload.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    concat!(
+                        "    {{\"label\": \"{}\", \"fault_rate\": {:.6}, ",
+                        "\"requests\": {}, \"completed\": {}, \"errored\": {}, ",
+                        "\"degraded\": {},\n",
+                        "     \"availability_pct\": {:.4}, ",
+                        "\"p50_s\": {:.9}, \"p99_s\": {:.9}, ",
+                        "\"injected_erroring\": {}, \"injected_stalls\": {}}}"
+                    ),
+                    p.label,
+                    p.fault_rate,
+                    p.requests,
+                    p.completed,
+                    p.errored,
+                    p.degraded,
+                    p.availability_pct,
+                    p.p50_s,
+                    p.p99_s,
+                    p.injected_erroring,
+                    p.injected_stalls,
+                )
+            })
+            .collect();
+        format!(
+            concat!(
+                "{{\n",
+                "  \"bench\": \"chaos\",\n",
+                "  \"tenants\": {}, \"rounds\": {}, \"solves_per_round\": {},\n",
+                "  \"availability_gate_pct\": {:.1},\n",
+                "  \"points\": [\n{}\n  ],\n",
+                "  \"recovery\": {{\"quarantines\": {}, \"revivals\": {}, ",
+                "\"recovery_seconds\": {:.6}, ",
+                "\"post_recovery_bit_identical\": {}}}\n",
+                "}}\n"
+            ),
+            self.tenants,
+            self.rounds,
+            self.solves_per_round,
+            AVAILABILITY_GATE_PCT,
+            rows.join(",\n"),
+            self.recovery.quarantines,
+            self.recovery.revivals,
+            self.recovery.recovery_seconds,
+            self.recovery.post_recovery_bit_identical,
+        )
+    }
+
+    /// Human-readable summary.
+    pub fn print(&self) {
+        println!("\n--- chaos bench ({} tenants) ---", self.tenants);
+        for p in &self.points {
+            println!(
+                "  {:10} rate {:7.4}  avail {:7.3}%  ({}/{} ok, {} degraded)  \
+                 p50 {:.5}s p99 {:.5}s  injected {} erroring / {} stalls",
+                p.label,
+                p.fault_rate,
+                p.availability_pct,
+                p.completed,
+                p.requests,
+                p.degraded,
+                p.p50_s,
+                p.p99_s,
+                p.injected_erroring,
+                p.injected_stalls,
+            );
+        }
+        println!(
+            "  recovery: {} quarantine(s), {} revival(s), served clean again in {:.4}s, \
+             bit-identical to oracle: {}",
+            self.recovery.quarantines,
+            self.recovery.revivals,
+            self.recovery.recovery_seconds,
+            self.recovery.post_recovery_bit_identical,
+        );
+    }
+}
+
+/// Accumulator for one sweep point's traffic.
+#[derive(Default)]
+struct PointStats {
+    requests: usize,
+    completed: usize,
+    errored: usize,
+    degraded: usize,
+    latencies: Vec<f64>,
+}
+
+impl PointStats {
+    fn percentile(&self, sorted: &[f64], p: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted.len() as f64 * p) as usize).min(sorted.len() - 1);
+        sorted[idx]
+    }
+
+    fn into_point(
+        mut self,
+        label: &'static str,
+        fault_rate: f64,
+        injected: fault::FaultCounters,
+    ) -> PointResult {
+        self.latencies.sort_by(|a, b| a.total_cmp(b));
+        let availability_pct = if self.requests == 0 {
+            100.0
+        } else {
+            self.completed as f64 / self.requests as f64 * 100.0
+        };
+        PointResult {
+            label,
+            fault_rate,
+            requests: self.requests,
+            completed: self.completed,
+            errored: self.errored,
+            degraded: self.degraded,
+            availability_pct,
+            p50_s: self.percentile(&self.latencies, 0.50),
+            p99_s: self.percentile(&self.latencies, 0.99),
+            injected_erroring: injected.erroring(),
+            injected_stalls: injected.stalls,
+        }
+    }
+}
+
+/// Submit one request, counting the attempt; a rejected submit (full
+/// queue, quarantined tenant) is an errored request from the client's
+/// point of view.
+fn submit_counted(router: &Router, tenant: TenantId, request: Request, stats: &mut PointStats) {
+    stats.requests += 1;
+    if router.submit(tenant, request).is_err() {
+        stats.errored += 1;
+    }
+}
+
+/// One scripted round over every tenant: a refactorize plus
+/// `solves` solve requests each, then a concurrent drain.
+fn drive_round(
+    router: &Router,
+    tenants: &[(TenantId, Csc)],
+    solves: usize,
+    stats: &mut PointStats,
+) {
+    for (tenant, a) in tenants {
+        submit_counted(router, *tenant, Request::Refactorize { values: a.values.clone() }, stats);
+        let rhs = vec![1.0; a.n_rows()];
+        for _ in 0..solves {
+            submit_counted(router, *tenant, Request::Solve { rhs: rhs.clone() }, stats);
+        }
+    }
+    for (_, outcomes) in router.drain_all(2) {
+        for outcome in outcomes {
+            match outcome {
+                Ok(rep) => {
+                    stats.completed += 1;
+                    stats.latencies.push(rep.queue_seconds + rep.exec_seconds);
+                    if rep.degraded {
+                        stats.degraded += 1;
+                    }
+                }
+                Err(_) => stats.errored += 1,
+            }
+        }
+    }
+}
+
+/// Wait (bounded) until no tenant is quarantined — the background
+/// rebuild lifts the flag on its own, no drain required.
+fn await_revival(router: &Router, limit: Duration) {
+    let start = Instant::now();
+    while router.health().iter().any(|h| h.quarantined) {
+        if start.elapsed() > limit {
+            return;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+/// One uncounted clean round: restore every tenant to a factored,
+/// unquarantined state so sweep points stay independent.
+fn clean_round(router: &Router, tenants: &[(TenantId, Csc)]) {
+    await_revival(router, Duration::from_secs(5));
+    for (tenant, a) in tenants {
+        for _ in 0..50 {
+            match router.submit(*tenant, Request::Refactorize { values: a.values.clone() }) {
+                Ok(()) => break,
+                Err(ServeError::TenantQuarantined { .. }) => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(_) => break,
+            }
+        }
+    }
+    let _ = router.drain_all(2);
+}
+
+/// Run the chaos bench: `rounds` scripted rounds per sweep point, each
+/// round issuing one refactorize plus `solves_per_round` solves per
+/// tenant. Asserts the one-shot point's availability gate.
+pub fn run(rounds: usize, solves_per_round: usize, seed: u64) -> ChaosReport {
+    assert!(rounds > 0 && solves_per_round > 0, "empty chaos script");
+    let registry = Arc::new(Registry::new());
+    fault::register_metrics(&registry);
+    let router = Router::new(
+        SolveOptions::ours(2),
+        RouterConfig {
+            max_shards: 4,
+            plan_cache_capacity: 8,
+            shard_queue: 4 * (1 + solves_per_round) * 2,
+            checkout_timeout: Some(Duration::from_millis(500)),
+            registry: Some(registry.clone()),
+            ..RouterConfig::default()
+        },
+    );
+    let mats: Vec<Csc> = vec![
+        gen::grid2d_laplacian(8, 8),
+        gen::grid2d_laplacian(8, 9),
+        gen::grid2d_laplacian(9, 9),
+        gen::grid2d_laplacian(9, 10),
+    ];
+    let tenants: Vec<(TenantId, Csc)> = mats
+        .into_iter()
+        .map(|a| {
+            let t = router.admit(&a).expect("admit chaos tenant");
+            (t, a)
+        })
+        .collect();
+    clean_round(&router, &tenants);
+
+    // the sweep: exact one-shot triggers first (the gated point), then
+    // rate-based storms for the latency/availability curve
+    let sweep: Vec<(&'static str, f64, FaultPlan)> = vec![
+        ("baseline", 0.0, FaultPlan::seeded(seed)),
+        ("one-shot", 0.0, FaultPlan::seeded(seed).panic_at_task(5).stall_at_task(9)),
+        (
+            "storm-low",
+            0.001,
+            FaultPlan::seeded(seed ^ 0x10)
+                .panic_rate(0.001)
+                .nan_rate(0.001)
+                .zero_pivot_rate(0.001)
+                .stall_rate(0.01, 100),
+        ),
+        (
+            "storm-high",
+            0.01,
+            FaultPlan::seeded(seed ^ 0x20)
+                .panic_rate(0.01)
+                .nan_rate(0.01)
+                .zero_pivot_rate(0.01)
+                .stall_rate(0.05, 200),
+        ),
+    ];
+
+    let mut points = Vec::with_capacity(sweep.len());
+    for (label, rate, plan) in sweep {
+        let _guard = fault::FaultGuard::new(plan);
+        let mut stats = PointStats::default();
+        for _ in 0..rounds {
+            drive_round(&router, &tenants, solves_per_round, &mut stats);
+        }
+        let injected = fault::counters();
+        drop(_guard);
+        clean_round(&router, &tenants);
+        points.push(stats.into_point(label, rate, injected));
+    }
+
+    let gated = points.iter().find(|p| p.label == "one-shot").expect("one-shot point ran");
+    assert!(
+        gated.availability_pct >= AVAILABILITY_GATE_PCT,
+        "availability gate: one injected panic cost {:.3}% availability (gate {:.1}%, \
+         {}/{} completed)",
+        100.0 - gated.availability_pct,
+        AVAILABILITY_GATE_PCT,
+        gated.completed,
+        gated.requests,
+    );
+
+    let recovery = measure_recovery(&router, &tenants[0], seed);
+    let quarantines: usize = router.health().iter().map(|h| h.quarantines).sum();
+    let revivals: usize = router.health().iter().map(|h| h.quarantine_revivals).sum();
+
+    ChaosReport {
+        tenants: tenants.len(),
+        rounds,
+        solves_per_round,
+        points,
+        recovery: RecoveryResult { quarantines, revivals, ..recovery },
+        metrics_text: registry.render(),
+    }
+}
+
+/// Poison one tenant's refactorize, ride out the quarantine, and time
+/// the round-trip back to clean serving; then check bit-identity
+/// against a fault-free oracle session.
+fn measure_recovery(router: &Router, tenant: &(TenantId, Csc), seed: u64) -> RecoveryResult {
+    let (t, a) = tenant;
+    let rhs = vec![1.0; a.n_rows()];
+    // the very first kernel dispatch of the next refactorize poisons
+    // its target block -> post-factor scan -> NonFinite -> quarantine
+    fault::install(FaultPlan::seeded(seed ^ 0x7E).nan_at_kernel(0));
+    router.submit(*t, Request::Refactorize { values: a.values.clone() }).expect("seed poison");
+    let start = Instant::now();
+    let poisoned = router.drain_tenant(*t).expect("drain poisoned tenant");
+    fault::clear();
+    assert!(
+        poisoned.iter().any(|o| o.is_err()),
+        "NaN-poisoned refactorize must surface as an error"
+    );
+    // recovery: retry until the revived shard serves a clean
+    // refactorize + solve end-to-end
+    let mut solution: Option<Vec<f64>> = None;
+    while start.elapsed() < Duration::from_secs(10) {
+        match router.submit(*t, Request::Refactorize { values: a.values.clone() }) {
+            Ok(()) => {}
+            Err(ServeError::TenantQuarantined { .. }) => {
+                std::thread::sleep(Duration::from_micros(200));
+                continue;
+            }
+            Err(e) => panic!("unexpected submit failure during recovery: {e}"),
+        }
+        router.submit(*t, Request::Solve { rhs: rhs.clone() }).expect("solve after revival");
+        let outcomes = router.drain_tenant(*t).expect("drain revived tenant");
+        if outcomes.iter().all(|o| o.is_ok()) {
+            solution = outcomes.into_iter().flatten().find_map(|rep| rep.solution);
+            break;
+        }
+    }
+    let recovery_seconds = start.elapsed().as_secs_f64();
+    let solution = solution.expect("tenant recovered within the deadline");
+
+    // oracle: a fresh fault-free session over the same plan must agree
+    // bit-for-bit with the post-recovery serving path
+    let plan = router.plan_of(*t).expect("plan of recovered tenant");
+    let mut oracle = SolverSession::from_plan(plan);
+    oracle.refactorize(&a.values).expect("oracle refactorize");
+    let expect = oracle.solve(&rhs);
+    let identical = expect.len() == solution.len()
+        && expect.iter().zip(&solution).all(|(x, y)| x.to_bits() == y.to_bits());
+    RecoveryResult {
+        quarantines: 0, // filled by the caller from TenantHealth
+        revivals: 0,
+        recovery_seconds,
+        post_recovery_bit_identical: identical,
+    }
+}

@@ -9,6 +9,7 @@
 //! repro bench all    --out results
 //! ```
 
+pub mod chaos;
 pub mod figures;
 pub mod kernels;
 pub mod matrices;

@@ -612,6 +612,10 @@ impl Executor {
             // surfaces as `Err(TaskPanic)` at every worker count, never
             // as an unwind through the calling (e.g. serve drain) thread
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // executor-job fault boundary: an injected stall sleeps
+                // here and an injected panic unwinds into this catch —
+                // identical containment to a real kernel bug
+                crate::fault::on_task();
                 nm.execute(task.op, policy, backend, &mut ws)
             }))
             .unwrap_or(Err(FactorError::TaskPanic))?;
@@ -962,6 +966,8 @@ fn execute_task(
             // workspace, and route the failure through the normal
             // cancel-and-drain error path instead.
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // executor-job fault boundary (see `run_inline` twin)
+                crate::fault::on_task();
                 nm.execute(task.op, policy, backend, ws)
             }))
             .unwrap_or_else(|_| {

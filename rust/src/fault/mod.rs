@@ -1,0 +1,520 @@
+//! Seeded, deterministic fault injection — the chaos layer behind
+//! `repro chaos-bench` and `rust/tests/chaos.rs`.
+//!
+//! The serving stack promises containment: a kernel panic becomes one
+//! [`crate::numeric::FactorError::TaskPanic`], a non-finite factor
+//! quarantines one tenant, a corrupt plan file is skipped at warm-up.
+//! Those paths are worthless untested, and real faults are too rare and
+//! too irreproducible to test against. This module injects them on
+//! demand, *deterministically*: a [`FaultPlan`] derives every decision
+//! from a seed and a monotone per-site sequence number, so a failing
+//! chaos run replays bit-for-bit.
+//!
+//! ## Cost model
+//!
+//! Injection is always compiled and **free when off** in the same sense
+//! as [`crate::obs::trace`]: every hook starts with one `Relaxed` load
+//! of a static `AtomicBool` and returns immediately when no plan is
+//! installed. No sequence counters tick, no locks are taken.
+//!
+//! ## Fault sites
+//!
+//! | hook                  | boundary          | injected fault                          |
+//! |-----------------------|-------------------|-----------------------------------------|
+//! | [`on_task`]           | executor job      | panic at the Nth task; artificial stall |
+//! | [`poison_value`]      | kernel dispatch   | NaN/Inf written into the target block   |
+//! | [`force_zero_pivot`]  | kernel dispatch   | zeroed pivot entry before GETRF         |
+//! | [`corrupt_persist`]   | persist encode    | byte flip / truncation of the plan file |
+//!
+//! Each site has its own sequence counter (reset by [`install`]), so a
+//! one-shot trigger like `panic_at_task(3)` means "the 4th task executed
+//! *after install*" regardless of what other sites observed.
+//!
+//! ## Accounting
+//!
+//! Every fired injection increments a per-kind counter readable via
+//! [`counters`]. The chaos suite's balance invariant — every injected
+//! fault surfaces as exactly one typed per-request error or one counted
+//! transparent recovery — is checked against these totals, and
+//! [`register_metrics`] mirrors them into an [`crate::obs::Registry`]
+//! as `sparselu_faults_injected_total{kind=...}`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Global on/off switch; a static so the fault-off check is one
+/// `Relaxed` load and never touches the plan mutex.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The installed plan. Locked only on the fault-on path; hooks clone the
+/// `Arc` out so injection decisions never hold the lock while sleeping
+/// or panicking.
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+// Per-site sequence counters (reset by `install`). Sequence numbers are
+// allocated only while a plan is installed, so one-shot trigger indices
+// are stable offsets from the install point.
+static TASK_SEQ: AtomicU64 = AtomicU64::new(0);
+static KERNEL_SEQ: AtomicU64 = AtomicU64::new(0);
+static GETRF_SEQ: AtomicU64 = AtomicU64::new(0);
+static PERSIST_SEQ: AtomicU64 = AtomicU64::new(0);
+
+// Fired-injection counters, one per fault kind.
+static INJ_PANICS: AtomicU64 = AtomicU64::new(0);
+static INJ_STALLS: AtomicU64 = AtomicU64::new(0);
+static INJ_NANS: AtomicU64 = AtomicU64::new(0);
+static INJ_ZERO_PIVOTS: AtomicU64 = AtomicU64::new(0);
+static INJ_PERSIST: AtomicU64 = AtomicU64::new(0);
+
+/// Is fault injection armed? One `Relaxed` atomic load — the entire
+/// cost of the fault-off path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A deterministic fault schedule. Build with [`FaultPlan::seeded`] and
+/// the `*_at` / `*_rate` builders, then arm with [`install`].
+///
+/// Two trigger styles compose:
+///
+/// * **one-shot** (`panic_at_task(n)`, ...): fires exactly once, at the
+///   `n`th post-install event of that site — the style the invariant
+///   tests use, because each firing maps to one observable outcome;
+/// * **rate-based** (`panic_rate(p)`, ...): each event fires
+///   independently with probability `p`, decided by hashing
+///   `(seed, site, sequence)` — the style `repro chaos-bench` sweeps.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed for every rate decision and poison-value choice.
+    pub seed: u64,
+    /// One-shot executor-task sequence numbers that panic.
+    pub panic_at: Vec<u64>,
+    /// Per-task panic probability in `[0, 1]`.
+    pub panic_rate: f64,
+    /// One-shot executor-task sequence numbers that stall.
+    pub stall_at: Vec<u64>,
+    /// Per-task stall probability in `[0, 1]`.
+    pub stall_rate: f64,
+    /// Stall duration; zero means the 200µs default.
+    pub stall_micros: u64,
+    /// One-shot kernel-dispatch sequence numbers that poison the
+    /// dispatched op's target block with NaN/Inf.
+    pub nan_at: Vec<u64>,
+    /// Per-dispatch poison probability in `[0, 1]`.
+    pub nan_rate: f64,
+    /// One-shot GETRF-dispatch sequence numbers whose pivot is zeroed.
+    pub zero_pivot_at: Vec<u64>,
+    /// Per-GETRF zero-pivot probability in `[0, 1]`.
+    pub zero_pivot_rate: f64,
+    /// One-shot `save_plan` call sequence numbers whose encoded bytes
+    /// are corrupted.
+    pub corrupt_persist_at: Vec<u64>,
+    /// Per-save corruption probability in `[0, 1]`.
+    pub corrupt_persist_rate: f64,
+    /// Corrupt by truncating the file instead of flipping a byte.
+    pub truncate_persist: bool,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing) carrying `seed`.
+    pub fn seeded(seed: u64) -> Self {
+        Self { seed, ..Self::default() }
+    }
+
+    /// Panic at the `n`th executor task after install.
+    pub fn panic_at_task(mut self, n: u64) -> Self {
+        self.panic_at.push(n);
+        self
+    }
+
+    /// Panic each executor task independently with probability `p`.
+    pub fn panic_rate(mut self, p: f64) -> Self {
+        self.panic_rate = p;
+        self
+    }
+
+    /// Stall the `n`th executor task after install.
+    pub fn stall_at_task(mut self, n: u64) -> Self {
+        self.stall_at.push(n);
+        self
+    }
+
+    /// Stall each executor task independently with probability `p`,
+    /// sleeping `micros` each time.
+    pub fn stall_rate(mut self, p: f64, micros: u64) -> Self {
+        self.stall_rate = p;
+        self.stall_micros = micros;
+        self
+    }
+
+    /// Poison the target block of the `n`th kernel dispatch after
+    /// install with a NaN or Inf (seed-chosen).
+    pub fn nan_at_kernel(mut self, n: u64) -> Self {
+        self.nan_at.push(n);
+        self
+    }
+
+    /// Poison each kernel dispatch independently with probability `p`.
+    pub fn nan_rate(mut self, p: f64) -> Self {
+        self.nan_rate = p;
+        self
+    }
+
+    /// Zero the pivot of the `n`th GETRF dispatch after install.
+    pub fn zero_pivot_at_getrf(mut self, n: u64) -> Self {
+        self.zero_pivot_at.push(n);
+        self
+    }
+
+    /// Zero each GETRF pivot independently with probability `p`.
+    pub fn zero_pivot_rate(mut self, p: f64) -> Self {
+        self.zero_pivot_rate = p;
+        self
+    }
+
+    /// Corrupt the bytes of the `n`th `save_plan` call after install.
+    pub fn corrupt_persist_at(mut self, n: u64) -> Self {
+        self.corrupt_persist_at.push(n);
+        self
+    }
+
+    /// Truncate instead of byte-flipping when persist corruption fires.
+    pub fn truncate_persist(mut self) -> Self {
+        self.truncate_persist = true;
+        self
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_active(&self) -> bool {
+        !self.panic_at.is_empty()
+            || !self.stall_at.is_empty()
+            || !self.nan_at.is_empty()
+            || !self.zero_pivot_at.is_empty()
+            || !self.corrupt_persist_at.is_empty()
+            || self.panic_rate > 0.0
+            || self.stall_rate > 0.0
+            || self.nan_rate > 0.0
+            || self.zero_pivot_rate > 0.0
+            || self.corrupt_persist_rate > 0.0
+    }
+}
+
+/// Arm `plan` process-wide, resetting all sequence and injection
+/// counters so one-shot trigger indices count from this instant.
+pub fn install(plan: FaultPlan) {
+    let mut slot = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+    for c in [
+        &TASK_SEQ,
+        &KERNEL_SEQ,
+        &GETRF_SEQ,
+        &PERSIST_SEQ,
+        &INJ_PANICS,
+        &INJ_STALLS,
+        &INJ_NANS,
+        &INJ_ZERO_PIVOTS,
+        &INJ_PERSIST,
+    ] {
+        c.store(0, Ordering::Relaxed);
+    }
+    *slot = Some(Arc::new(plan));
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm fault injection. Counters keep their totals until the next
+/// [`install`] so post-mortem accounting can still read them.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Relaxed);
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner()) = None;
+}
+
+/// RAII arming: [`install`] on construction, [`clear`] on drop — keeps
+/// a panicking test from leaking an armed plan into its neighbors.
+pub struct FaultGuard(());
+
+impl FaultGuard {
+    /// Arm `plan` for the lifetime of the returned guard.
+    pub fn new(plan: FaultPlan) -> Self {
+        install(plan);
+        FaultGuard(())
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Snapshot of fired injections since the last [`install`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Kernel panics raised inside executor tasks.
+    pub panics: u64,
+    /// Artificial stalls slept inside executor tasks.
+    pub stalls: u64,
+    /// Blocks poisoned with NaN/Inf after a kernel dispatch.
+    pub nans: u64,
+    /// GETRF pivots zeroed before dispatch.
+    pub zero_pivots: u64,
+    /// Persisted plan encodings corrupted or truncated.
+    pub persist: u64,
+}
+
+impl FaultCounters {
+    /// All fired injections.
+    pub fn total(&self) -> u64 {
+        self.panics + self.stalls + self.nans + self.zero_pivots + self.persist
+    }
+
+    /// Injections that must each surface as exactly one per-request
+    /// error or one counted transparent recovery (stalls only delay).
+    pub fn erroring(&self) -> u64 {
+        self.panics + self.nans + self.zero_pivots
+    }
+}
+
+/// Read the fired-injection counters.
+pub fn counters() -> FaultCounters {
+    FaultCounters {
+        panics: INJ_PANICS.load(Ordering::Relaxed),
+        stalls: INJ_STALLS.load(Ordering::Relaxed),
+        nans: INJ_NANS.load(Ordering::Relaxed),
+        zero_pivots: INJ_ZERO_PIVOTS.load(Ordering::Relaxed),
+        persist: INJ_PERSIST.load(Ordering::Relaxed),
+    }
+}
+
+fn plan() -> Option<Arc<FaultPlan>> {
+    PLAN.lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+/// SplitMix64 finalizer — the per-event hash behind every rate decision.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic Bernoulli: hash `(seed, site, seq)` against `rate`.
+fn roll(seed: u64, site: u64, seq: u64, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    if rate >= 1.0 {
+        return true;
+    }
+    let h = mix(seed ^ site.wrapping_mul(0xA24BAED4963EE407) ^ seq);
+    ((h >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < rate
+}
+
+/// Executor-job boundary hook: called once per task execution, inside
+/// the scheduler's `catch_unwind`. May sleep (artificial stall) and may
+/// panic (injected kernel panic — contained by the executor exactly
+/// like a real kernel bug and surfaced as `FactorError::TaskPanic`).
+#[inline]
+pub fn on_task() {
+    if !enabled() {
+        return;
+    }
+    on_task_slow();
+}
+
+#[cold]
+fn on_task_slow() {
+    let Some(plan) = plan() else { return };
+    let seq = TASK_SEQ.fetch_add(1, Ordering::Relaxed);
+    if plan.stall_at.contains(&seq) || roll(plan.seed, 0x57A11, seq, plan.stall_rate) {
+        INJ_STALLS.fetch_add(1, Ordering::Relaxed);
+        let micros = if plan.stall_micros == 0 { 200 } else { plan.stall_micros };
+        std::thread::sleep(Duration::from_micros(micros));
+    }
+    if plan.panic_at.contains(&seq) || roll(plan.seed, 0x9A21C, seq, plan.panic_rate) {
+        INJ_PANICS.fetch_add(1, Ordering::Relaxed);
+        panic!("fault-injected kernel panic (task seq {seq})");
+    }
+}
+
+/// Kernel-dispatch boundary hook: should this dispatch's target block
+/// be poisoned, and with what value? Called once per dispatched op;
+/// returns the NaN/Inf to write (seed decides which) or `None`.
+#[inline]
+pub fn poison_value() -> Option<f64> {
+    if !enabled() {
+        return None;
+    }
+    poison_value_slow()
+}
+
+#[cold]
+fn poison_value_slow() -> Option<f64> {
+    let plan = plan()?;
+    let seq = KERNEL_SEQ.fetch_add(1, Ordering::Relaxed);
+    if plan.nan_at.contains(&seq) || roll(plan.seed, 0xDEAD1, seq, plan.nan_rate) {
+        INJ_NANS.fetch_add(1, Ordering::Relaxed);
+        let v = if mix(plan.seed ^ seq) & 1 == 0 { f64::NAN } else { f64::INFINITY };
+        return Some(v);
+    }
+    None
+}
+
+/// Kernel-dispatch boundary hook: should this GETRF's pivot entry be
+/// zeroed before the kernel runs? Called once per GETRF dispatch.
+#[inline]
+pub fn force_zero_pivot() -> bool {
+    if !enabled() {
+        return false;
+    }
+    force_zero_pivot_slow()
+}
+
+#[cold]
+fn force_zero_pivot_slow() -> bool {
+    let Some(plan) = plan() else { return false };
+    let seq = GETRF_SEQ.fetch_add(1, Ordering::Relaxed);
+    if plan.zero_pivot_at.contains(&seq) || roll(plan.seed, 0x21607, seq, plan.zero_pivot_rate) {
+        INJ_ZERO_PIVOTS.fetch_add(1, Ordering::Relaxed);
+        return true;
+    }
+    false
+}
+
+/// Persist boundary hook: corrupt the encoded plan bytes in place
+/// (deterministic byte flip, or truncation when the plan asks for it).
+/// Returns whether corruption fired.
+#[inline]
+pub fn corrupt_persist(bytes: &mut Vec<u8>) -> bool {
+    if !enabled() {
+        return false;
+    }
+    corrupt_persist_slow(bytes)
+}
+
+#[cold]
+fn corrupt_persist_slow(bytes: &mut Vec<u8>) -> bool {
+    let Some(plan) = plan() else { return false };
+    let seq = PERSIST_SEQ.fetch_add(1, Ordering::Relaxed);
+    let fire = plan.corrupt_persist_at.contains(&seq)
+        || roll(plan.seed, 0xC0DE5, seq, plan.corrupt_persist_rate);
+    if !fire || bytes.is_empty() {
+        return false;
+    }
+    INJ_PERSIST.fetch_add(1, Ordering::Relaxed);
+    if plan.truncate_persist {
+        let keep = bytes.len() / 2;
+        bytes.truncate(keep);
+    } else {
+        let idx = (mix(plan.seed ^ seq) as usize) % bytes.len();
+        bytes[idx] ^= 0x40;
+    }
+    true
+}
+
+/// Mirror the fired-injection counters into `registry` as
+/// `sparselu_faults_injected_total{kind=...}`, refreshed at scrape time
+/// (same snapshot-mirror pattern as [`crate::obs::register_executor`]).
+pub fn register_metrics(registry: &std::sync::Arc<crate::obs::Registry>) {
+    const HELP: &str = "Faults fired by the installed FaultPlan, by kind.";
+    let panics = registry.counter("sparselu_faults_injected_total", HELP, &[("kind", "panic")]);
+    let stalls = registry.counter("sparselu_faults_injected_total", HELP, &[("kind", "stall")]);
+    let nans = registry.counter("sparselu_faults_injected_total", HELP, &[("kind", "nan")]);
+    let pivots =
+        registry.counter("sparselu_faults_injected_total", HELP, &[("kind", "zero_pivot")]);
+    let persist =
+        registry.counter("sparselu_faults_injected_total", HELP, &[("kind", "persist")]);
+    registry.register_refresher("fault-injection", move || {
+        let c = counters();
+        panics.mirror(c.panics);
+        stalls.mirror(c.stalls);
+        nans.mirror(c.nans);
+        pivots.mirror(c.zero_pivots);
+        persist.mirror(c.persist);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fault state is process-global; every test that installs a plan
+    // must hold this lock (the integration chaos suite does the same).
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_hooks_are_inert() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        clear();
+        assert!(!enabled());
+        on_task();
+        assert_eq!(poison_value(), None);
+        assert!(!force_zero_pivot());
+        let mut b = vec![1u8, 2, 3];
+        assert!(!corrupt_persist(&mut b));
+        assert_eq!(b, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn one_shot_triggers_fire_once_and_count() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _g = FaultGuard::new(
+            FaultPlan::seeded(7).nan_at_kernel(1).zero_pivot_at_getrf(0),
+        );
+        assert_eq!(poison_value(), None); // seq 0
+        let p = poison_value(); // seq 1 fires
+        assert!(p.is_some_and(|v| !v.is_finite()));
+        assert_eq!(poison_value(), None); // seq 2
+        assert!(force_zero_pivot()); // getrf seq 0 fires
+        assert!(!force_zero_pivot());
+        let c = counters();
+        assert_eq!((c.nans, c.zero_pivots), (1, 1));
+        assert_eq!(c.total(), 2);
+    }
+
+    #[test]
+    fn rate_decisions_are_deterministic_in_seed_and_seq() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let fired: Vec<bool> = (0..256).map(|s| roll(42, 0xDEAD1, s, 0.25)).collect();
+        let again: Vec<bool> = (0..256).map(|s| roll(42, 0xDEAD1, s, 0.25)).collect();
+        assert_eq!(fired, again);
+        let hits = fired.iter().filter(|&&b| b).count();
+        assert!((32..96).contains(&hits), "rate 0.25 fired {hits}/256");
+        assert!(!roll(42, 0xDEAD1, 0, 0.0));
+        assert!(roll(42, 0xDEAD1, 0, 1.0));
+    }
+
+    #[test]
+    fn persist_corruption_flips_and_truncates() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        {
+            let _g = FaultGuard::new(FaultPlan::seeded(3).corrupt_persist_at(0));
+            let orig = vec![0u8; 64];
+            let mut b = orig.clone();
+            assert!(corrupt_persist(&mut b));
+            assert_eq!(b.len(), 64);
+            assert_ne!(b, orig);
+        }
+        {
+            let _g =
+                FaultGuard::new(FaultPlan::seeded(3).corrupt_persist_at(0).truncate_persist());
+            let mut b = vec![0u8; 64];
+            assert!(corrupt_persist(&mut b));
+            assert_eq!(b.len(), 32);
+            assert_eq!(counters().persist, 1);
+        }
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn panic_injection_panics_inside_task_hook() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _g = FaultGuard::new(FaultPlan::seeded(1).panic_at_task(0));
+        let r = std::panic::catch_unwind(on_task);
+        assert!(r.is_err());
+        assert_eq!(counters().panics, 1);
+        // the one-shot already fired; later tasks run clean
+        on_task();
+        assert_eq!(counters().panics, 1);
+    }
+}

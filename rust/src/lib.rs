@@ -156,6 +156,7 @@ pub mod symbolic;
 pub mod blocking;
 pub mod numeric;
 pub mod coordinator;
+pub mod fault;
 pub mod gpu_model;
 pub mod obs;
 pub mod runtime;

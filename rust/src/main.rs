@@ -56,6 +56,7 @@ fn run() -> Result<()> {
             bench_harness::run(exp, std::path::Path::new(&out), scale)
         }
         "serve-bench" => cmd_serve_bench(&flags),
+        "chaos-bench" => cmd_chaos_bench(&flags),
         "kernel-bench" => cmd_kernel_bench(&flags),
         "sched-bench" => cmd_sched_bench(&flags),
         "plan-bench" => cmd_plan_bench(&flags),
@@ -83,6 +84,7 @@ USAGE:
                     [--mix F,S,V] [--tenants M] [--plan-dir DIR] [--out FILE]
                     [--workers N] [--blocking B] [--precision full|mixed]
                     [--metrics-addr HOST:PORT] [--metrics-out FILE] [--autoscale]
+  repro chaos-bench [--rounds N] [--solves N] [--seed S] [--out FILE] [--metrics-out FILE]
   repro kernel-bench [--reps N] [--out FILE]
   repro sched-bench [--replays N] [--worker-counts 1,2,4] [--out FILE]
   repro plan-bench  [--replays N] [--worker-counts 2,8] [--out FILE]
@@ -90,6 +92,20 @@ USAGE:
   repro trace-bench [--replays N] [--worker-counts 1,4] [--out FILE] [--trace-out FILE]
   repro metrics-dump (--addr HOST:PORT | --file PATH | --trace-summary FILE) [--check]
   repro artifacts-check [--dir artifacts]
+
+CHAOS-BENCH (the fault-injection availability bench):
+  A 4-tenant router serves a fixed refactorize+solve script while a
+  seeded FaultPlan injects kernel panics, NaN/Inf poisoning, forced
+  zero pivots and stalls at increasing rates. Per sweep point the
+  bench reports availability and p50/p99 latency; it then poisons
+  one tenant into quarantine and times the background-rebuild
+  recovery, checking the post-recovery solution is bit-identical to a
+  fault-free oracle. The one-shot point (exactly one injected panic)
+  must keep availability >= 99 percent — the bench asserts it, so a
+  failing gate fails the run. Results go to --out (default BENCH_chaos.json);
+  the run's metric exposition (fault/quarantine/degraded counters) is
+  written to --metrics-out (default BENCH_chaos_metrics.txt) for
+  `repro metrics-dump --file ... --check`.
 
 KERNEL-BENCH (the dense-kernel raw-speed bench):
   Scalar oracle vs register-blocked tiled fast path, per kernel (GETRF /
@@ -688,6 +704,35 @@ fn tenant_matrices(count: usize) -> Vec<(String, Csc)> {
             }
         })
         .collect()
+}
+
+fn cmd_chaos_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let solves: usize = flags.get("solves").map(|s| s.parse()).transpose()?.unwrap_or(7);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0xC4A05);
+    if rounds == 0 || solves == 0 {
+        bail!("--rounds and --solves must be >= 1");
+    }
+    let out = flags.get("out").cloned().unwrap_or_else(|| "BENCH_chaos.json".into());
+    let metrics_out =
+        flags.get("metrics-out").cloned().unwrap_or_else(|| "BENCH_chaos_metrics.txt".into());
+    println!(
+        "chaos: 4 tenants x {rounds} rounds x (1 refactorize + {solves} solves), \
+         sweep baseline / one-shot / storm-low / storm-high (seed {seed:#x})"
+    );
+    let report = bench_harness::chaos::run(rounds, solves, seed);
+    report.print();
+    std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
+    let summary = obs::validate(&report.metrics_text)
+        .map_err(|e| anyhow::anyhow!("chaos metrics exposition invalid: {e}"))?;
+    std::fs::write(&metrics_out, &report.metrics_text)
+        .with_context(|| format!("writing {metrics_out}"))?;
+    println!(
+        "\nwrote {out} and {metrics_out} ({} families, {} series, exposition valid)",
+        summary.families,
+        summary.series.len()
+    );
+    Ok(())
 }
 
 fn cmd_kernel_bench(flags: &HashMap<String, String>) -> Result<()> {

@@ -227,6 +227,13 @@ pub enum FactorError {
     /// [`crate::coordinator::Executor`]); callers observe an `Err`
     /// instead of a hung pool.
     TaskPanic,
+    /// The post-factor scan found a NaN/Inf in block `block`'s factored
+    /// values — overflow, a poisoned input, or an injected fault
+    /// ([`crate::fault`]). The factors are unusable: a triangular solve
+    /// would silently return garbage, so the session refuses to mark
+    /// itself factored and a serving router quarantines the tenant
+    /// until a clean rebuild (see [`crate::serve::Router`]).
+    NonFinite { block: usize },
 }
 
 impl std::fmt::Display for FactorError {
@@ -251,6 +258,9 @@ impl std::fmt::Display for FactorError {
             }
             FactorError::TaskPanic => {
                 write!(f, "a worker panicked while executing a block task")
+            }
+            FactorError::NonFinite { block } => {
+                write!(f, "factored values of block {block} are non-finite (NaN/Inf)")
             }
         }
     }
@@ -410,11 +420,84 @@ impl NumericMatrix {
         backend: &dyn DenseBackend,
         ws: &mut Workspace,
     ) -> Result<(), FactorError> {
-        match self.precision {
+        // kernel-dispatch fault boundary: one relaxed load when injection
+        // is disarmed (see `crate::fault`)
+        if crate::fault::enabled() {
+            self.pre_dispatch_fault(op);
+        }
+        let res = match self.precision {
             Precision::Full => {
                 self.execute_in(&self.values, op, policy, &BackendDispatch(backend), ws)
             }
             Precision::Mixed => self.execute_in(self.values32(), op, policy, &CpuDispatch, ws),
+        };
+        if res.is_ok() && crate::fault::enabled() {
+            self.post_dispatch_fault(op);
+        }
+        res
+    }
+
+    /// Fault injection before a kernel runs: a forced zero pivot wipes
+    /// the diagonal block, so GETRF's stability floor trips with a real
+    /// [`KernelError::ZeroPivot`] — the same error path a numerically
+    /// singular input takes.
+    #[cold]
+    fn pre_dispatch_fault(&self, op: BlockOp) {
+        if let BlockOp::Getrf { k } = op {
+            if crate::fault::force_zero_pivot() {
+                if let Some(id) = self.structure.block_id(k, k) {
+                    match self.precision {
+                        Precision::Full => {
+                            write_vals(&self.values[id as usize]).fill(0.0);
+                        }
+                        Precision::Mixed => {
+                            write_vals(&self.values32()[id as usize]).fill(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fault injection after a kernel succeeds: NaN/Inf poisoning of the
+    /// op's target block, caught later by [`Self::scan_non_finite`].
+    #[cold]
+    fn post_dispatch_fault(&self, op: BlockOp) {
+        if let Some(poison) = crate::fault::poison_value() {
+            let (i, j) = op.target();
+            if let Some(id) = self.structure.block_id(i, j) {
+                match self.precision {
+                    Precision::Full => {
+                        if let Some(v) = write_vals(&self.values[id as usize]).first_mut() {
+                            *v = poison;
+                        }
+                    }
+                    Precision::Mixed => {
+                        if let Some(v) = write_vals(&self.values32()[id as usize]).first_mut() {
+                            *v = poison as f32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Post-factor non-finite scan: the first block whose
+    /// active-precision factored values contain a NaN/Inf, or `None`
+    /// when the factors are clean. One linear pass over the stored
+    /// factor values — noise next to the factorization's flop count —
+    /// run after every (re)factorization so unusable factors surface as
+    /// [`FactorError::NonFinite`] instead of garbage solutions.
+    pub fn scan_non_finite(&self) -> Option<usize> {
+        match self.precision {
+            Precision::Full => self
+                .values
+                .iter()
+                .position(|l| read_vals(l).iter().any(|v| !v.is_finite())),
+            Precision::Mixed => self
+                .values32()
+                .iter()
+                .position(|l| read_vals(l).iter().any(|v| !v.is_finite())),
         }
     }
 

@@ -5,7 +5,8 @@
 //! [`crate::obs::trace`] recording) and `GET /healthz` — one
 //! connection at a time on a background
 //! thread. Scrapes are rare (seconds apart) and small (tens of KB), so
-//! a single-threaded accept loop with short socket timeouts is the
+//! a single-threaded accept loop with short socket timeouts under a
+//! hard per-connection deadline (`CONNECTION_DEADLINE`) is the
 //! whole server; there is deliberately no HTTP library, keep-alive,
 //! TLS or routing table. [`scrape`] is the matching one-call client
 //! used by `repro metrics-dump --addr`, the serve-bench self-scrape
@@ -16,7 +17,7 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Content-Type for exposition format 0.0.4.
 pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
@@ -72,13 +73,37 @@ impl Drop for MetricsServer {
     }
 }
 
+/// Hard wall-clock budget for one whole connection (request read +
+/// response write). The per-syscall socket timeouts bound each
+/// *individual* read or write, but a slow-loris client trickling one
+/// byte per interval resets them every time — and the accept loop is
+/// single-threaded, so one such client would wedge every scrape after
+/// it. Every syscall timeout below is re-armed with the *remaining*
+/// budget instead, so a stalled or trickling peer costs at most this
+/// long before the connection is dropped.
+const CONNECTION_DEADLINE: Duration = Duration::from_secs(5);
+
+/// What is left of the connection budget, as an `Err(TimedOut)` once
+/// it is exhausted (socket timeouts reject zero durations, so an empty
+/// budget must become an error rather than `Some(0)`).
+fn remaining(deadline: Instant) -> std::io::Result<Duration> {
+    deadline
+        .checked_duration_since(Instant::now())
+        .filter(|d| !d.is_zero())
+        .ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::TimedOut, "connection deadline exceeded")
+        })
+}
+
 fn handle_connection(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let deadline = Instant::now() + CONNECTION_DEADLINE;
     // read until end of request head; cap at 8 KB (we ignore bodies)
     let mut head = Vec::new();
     let mut buf = [0u8; 1024];
     loop {
+        // re-arm with the remaining budget: a trickling client runs
+        // the budget down instead of resetting a fixed timeout
+        stream.set_read_timeout(Some(remaining(deadline)?.min(Duration::from_secs(2))))?;
         let n = stream.read(&mut buf)?;
         if n == 0 {
             break;
@@ -108,8 +133,23 @@ fn handle_connection(mut stream: TcpStream, registry: &Registry) -> std::io::Res
         "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
-    stream.write_all(header.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
+    // chunked writes under the same budget, so a client that stops
+    // reading mid-response cannot hold the handler past the deadline
+    let mut out = Vec::with_capacity(header.len() + body.len());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(body.as_bytes());
+    let mut sent = 0;
+    while sent < out.len() {
+        stream.set_write_timeout(Some(remaining(deadline)?))?;
+        let n = stream.write(&out[sent..])?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "client stopped reading the response",
+            ));
+        }
+        sent += n;
+    }
     stream.flush()
 }
 

@@ -32,7 +32,7 @@ use crate::numeric::factor::FactorError;
 use crate::numeric::Precision;
 use crate::session::{ChangeSet, RefineError, SolverSession};
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One client request against a session's current plan/pattern.
 #[derive(Clone, Debug)]
@@ -124,6 +124,22 @@ pub enum ServeError {
     /// then the request is rejected with this error so the client can
     /// retry against the original tenant or resubmit the full matrix.
     PatternDrift { tenant: u64, drifted: u64, strikes: usize },
+    /// The request's deadline passed while it sat in the queue: the
+    /// batch it would have ridden in started `late_by` too late. The
+    /// work was **not** executed — a deadline-expired request costs the
+    /// server nothing but the queue slot it held.
+    DeadlineExceeded { late_by: Duration },
+    /// No pooled session became idle within the drain's
+    /// [`crate::serve::SessionPool::checkout_timeout`] window; the
+    /// request was failed instead of waiting unboundedly behind a
+    /// stalled or leaked checkout.
+    PoolTimeout { waited: Duration },
+    /// The tenant's shard is quarantined: a factorization produced
+    /// non-finite values ([`FactorError::NonFinite`]) and the router is
+    /// rebuilding the shard's sessions in the background. Fail-fast —
+    /// retry after the rebuild revives the tenant (watch
+    /// [`crate::serve::Router::health`]).
+    TenantQuarantined { tenant: u64 },
 }
 
 impl std::fmt::Display for ServeError {
@@ -162,6 +178,28 @@ impl std::fmt::Display for ServeError {
                     f,
                     "stamp pattern drifted from tenant {tenant:#018x} toward \
                      {drifted:#018x} ({strikes} strikes)"
+                )
+            }
+            ServeError::DeadlineExceeded { late_by } => {
+                write!(
+                    f,
+                    "request deadline exceeded: execution would have started \
+                     {:.3}ms late",
+                    late_by.as_secs_f64() * 1e3
+                )
+            }
+            ServeError::PoolTimeout { waited } => {
+                write!(
+                    f,
+                    "no pooled session became idle within {:.3}ms",
+                    waited.as_secs_f64() * 1e3
+                )
+            }
+            ServeError::TenantQuarantined { tenant } => {
+                write!(
+                    f,
+                    "tenant {tenant:#018x} is quarantined (non-finite factors); \
+                     a background rebuild is under way — retry later"
                 )
             }
         }
@@ -210,8 +248,17 @@ pub struct ServeReport {
     pub trace_id: u64,
     /// [`Request::SolveMixed`] only: iterative-refinement corrections
     /// applied to reach the accuracy target (0 = the raw mixed solve
-    /// already met it). `None` for every other request kind.
+    /// already met it). `None` for every other request kind — and for a
+    /// mixed solve rescued by the full-precision fallback (`degraded`
+    /// is set instead; no refinement ran).
     pub refine_iterations: Option<usize>,
+    /// The request succeeded only through the degradation ladder: a
+    /// diverging mixed-precision solve was transparently re-run at full
+    /// precision, or a faulted partial refactorize was retried as a
+    /// full refactorize after block reset. The result is still exact —
+    /// `degraded` flags that the fast path failed and the slow path
+    /// paid for it (mirrored as `sparselu_degraded_total`).
+    pub degraded: bool,
 }
 
 /// Bounded, coalescing request queue over one session.
@@ -237,7 +284,25 @@ pub struct Batcher {
     /// executing anything, so every session of a shard's pool converges
     /// to the shard's configured mode.
     precision: Precision,
-    queue: VecDeque<(Request, Instant)>,
+    queue: VecDeque<Queued>,
+    /// Executions rescued by the degradation ladder since construction
+    /// (one per absorbed failure, not per coalesced rider) — see
+    /// [`Batcher::degraded_runs`].
+    degraded_runs: u64,
+}
+
+/// One admitted request: payload, admission instant (queue-latency
+/// accounting) and optional expiry (deadline enforcement at drain).
+struct Queued {
+    request: Request,
+    submitted: Instant,
+    deadline: Option<Instant>,
+}
+
+impl Queued {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now > d)
+    }
 }
 
 impl Batcher {
@@ -253,6 +318,7 @@ impl Batcher {
             coalesce_stamps: true,
             precision: Precision::Full,
             queue: VecDeque::new(),
+            degraded_runs: 0,
         }
     }
 
@@ -333,7 +399,7 @@ impl Batcher {
     /// Enqueue a request at [`Priority::High`], rejecting it when the
     /// queue is at capacity.
     pub fn submit(&mut self, request: Request) -> Result<(), ServeError> {
-        self.submit_with_priority(request, Priority::High)
+        self.submit_opts(request, Priority::High, None)
     }
 
     /// Enqueue a request under an explicit priority class. High is
@@ -346,6 +412,60 @@ impl Batcher {
         request: Request,
         priority: Priority,
     ) -> Result<(), ServeError> {
+        self.submit_opts(request, priority, None)
+    }
+
+    /// Enqueue a request with a deadline: if `deadline` passes before
+    /// the drain reaches it, the request fails with
+    /// [`ServeError::DeadlineExceeded`] **without executing** — bounded
+    /// staleness for interactive clients that would rather retry than
+    /// receive a late answer.
+    ///
+    /// ```
+    /// use sparselu::serve::{Batcher, Request, ServeError};
+    /// use sparselu::session::{FactorPlan, SolverSession};
+    /// use sparselu::solver::SolveOptions;
+    /// use sparselu::sparse::gen;
+    /// use std::sync::Arc;
+    /// use std::time::{Duration, Instant};
+    ///
+    /// let a = gen::grid2d_laplacian(4, 4);
+    /// let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
+    /// let mut session = SolverSession::from_plan(plan);
+    /// session.refactorize(&a.values).unwrap();
+    ///
+    /// let mut batcher = Batcher::new(8);
+    /// let rhs = vec![1.0; a.n_rows()];
+    /// batcher
+    ///     .submit_with_deadline(Request::Solve { rhs: rhs.clone() }, Instant::now())
+    ///     .unwrap();
+    /// batcher
+    ///     .submit_with_deadline(
+    ///         Request::Solve { rhs },
+    ///         Instant::now() + Duration::from_secs(60),
+    ///     )
+    ///     .unwrap();
+    /// std::thread::sleep(Duration::from_millis(2)); // first deadline passes
+    ///
+    /// let outcomes = batcher.drain(&mut session);
+    /// assert!(matches!(outcomes[0], Err(ServeError::DeadlineExceeded { .. })));
+    /// assert!(outcomes[1].is_ok(), "a live deadline never blocks execution");
+    /// ```
+    pub fn submit_with_deadline(
+        &mut self,
+        request: Request,
+        deadline: Instant,
+    ) -> Result<(), ServeError> {
+        self.submit_opts(request, Priority::High, Some(deadline))
+    }
+
+    /// Full-control admission: priority class plus optional deadline.
+    pub fn submit_opts(
+        &mut self,
+        request: Request,
+        priority: Priority,
+        deadline: Option<Instant>,
+    ) -> Result<(), ServeError> {
         let limit = match priority {
             Priority::High => self.capacity,
             Priority::Low => self.low_limit,
@@ -353,8 +473,18 @@ impl Batcher {
         if self.queue.len() >= limit {
             return Err(ServeError::QueueFull { capacity: self.capacity });
         }
-        self.queue.push_back((request, Instant::now()));
+        self.queue.push_back(Queued { request, submitted: Instant::now(), deadline });
         Ok(())
+    }
+
+    /// Executions the degradation ladder rescued since this batcher was
+    /// built: one per absorbed fast-path failure (a diverged mixed
+    /// solve re-run at full precision, a faulted partial refactorize
+    /// retried full), regardless of how many coalesced riders shared
+    /// the rescued execution. `injected == surfaced + rescued` is the
+    /// chaos suite's balance invariant.
+    pub fn degraded_runs(&self) -> u64 {
+        self.degraded_runs
     }
 
     /// Fail every queued request with a clone of `err`, in submission
@@ -392,7 +522,16 @@ impl Batcher {
             session.set_precision(self.precision);
         }
         let mut outcomes = Vec::with_capacity(self.queue.len());
-        while let Some((request, submitted)) = self.queue.pop_front() {
+        while let Some(q) = self.queue.pop_front() {
+            // deadline enforcement: an expired request is failed here,
+            // before any execution — it cost the server only its slot
+            let now = Instant::now();
+            if q.expired(now) {
+                let deadline = q.deadline.expect("expired() implies a deadline");
+                outcomes.push(Err(ServeError::DeadlineExceeded { late_by: now - deadline }));
+                continue;
+            }
+            let Queued { request, submitted, .. } = q;
             // one trace id per executed batch: every DAG task the batch
             // runs records it, and every report that rode in the batch
             // carries it (0 when tracing is off — no id is minted)
@@ -429,11 +568,21 @@ impl Batcher {
                     // ends the run and is handled on its own next turn
                     let mut batch = vec![rhs];
                     let mut waits = vec![submitted];
-                    while let Some((Request::Solve { rhs }, _)) = self.queue.front() {
-                        if rhs.len() != n {
-                            break;
+                    loop {
+                        // only a *valid, unexpired* solve extends the
+                        // run; anything else (including an expired
+                        // deadline) breaks it and is handled on its own
+                        // next turn
+                        match self.queue.front() {
+                            Some(f) if !f.expired(Instant::now()) => match &f.request {
+                                Request::Solve { rhs } if rhs.len() == n => {}
+                                _ => break,
+                            },
+                            _ => break,
                         }
-                        let Some((Request::Solve { rhs }, t)) = self.queue.pop_front() else {
+                        let Some(Queued { request: Request::Solve { rhs }, submitted: t, .. }) =
+                            self.queue.pop_front()
+                        else {
                             unreachable!("front() just matched a solve");
                         };
                         batch.push(rhs);
@@ -455,6 +604,7 @@ impl Batcher {
                             solution: Some(x),
                             trace_id,
                             refine_iterations: None,
+                            degraded: false,
                         }));
                     }
                 }
@@ -485,12 +635,11 @@ impl Batcher {
                     }
                     let start = Instant::now();
                     let result = session.solve_refined(&rhs);
-                    let exec_seconds = start.elapsed().as_secs_f64();
-                    let outcome = result
-                        .map(|refined| ServeReport {
+                    let outcome = match result {
+                        Ok(refined) => Ok(ServeReport {
                             kind: RequestKind::SolveMixed,
                             queue_seconds: start.duration_since(submitted).as_secs_f64(),
-                            exec_seconds,
+                            exec_seconds: start.elapsed().as_secs_f64(),
                             batch_size: 1,
                             tasks_executed: 0,
                             tasks_skipped: 0,
@@ -498,8 +647,53 @@ impl Batcher {
                             solution: Some(refined.x),
                             trace_id,
                             refine_iterations: Some(refined.iterations),
-                        })
-                        .map_err(ServeError::Refine);
+                            degraded: false,
+                        }),
+                        Err(RefineError::Diverged { .. }) => {
+                            // degradation ladder: the f32 factors carry
+                            // no usable correction for this system —
+                            // transparently re-run at full precision
+                            // instead of bouncing the client to another
+                            // shard. One rung, never recursive.
+                            self.degraded_runs += 1;
+                            let values = session.current_values().to_vec();
+                            session.set_precision(Precision::Full);
+                            let rescued = session
+                                .refactorize(&values)
+                                .map(|_| session.solve(&rhs));
+                            // restore the shard's configured mixed mode
+                            // so the rest of the queue (and future
+                            // drains) find live f32 factors
+                            session.set_precision(Precision::Mixed);
+                            if session.refactorize(&values).is_err() {
+                                // the restore failed (e.g. another
+                                // injected fault): the request already
+                                // has its answer, so the failure is
+                                // absorbed — counted, keeping the
+                                // injected == surfaced + rescued
+                                // balance exact
+                                self.degraded_runs += 1;
+                            }
+                            match rescued {
+                                Ok(x) => Ok(ServeReport {
+                                    kind: RequestKind::SolveMixed,
+                                    queue_seconds: start
+                                        .duration_since(submitted)
+                                        .as_secs_f64(),
+                                    exec_seconds: start.elapsed().as_secs_f64(),
+                                    batch_size: 1,
+                                    tasks_executed: 0,
+                                    tasks_skipped: 0,
+                                    went_partial: false,
+                                    solution: Some(x),
+                                    trace_id,
+                                    refine_iterations: None,
+                                    degraded: true,
+                                }),
+                                Err(e) => Err(ServeError::Factor(e)),
+                            }
+                        }
+                    };
                     outcomes.push(outcome);
                 }
                 Request::Refactorize { values } => {
@@ -525,6 +719,7 @@ impl Batcher {
                         solution: None,
                         trace_id,
                         refine_iterations: None,
+                        degraded: false,
                     });
                     outcomes.push(outcome.map_err(ServeError::from));
                 }
@@ -550,13 +745,24 @@ impl Batcher {
                     let mut merged = changes;
                     let mut waits = vec![submitted];
                     while self.coalesce_stamps {
-                        let Some((Request::Stamp { changes }, _)) = self.queue.front() else {
-                            break;
-                        };
-                        if changes.updates().iter().any(|&(k, _)| k >= nnz) {
-                            break;
+                        // like the solve run: only a valid, unexpired
+                        // stamp joins the merge
+                        match self.queue.front() {
+                            Some(f) if !f.expired(Instant::now()) => match &f.request {
+                                Request::Stamp { changes }
+                                    if !changes
+                                        .updates()
+                                        .iter()
+                                        .any(|&(k, _)| k >= nnz) => {}
+                                _ => break,
+                            },
+                            _ => break,
                         }
-                        let Some((Request::Stamp { changes }, t)) = self.queue.pop_front()
+                        let Some(Queued {
+                            request: Request::Stamp { changes },
+                            submitted: t,
+                            ..
+                        }) = self.queue.pop_front()
                         else {
                             unreachable!("front() just matched a stamp");
                         };
@@ -566,8 +772,24 @@ impl Batcher {
                     let start = Instant::now();
                     let est = session.estimate_partial(&merged);
                     let go_partial = est.run_fraction() <= self.partial_threshold;
+                    let mut rescued = false;
                     let result = if go_partial {
-                        session.refactorize_partial(&merged)
+                        session.refactorize_partial(&merged).or_else(|_first| {
+                            // degradation ladder: the pruned replay
+                            // faulted (panic, non-finite block, zero
+                            // pivot, ...). Retry exactly once as a full
+                            // refactorize — its whole-matrix
+                            // zero-and-rescatter resets every block, so
+                            // poisoned state from the failed attempt
+                            // cannot survive into the retry. The
+                            // change set is already folded into
+                            // `current_values` (partial applies updates
+                            // before running), so the retry factors the
+                            // stamped matrix.
+                            rescued = true;
+                            let values = session.current_values().to_vec();
+                            session.refactorize(&values)
+                        })
                     } else {
                         // closure covers most of the DAG: the full path's
                         // single whole-matrix scatter beats per-block
@@ -578,6 +800,9 @@ impl Batcher {
                         }
                         session.refactorize(&values)
                     };
+                    if rescued {
+                        self.degraded_runs += 1;
+                    }
                     let exec_seconds = start.elapsed().as_secs_f64();
                     let batch_size = waits.len();
                     match result {
@@ -593,10 +818,11 @@ impl Batcher {
                                     batch_size,
                                     tasks_executed: if leader { rep.tasks_executed } else { 0 },
                                     tasks_skipped: if leader { rep.tasks_skipped } else { 0 },
-                                    went_partial: go_partial,
+                                    went_partial: go_partial && !rescued,
                                     solution: None,
                                     trace_id,
                                     refine_iterations: None,
+                                    degraded: rescued,
                                 }));
                             }
                         }

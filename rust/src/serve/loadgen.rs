@@ -602,7 +602,13 @@ pub fn run_multi(
                                 }
                             };
                             // closed loop with backpressure: a ShardFull
-                            // rejection drains our own shard, then retries
+                            // rejection drains our own shard, backs off
+                            // (bounded exponential — 50µs doubling to a
+                            // 3.2ms ceiling so a storm of rejected
+                            // clients decorrelates instead of
+                            // thundering back in lockstep), then
+                            // resubmits
+                            let mut backoff_us: u64 = 50;
                             loop {
                                 match router.submit(id, request.clone()) {
                                     Ok(()) => break,
@@ -613,6 +619,10 @@ pub fn run_multi(
                                         out.extend(
                                             drained.into_iter().map(|o| (t_idx, o)),
                                         );
+                                        std::thread::sleep(
+                                            std::time::Duration::from_micros(backoff_us),
+                                        );
+                                        backoff_us = (backoff_us * 2).min(3200);
                                     }
                                     Err(e) => panic!("unexpected submit failure: {e}"),
                                 }

@@ -341,9 +341,12 @@ fn decode_payload(payload: &[u8]) -> Result<PlanParts, PersistError> {
     Ok(PlanParts { opts, perm, fingerprint, ldu, blocking, scatter_block, scatter_off, flops })
 }
 
-/// Serialize a session plan to `path` (atomic overwrite of the file's
-/// contents is left to the filesystem; serving deployments should write
-/// to a temp name and rename).
+/// Serialize a session plan to `path`, crash-safely: the bytes go to a
+/// temp name in the target directory, are fsynced, and the temp file is
+/// renamed over `path` — a crash mid-save leaves either the old file or
+/// the new one, never a torn hybrid. (A reader that still races a
+/// corrupt file — torn NFS, bad disk, an injected [`crate::fault`]
+/// corruption — is caught by the checksum in [`load_plan`].)
 pub fn save_plan(plan: &FactorPlan, path: &Path) -> Result<(), PersistError> {
     let (scatter_block, _) = plan.scatter_maps();
     if scatter_block.len() != plan.nnz_a() {
@@ -358,7 +361,30 @@ pub fn save_plan(plan: &FactorPlan, path: &Path) -> Result<(), PersistError> {
     out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
     out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
     out.extend_from_slice(&payload);
-    std::fs::write(path, out)?;
+    // persist fault boundary: an armed FaultPlan may flip a byte or
+    // truncate here, exercising the load-side checksum/length rejects
+    crate::fault::corrupt_persist(&mut out);
+    // temp file in the *target* directory: rename(2) is only atomic
+    // within one filesystem
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let tmp = {
+        let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+        name.push(".tmp");
+        match dir {
+            Some(d) => d.join(name),
+            None => PathBuf::from(name),
+        }
+    };
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&out)?;
+        f.sync_all()?;
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
     Ok(())
 }
 

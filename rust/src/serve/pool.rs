@@ -232,6 +232,66 @@ impl SessionPool {
         }
     }
 
+    /// Bounded-wait checkout: like [`SessionPool::checkout`] but gives
+    /// up once `timeout` has elapsed without a session becoming
+    /// available, returning `None`. The serving drain path uses this so
+    /// a stalled or leaked checkout elsewhere degrades into per-request
+    /// [`crate::serve::ServeError::PoolTimeout`]s instead of a worker
+    /// blocked forever.
+    ///
+    /// ```
+    /// use sparselu::serve::SessionPool;
+    /// use sparselu::session::FactorPlan;
+    /// use sparselu::solver::SolveOptions;
+    /// use sparselu::sparse::gen;
+    /// use std::sync::Arc;
+    /// use std::time::Duration;
+    ///
+    /// let a = gen::grid2d_laplacian(8, 8);
+    /// let plan = Arc::new(FactorPlan::build(&a, &SolveOptions::ours(1)).unwrap());
+    /// let pool = SessionPool::new(plan, 1);
+    ///
+    /// let held = pool.checkout(); // pool (capacity 1) now exhausted
+    /// let t = Duration::from_millis(10);
+    /// assert!(pool.checkout_timeout(t).is_none(), "bounded wait, not a hang");
+    /// drop(held);
+    /// assert!(pool.checkout_timeout(t).is_some(), "idle again after checkin");
+    /// ```
+    pub fn checkout_timeout(&self, timeout: std::time::Duration) -> Option<PooledSession<'_>> {
+        let acquire_start = Instant::now();
+        let deadline = acquire_start + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(s) = st.idle.pop() {
+                st.checkouts += 1;
+                self.note_checkout(&st, acquire_start);
+                return Some(PooledSession { pool: self, session: Some(s) });
+            }
+            if st.created < self.max_sessions() {
+                st.created += 1;
+                st.checkouts += 1;
+                self.note_checkout(&st, acquire_start);
+                drop(st); // allocate blocked storage outside the lock
+                let s = SolverSession::from_plan(self.plan.clone());
+                return Some(PooledSession { pool: self, session: Some(s) });
+            }
+            let now = Instant::now();
+            let Some(remaining) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                return None;
+            };
+            st.waits += 1;
+            if let Some(m) = &self.metrics {
+                m.waits.inc();
+            }
+            let (guard, _timed_out) = self.cv.wait_timeout(st, remaining).unwrap();
+            // loop re-checks idle/capacity either way: a timeout that
+            // races a checkin still claims the session, and a spurious
+            // wakeup re-arms with the remaining budget
+            st = guard;
+        }
+    }
+
     /// Non-blocking checkout: `None` when the pool is exhausted.
     pub fn try_checkout(&self) -> Option<PooledSession<'_>> {
         let acquire_start = Instant::now();

@@ -75,8 +75,8 @@ use crate::sparse::Csc;
 use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::time::{Duration, Instant};
 
 /// Stable identity of one tenant: the [`PlanCache`] key of its sparsity
 /// pattern under the router's solve options. The id survives eviction —
@@ -123,6 +123,13 @@ pub struct RouterConfig {
     /// persist every freshly built plan into it (best-effort — IO
     /// failures degrade to cold builds, they never fail serving).
     pub plan_dir: Option<PathBuf>,
+    /// When set, a drain that cannot check a session out of the
+    /// tenant's pool within this long fails that drain's queued
+    /// requests with [`ServeError::PoolTimeout`] instead of blocking
+    /// the drain worker indefinitely (a stalled or leaked session
+    /// then costs one tenant latency, never the whole drain pool).
+    /// `None` (the default) blocks as long as it takes.
+    pub checkout_timeout: Option<Duration>,
     /// Metric registry the router (and everything under it: per-tenant
     /// shards, session pools, the shared executor) publishes to.
     /// `None` routes to the process-wide [`Registry::global`]; tests
@@ -142,6 +149,7 @@ impl Default for RouterConfig {
             precision: Precision::Full,
             drift_storm_threshold: 3,
             plan_dir: None,
+            checkout_timeout: None,
             registry: None,
         }
     }
@@ -174,6 +182,9 @@ pub struct TenantStats {
     /// Summed per-request queue wait and execution seconds.
     pub queue_seconds: f64,
     pub exec_seconds: f64,
+    /// Completed requests served degraded (mixed→full fallback or
+    /// partial→full retry — see [`ServeReport::degraded`]).
+    pub degraded: usize,
 }
 
 impl TenantStats {
@@ -193,6 +204,7 @@ impl TenantStats {
                     self.tasks_skipped += rep.tasks_skipped;
                     self.queue_seconds += rep.queue_seconds;
                     self.exec_seconds += rep.exec_seconds;
+                    self.degraded += rep.degraded as usize;
                 }
                 Err(_) => self.errored += 1,
             }
@@ -247,6 +259,13 @@ pub struct TenantHealth {
     /// interval distribution (see
     /// [`HistogramSnapshot::delta`]).
     pub queue_wait: HistogramSnapshot,
+    /// Whether the shard is currently quarantined (failing fast with
+    /// [`ServeError::TenantQuarantined`] while its pool rebuilds).
+    pub quarantined: bool,
+    /// Cumulative quarantine trips.
+    pub quarantines: usize,
+    /// Quarantines lifted by a successful background pool rebuild.
+    pub quarantine_revivals: usize,
 }
 
 /// Registry handles for the router-level series, created once in
@@ -399,6 +418,11 @@ struct ShardMetrics {
     tasks_executed: Counter,
     tasks_skipped: Counter,
     refine_iterations: Histogram,
+    degraded: Counter,
+    deadline_exceeded: Counter,
+    pool_timeouts: Counter,
+    quarantines: Counter,
+    revived: Counter,
 }
 
 impl ShardMetrics {
@@ -475,6 +499,31 @@ impl ShardMetrics {
                 labels,
                 &obs::BATCH_BUCKETS,
             ),
+            degraded: registry.counter(
+                "sparselu_degraded_total",
+                "Requests served degraded (mixed->full fallback or partial->full retry)",
+                labels,
+            ),
+            deadline_exceeded: registry.counter(
+                "sparselu_deadline_exceeded_total",
+                "Requests that expired in queue past their client deadline",
+                labels,
+            ),
+            pool_timeouts: registry.counter(
+                "sparselu_pool_timeouts_total",
+                "Requests failed because no session was checked out within the timeout",
+                labels,
+            ),
+            quarantines: registry.counter(
+                "sparselu_quarantines_total",
+                "Times the tenant was quarantined after a non-finite factor",
+                labels,
+            ),
+            revived: registry.counter(
+                "sparselu_quarantine_revivals_total",
+                "Quarantines lifted by a successful background pool rebuild",
+                labels,
+            ),
         }
     }
 
@@ -502,17 +551,31 @@ impl ShardMetrics {
                                 if let Some(iters) = rep.refine_iterations {
                                     self.refine_iterations.observe(iters as f64);
                                 }
+                                if rep.degraded {
+                                    self.degraded.inc();
+                                }
                             }
-                            Err(_) => self.errored.inc(),
+                            Err(e) => self.errored_by(e),
                         }
                     }
                     i += run;
                 }
-                Err(_) => {
-                    self.errored.inc();
+                Err(e) => {
+                    self.errored_by(e);
                     i += 1;
                 }
             }
+        }
+    }
+
+    /// Count one errored request, splitting the lifetime-enforcement
+    /// kinds (queue deadline, pool timeout) into their own series.
+    fn errored_by(&self, e: &ServeError) {
+        self.errored.inc();
+        match e {
+            ServeError::DeadlineExceeded { .. } => self.deadline_exceeded.inc(),
+            ServeError::PoolTimeout { .. } => self.pool_timeouts.inc(),
+            _ => {}
         }
     }
 }
@@ -523,7 +586,23 @@ impl ShardMetrics {
 /// background build lands.
 struct Serving {
     plan: Arc<FactorPlan>,
-    pool: SessionPool,
+    /// The tenant's session pool, swappable so a quarantine rebuild
+    /// can replace poisoned sessions wholesale: readers (drain, health,
+    /// autoscale) take the read side; only the background rebuild
+    /// thread ever takes the write side, and only for the swap itself.
+    pool: Arc<RwLock<SessionPool>>,
+}
+
+/// Quarantine state of one shard, shared with the background rebuild
+/// thread (which lifts `active` once the fresh pool is in place).
+struct Quarantine {
+    /// Fail-fast flag: while set, submits and drains short-circuit
+    /// with [`ServeError::TenantQuarantined`].
+    active: AtomicBool,
+    /// Cumulative quarantine trips.
+    total: AtomicUsize,
+    /// Quarantines lifted by a successful pool swap.
+    revivals: AtomicUsize,
 }
 
 /// Completion slot of one speculative background build: the builder
@@ -560,6 +639,19 @@ struct Shard {
     /// Consecutive out-of-pattern stamps seen by
     /// [`Router::submit_stamp_coords`]; an in-pattern stamp resets it.
     drift_strikes: AtomicUsize,
+    /// Set when a drain surfaces [`FactorError::NonFinite`]: the
+    /// tenant's numeric state cannot be trusted, so the shard fails
+    /// fast while a background thread rebuilds its session pool.
+    quarantine: Arc<Quarantine>,
+    /// The in-flight (or last finished) quarantine rebuild thread,
+    /// held so it can be reaped instead of left permanently detached.
+    revive_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// [`RouterConfig::checkout_timeout`], captured at spin-up.
+    checkout_timeout: Option<Duration>,
+    /// The router's registry, kept so the rebuild thread can re-attach
+    /// pool metrics (get-or-create: the fresh pool keeps accumulating
+    /// into the same tenant-labeled series).
+    registry: Arc<Registry>,
 }
 
 impl Shard {
@@ -606,23 +698,53 @@ impl Shard {
     /// is exactly the per-tenant total order timestep streams need —
     /// while other shards drain in parallel on their own locks.
     fn drain(&self) -> Vec<Result<ServeReport, ServeError>> {
+        self.reap_reviver();
         let mut batcher = self.batcher.lock().unwrap();
         if batcher.is_empty() {
             return Vec::new();
         }
-        let outcomes = match self.ensure_serving() {
-            Ok(serving) => {
-                // LIFO checkout hands back the warm session holding this
-                // tenant's current factors; serialized drains mean the
-                // pool never blocks here
-                let mut session = serving.pool.checkout();
-                batcher.drain(&mut session)
+        let outcomes = if self.quarantine.active.load(Ordering::Acquire) {
+            // poisoned factors: fail fast while the background rebuild
+            // swaps a fresh pool in
+            batcher.fail_all(&ServeError::TenantQuarantined { tenant: self.tenant.0 })
+        } else {
+            match self.ensure_serving() {
+                Ok(serving) => {
+                    // LIFO checkout hands back the warm session holding
+                    // this tenant's current factors; serialized drains
+                    // mean the pool only blocks here under injected
+                    // stalls or leaked checkouts
+                    let pool = serving.pool.read().unwrap();
+                    let session = match self.checkout_timeout {
+                        Some(limit) => pool.checkout_timeout(limit),
+                        None => Some(pool.checkout()),
+                    };
+                    match session {
+                        Some(mut session) => batcher.drain(&mut session),
+                        None => {
+                            let waited = self.checkout_timeout.expect("timeout was configured");
+                            batcher.fail_all(&ServeError::PoolTimeout { waited })
+                        }
+                    }
+                }
+                // the plan build failed (e.g. a structurally singular
+                // pattern): every queued request gets the error, the
+                // shard and the process survive
+                Err(e) => batcher.fail_all(&e),
             }
-            // the plan build failed (e.g. a structurally singular
-            // pattern): every queued request gets the error, the shard
-            // and the process survive
-            Err(e) => batcher.fail_all(&e),
         };
+        // a non-finite factor means the tenant's numeric state cannot
+        // be trusted: quarantine (exactly once per trip — the swap
+        // guards against a racing drain) and rebuild off the serving
+        // path
+        let poisoned = outcomes
+            .iter()
+            .any(|o| matches!(o, Err(ServeError::Factor(FactorError::NonFinite { .. }))));
+        if poisoned && !self.quarantine.active.swap(true, Ordering::AcqRel) {
+            self.quarantine.total.fetch_add(1, Ordering::Relaxed);
+            self.metrics.quarantines.inc();
+            self.begin_rebuild();
+        }
         // the queue was fully consumed; submits racing this drain are
         // still blocked on the batcher lock, so 0 is exact here
         self.metrics.queue_depth.set(0.0);
@@ -630,6 +752,76 @@ impl Shard {
         self.stats.lock().unwrap().absorb(&outcomes);
         self.metrics.absorb(&outcomes);
         outcomes
+    }
+
+    /// Kick off the quarantine rebuild: a background thread builds a
+    /// fresh [`SessionPool`] against the (immutable, still-good) plan,
+    /// swaps it in place of the poisoned one, and lifts the
+    /// quarantine. Until then, submits and drains fail fast with
+    /// [`ServeError::TenantQuarantined`]; afterwards the tenant's next
+    /// refactorize restores clean factors.
+    fn begin_rebuild(&self) {
+        let Some(serving) = self.serving.get() else {
+            // only a serving shard can surface NonFinite; never leave
+            // the flag stuck if that invariant somehow breaks
+            self.quarantine.active.store(false, Ordering::Release);
+            return;
+        };
+        let plan = serving.plan.clone();
+        let slot = serving.pool.clone();
+        let sessions = slot.read().unwrap().max_sessions();
+        let quarantine = self.quarantine.clone();
+        let registry = self.registry.clone();
+        let revived = self.metrics.revived.clone();
+        let tenant = self.tenant;
+        let spawned = std::thread::Builder::new().name("lu-shard-rebuild".into()).spawn(move || {
+            let fresh = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let label = ShardMetrics::label_of(tenant);
+                let pool_metrics =
+                    PoolMetrics::register(&registry, &[("tenant", label.as_str())]);
+                SessionPool::with_metrics(plan, sessions, pool_metrics)
+            }));
+            match fresh {
+                Ok(pool) => {
+                    *slot.write().unwrap() = pool;
+                    quarantine.revivals.fetch_add(1, Ordering::Relaxed);
+                    revived.inc();
+                }
+                // pool construction cannot realistically panic, but a
+                // tenant stuck quarantined forever is worse than
+                // serving on sessions that refactorize themselves
+                // clean
+                Err(_) => {
+                    eprintln!("router: shard rebuild panicked; lifting quarantine anyway")
+                }
+            }
+            quarantine.active.store(false, Ordering::Release);
+        });
+        match spawned {
+            Ok(handle) => {
+                // reap a previous trip's (finished) thread, hold this one
+                if let Some(old) = self.revive_thread.lock().unwrap().replace(handle) {
+                    let _ = old.join();
+                }
+            }
+            Err(e) => {
+                // spawn failed (resource exhaustion): lift the
+                // quarantine rather than stranding the tenant
+                eprintln!("router: cannot spawn shard-rebuild thread: {e}");
+                self.quarantine.active.store(false, Ordering::Release);
+            }
+        }
+    }
+
+    /// Join a finished rebuild thread (free when none ran). Only joins
+    /// once the quarantine is lifted, so it never blocks on a rebuild
+    /// still in flight.
+    fn reap_reviver(&self) {
+        if !self.quarantine.active.load(Ordering::Acquire) {
+            if let Some(handle) = self.revive_thread.lock().unwrap().take() {
+                let _ = handle.join();
+            }
+        }
     }
 }
 
@@ -815,7 +1007,7 @@ impl Router {
                 PoolMetrics::register(&self.registry, &[("tenant", tenant_label.as_str())]);
             let pool =
                 SessionPool::with_metrics(plan.clone(), self.cfg.sessions_per_shard, pool_metrics);
-            let _ = serving.set(Serving { plan, pool });
+            let _ = serving.set(Serving { plan, pool: Arc::new(RwLock::new(pool)) });
         }
         Arc::new(Shard {
             tenant,
@@ -827,6 +1019,14 @@ impl Router {
             metrics: ShardMetrics::register(&self.registry, tenant),
             retired: AtomicBool::new(false),
             drift_strikes: AtomicUsize::new(0),
+            quarantine: Arc::new(Quarantine {
+                active: AtomicBool::new(false),
+                total: AtomicUsize::new(0),
+                revivals: AtomicUsize::new(0),
+            }),
+            revive_thread: Mutex::new(None),
+            checkout_timeout: self.cfg.checkout_timeout,
+            registry: self.registry.clone(),
         })
     }
 
@@ -918,7 +1118,9 @@ impl Router {
                             sessions_per_shard,
                             pool_metrics,
                         );
-                        let _ = builder_shard.serving.set(Serving { plan, pool });
+                        let _ = builder_shard
+                            .serving
+                            .set(Serving { plan, pool: Arc::new(RwLock::new(pool)) });
                         Ok(())
                     }
                     Err(e) => Err(ServeError::Factor(e)),
@@ -1014,7 +1216,7 @@ impl Router {
         // no pool yet and is never evictable (its queue will be served
         // the moment the build lands)
         let pool_idle = |shard: &Shard| match shard.serving.get() {
-            Some(s) => s.pool.stats().in_use == 0,
+            Some(s) => s.pool.read().unwrap().stats().in_use == 0,
             None => false,
         };
         // pass 1: rank the currently idle shards (try_lock: a held
@@ -1103,6 +1305,11 @@ impl Router {
         // queue that will still be drained
         if shard.retired.load(Ordering::Acquire) {
             return Err(ServeError::UnknownTenant { tenant: tenant.0 });
+        }
+        // a quarantined tenant fails fast rather than queueing work
+        // that the next drain would only fail anyway
+        if shard.quarantine.active.load(Ordering::Acquire) {
+            return Err(ServeError::TenantQuarantined { tenant: tenant.0 });
         }
         let result = batcher.submit_with_priority(request, priority);
         // a low-priority rejection with the queue not actually full is a
@@ -1244,8 +1451,9 @@ impl Router {
                 let (sessions_target, sessions_created, sessions_in_use) =
                     match shard.serving.get() {
                         Some(s) => {
-                            let pool = s.pool.stats();
-                            (s.pool.max_sessions(), pool.created, pool.in_use)
+                            let pool = s.pool.read().unwrap();
+                            let stats = pool.stats();
+                            (pool.max_sessions(), stats.created, stats.in_use)
                         }
                         None => (0, 0, 0),
                     };
@@ -1258,6 +1466,9 @@ impl Router {
                     sessions_created,
                     sessions_in_use,
                     queue_wait: shard.metrics.queue_wait.snapshot(),
+                    quarantined: shard.quarantine.active.load(Ordering::Acquire),
+                    quarantines: shard.quarantine.total.load(Ordering::Relaxed),
+                    quarantine_revivals: shard.quarantine.revivals.load(Ordering::Relaxed),
                 }
             })
             .collect()
@@ -1286,7 +1497,7 @@ impl Router {
         // queue knobs always apply; the pool resize waits until the
         // shard is actually serving (a pending build has no pool yet)
         if let Some(s) = shard.serving.get() {
-            s.pool.resize(sessions);
+            s.pool.read().unwrap().resize(sessions);
         }
         let mut batcher = shard.batcher.lock().unwrap();
         batcher.set_capacity(queue_capacity);

@@ -337,6 +337,12 @@ impl<'b> SolverSession<'b> {
             ),
         });
         let run = run?;
+        // post-factor non-finite scan: a NaN/Inf factor (overflow,
+        // poisoned input, injected fault) must not be marked usable —
+        // a later solve would return garbage without any error
+        if let Some(block) = self.numeric.scan_non_finite() {
+            return Err(FactorError::NonFinite { block });
+        }
         self.factored = true;
         self.refactor_count += 1;
         let nblocks = self.plan.structure.blocks.len();
@@ -509,6 +515,12 @@ impl<'b> SolverSession<'b> {
             ),
         });
         let run = run?;
+        // same post-factor non-finite gate as the full path: preserved
+        // factors from earlier runs are scanned too, so a poisoned block
+        // outside the dirty closure still fails the step
+        if let Some(block) = self.numeric.scan_non_finite() {
+            return Err(FactorError::NonFinite { block });
+        }
         self.factored = true;
         self.refactor_count += 1;
         let executed = run.total_tasks;

@@ -1,0 +1,548 @@
+//! Chaos suite: drives the serving stack through seeded fault storms
+//! (`sparselu::fault`) and asserts the containment contract end to end —
+//! every injected fault surfaces as exactly one typed per-request error
+//! or one counted transparent rescue, pools and executors stay reusable
+//! afterwards, a quarantined tenant revives in the background, and
+//! post-recovery traffic is bit-identical to a fault-free oracle.
+//!
+//! Fault state is process-global, so every test that executes factor
+//! tasks holds `FAULT_LOCK`: an armed plan in one test must neither
+//! inject into a neighbor nor have its one-shot sequence numbers stolen
+//! by a neighbor's task executions.
+
+mod common;
+
+use sparselu::fault::{self, FaultGuard, FaultPlan};
+use sparselu::numeric::FactorError;
+use sparselu::serve::{
+    persist, Batcher, Request, Router, RouterConfig, ServeError, SessionPool, TenantHealth,
+    TenantId,
+};
+use sparselu::session::{ChangeSet, FactorPlan, PlanCache, SolverSession};
+use sparselu::solver::SolveOptions;
+use sparselu::sparse::{gen, Csc};
+use sparselu::util::Prng;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize fault-global tests; a panicking neighbor must not poison us.
+fn lock() -> MutexGuard<'static, ()> {
+    FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn plan_for(a: &Csc) -> Arc<FactorPlan> {
+    Arc::new(FactorPlan::build(a, &SolveOptions::ours(1)).unwrap())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparselu-chaos-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn health_of(router: &Router, id: TenantId) -> TenantHealth {
+    router.health().into_iter().find(|h| h.tenant == id).expect("tenant has a live shard")
+}
+
+/// Submit, retrying briefly while the tenant's quarantine lifts.
+fn submit_retry(router: &Router, id: TenantId, mk: impl Fn() -> Request) {
+    for _ in 0..5000 {
+        match router.submit(id, mk()) {
+            Ok(()) => return,
+            Err(ServeError::TenantQuarantined { .. }) => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => panic!("submit failed: {e}"),
+        }
+    }
+    panic!("tenant {id:?} stayed quarantined");
+}
+
+// ---------------------------------------------------------------------
+// exact accounting: one injection, one typed error
+// ---------------------------------------------------------------------
+
+#[test]
+fn each_injected_fault_surfaces_as_exactly_one_typed_error() {
+    let _l = lock();
+    let a = gen::grid2d_laplacian(9, 9);
+    let plan = plan_for(&a);
+    let pool = SessionPool::new(plan, 2);
+    let rhs: Vec<f64> = (0..a.n_rows()).map(|i| (i % 5) as f64 - 2.0).collect();
+
+    // clean probe: the DAG's task count (to place a mid-run panic) and
+    // the oracle solution every post-fault serve must bit-match
+    let (tasks, want_x) = {
+        let mut session = pool.checkout();
+        let rep = session.refactorize(&a.values).unwrap();
+        (rep.tasks_executed, session.solve(&rhs))
+    };
+    assert!(tasks >= 2, "matrix too small to host a mid-run fault");
+
+    type Check = fn(&ServeError) -> bool;
+    let scenarios: Vec<(FaultPlan, Check, &str)> = vec![
+        (
+            FaultPlan::seeded(1).panic_at_task(tasks as u64 - 1),
+            |e| matches!(e, ServeError::Factor(FactorError::TaskPanic)),
+            "kernel panic",
+        ),
+        (
+            FaultPlan::seeded(2).nan_at_kernel(0),
+            |e| matches!(e, ServeError::Factor(FactorError::NonFinite { .. })),
+            "nan poisoning",
+        ),
+        (
+            FaultPlan::seeded(3).zero_pivot_at_getrf(0),
+            |e| matches!(e, ServeError::Factor(FactorError::Kernel(_))),
+            "forced zero pivot",
+        ),
+    ];
+    for (fp, check, label) in scenarios {
+        let mut batcher = Batcher::new(8);
+        batcher.submit(Request::Refactorize { values: a.values.clone() }).unwrap();
+        let outcomes = {
+            let _g = FaultGuard::new(fp);
+            let mut session = pool.checkout();
+            let out = batcher.drain(&mut session);
+            assert_eq!(
+                fault::counters().erroring(),
+                1,
+                "{label}: exactly one erroring injection fired"
+            );
+            out
+        };
+        assert_eq!(outcomes.len(), 1);
+        let err = outcomes[0].as_ref().unwrap_err();
+        assert!(check(err), "{label}: unexpected error {err:?}");
+        assert_eq!(batcher.degraded_runs(), 0, "{label}: a full refactorize is never rescued");
+
+        // containment: the same pool serves the very next request, and
+        // the answer bit-matches the fault-free oracle
+        let mut batcher = Batcher::new(8);
+        batcher.submit(Request::Refactorize { values: a.values.clone() }).unwrap();
+        batcher.submit(Request::Solve { rhs: rhs.clone() }).unwrap();
+        let mut session = pool.checkout();
+        let outcomes = batcher.drain(&mut session);
+        assert!(
+            outcomes.iter().all(|o| o.is_ok()),
+            "{label}: pool unusable after the fault: {outcomes:?}"
+        );
+        assert_eq!(
+            outcomes[1].as_ref().unwrap().solution.as_ref().unwrap(),
+            &want_x,
+            "{label}: post-fault serve diverges from the fault-free oracle"
+        );
+    }
+    assert_eq!(pool.stats().in_use, 0, "every session checked back in");
+    assert!(!fault::enabled(), "guards disarmed injection on drop");
+}
+
+#[test]
+fn stalls_delay_but_never_error_and_factors_stay_bit_identical() {
+    let _l = lock();
+    let a = gen::grid2d_laplacian(7, 7);
+    let plan = plan_for(&a);
+    let mut oracle = SolverSession::from_plan(plan.clone());
+    oracle.refactorize(&a.values).unwrap();
+
+    let mut session = SolverSession::from_plan(plan.clone());
+    let _g = FaultGuard::new(FaultPlan::seeded(9).stall_at_task(0).stall_rate(0.25, 50));
+    session.refactorize(&a.values).unwrap();
+    let c = fault::counters();
+    assert!(c.stalls >= 1, "the one-shot stall alone guarantees a firing");
+    assert_eq!(c.erroring(), 0, "stalls only delay");
+    for id in 0..plan.structure.blocks.len() {
+        assert_eq!(
+            session.numeric().block_values(id as u32),
+            oracle.numeric().block_values(id as u32),
+            "block {id}: stalls changed numeric results"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// degradation ladder: faulted partials retried full, once, counted
+// ---------------------------------------------------------------------
+
+#[test]
+fn faulted_partial_refactorize_is_rescued_as_full_and_counted_degraded() {
+    let _l = lock();
+    let a = gen::grid2d_laplacian(8, 8);
+    let plan = plan_for(&a);
+    let k = a.value_index(20, 20).unwrap();
+    let stamped = {
+        let mut v = a.values.clone();
+        v[k] *= 1.5;
+        v
+    };
+    let rhs: Vec<f64> = (0..a.n_rows()).map(|i| (i % 7) as f64 - 3.0).collect();
+    // oracle: the stamped matrix factored fresh through the full path —
+    // the rescue's whole-matrix rescatter must land exactly here
+    let mut oracle = SolverSession::from_plan(plan.clone());
+    oracle.refactorize(&stamped).unwrap();
+    let want = oracle.solve(&rhs);
+
+    let faults = [
+        (FaultPlan::seeded(11).panic_at_task(0), "panic in partial replay"),
+        (FaultPlan::seeded(12).nan_at_kernel(0), "nan in partial replay"),
+    ];
+    for (fp, label) in faults {
+        let mut session = SolverSession::from_plan(plan.clone());
+        session.refactorize(&a.values).unwrap();
+        // threshold 1.0 forces the partial route, where the ladder lives
+        let mut batcher = Batcher::new(8).with_partial_threshold(1.0);
+        batcher
+            .submit(Request::Stamp { changes: ChangeSet::from_value_indices([(k, stamped[k])]) })
+            .unwrap();
+        let outcomes = {
+            let _g = FaultGuard::new(fp);
+            let out = batcher.drain(&mut session);
+            assert_eq!(fault::counters().erroring(), 1, "{label}: one injection fired");
+            out
+        };
+        let rep = match &outcomes[0] {
+            Ok(rep) => rep,
+            Err(e) => panic!("{label}: rescue failed instead of absorbing the fault: {e}"),
+        };
+        assert!(rep.degraded, "{label}: rescue must be visible on the report");
+        assert!(!rep.went_partial, "{label}: the rescued execution ran the full path");
+        assert_eq!(batcher.degraded_runs(), 1, "{label}: one rescue per injected fault");
+        assert_eq!(session.solve(&rhs), want, "{label}: rescued factors diverge from oracle");
+    }
+}
+
+// ---------------------------------------------------------------------
+// the tentpole scenario: combined storm against a 4-tenant router
+// ---------------------------------------------------------------------
+
+#[test]
+fn router_serves_through_combined_storm_quarantines_and_recovers_bit_identical() {
+    let _l = lock();
+    let mats = [
+        gen::grid2d_laplacian(8, 8),
+        gen::grid2d_laplacian(8, 9),
+        gen::grid2d_laplacian(9, 9),
+        gen::grid2d_laplacian(9, 10),
+    ];
+    let router = Router::new(
+        SolveOptions::ours(1),
+        RouterConfig {
+            max_shards: 4,
+            plan_cache_capacity: 8,
+            shard_queue: 16,
+            ..RouterConfig::default()
+        },
+    );
+    let ids: Vec<TenantId> = mats.iter().map(|a| router.admit(a).unwrap()).collect();
+    let rhs: Vec<Vec<f64>> = mats
+        .iter()
+        .map(|a| (0..a.n_rows()).map(|i| (i % 7) as f64 - 3.0).collect())
+        .collect();
+
+    // phase 0 — clean baseline: per-tenant DAG task counts (to aim the
+    // one-shot triggers) and the solutions recovery must reproduce
+    let mut tasks = Vec::new();
+    let mut baseline = Vec::new();
+    for ((a, id), r) in mats.iter().zip(&ids).zip(&rhs) {
+        router.submit(*id, Request::Refactorize { values: a.values.clone() }).unwrap();
+        router.submit(*id, Request::Solve { rhs: r.clone() }).unwrap();
+        let out = router.drain_tenant(*id).unwrap();
+        tasks.push(out[0].as_ref().unwrap().tasks_executed);
+        baseline.push(out[1].as_ref().unwrap().solution.clone().unwrap());
+    }
+
+    // phase 1 — combined storm, aimed deterministically: the stall and
+    // the panic land in tenant 0's refactorize (the panic on its last
+    // task, so it executes tasks[0]-1 kernels first), the NaN on tenant
+    // 1's last kernel dispatch, and tenant 0's plan file is corrupted on
+    // save. Drains run sequentially on this thread, so the global
+    // sequence numbers are exact.
+    let panic_seq = tasks[0] as u64 - 1;
+    let nan_seq = (tasks[0] - 1 + tasks[1] - 1) as u64;
+    let dir = tmp_dir("storm");
+    {
+        let _g = FaultGuard::new(
+            FaultPlan::seeded(0xC4A05)
+                .stall_at_task(0)
+                .panic_at_task(panic_seq)
+                .nan_at_kernel(nan_seq)
+                .corrupt_persist_at(0),
+        );
+        // the crash-safe save itself succeeds; the checksummed loader is
+        // what rejects the corrupt bytes — the process never dies
+        let path = persist::save_plan_to_dir(&router.plan_of(ids[0]).unwrap(), &dir).unwrap();
+        assert!(persist::load_plan(&path).is_err(), "corrupt plan must not load");
+
+        for (a, id) in mats.iter().zip(&ids) {
+            router.submit(*id, Request::Refactorize { values: a.values.clone() }).unwrap();
+        }
+        let mut fault_errors = 0u64;
+        for (i, id) in ids.iter().enumerate() {
+            let out = router.drain_tenant(*id).unwrap();
+            assert_eq!(out.len(), 1);
+            match (i, out[0].as_ref()) {
+                (0, Err(ServeError::Factor(FactorError::TaskPanic))) => fault_errors += 1,
+                (1, Err(ServeError::Factor(FactorError::NonFinite { .. }))) => fault_errors += 1,
+                (_, Ok(_)) if i >= 2 => {} // unfaulted tenants keep serving
+                (_, other) => panic!("tenant {i}: unexpected outcome {other:?}"),
+            }
+        }
+        let c = fault::counters();
+        assert_eq!((c.panics, c.nans, c.persist), (1, 1, 1));
+        assert!(c.stalls >= 1);
+        assert_eq!(c.erroring(), fault_errors, "every erroring injection surfaced exactly once");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // the non-finite factors quarantined tenant 1 — and only tenant 1 —
+    // and the background rebuild lifts it
+    assert_eq!(health_of(&router, ids[1]).quarantines, 1);
+    for &i in &[0usize, 2, 3] {
+        let h = health_of(&router, ids[i]);
+        assert_eq!((h.quarantines, h.quarantined), (0, false), "quarantine leaked to tenant {i}");
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while health_of(&router, ids[1]).quarantined {
+        assert!(Instant::now() < deadline, "quarantine never lifted");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(health_of(&router, ids[1]).quarantine_revivals, 1);
+
+    // phase 2 — recovery: identical traffic, bitwise-identical answers
+    for (i, ((a, id), r)) in mats.iter().zip(&ids).zip(&rhs).enumerate() {
+        submit_retry(&router, *id, || Request::Refactorize { values: a.values.clone() });
+        submit_retry(&router, *id, || Request::Solve { rhs: r.clone() });
+        let out = router.drain_tenant(*id).unwrap();
+        for o in &out {
+            assert!(o.is_ok(), "tenant {i}: post-recovery request failed: {o:?}");
+        }
+        let x = out[1].as_ref().unwrap().solution.as_ref().unwrap();
+        assert_eq!(x.len(), baseline[i].len());
+        for (got, want) in x.iter().zip(&baseline[i]) {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "tenant {i}: post-recovery solution is not bit-identical"
+            );
+        }
+    }
+    for h in router.health() {
+        assert_eq!(h.sessions_in_use, 0, "tenant {:?} leaked a session", h.tenant);
+    }
+}
+
+// ---------------------------------------------------------------------
+// persist corruption: skipped at warm-up, never fatal
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_persisted_plan_is_skipped_at_warmup_not_fatal() {
+    let _l = lock();
+    let a = gen::grid2d_laplacian(7, 7);
+    let b = gen::grid2d_laplacian(7, 8);
+    let dir = tmp_dir("warm");
+    {
+        let _g = FaultGuard::new(FaultPlan::seeded(5).corrupt_persist_at(0).truncate_persist());
+        persist::save_plan_to_dir(&plan_for(&a), &dir).unwrap();
+        assert_eq!(fault::counters().persist, 1);
+    }
+    persist::save_plan_to_dir(&plan_for(&b), &dir).unwrap(); // clean
+
+    let mut cache = PlanCache::new(4);
+    let warm = cache.warm_from_dir(&dir).unwrap();
+    assert_eq!(warm.loaded, 1, "the clean plan warms");
+    assert_eq!(warm.skipped.len(), 1, "the truncated plan is skipped, not fatal");
+
+    // the crash-safe save never leaves temp droppings behind
+    let leftovers = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().and_then(|x| x.to_str()) == Some("tmp"))
+        .count();
+    assert_eq!(leftovers, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// request lifetimes: deadlines and bounded checkouts
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadlines_and_checkout_timeouts_fail_cleanly() {
+    let _l = lock();
+    let a = gen::grid2d_laplacian(7, 7);
+    let pool = SessionPool::new(plan_for(&a), 1);
+
+    // exhausted pool: a bounded checkout gives up instead of blocking
+    let held = pool.checkout();
+    assert!(pool.checkout_timeout(Duration::from_millis(5)).is_none());
+    drop(held);
+    let mut session = pool.checkout_timeout(Duration::from_millis(5)).expect("pool is free");
+    session.refactorize(&a.values).unwrap();
+
+    // an expired deadline fails before execution; a live one never blocks
+    let rhs = vec![1.0; a.n_rows()];
+    let mut batcher = Batcher::new(8);
+    batcher.submit_with_deadline(Request::Solve { rhs: rhs.clone() }, Instant::now()).unwrap();
+    batcher
+        .submit_with_deadline(Request::Solve { rhs }, Instant::now() + Duration::from_secs(60))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    let outcomes = batcher.drain(&mut session);
+    assert!(matches!(outcomes[0], Err(ServeError::DeadlineExceeded { .. })));
+    assert!(outcomes[1].is_ok(), "a live deadline never blocks execution");
+}
+
+// ---------------------------------------------------------------------
+// property tests: random plans x random scripts (proptest crate is
+// unavailable offline; same hand-rolled style as tests/proptests.rs)
+// ---------------------------------------------------------------------
+
+#[test]
+fn proptest_random_one_shot_plans_keep_exact_fault_accounting() {
+    let _l = lock();
+    for iter in 0..6u64 {
+        let mut rng = Prng::new(0xBA1A_5EED ^ iter);
+        let a = common::random_matrix_sized(0xFACE + iter, 30 + rng.below(30));
+        let plan = plan_for(&a);
+        let mut session = SolverSession::from_plan(plan.clone());
+        session.refactorize(&a.values).unwrap();
+        let mut batcher = Batcher::new(4).with_partial_threshold(1.0);
+
+        // one random erroring one-shot (two erroring faults colliding in
+        // one run would merge into a single surfaced error, so exactness
+        // demands a single trigger), plus harmless random stalls
+        let seq = rng.below(40) as u64;
+        let fp = match rng.below(3) {
+            0 => FaultPlan::seeded(iter).panic_at_task(seq),
+            1 => FaultPlan::seeded(iter).nan_at_kernel(seq),
+            _ => FaultPlan::seeded(iter).zero_pivot_at_getrf(seq),
+        };
+        let fp = if rng.below(2) == 0 { fp.stall_rate(0.05, 20) } else { fp };
+
+        let mut surfaced = 0u64;
+        {
+            let _g = FaultGuard::new(fp);
+            for step in 0..12u64 {
+                let req = match rng.below(4) {
+                    0 => Request::Refactorize {
+                        values: common::perturbed(&a, iter * 100 + step).values,
+                    },
+                    1 => {
+                        let d = rng.below(a.n_rows());
+                        let k = a.value_index(d, d).expect("full diagonal");
+                        Request::Stamp {
+                            changes: ChangeSet::from_value_indices([(
+                                k,
+                                a.values[k] * (1.0 + 0.1 * rng.f64()),
+                            )]),
+                        }
+                    }
+                    _ => Request::Solve {
+                        rhs: (0..a.n_rows()).map(|_| rng.signed_unit()).collect(),
+                    },
+                };
+                batcher.submit(req).unwrap();
+                let mut out = batcher.drain(&mut session);
+                assert_eq!(out.len(), 1);
+                match out.pop().unwrap() {
+                    Ok(_) => {}
+                    Err(ServeError::Factor(_)) => surfaced += 1,
+                    // collateral of a failed refactorize, not an injection
+                    Err(ServeError::NotFactored) => {}
+                    Err(e) => panic!("iter {iter} step {step}: unexpected error {e}"),
+                }
+            }
+            assert_eq!(
+                fault::counters().erroring(),
+                surfaced + batcher.degraded_runs(),
+                "iter {iter}: injected must balance surfaced + rescued exactly"
+            );
+        }
+
+        // reusability: a clean round bit-matches a fresh session
+        session.refactorize(&a.values).unwrap();
+        let rhs: Vec<f64> = (0..a.n_rows()).map(|i| (i % 3) as f64 - 1.0).collect();
+        let mut oracle = SolverSession::from_plan(plan.clone());
+        oracle.refactorize(&a.values).unwrap();
+        assert_eq!(session.solve(&rhs), oracle.solve(&rhs), "iter {iter}: chaos state leaked");
+    }
+    assert!(!fault::enabled());
+}
+
+#[test]
+fn proptest_rate_based_storm_has_no_deadlock_and_recovers() {
+    let _l = lock();
+    let mats = [gen::grid2d_laplacian(7, 7), gen::grid2d_laplacian(7, 8)];
+    let router = Router::new(
+        SolveOptions::ours(2),
+        RouterConfig {
+            max_shards: 2,
+            plan_cache_capacity: 4,
+            shard_queue: 8,
+            checkout_timeout: Some(Duration::from_millis(200)),
+            ..RouterConfig::default()
+        },
+    );
+    let ids: Vec<TenantId> = mats.iter().map(|a| router.admit(a).unwrap()).collect();
+
+    {
+        let _g = FaultGuard::new(
+            FaultPlan::seeded(0x57A6)
+                .panic_rate(0.02)
+                .nan_rate(0.02)
+                .zero_pivot_rate(0.01)
+                .stall_rate(0.05, 30),
+        );
+        // both tenants hammer the router concurrently under the storm;
+        // completion of this scope IS the no-deadlock/no-escaped-panic
+        // assertion — quarantines, rejections and typed errors are all
+        // legal, hangs and unwinds into this thread are not
+        std::thread::scope(|scope| {
+            for (t, (a, id)) in mats.iter().zip(&ids).enumerate() {
+                let router = &router;
+                scope.spawn(move || {
+                    let mut rng = Prng::new(0xD15EA5E ^ t as u64);
+                    for _round in 0..8 {
+                        let mut reqs = vec![Request::Refactorize { values: a.values.clone() }];
+                        for _ in 0..rng.below(3) {
+                            reqs.push(Request::Solve {
+                                rhs: (0..a.n_rows()).map(|_| rng.signed_unit()).collect(),
+                            });
+                        }
+                        for req in reqs {
+                            match router.submit(*id, req) {
+                                Ok(())
+                                | Err(ServeError::TenantQuarantined { .. })
+                                | Err(ServeError::ShardFull { .. }) => {}
+                                Err(e) => panic!("tenant {t}: unexpected admit error {e}"),
+                            }
+                        }
+                        let _ = router.drain_tenant(*id).unwrap();
+                    }
+                });
+            }
+        });
+    }
+
+    // recovery: any storm quarantine lifts, then a clean round fully
+    // succeeds on both tenants and no session stays checked out
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.health().iter().any(|h| h.quarantined) {
+        assert!(Instant::now() < deadline, "quarantine never lifted after the storm");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    for (a, id) in mats.iter().zip(&ids) {
+        submit_retry(&router, *id, || Request::Refactorize { values: a.values.clone() });
+        submit_retry(&router, *id, || Request::Solve { rhs: vec![1.0; a.n_rows()] });
+        let out = router.drain_tenant(*id).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|o| o.is_ok()), "post-storm round failed: {out:?}");
+    }
+    for h in router.health() {
+        assert_eq!(h.sessions_in_use, 0, "tenant {:?} leaked a session", h.tenant);
+    }
+}
